@@ -1,0 +1,223 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects (`proto.id() <=
+INT_MAX`). The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Outputs (under --outdir, default ../artifacts):
+  <model>_prefill_b<B>.hlo.txt   one per (model, prefill batch)
+  <model>_decode_b<B>.hlo.txt    one per (model, decode batch)
+  <model>_weights.bin            flat little-endian f32 in PARAM_ORDER
+  manifest.json                  shapes/dtypes/param layout for rust
+
+Run via `make artifacts`; python never runs again after this.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.configs import (
+    BLOCK_SIZE,
+    DECODE_BATCHES,
+    HEAD_DIM,
+    MODELS,
+    POOL_BLOCKS,
+    PREFILL_BATCHES,
+    PREFILL_SEQ_LEN,
+    ModelConfig,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def pool_spec():
+    return _sds((POOL_BLOCKS, BLOCK_SIZE, HEAD_DIM))
+
+
+def param_specs(config: ModelConfig):
+    params = jax.eval_shape(lambda: M.init_params(config))
+    return tuple(params[k] for k in M.PARAM_ORDER)
+
+
+def lower_prefill(config: ModelConfig, batch: int):
+    T, L, H, Mb = (PREFILL_SEQ_LEN, config.n_layers, config.n_heads,
+                   config.max_blocks_per_seq)
+
+    def fn(plist, tokens, prompt_lens, tables, k_pool, v_pool):
+        params = dict(zip(M.PARAM_ORDER, plist))
+        return M.prefill(params, tokens, prompt_lens, tables, k_pool, v_pool,
+                         config=config)
+
+    args = (
+        param_specs(config),
+        _sds((batch, T), jnp.int32),
+        _sds((batch,), jnp.int32),
+        _sds((batch, L, H, Mb), jnp.int32),
+        pool_spec(),
+        pool_spec(),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def lower_decode(config: ModelConfig, batch: int):
+    L, H, Mb = config.n_layers, config.n_heads, config.max_blocks_per_seq
+
+    def fn(plist, tokens, positions, tables, k_pool, v_pool):
+        params = dict(zip(M.PARAM_ORDER, plist))
+        return M.decode(params, tokens, positions, tables, k_pool, v_pool,
+                        config=config)
+
+    args = (
+        param_specs(config),
+        _sds((batch,), jnp.int32),
+        _sds((batch,), jnp.int32),
+        _sds((batch, L, H, Mb), jnp.int32),
+        pool_spec(),
+        pool_spec(),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def dump_weights(config: ModelConfig, outdir: str, seed: int = 0):
+    """Flat f32 little-endian dump + per-tensor layout for the manifest."""
+    params = M.init_params(config, seed=seed)
+    layout, offset = [], 0
+    chunks = []
+    for name in M.PARAM_ORDER:
+        arr = np.asarray(params[name], dtype="<f4")
+        layout.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "offset_floats": offset,
+            "len_floats": int(arr.size),
+        })
+        offset += arr.size
+        chunks.append(arr.reshape(-1))
+    blob = np.concatenate(chunks)
+    path = os.path.join(outdir, f"{config.name}_weights.bin")
+    blob.tofile(path)
+    return layout
+
+
+def artifact_entry(config: ModelConfig, phase: str, batch: int, fname: str):
+    T, L, H, Mb = (PREFILL_SEQ_LEN, config.n_layers, config.n_heads,
+                   config.max_blocks_per_seq)
+    params_sig = [
+        _sig(s["name"] if isinstance(s, dict) else s, spec.shape, "f32")
+        for s, spec in zip(M.PARAM_ORDER, param_specs(config))
+    ]
+    pool = _sig("k_pool", (POOL_BLOCKS, BLOCK_SIZE, HEAD_DIM), "f32")
+    vpool = dict(pool, name="v_pool")
+    if phase == "prefill":
+        data_sig = [
+            _sig("tokens", (batch, T), "i32"),
+            _sig("prompt_lens", (batch,), "i32"),
+            _sig("block_tables", (batch, L, H, Mb), "i32"),
+            pool, vpool,
+        ]
+    else:
+        data_sig = [
+            _sig("tokens", (batch,), "i32"),
+            _sig("positions", (batch,), "i32"),
+            _sig("block_tables", (batch, L, H, Mb), "i32"),
+            pool, vpool,
+        ]
+    return {
+        "model": config.name,
+        "phase": phase,
+        "batch": batch,
+        "file": fname,
+        "inputs": params_sig + data_sig,
+        "outputs": [
+            _sig("logits", (batch, config.vocab_size), "f32"),
+            pool, vpool,
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {
+        "pool": {
+            "num_blocks": POOL_BLOCKS,
+            "block_size": BLOCK_SIZE,
+            "head_dim": HEAD_DIM,
+        },
+        "prefill_seq_len": PREFILL_SEQ_LEN,
+        "models": {},
+        "artifacts": [],
+    }
+
+    for name in args.models.split(","):
+        config = MODELS[name]
+        layout = dump_weights(config, args.outdir, seed=args.seed)
+        manifest["models"][name] = {
+            "n_layers": config.n_layers,
+            "d_model": config.d_model,
+            "n_heads": config.n_heads,
+            "head_dim": config.head_dim,
+            "vocab_size": config.vocab_size,
+            "d_ff": config.d_ff,
+            "block_size": config.block_size,
+            "max_blocks_per_seq": config.max_blocks_per_seq,
+            "max_ctx": config.max_ctx,
+            "weights_file": f"{name}_weights.bin",
+            "param_layout": layout,
+            "prefill_batches": list(PREFILL_BATCHES),
+            "decode_batches": list(DECODE_BATCHES),
+        }
+        for batch in PREFILL_BATCHES:
+            fname = f"{name}_prefill_b{batch}.hlo.txt"
+            text = to_hlo_text(lower_prefill(config, batch))
+            with open(os.path.join(args.outdir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                artifact_entry(config, "prefill", batch, fname))
+            print(f"wrote {fname} ({len(text)} chars)")
+        for batch in DECODE_BATCHES:
+            fname = f"{name}_decode_b{batch}.hlo.txt"
+            text = to_hlo_text(lower_decode(config, batch))
+            with open(os.path.join(args.outdir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                artifact_entry(config, "decode", batch, fname))
+            print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Model configurations for the AOT-compiled tiny LLMs.
+
+These are the *real* models served end-to-end through PJRT by the rust
+coordinator. They are deliberately small (CPU testbed) but structurally
+faithful LLaMA-style transformers: RMSNorm, RoPE, causal attention over a
+head-wise paged KV pool, SwiGLU MLP.
+
+All models share head_dim=64 and block_size=16 so their KV caches live in a
+single unified head-wise block pool — the paper's §3.4 observation that head
+size is uniform across LLM families (LLaMA/GPT-3 use 128) is what makes the
+unified cache possible.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    head_dim: int = 64
+    vocab_size: int = 512
+    ffn_mult: int = 3  # d_ff = ffn_mult * d_model
+    block_size: int = 16  # tokens per head-wise KV block
+    max_blocks_per_seq: int = 8  # context up to 128 tokens
+    rope_theta: float = 10000.0
+
+    @property
+    def d_ff(self) -> int:
+        return self.ffn_mult * self.d_model
+
+    @property
+    def max_ctx(self) -> int:
+        return self.max_blocks_per_seq * self.block_size
+
+
+# Shared unified pool: 1024 head-wise blocks of 16 tokens x head_dim 64.
+POOL_BLOCKS = 1024
+HEAD_DIM = 64
+BLOCK_SIZE = 16
+
+# The "popular small" LLM and the "unpopular" LLM of the end-to-end demo.
+MODELS = {
+    "muxa": ModelConfig(name="muxa", n_layers=4, d_model=256, n_heads=4),
+    "muxb": ModelConfig(name="muxb", n_layers=2, d_model=128, n_heads=2),
+}
+
+PREFILL_SEQ_LEN = 64
+PREFILL_BATCHES = (1, 2, 4)
+DECODE_BATCHES = (1, 2, 4, 8)

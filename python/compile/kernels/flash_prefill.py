@@ -1,0 +1,100 @@
+"""Tiled causal flash attention — the Layer-1 prefill kernel.
+
+Prefill is the compute-bound phase (§2.1): the whole prompt is processed in
+parallel and saturates the MXU. The kernel is the classic TPU flash
+schedule: the grid walks (batch, head, q-tile); each program stages one
+q tile into VMEM, then streams K/V tiles (HBM → VMEM via BlockSpec-shaped
+dynamic slices), maintaining an online softmax so the [T, T] score matrix is
+never materialized. f32 accumulation on the VPU, MXU-shaped contractions.
+
+interpret=True: see paged_attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(
+    q_ref,  # [1, 1, Tq, D]
+    k_ref,  # [1, 1, T, D]
+    v_ref,  # [1, 1, T, D]
+    o_ref,  # [1, 1, Tq, D]
+    *,
+    q_tile: int,
+    kv_tile: int,
+):
+    head_dim = q_ref.shape[-1]
+    seq_len = k_ref.shape[2]
+    qi = pl.program_id(2)
+    q = q_ref[0, 0, :, :].astype(jnp.float32)  # [Tq, D]
+    scale = 1.0 / (head_dim**0.5)
+    q_pos = qi * q_tile + jax.lax.iota(jnp.int32, q_tile)  # [Tq]
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        k = pl.load(
+            k_ref, (0, 0, pl.dslice(j * kv_tile, kv_tile), slice(None))
+        ).astype(jnp.float32)
+        v = pl.load(
+            v_ref, (0, 0, pl.dslice(j * kv_tile, kv_tile), slice(None))
+        ).astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale  # [Tq, Tkv]
+        k_pos = j * kv_tile + jax.lax.iota(jnp.int32, kv_tile)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    # Causal: q tile qi only needs kv tiles j with j*kv_tile <= qi*q_tile+Tq-1.
+    n_kv = ((qi + 1) * q_tile + kv_tile - 1) // kv_tile
+    n_kv = jnp.minimum(n_kv, seq_len // kv_tile)
+    init = (
+        jnp.full((q_tile,), NEG_INF, jnp.float32),
+        jnp.zeros((q_tile,), jnp.float32),
+        jnp.zeros((q_tile, head_dim), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, init)
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, 0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_prefill_attention(q, k, v, *, q_tile: int = 16, kv_tile: int = 16):
+    """Causal self-attention for the prefill phase.
+
+    Args:
+      q, k, v: [B, H, T, D]; T must be a multiple of both tile sizes.
+
+    Returns:
+      [B, H, T, D] attention outputs, dtype of q.
+    """
+    batch, n_heads, seq_len, head_dim = q.shape
+    assert seq_len % q_tile == 0 and seq_len % kv_tile == 0, (
+        seq_len,
+        q_tile,
+        kv_tile,
+    )
+    kernel = functools.partial(_prefill_kernel, q_tile=q_tile, kv_tile=kv_tile)
+    grid = (batch, n_heads, seq_len // q_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_tile, head_dim), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, seq_len, head_dim), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, seq_len, head_dim), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, q_tile, head_dim), lambda b, h, i: (b, h, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,112 @@
+"""Head-wise paged decode attention — the Layer-1 Pallas kernel.
+
+This is the compute embodiment of MuxServe's unified KV cache (§3.4): all
+colocated LLMs share one pool of head-wise blocks; a block holds the K (or V)
+vectors of ONE attention head for BLOCK_SIZE tokens. Each request's blocks
+are scattered across the pool and located via a block table.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): grid = (batch, head); each
+program stages its q vector and one (block_size x head_dim) K/V tile at a
+time from the HBM-resident pool into VMEM (here: `pl.load` with a dynamic
+block-id dslice — the BlockSpec analogue of vLLM's warp-level gather), and
+runs a flash-style online softmax so no [ctx] score vector ever materializes
+at full context length. Accumulation is f32 on the VPU; the q·K and p·V
+contractions are MXU-shaped (head_dim = 64 lanes).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+can run. Real-TPU performance is estimated in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,  # [1, 1, D]
+    table_ref,  # [1, 1, M] int32 block ids into the pool
+    ctx_ref,  # [1] int32 context length (tokens already in cache)
+    k_pool_ref,  # [N, S, D] shared head-wise K pool
+    v_pool_ref,  # [N, S, D] shared head-wise V pool
+    o_ref,  # [1, 1, D]
+    *,
+    block_size: int,
+    max_blocks: int,
+):
+    head_dim = q_ref.shape[-1]
+    q = q_ref[0, 0, :].astype(jnp.float32)  # [D]
+    ctx = ctx_ref[0]
+    scale = 1.0 / (head_dim**0.5)
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        block_id = table_ref[0, 0, j]
+        # Stage one head-wise block from the pool: [S, D].
+        k = pl.load(k_pool_ref, (pl.dslice(block_id, 1), slice(None), slice(None)))[0]
+        v = pl.load(v_pool_ref, (pl.dslice(block_id, 1), slice(None), slice(None)))[0]
+        s = jnp.dot(k.astype(jnp.float32), q) * scale  # [S]
+        token_idx = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        s = jnp.where(token_idx < ctx, s, NEG_INF)
+        # Online softmax update (flash-attention recurrence).
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # [S]
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc_prev * alpha + jnp.dot(p, v.astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    # Only visit blocks that contain live tokens.
+    n_blocks = (ctx + block_size - 1) // block_size
+    n_blocks = jnp.minimum(n_blocks, max_blocks)
+    init = (
+        jnp.float32(NEG_INF),
+        jnp.float32(0.0),
+        jnp.zeros((head_dim,), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+    # Guard ctx == 0 (cannot happen in practice: decode always has >= 1 token).
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, 0, :] = (acc / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, ctx_lens):
+    """Decode-phase attention over the unified head-wise block pool.
+
+    Args:
+      q: [B, H, D] query vectors for the current token.
+      k_pool: [N, S, D] shared K pool (N head-wise blocks of S tokens).
+      v_pool: [N, S, D] shared V pool.
+      block_tables: [B, H, M] int32, block ids per (sequence, head).
+      ctx_lens: [B] int32, tokens in context (including the current one,
+        whose K/V must already be written to the pool).
+
+    Returns:
+      [B, H, D] attention outputs, dtype of q.
+    """
+    batch, n_heads, head_dim = q.shape
+    n_blocks, block_size, pool_dim = k_pool.shape
+    assert pool_dim == head_dim, (pool_dim, head_dim)
+    max_blocks = block_tables.shape[-1]
+
+    kernel = functools.partial(
+        _decode_kernel, block_size=block_size, max_blocks=max_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, n_heads),
+        in_specs=[
+            pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, max_blocks), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec(k_pool.shape, lambda b, h: (0, 0, 0)),
+            pl.BlockSpec(v_pool.shape, lambda b, h: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_heads, head_dim), q.dtype),
+        interpret=True,
+    )(q, block_tables, ctx_lens, k_pool, v_pool)

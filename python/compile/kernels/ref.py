@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match these references to float32
+tolerance across the shape/dtype sweeps in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, ctx_lens):
+    """Gather-then-softmax reference for paged decode attention.
+
+    Same contract as kernels.paged_attention.paged_decode_attention.
+    """
+    batch, n_heads, head_dim = q.shape
+    _, block_size, _ = k_pool.shape
+    max_blocks = block_tables.shape[-1]
+    scale = 1.0 / (head_dim**0.5)
+
+    # Gather every table entry: [B, H, M, S, D] -> [B, H, M*S, D].
+    k = k_pool[block_tables].reshape(batch, n_heads, max_blocks * block_size, head_dim)
+    v = v_pool[block_tables].reshape(batch, n_heads, max_blocks * block_size, head_dim)
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    token_idx = jnp.arange(max_blocks * block_size)
+    mask = token_idx[None, :] < ctx_lens[:, None]  # [B, T]
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bht,bhtd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_causal_attention(q, k, v):
+    """Dense causal self-attention reference for the flash prefill kernel.
+
+    q, k, v: [B, H, T, D].
+    """
+    head_dim = q.shape[-1]
+    seq_len = q.shape[2]
+    scale = 1.0 / (head_dim**0.5)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    causal = jnp.tril(jnp.ones((seq_len, seq_len), bool))
+    s = jnp.where(causal[None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,270 @@
+"""Layer-2 JAX model: LLaMA-style transformer over the unified KV pool.
+
+Two graphs per model, mirroring MuxServe's prefill/decode job split (§3.1):
+
+  prefill(params, tokens, prompt_lens, block_tables, k_pool, v_pool)
+      -> (last_token_logits, k_pool', v_pool')
+  decode(params, tokens, positions, block_tables, k_pool, v_pool)
+      -> (logits, k_pool', v_pool')
+
+Both graphs thread the SHARED head-wise block pool (one pool for all
+colocated LLMs — the paper's unified KV cache) through a lax.scan over
+layers. K/V vectors are written into the pool at block-table-directed slots;
+decode attention reads them back via the Layer-1 paged attention kernel.
+
+The rust coordinator owns the pool and the block tables; these graphs are
+pure functions of them, AOT-lowered to HLO text by aot.py and executed from
+rust via PJRT. Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import ModelConfig
+from compile.kernels.flash_prefill import flash_prefill_attention
+from compile.kernels.paged_attention import paged_decode_attention
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(config: ModelConfig, seed: int = 0):
+    """Random (but fixed-seed) weights; returned as a flat dict of arrays.
+
+    PARAM_ORDER defines the flattened artifact layout consumed by the rust
+    runtime (see aot.py: manifest["params"]).
+    """
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 16)
+    L, dm, H, D, ff, V = (
+        config.n_layers,
+        config.d_model,
+        config.n_heads,
+        config.head_dim,
+        config.d_ff,
+        config.vocab_size,
+    )
+    hd = H * D
+    std = 0.02
+
+    def normal(k, shape, scale=std):
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    return {
+        "embed": normal(keys[0], (V, dm)),
+        "wq": normal(keys[1], (L, dm, hd)),
+        "wk": normal(keys[2], (L, dm, hd)),
+        "wv": normal(keys[3], (L, dm, hd)),
+        "wo": normal(keys[4], (L, hd, dm)),
+        "w_gate": normal(keys[5], (L, dm, ff)),
+        "w_up": normal(keys[6], (L, dm, ff)),
+        "w_down": normal(keys[7], (L, ff, dm)),
+        "ln_attn": jnp.ones((L, dm), jnp.float32),
+        "ln_mlp": jnp.ones((L, dm), jnp.float32),
+        "ln_f": jnp.ones((dm,), jnp.float32),
+        "lm_head": normal(keys[8], (dm, V)),
+    }
+
+
+PARAM_ORDER = (
+    "embed", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "ln_attn", "ln_mlp", "ln_f", "lm_head",
+)
+
+_LAYER_KEYS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+               "ln_attn", "ln_mlp")
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [..., D]; positions broadcastable to x.shape[:-1]."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _scatter_pool(pool, flat_idx, values):
+    """Write head vectors into the shared pool.
+
+    pool: [N, S, D]; flat_idx: [K] int32 in units of (block*S + offset);
+    values: [K, D]. Returns the updated pool.
+    """
+    n_blocks, block_size, head_dim = pool.shape
+    flat = pool.reshape(n_blocks * block_size, head_dim)
+    flat = flat.at[flat_idx].set(values)
+    return flat.reshape(n_blocks, block_size, head_dim)
+
+
+def _pool_indices(block_tables_l, positions, block_size):
+    """Map token positions to flat pool slots via the block table.
+
+    block_tables_l: [B, H, M]; positions: [B, T] token positions;
+    returns int32 indices shaped [B, H, T].
+    """
+    B, T = positions.shape
+    H = block_tables_l.shape[1]
+    blk = positions // block_size  # [B, T]
+    off = positions % block_size  # [B, T]
+    ids = jnp.take_along_axis(
+        block_tables_l,
+        jnp.broadcast_to(blk[:, None, :], (B, H, T)),
+        axis=2,
+    )  # [B, H, T]
+    return ids * block_size + off[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Prefill graph
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, prompt_lens, block_tables, k_pool, v_pool, *,
+            config: ModelConfig):
+    """Process whole prompts; write K/V to the pool; return last-token logits.
+
+    tokens: [B, T] int32 (right-padded to T = PREFILL_SEQ_LEN).
+    prompt_lens: [B] int32 actual lengths (1..T).
+    block_tables: [B, L, H, M] int32.
+    """
+    B, T = tokens.shape
+    H, D = config.n_heads, config.head_dim
+    S = config.block_size
+    x = params["embed"][tokens]  # [B, T, dm]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    tables = jnp.transpose(block_tables, (1, 0, 2, 3))  # [L, B, H, M]
+    layer_params = {k: params[k] for k in _LAYER_KEYS}
+
+    def layer(carry, scanned):
+        x, k_pool, v_pool = carry
+        p, table_l = scanned  # table_l: [B, H, M]
+        h = rms_norm(x, p["ln_attn"])
+        q = (h @ p["wq"]).reshape(B, T, H, D).transpose(0, 2, 1, 3)  # [B,H,T,D]
+        k = (h @ p["wk"]).reshape(B, T, H, D).transpose(0, 2, 1, 3)
+        v = (h @ p["wv"]).reshape(B, T, H, D).transpose(0, 2, 1, 3)
+        q = rope(q, positions[:, None, :], config.rope_theta)
+        k = rope(k, positions[:, None, :], config.rope_theta)
+
+        # Persist K/V for the decode phase: head-wise scatter into the pool.
+        idx = _pool_indices(table_l, positions, S)  # [B, H, T]
+        k_pool = _scatter_pool(k_pool, idx.reshape(-1), k.reshape(-1, D))
+        v_pool = _scatter_pool(v_pool, idx.reshape(-1), v.reshape(-1, D))
+
+        # Compute-bound causal attention via the Layer-1 flash kernel.
+        attn = flash_prefill_attention(q, k, v)  # [B, H, T, D]
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, T, H * D)
+        x = x + attn @ p["wo"]
+        x = x + swiglu(rms_norm(x, p["ln_mlp"]), p["w_gate"], p["w_up"],
+                       p["w_down"])
+        return (x, k_pool, v_pool), None
+
+    (x, k_pool, v_pool), _ = jax.lax.scan(
+        layer, (x, k_pool, v_pool), (layer_params, tables)
+    )
+
+    # Logits only for each prompt's final token.
+    last = jnp.take_along_axis(
+        x, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]  # [B, dm]
+    logits = rms_norm(last, params["ln_f"]) @ params["lm_head"]
+    return logits, k_pool, v_pool
+
+
+# ---------------------------------------------------------------------------
+# Decode graph
+# ---------------------------------------------------------------------------
+
+def decode(params, tokens, positions, block_tables, k_pool, v_pool, *,
+           config: ModelConfig):
+    """One incremental decoding step for a batch.
+
+    tokens: [B] int32 current tokens; positions: [B] int32 their positions.
+    block_tables: [B, L, H, M] int32.
+    """
+    B = tokens.shape[0]
+    H, D = config.n_heads, config.head_dim
+    S = config.block_size
+    x = params["embed"][tokens]  # [B, dm]
+
+    tables = jnp.transpose(block_tables, (1, 0, 2, 3))  # [L, B, H, M]
+    layer_params = {k: params[k] for k in _LAYER_KEYS}
+    ctx_lens = positions + 1  # current token included once written
+
+    def layer(carry, scanned):
+        x, k_pool, v_pool = carry
+        p, table_l = scanned
+        h = rms_norm(x, p["ln_attn"])
+        q = (h @ p["wq"]).reshape(B, H, D)
+        k = (h @ p["wk"]).reshape(B, H, D)
+        v = (h @ p["wv"]).reshape(B, H, D)
+        q = rope(q, positions[:, None], config.rope_theta)
+        k = rope(k, positions[:, None], config.rope_theta)
+
+        # Write this token's K/V, then attend over the whole context via the
+        # Layer-1 paged kernel (memory-bound phase).
+        idx = _pool_indices(table_l, positions[:, None], S)[:, :, 0]  # [B, H]
+        k_pool = _scatter_pool(k_pool, idx.reshape(-1), k.reshape(-1, D))
+        v_pool = _scatter_pool(v_pool, idx.reshape(-1), v.reshape(-1, D))
+        attn = paged_decode_attention(q, k_pool, v_pool, table_l, ctx_lens)
+        x = x + attn.reshape(B, H * D) @ p["wo"]
+        x = x + swiglu(rms_norm(x, p["ln_mlp"]), p["w_gate"], p["w_up"],
+                       p["w_down"])
+        return (x, k_pool, v_pool), None
+
+    (x, k_pool, v_pool), _ = jax.lax.scan(
+        layer, (x, k_pool, v_pool), (layer_params, tables)
+    )
+    logits = rms_norm(x, params["ln_f"]) @ params["lm_head"]
+    return logits, k_pool, v_pool
+
+
+# ---------------------------------------------------------------------------
+# Dense reference (no pool, no kernels) for tests
+# ---------------------------------------------------------------------------
+
+def dense_forward(params, tokens, *, config: ModelConfig):
+    """All-at-once causal forward returning logits for every position.
+
+    Kernel-free oracle used by tests to validate prefill+decode equivalence.
+    tokens: [B, T] int32.
+    """
+    from compile.kernels.ref import ref_causal_attention
+
+    B, T = tokens.shape
+    H, D = config.n_heads, config.head_dim
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    for l in range(config.n_layers):
+        h = rms_norm(x, params["ln_attn"][l])
+        q = (h @ params["wq"][l]).reshape(B, T, H, D).transpose(0, 2, 1, 3)
+        k = (h @ params["wk"][l]).reshape(B, T, H, D).transpose(0, 2, 1, 3)
+        v = (h @ params["wv"][l]).reshape(B, T, H, D).transpose(0, 2, 1, 3)
+        q = rope(q, positions[:, None, :], config.rope_theta)
+        k = rope(k, positions[:, None, :], config.rope_theta)
+        attn = ref_causal_attention(q, k, v)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, T, H * D)
+        x = x + attn @ params["wo"][l]
+        x = x + swiglu(
+            rms_norm(x, params["ln_mlp"][l]),
+            params["w_gate"][l], params["w_up"][l], params["w_down"][l],
+        )
+    return rms_norm(x, params["ln_f"]) @ params["lm_head"]

@@ -1,0 +1,76 @@
+"""AOT pipeline tests: HLO text validity, manifest/weights consistency."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.configs import MODELS, POOL_BLOCKS, BLOCK_SIZE, HEAD_DIM
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_decode_produces_hlo_text():
+    text = aot.to_hlo_text(aot.lower_decode(MODELS["muxb"], 1))
+    assert "ENTRY" in text and "HloModule" in text
+    # Text interchange: no 64-bit-id serialized proto involved.
+    assert len(text) > 1000
+
+
+def test_lower_prefill_produces_hlo_text():
+    text = aot.to_hlo_text(aot.lower_prefill(MODELS["muxb"], 2))
+    assert "ENTRY" in text
+
+
+def test_weights_dump_layout(tmp_path):
+    cfg = MODELS["muxb"]
+    layout = aot.dump_weights(cfg, str(tmp_path))
+    blob = np.fromfile(tmp_path / f"{cfg.name}_weights.bin", dtype="<f4")
+    total = sum(e["len_floats"] for e in layout)
+    assert blob.size == total
+    # Offsets are contiguous and ordered per PARAM_ORDER.
+    assert [e["name"] for e in layout] == list(M.PARAM_ORDER)
+    off = 0
+    for e in layout:
+        assert e["offset_floats"] == off
+        assert e["len_floats"] == int(np.prod(e["shape"]))
+        off += e["len_floats"]
+    # Round-trip one tensor.
+    params = M.init_params(cfg, seed=0)
+    e = layout[0]
+    np.testing.assert_array_equal(
+        blob[:e["len_floats"]].reshape(e["shape"]),
+        np.asarray(params["embed"], np.float32))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS,
+                                                    "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_consistency():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["pool"] == {"num_blocks": POOL_BLOCKS,
+                           "block_size": BLOCK_SIZE, "head_dim": HEAD_DIM}
+    for art in man["artifacts"]:
+        path = os.path.join(ARTIFACTS, art["file"])
+        assert os.path.exists(path), art["file"]
+        mcfg = man["models"][art["model"]]
+        n_params = len(mcfg["param_layout"])
+        assert len(art["inputs"]) == n_params + 5
+        assert art["outputs"][0]["shape"] == [art["batch"],
+                                              mcfg["vocab_size"]]
+    for name, mcfg in man["models"].items():
+        blob = np.fromfile(os.path.join(ARTIFACTS, mcfg["weights_file"]),
+                           dtype="<f4")
+        assert blob.size == sum(e["len_floats"]
+                                for e in mcfg["param_layout"])
+
+
+def test_param_spec_shapes_match_init():
+    cfg = MODELS["muxa"]
+    specs = aot.param_specs(cfg)
+    params = M.init_params(cfg)
+    for name, spec in zip(M.PARAM_ORDER, specs):
+        assert tuple(spec.shape) == tuple(params[name].shape), name

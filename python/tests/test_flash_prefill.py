@@ -1,0 +1,81 @@
+"""Flash prefill kernel vs dense causal attention oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_prefill import flash_prefill_attention
+from compile.kernels.ref import ref_causal_attention
+
+
+def make_qkv(rng, batch, heads, seq_len, head_dim, dtype=jnp.float32):
+    mk = lambda: jnp.asarray(
+        rng.normal(size=(batch, heads, seq_len, head_dim)), dtype)
+    return mk(), mk(), mk()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    heads=st.integers(1, 3),
+    seq_len=st.sampled_from([16, 32, 64]),
+    head_dim=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_shapes(batch, heads, seq_len, head_dim, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, batch, heads, seq_len, head_dim)
+    out = flash_prefill_attention(q, k, v)
+    ref = ref_causal_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_tile_variants():
+    rng = np.random.default_rng(0)
+    q, k, v = make_qkv(rng, 2, 2, 64, 64)
+    ref = ref_causal_attention(q, k, v)
+    for q_tile, kv_tile in [(16, 16), (32, 16), (16, 32), (64, 64), (8, 8)]:
+        out = flash_prefill_attention(q, k, v, q_tile=q_tile, kv_tile=kv_tile)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)
+
+
+def test_causality():
+    """Perturbing future tokens must not change earlier outputs."""
+    rng = np.random.default_rng(1)
+    q, k, v = make_qkv(rng, 1, 2, 32, 32)
+    out1 = flash_prefill_attention(q, k, v)
+    k2 = k.at[:, :, 20:, :].set(99.0)
+    v2 = v.at[:, :, 20:, :].set(-99.0)
+    out2 = flash_prefill_attention(q, k2, v2)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :20]),
+                               np.asarray(out2[:, :, :20]), atol=1e-6)
+    assert not np.allclose(np.asarray(out1[:, :, 20:]),
+                           np.asarray(out2[:, :, 20:]))
+
+
+def test_first_token_is_v0():
+    rng = np.random.default_rng(2)
+    q, k, v = make_qkv(rng, 2, 2, 16, 64)
+    out = flash_prefill_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]),
+                               np.asarray(v[:, :, 0]), atol=2e-5)
+
+
+def test_bf16_inputs():
+    rng = np.random.default_rng(3)
+    q, k, v = make_qkv(rng, 1, 2, 32, 64, dtype=jnp.bfloat16)
+    out = flash_prefill_attention(q, k, v)
+    ref = ref_causal_attention(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)
+
+
+def test_rejects_nondivisible_tiles():
+    rng = np.random.default_rng(4)
+    q, k, v = make_qkv(rng, 1, 1, 24, 16)
+    with pytest.raises(AssertionError):
+        flash_prefill_attention(q, k, v, q_tile=16, kv_tile=16)

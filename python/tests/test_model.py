@@ -1,0 +1,168 @@
+"""Layer-2 model tests: paged prefill+decode vs dense oracle; pool sharing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import (BLOCK_SIZE, HEAD_DIM, MODELS, POOL_BLOCKS,
+                             PREFILL_SEQ_LEN)
+
+
+def fresh_pools(n_blocks=POOL_BLOCKS):
+    kp = jnp.zeros((n_blocks, BLOCK_SIZE, HEAD_DIM), jnp.float32)
+    return kp, jnp.zeros_like(kp)
+
+
+def alloc_tables(rng, cfg, batch, taken=None):
+    """Distinct pool blocks per (b, layer, head, block_idx)."""
+    need = batch * cfg.n_layers * cfg.n_heads * cfg.max_blocks_per_seq
+    free = [i for i in range(POOL_BLOCKS) if taken is None or i not in taken]
+    ids = rng.permutation(free)[:need]
+    if taken is not None:
+        taken.update(int(i) for i in ids)
+    return jnp.asarray(
+        ids.reshape(batch, cfg.n_layers, cfg.n_heads, cfg.max_blocks_per_seq),
+        jnp.int32)
+
+
+def run_paged(cfg, params, prompts, n_decode, tables, kp, vp):
+    """Prefill then n_decode greedy steps; returns sequences and last logits."""
+    batch = len(prompts)
+    T = PREFILL_SEQ_LEN
+    lens = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    toks = np.zeros((batch, T), np.int32)
+    for b, p in enumerate(prompts):
+        toks[b, :len(p)] = p
+    logits, kp, vp = M.prefill(params, jnp.asarray(toks), lens, tables, kp,
+                               vp, config=cfg)
+    seqs = [list(p) for p in prompts]
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(n_decode):
+        for b in range(batch):
+            seqs[b].append(int(cur[b]))
+        pos = jnp.asarray([len(s) - 1 for s in seqs], jnp.int32)
+        logits, kp, vp = M.decode(params, cur, pos, tables, kp, vp,
+                                  config=cfg)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    return seqs, logits, kp, vp
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_paged_equals_dense(name):
+    cfg = MODELS[name]
+    params = M.init_params(cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 9)),
+               list(rng.integers(0, cfg.vocab_size, 14))]
+    tables = alloc_tables(rng, cfg, 2)
+    kp, vp = fresh_pools()
+    seqs, logits, _, _ = run_paged(cfg, params, prompts, 6, tables, kp, vp)
+    for b, seq in enumerate(seqs):
+        dense = M.dense_forward(params, jnp.asarray(seq, jnp.int32)[None],
+                                config=cfg)
+        np.testing.assert_allclose(np.asarray(dense[0, -1]),
+                                   np.asarray(logits[b]), atol=1e-4,
+                                   rtol=1e-4)
+
+
+def test_two_models_share_one_pool():
+    """The unified KV cache: muxa and muxb live in the same pool."""
+    rng = np.random.default_rng(1)
+    cfg_a, cfg_b = MODELS["muxa"], MODELS["muxb"]
+    pa, pb = M.init_params(cfg_a, seed=0), M.init_params(cfg_b, seed=1)
+    taken = set()
+    t_a = alloc_tables(rng, cfg_a, 1, taken)
+    t_b = alloc_tables(rng, cfg_b, 1, taken)
+    kp, vp = fresh_pools()
+    prompt_a = [list(rng.integers(0, cfg_a.vocab_size, 11))]
+    prompt_b = [list(rng.integers(0, cfg_b.vocab_size, 8))]
+
+    # Interleaved: prefill A, prefill B (same pool), then decode both.
+    la, kp, vp = M.prefill(
+        pa, jnp.asarray(np.pad(prompt_a[0], (0, PREFILL_SEQ_LEN - 11))[None],
+                        jnp.int32),
+        jnp.asarray([11], jnp.int32), t_a, kp, vp, config=cfg_a)
+    lb, kp, vp = M.prefill(
+        pb, jnp.asarray(np.pad(prompt_b[0], (0, PREFILL_SEQ_LEN - 8))[None],
+                        jnp.int32),
+        jnp.asarray([8], jnp.int32), t_b, kp, vp, config=cfg_b)
+
+    # Isolated baselines in private pools.
+    kp_a, vp_a = fresh_pools()
+    la_ref, _, _ = M.prefill(
+        pa, jnp.asarray(np.pad(prompt_a[0], (0, PREFILL_SEQ_LEN - 11))[None],
+                        jnp.int32),
+        jnp.asarray([11], jnp.int32), t_a, kp_a, vp_a, config=cfg_a)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(la_ref), atol=1e-5)
+
+    # Decode both from the shared pool; compare against dense oracles.
+    na = int(jnp.argmax(la, -1)[0])
+    nb = int(jnp.argmax(lb, -1)[0])
+    da, kp, vp = M.decode(pa, jnp.asarray([na], jnp.int32),
+                          jnp.asarray([11], jnp.int32), t_a, kp, vp,
+                          config=cfg_a)
+    db, kp, vp = M.decode(pb, jnp.asarray([nb], jnp.int32),
+                          jnp.asarray([8], jnp.int32), t_b, kp, vp,
+                          config=cfg_b)
+    dense_a = M.dense_forward(pa, jnp.asarray(prompt_a[0] + [na],
+                                              jnp.int32)[None], config=cfg_a)
+    dense_b = M.dense_forward(pb, jnp.asarray(prompt_b[0] + [nb],
+                                              jnp.int32)[None], config=cfg_b)
+    np.testing.assert_allclose(np.asarray(dense_a[0, -1]), np.asarray(da[0]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dense_b[0, -1]), np.asarray(db[0]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_prefill_padding_invariance():
+    """Padding tokens beyond prompt_len must not affect last-token logits."""
+    cfg = MODELS["muxb"]
+    params = M.init_params(cfg)
+    rng = np.random.default_rng(2)
+    prompt = list(rng.integers(0, cfg.vocab_size, 12))
+    tables = alloc_tables(rng, cfg, 1)
+    for pad_val in (0, 7):
+        toks = np.full((1, PREFILL_SEQ_LEN), pad_val, np.int32)
+        toks[0, :12] = prompt
+        kp, vp = fresh_pools()
+        logits, _, _ = M.prefill(params, jnp.asarray(toks),
+                                 jnp.asarray([12], jnp.int32), tables, kp,
+                                 vp, config=cfg)
+        if pad_val == 0:
+            base = np.asarray(logits)
+        else:
+            np.testing.assert_allclose(base, np.asarray(logits), atol=1e-5)
+
+
+def test_rms_norm_unit_norm_property():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(4, 32)) * 10,
+                    jnp.float32)
+    out = M.rms_norm(x, jnp.ones((32,)))
+    rms = np.sqrt(np.mean(np.square(np.asarray(out)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relativity():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 64)), jnp.float32)
+    p0 = M.rope(x, jnp.asarray([0, 0], jnp.int32), 10000.0)
+    p5 = M.rope(x, jnp.asarray([5, 5], jnp.int32), 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(p0), axis=-1),
+                               np.linalg.norm(np.asarray(p5), axis=-1),
+                               rtol=1e-5)
+    # Relative property: <rope(q,m), rope(k,n)> depends only on m-n.
+    q = jnp.asarray(rng.normal(size=(1, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64)), jnp.float32)
+    d1 = np.dot(np.asarray(M.rope(q, jnp.asarray([3]), 1e4))[0],
+                np.asarray(M.rope(k, jnp.asarray([1]), 1e4))[0])
+    d2 = np.dot(np.asarray(M.rope(q, jnp.asarray([9]), 1e4))[0],
+                np.asarray(M.rope(k, jnp.asarray([7]), 1e4))[0])
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)
+
+
+def test_param_order_covers_all_params():
+    cfg = MODELS["muxb"]
+    params = M.init_params(cfg)
+    assert set(M.PARAM_ORDER) == set(params.keys())

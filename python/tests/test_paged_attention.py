@@ -1,0 +1,127 @@
+"""Paged decode attention kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes (the L1 correctness contract); fixed cases
+pin the edge behaviours the serving path depends on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.paged_attention import paged_decode_attention
+from compile.kernels.ref import ref_paged_decode_attention
+
+
+def make_case(rng, batch, heads, head_dim, n_blocks, block_size, max_blocks,
+              ctx_lens, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(batch, heads, head_dim)), dtype)
+    k_pool = jnp.asarray(rng.normal(size=(n_blocks, block_size, head_dim)), dtype)
+    v_pool = jnp.asarray(rng.normal(size=(n_blocks, block_size, head_dim)), dtype)
+    need = batch * heads * max_blocks
+    assert need <= n_blocks
+    ids = rng.permutation(n_blocks)[:need].reshape(batch, heads, max_blocks)
+    tables = jnp.asarray(ids, jnp.int32)
+    ctx = jnp.asarray(ctx_lens, jnp.int32)
+    return q, k_pool, v_pool, tables, ctx
+
+
+def check(args, atol=2e-5):
+    out = paged_decode_attention(*args)
+    ref = ref_paged_decode_attention(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=atol,
+                               rtol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    batch=st.integers(1, 4),
+    heads=st.integers(1, 4),
+    head_dim=st.sampled_from([16, 32, 64]),
+    block_size=st.sampled_from([4, 8, 16]),
+    max_blocks=st.integers(1, 6),
+    data=st.data(),
+)
+def test_kernel_matches_ref_shapes(batch, heads, head_dim, block_size,
+                                   max_blocks, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    n_blocks = max(batch * heads * max_blocks, 8)
+    max_ctx = max_blocks * block_size
+    ctx_lens = data.draw(
+        st.lists(st.integers(1, max_ctx), min_size=batch, max_size=batch))
+    check(make_case(rng, batch, heads, head_dim, n_blocks, block_size,
+                    max_blocks, ctx_lens))
+
+
+def test_single_token_context():
+    rng = np.random.default_rng(0)
+    args = make_case(rng, 2, 2, 64, 32, 16, 4, [1, 1])
+    check(args)
+    # With ctx=1, output must equal v at slot 0 of the first block.
+    q, k_pool, v_pool, tables, ctx = args
+    out = paged_decode_attention(*args)
+    expect = v_pool[tables[:, :, 0], 0, :]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_full_context():
+    rng = np.random.default_rng(1)
+    check(make_case(rng, 2, 3, 64, 64, 16, 8, [128, 128]))
+
+
+def test_partial_block_boundary():
+    rng = np.random.default_rng(2)
+    for ctx in (15, 16, 17, 31, 32, 33):
+        check(make_case(rng, 1, 2, 64, 32, 16, 4, [ctx]))
+
+
+def test_ragged_contexts_in_batch():
+    rng = np.random.default_rng(3)
+    check(make_case(rng, 4, 2, 64, 64, 16, 4, [1, 16, 33, 64]))
+
+
+def test_shared_pool_two_logical_models():
+    """Blocks of two 'models' interleave in one pool without interference."""
+    rng = np.random.default_rng(4)
+    n_blocks, block_size, head_dim = 64, 16, 64
+    k_pool = jnp.asarray(rng.normal(size=(n_blocks, block_size, head_dim)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.normal(size=(n_blocks, block_size, head_dim)),
+                         jnp.float32)
+    ids = rng.permutation(n_blocks)
+    t_a = jnp.asarray(ids[:8].reshape(1, 2, 4), jnp.int32)
+    t_b = jnp.asarray(ids[8:16].reshape(1, 2, 4), jnp.int32)
+    q_a = jnp.asarray(rng.normal(size=(1, 2, head_dim)), jnp.float32)
+    q_b = jnp.asarray(rng.normal(size=(1, 2, head_dim)), jnp.float32)
+    ctx = jnp.asarray([40], jnp.int32)
+    out_a = paged_decode_attention(q_a, k_pool, v_pool, t_a, ctx)
+    out_b = paged_decode_attention(q_b, k_pool, v_pool, t_b, ctx)
+    # Each must equal its own reference — the other model's blocks are
+    # invisible through its table.
+    np.testing.assert_allclose(
+        np.asarray(out_a),
+        np.asarray(ref_paged_decode_attention(q_a, k_pool, v_pool, t_a, ctx)),
+        atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(out_b),
+        np.asarray(ref_paged_decode_attention(q_b, k_pool, v_pool, t_b, ctx)),
+        atol=2e-5)
+
+
+def test_bf16_inputs():
+    rng = np.random.default_rng(5)
+    args = make_case(rng, 2, 2, 64, 32, 16, 4, [20, 50], dtype=jnp.bfloat16)
+    out = paged_decode_attention(*args)
+    ref = ref_paged_decode_attention(*args)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2)
+
+
+def test_output_dtype_and_shape():
+    rng = np.random.default_rng(6)
+    q, k_pool, v_pool, tables, ctx = make_case(rng, 3, 4, 32, 64, 8, 4,
+                                               [3, 9, 27])
+    out = paged_decode_attention(q, k_pool, v_pool, tables, ctx)
+    assert out.shape == (3, 4, 32)
+    assert out.dtype == q.dtype

@@ -1,0 +1,131 @@
+//! Hot-path micro-benchmarks for the L3 coordinator (criterion substitute:
+//! warmup + repeated timing with mean/min reporting).
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use muxserve::config::{llama_spec, synthetic_zoo, ClusterSpec, WorkloadSpec};
+use muxserve::coordinator::estimator::{Estimator, UnitMember};
+use muxserve::coordinator::{
+    enumerate_mesh_groups, muxserve_placement, EngineConfig,
+};
+use muxserve::costmodel::CostModel;
+use muxserve::memory::{BlockAllocator, QuotaCache};
+use muxserve::simulator::Simulation;
+use muxserve::util::Rng;
+use muxserve::workload::{power_law_rates, synthetic_workload};
+
+/// Time `iters` runs of `f` after `warmup` runs; returns (mean, min) ns.
+fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let human = |ns: f64| {
+        if ns > 1e9 {
+            format!("{:.2} s", ns / 1e9)
+        } else if ns > 1e6 {
+            format!("{:.2} ms", ns / 1e6)
+        } else if ns > 1e3 {
+            format!("{:.2} us", ns / 1e3)
+        } else {
+            format!("{ns:.0} ns")
+        }
+    };
+    println!("{name:<44} mean {:>10}  min {:>10}", human(mean), human(min));
+}
+
+fn main() {
+    println!("== L3 hot-path micro-benchmarks ==");
+
+    // Block allocator: the per-token-step path of the real engine.
+    bench("allocator: alloc+free 64 blocks", 100, 2000, || {
+        let mut a = BlockAllocator::new(4096, 4);
+        for owner in 0..4 {
+            let ids = a.alloc(owner, 16).unwrap();
+            a.free_blocks(owner, &ids);
+        }
+    });
+
+    // Quota accounting: every admission/growth decision.
+    bench("quota: alloc/free/adapt cycle", 100, 2000, || {
+        let mut q = QuotaCache::new(100_000, &[3.0, 2.0, 1.0, 1.0]);
+        for llm in 0..4 {
+            let _ = q.alloc(llm, 500);
+        }
+        q.adapt();
+        for llm in 0..4 {
+            q.free(llm, 500);
+        }
+    });
+
+    // Eq. 3 estimator: called O(M * D * meshes) during placement.
+    let est = Estimator::new(CostModel::a100());
+    let members: Vec<UnitMember> = [6.7, 13.0, 30.0]
+        .iter()
+        .enumerate()
+        .map(|(i, p)| UnitMember {
+            spec: llama_spec(&format!("b{i}"), *p),
+            workload: WorkloadSpec::sharegpt(2.0),
+            prefill_sm: 0.5,
+            decode_sm: 0.5,
+            tp: 4,
+        })
+        .collect();
+    bench("estimator: 3-LLM unit fixpoint", 100, 2000, || {
+        est.unit_estimate(&members, 4)
+    });
+
+    // Mesh-group enumeration for the paper testbed.
+    let cluster = ClusterSpec::paper_testbed();
+    bench("placement: mesh-group enumeration (32 GPUs)", 10, 200, || {
+        enumerate_mesh_groups(&cluster)
+    });
+
+    // Full Alg. 1 at paper scale (19 LLMs / 32 GPUs).
+    let specs = synthetic_zoo();
+    let workloads: Vec<WorkloadSpec> = power_law_rates(19, 0.9, 20.0)
+        .into_iter()
+        .map(WorkloadSpec::sharegpt)
+        .collect();
+    bench("placement: Alg.1 end-to-end (19 LLMs, 32 GPUs)", 1, 5, || {
+        muxserve_placement(&specs, &workloads, &cluster, &est).unwrap()
+    });
+
+    // Simulator event throughput: events/s on a busy unit.
+    let (wl, requests) = synthetic_workload(19, 0.9, 20.0, 60.0, 7);
+    let placement =
+        muxserve_placement(&specs, &wl, &cluster, &est).unwrap();
+    let cost = CostModel::a100();
+    let n_req = requests.len();
+    bench(
+        &format!("simulator: 60s cluster sim ({n_req} reqs)"),
+        1,
+        10,
+        || {
+            let mut sim = Simulation::from_placement(
+                &placement, &specs, &wl, EngineConfig::muxserve(), &cost,
+            );
+            sim.run(&requests, 60.0)
+        },
+    );
+
+    // Workload generation.
+    bench("workload: 19-LLM 120s synthesis", 5, 50, || {
+        synthetic_workload(19, 0.9, 20.0, 120.0, 3)
+    });
+
+    // RNG throughput (underlies everything stochastic).
+    let mut rng = Rng::new(1);
+    bench("rng: 10k lognormal samples", 10, 500, || {
+        (0..10_000)
+            .map(|_| rng.log_normal_mean(161.0, 0.8))
+            .sum::<f64>()
+    });
+}

@@ -1,0 +1,105 @@
+//! Experiment drivers — one per paper figure (see DESIGN.md §4).
+//!
+//! Each driver prints the same rows/series the paper reports and returns
+//! structured results so tests can assert the qualitative shapes.
+
+use crate::config::{synthetic_zoo, ClusterSpec, ModelSpec, WorkloadSpec};
+use crate::coordinator::{
+    muxserve_placement, spatial_placement, EngineConfig, Placement,
+};
+use crate::coordinator::estimator::Estimator;
+use crate::costmodel::CostModel;
+use crate::metrics::Evaluation;
+use crate::simulator::Simulation;
+use crate::workload::{power_law_rates, synthetic_workload, Request};
+
+/// A (system name, evaluation) pair for comparison tables.
+pub struct SystemResult {
+    pub name: &'static str,
+    pub eval: Evaluation,
+    pub rates: Vec<f64>,
+}
+
+impl SystemResult {
+    pub fn throughput(&self) -> f64 {
+        self.eval.aggregate_throughput(&self.rates)
+    }
+}
+
+/// Run one (placement, engine config) against a request stream.
+pub fn run_system(
+    placement: &Placement,
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cfg: EngineConfig,
+    requests: &[Request],
+    duration: f64,
+) -> Evaluation {
+    let cost = CostModel::a100();
+    let mut sim =
+        Simulation::from_placement(placement, specs, workloads, cfg, &cost);
+    sim.run(requests, duration)
+}
+
+/// Convenience: the three §4.2 systems on a common workload.
+pub fn compare_three_systems(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    requests: &[Request],
+    duration: f64,
+) -> Vec<SystemResult> {
+    let est = Estimator::new(CostModel::a100());
+    let rates: Vec<f64> = workloads.iter().map(|w| w.rate).collect();
+    let mut out = Vec::new();
+
+    if let Some(p) = muxserve_placement(specs, workloads, cluster, &est) {
+        out.push(SystemResult {
+            name: "muxserve",
+            eval: run_system(&p, specs, workloads, EngineConfig::muxserve(),
+                             requests, duration),
+            rates: rates.clone(),
+        });
+        // Temporal multiplexing shares MuxServe's placement (§4.1) but
+        // schedules FCFS one-job-at-a-time.
+        out.push(SystemResult {
+            name: "temporal",
+            eval: run_system(&p, specs, workloads, EngineConfig::temporal(),
+                             requests, duration),
+            rates: rates.clone(),
+        });
+    }
+    if let Some(p) = spatial_placement(specs, workloads, cluster, &est) {
+        out.push(SystemResult {
+            name: "spatial",
+            eval: run_system(&p, specs, workloads, EngineConfig::spatial(),
+                             requests, duration),
+            rates,
+        });
+    }
+    out
+}
+
+/// Shared §4.2 workload setup: the Table-1 zoo with power-law rates.
+pub fn fig5_setup(
+    alpha: f64,
+    max_rate: f64,
+    duration: f64,
+    seed: u64,
+) -> (Vec<ModelSpec>, Vec<WorkloadSpec>, Vec<Request>) {
+    let specs = synthetic_zoo();
+    let (workloads, requests) =
+        synthetic_workload(specs.len(), alpha, max_rate, duration, seed);
+    (specs, workloads, requests)
+}
+
+/// Fig. 6 data: cumulative rate share per alpha.
+pub fn fig6_series(alphas: &[f64], n_llms: usize) -> Vec<(f64, Vec<f64>)> {
+    alphas
+        .iter()
+        .map(|a| {
+            let rates = power_law_rates(n_llms, *a, 20.0);
+            (*a, crate::workload::cumulative_rate_distribution(&rates))
+        })
+        .collect()
+}

@@ -1,0 +1,6 @@
+//! Figure/table regeneration harnesses (filled in per DESIGN.md §4).
+
+pub mod experiments;
+pub mod figures;
+
+pub use experiments::*;

@@ -1,0 +1,181 @@
+//! Command-line interface (hand-rolled: no clap in the offline registry).
+//!
+//! `muxserve bench-figN` regenerates one paper figure; `bench-all` runs the
+//! whole evaluation; `serve` drives the real PJRT path.
+
+use anyhow::Result;
+
+use crate::bench::figures;
+
+fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let duration = flag_f64(&args, "--duration", 120.0);
+    match cmd {
+        "bench-fig1" => {
+            figures::fig1();
+        }
+        "bench-fig2" => {
+            figures::fig2();
+        }
+        "bench-fig3" => {
+            figures::fig3();
+        }
+        "bench-fig5" => {
+            let quick = args.iter().any(|a| a == "--quick");
+            let (alphas, scales): (&[f64], &[f64]) = if quick {
+                (&[0.9, 2.1], &[8.0])
+            } else {
+                (&[0.7, 0.9, 1.3, 1.7, 2.1], &[4.0, 8.0, 16.0])
+            };
+            figures::fig5(alphas, scales, duration);
+        }
+        "bench-fig6" => {
+            figures::fig6();
+        }
+        "bench-fig7" => {
+            figures::fig7(&[5.0, 10.0, 15.0, 20.0], duration);
+        }
+        "bench-fig8" => {
+            figures::fig8(duration);
+        }
+        "bench-fig9" => {
+            figures::fig9(duration);
+        }
+        "bench-fig10" => {
+            figures::fig10(&[0.7, 1.3, 2.1], duration);
+        }
+        "bench-fig11" => {
+            figures::fig11(&[0.9, 2.1], duration);
+        }
+        "bench-fig12" => {
+            figures::fig12(duration);
+        }
+        "bench-all" => {
+            figures::fig1();
+            figures::fig2();
+            figures::fig3();
+            figures::fig6();
+            figures::fig5(&[0.7, 0.9, 1.3, 1.7, 2.1], &[4.0, 8.0, 16.0], duration);
+            figures::fig7(&[5.0, 10.0, 15.0, 20.0], duration);
+            figures::fig8(duration);
+            figures::fig9(duration);
+            figures::fig10(&[0.7, 1.3, 2.1], duration);
+            figures::fig11(&[0.9, 2.1], duration);
+            figures::fig12(duration);
+        }
+        "serve" => {
+            serve_cmd(&args)?;
+        }
+        "place" => {
+            place_cmd(&args)?;
+        }
+        "version" => println!("muxserve {}", env!("CARGO_PKG_VERSION")),
+        _ => print_help(),
+    }
+    Ok(())
+}
+
+/// Real PJRT serving demo from the CLI.
+fn serve_cmd(args: &[String]) -> Result<()> {
+    let duration = flag_f64(args, "--duration", 3.0);
+    let rate_a = flag_f64(args, "--rate-a", 4.0);
+    let rate_b = flag_f64(args, "--rate-b", 1.0);
+    let artifacts = args
+        .iter()
+        .position(|a| a == "--artifacts")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let mut eng = crate::serving::ServingEngine::new(
+        &artifacts,
+        &["muxa", "muxb"],
+        &[rate_a, rate_b],
+        crate::serving::ServeConfig::default(),
+    )?;
+    let reqs = eng.gen_requests(&[rate_a, rate_b], duration, 42);
+    println!("serving {} requests over {duration}s (virtual)...", reqs.len());
+    let report = eng.serve(&reqs)?;
+    println!(
+        "completed={} jobs={} tokens={} busy={:.2}s tpt={:.2} req/s \
+         tok/s={:.1}",
+        report.eval.records.len(),
+        report.n_jobs,
+        report.tokens_out,
+        report.busy_time,
+        report.eval.total_throughput(),
+        report.tokens_out as f64 / report.busy_time.max(1e-9)
+    );
+    println!(
+        "p50 latency={:.3}s p99 latency={:.3}s p99 ttft={:.3}s slo@8={:.2}",
+        report.eval.latency_summary().p50(),
+        report.eval.latency_summary().p99(),
+        report.eval.ttft_summary().p99(),
+        report.eval.slo_attainment(8.0)
+    );
+    Ok(())
+}
+
+/// Run the placement optimizer on the Table-1 zoo and print the units.
+fn place_cmd(args: &[String]) -> Result<()> {
+    use crate::config::{synthetic_zoo, ClusterSpec, WorkloadSpec};
+    use crate::coordinator::{muxserve_placement, estimator::Estimator};
+    use crate::costmodel::CostModel;
+    use crate::workload::power_law_rates;
+
+    let alpha = flag_f64(args, "--alpha", 0.9);
+    let max_rate = flag_f64(args, "--max-rate", 20.0);
+    let specs = synthetic_zoo();
+    let workloads: Vec<WorkloadSpec> =
+        power_law_rates(specs.len(), alpha, max_rate)
+            .into_iter()
+            .map(WorkloadSpec::sharegpt)
+            .collect();
+    let cluster = ClusterSpec::paper_testbed();
+    let est = Estimator::new(CostModel::a100());
+    let t0 = std::time::Instant::now();
+    let p = muxserve_placement(&specs, &workloads, &cluster, &est)
+        .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
+    println!(
+        "placement found in {:?} (est total tpt {:.1} req/s):",
+        t0.elapsed(),
+        p.est_total
+    );
+    for (u, unit) in p.units.iter().enumerate() {
+        let names: Vec<String> = unit
+            .members
+            .iter()
+            .map(|(i, c)| {
+                format!(
+                    "{}(rate={:.1},sm={:.1})",
+                    specs[*i].name, workloads[*i].rate, c.sm
+                )
+            })
+            .collect();
+        println!("  unit{u}: {} GPUs <- [{}]", unit.mesh_gpus, names.join(", "));
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "muxserve — flexible spatial-temporal multiplexing for multiple LLM \
+         serving (MuxServe, ICML 2024 reproduction)\n\n\
+         USAGE: muxserve <command> [--duration S]\n\n\
+         COMMANDS:\n  \
+         bench-fig1 .. bench-fig12   regenerate one paper figure\n  \
+         bench-all                   full evaluation suite\n  \
+         place [--alpha A]           run the placement optimizer (Alg. 1)\n  \
+         serve [--rate-a R]          real PJRT serving demo (needs `make \
+         artifacts`)\n  \
+         version"
+    );
+}

@@ -1,0 +1,92 @@
+//! GPU, mesh, and cluster specifications (the paper's 4×8 A100 testbed).
+
+/// One GPU's capabilities. Defaults model an A100-80G.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    pub mem_bytes: f64,
+    /// Peak dense bf16 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    pub num_sms: usize,
+    /// Intra-node interconnect (NVLink), bytes/s per direction.
+    pub nvlink_bw: f64,
+    /// Inter-node interconnect (IB), bytes/s.
+    pub ib_bw: f64,
+}
+
+impl GpuSpec {
+    pub fn a100_80g() -> Self {
+        GpuSpec {
+            name: "A100-80G".into(),
+            mem_bytes: 80e9,
+            peak_flops: 312e12,
+            hbm_bw: 2.039e12,
+            num_sms: 108,
+            nvlink_bw: 600e9,
+            ib_bw: 25e9, // 200 Gbps
+        }
+    }
+}
+
+/// A group of GPUs serving one LLM unit. TP is intra-node (the paper's
+/// pruning heuristic), so `gpus <= gpus_per_node` for TP meshes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MeshSpec {
+    pub gpus: usize,
+}
+
+/// Whole-cluster description.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+}
+
+impl ClusterSpec {
+    pub fn new(n_nodes: usize, gpus_per_node: usize) -> Self {
+        ClusterSpec { n_nodes, gpus_per_node, gpu: GpuSpec::a100_80g() }
+    }
+
+    /// The paper's evaluation cluster: 4 nodes × 8 A100.
+    pub fn paper_testbed() -> Self {
+        Self::new(4, 8)
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    /// Allowed mesh sizes: powers of two up to one node (TP stays
+    /// intra-node per §3.2's pruning heuristic).
+    pub fn mesh_sizes(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut s = 1;
+        while s <= self.gpus_per_node {
+            out.push(s);
+            s *= 2;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_is_32_gpus() {
+        let c = ClusterSpec::paper_testbed();
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.mesh_sizes(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn a100_constants() {
+        let g = GpuSpec::a100_80g();
+        assert_eq!(g.mem_bytes, 80e9);
+        assert_eq!(g.num_sms, 108);
+    }
+}

@@ -1,0 +1,16 @@
+//! Configuration layer: analytic LLM specs (the paper's LLaMA zoo), GPU and
+//! cluster specs, and workload descriptions.
+//!
+//! Two kinds of models coexist:
+//! * **Analytic specs** (`ModelSpec`) drive the cluster simulator and the
+//!   placement/scheduling math — LLaMA-7B…65B as in the paper's Table 1.
+//! * **Compiled specs** (`runtime::manifest`) describe the tiny real models
+//!   AOT-lowered from JAX and served through PJRT in the end-to-end path.
+
+mod cluster;
+mod model;
+mod workload;
+
+pub use cluster::{ClusterSpec, GpuSpec, MeshSpec};
+pub use model::{llama_spec, synthetic_zoo, ModelSpec, SizeBucket};
+pub use workload::{SloSpec, WorkloadSpec};

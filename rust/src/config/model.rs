@@ -1,0 +1,160 @@
+//! Analytic LLM specifications (LLaMA family, §4.2 Table 1).
+
+/// Architecture + size description of one LLM to be served.
+///
+/// `head_dim` is 128 across the whole family — the §3.4 observation that
+/// makes the unified head-wise KV cache possible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Total parameter count.
+    pub n_params: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+}
+
+impl ModelSpec {
+    /// fp16 weights.
+    pub fn weight_bytes(&self) -> f64 {
+        2.0 * self.n_params
+    }
+
+    /// fp16 K+V bytes stored per token (all layers, all heads).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * 2 * self.n_layers * self.n_heads * self.head_dim) as f64
+    }
+
+    /// Number of head-wise KV blocks consumed by `tokens` context tokens
+    /// (one block = `block_size` tokens of one head of one layer, K+V
+    /// paired). This is the unit of the paper's token-block quota R(·,·).
+    pub fn blocks_for_tokens(&self, tokens: usize, block_size: usize) -> usize {
+        let per_head = tokens.div_ceil(block_size);
+        per_head * self.n_layers * self.n_heads
+    }
+
+    /// FLOPs for one forward pass over `tokens` new tokens with `ctx`
+    /// average total context (projections + attention).
+    pub fn flops(&self, tokens: f64, ctx: f64) -> f64 {
+        let proj = 2.0 * self.n_params * tokens;
+        let attn = 4.0 * (self.n_layers * self.n_heads * self.head_dim) as f64
+            * tokens
+            * ctx;
+        proj + attn
+    }
+
+    /// Minimum TP degree (power of two) at which the weights fit in
+    /// `mem_bytes` per GPU with `reserve_frac` held back for KV+activations.
+    pub fn min_tp(&self, mem_bytes: f64, reserve_frac: f64) -> usize {
+        let budget = mem_bytes * (1.0 - reserve_frac);
+        let mut tp = 1;
+        while self.weight_bytes() / tp as f64 > budget && tp < 64 {
+            tp *= 2;
+        }
+        tp
+    }
+}
+
+/// Table-1 size buckets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeBucket {
+    B4to8,
+    B8to21,
+    B21to41,
+    B41to70,
+}
+
+/// LLaMA-family anchor architectures.
+pub fn llama_spec(name: &str, params_b: f64) -> ModelSpec {
+    let (n_layers, d_model, n_heads) = if params_b <= 8.0 {
+        (32, 4096, 32)
+    } else if params_b <= 21.0 {
+        (40, 5120, 40)
+    } else if params_b <= 41.0 {
+        (60, 6656, 52)
+    } else {
+        (80, 8192, 64)
+    };
+    ModelSpec {
+        name: name.to_string(),
+        n_params: params_b * 1e9,
+        n_layers,
+        d_model,
+        n_heads,
+        head_dim: 128,
+    }
+}
+
+/// The 19-LLM zoo of Table 1: 12 in 4–8B, 4 in 8–21B, 2 in 21–41B, 1 in
+/// 41–70B.
+pub fn synthetic_zoo() -> Vec<ModelSpec> {
+    let mut zoo = Vec::new();
+    let small = [4.0, 4.5, 5.0, 5.5, 6.0, 6.5, 6.7, 7.0, 7.0, 7.5, 7.8, 8.0];
+    for (i, p) in small.iter().enumerate() {
+        zoo.push(llama_spec(&format!("llm-s{i:02}"), *p));
+    }
+    for (i, p) in [13.0, 13.0, 15.0, 20.0].iter().enumerate() {
+        zoo.push(llama_spec(&format!("llm-m{i:02}"), *p));
+    }
+    for (i, p) in [30.0, 34.0].iter().enumerate() {
+        zoo.push(llama_spec(&format!("llm-l{i:02}"), *p));
+    }
+    zoo.push(llama_spec("llm-xl00", 65.0));
+    zoo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_kv_bytes() {
+        let m = llama_spec("7b", 6.7);
+        // 2 (K,V) * 2 bytes * 32 layers * 32 heads * 128 dim = 512 KiB/token.
+        assert_eq!(m.kv_bytes_per_token(), 524288.0);
+    }
+
+    #[test]
+    fn weight_bytes_fp16() {
+        let m = llama_spec("13b", 13.0);
+        assert_eq!(m.weight_bytes(), 26e9);
+    }
+
+    #[test]
+    fn zoo_matches_table1() {
+        let zoo = synthetic_zoo();
+        assert_eq!(zoo.len(), 19);
+        let b = |lo: f64, hi: f64| {
+            zoo.iter()
+                .filter(|m| m.n_params >= lo * 1e9 && m.n_params <= hi * 1e9)
+                .count()
+        };
+        assert_eq!(b(4.0, 8.0), 12);
+        assert_eq!(b(8.1, 21.0), 4);
+        assert_eq!(b(21.1, 41.0), 2);
+        assert_eq!(b(41.1, 70.0), 1);
+    }
+
+    #[test]
+    fn min_tp_grows_with_size() {
+        let mem = 80e9;
+        assert_eq!(llama_spec("7b", 6.7).min_tp(mem, 0.3), 1);
+        assert!(llama_spec("65b", 65.0).min_tp(mem, 0.3) >= 4);
+    }
+
+    #[test]
+    fn blocks_for_tokens_headwise() {
+        let m = llama_spec("7b", 6.7);
+        // 1 token -> 1 block per (layer, head) = 32*32.
+        assert_eq!(m.blocks_for_tokens(1, 16), 1024);
+        assert_eq!(m.blocks_for_tokens(16, 16), 1024);
+        assert_eq!(m.blocks_for_tokens(17, 16), 2048);
+    }
+
+    #[test]
+    fn flops_monotone_in_ctx() {
+        let m = llama_spec("7b", 6.7);
+        assert!(m.flops(128.0, 256.0) > m.flops(128.0, 128.0));
+    }
+}

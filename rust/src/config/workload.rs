@@ -1,0 +1,56 @@
+//! Workload and SLO specifications.
+
+/// Per-LLM workload: mean arrival rate plus request-length marginals
+/// (ShareGPT-like: mean prompt 161 tokens, mean output 338 tokens, §2.1).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Mean request arrival rate, req/s (Poisson).
+    pub rate: f64,
+    pub mean_prompt_len: f64,
+    pub mean_output_len: f64,
+    /// Log-normal shape parameter for both length marginals.
+    pub len_sigma: f64,
+}
+
+impl WorkloadSpec {
+    pub fn sharegpt(rate: f64) -> Self {
+        WorkloadSpec {
+            rate,
+            mean_prompt_len: 161.0,
+            mean_output_len: 338.0,
+            len_sigma: 0.8,
+        }
+    }
+
+    /// Expected tokens held in KV at completion of an average request.
+    pub fn mean_total_len(&self) -> f64 {
+        self.mean_prompt_len + self.mean_output_len
+    }
+}
+
+/// SLO definition (§4.1): a request attains its SLO if its end-to-end
+/// latency is within `scale ×` the ideal single-device execution latency.
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    pub scale: f64,
+}
+
+impl SloSpec {
+    pub fn new(scale: f64) -> Self {
+        SloSpec { scale }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharegpt_means() {
+        let w = WorkloadSpec::sharegpt(2.0);
+        assert_eq!(w.mean_prompt_len, 161.0);
+        assert_eq!(w.mean_output_len, 338.0);
+        assert_eq!(w.mean_total_len(), 499.0);
+        assert_eq!(w.rate, 2.0);
+    }
+}

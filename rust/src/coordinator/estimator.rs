@@ -1,0 +1,350 @@
+//! Throughput estimator (§3.3, Eq. 3 and Appendix A.2).
+//!
+//! In a stable serving setting prefill jobs of colocated LLMs execute
+//! sequentially while decode phases overlap, so a batch of `b^m` requests
+//! of LLM m completes every `Σ_i t_p^i + t_d^m · l_o^m` seconds:
+//!
+//! ```text
+//! tpt_S(m, b, W) = min( b^m / (Σ_i t_p^i + t_d^m · l_o^m), W_m )
+//! ```
+//!
+//! The prefill/decode latencies come from the analytic [`CostModel`]
+//! (the paper uses profiled tables — see DESIGN.md §2), and the batch size
+//! b^m is found by binary search against the arrival rate, capped by the
+//! unit's KV-cache capacity.
+
+use crate::config::{ModelSpec, WorkloadSpec};
+use crate::costmodel::CostModel;
+
+/// One LLM colocated in a unit, with its resource configuration.
+#[derive(Clone, Debug)]
+pub struct UnitMember {
+    pub spec: ModelSpec,
+    pub workload: WorkloadSpec,
+    /// SM fraction its prefill jobs request (Alg 2 candidate).
+    pub prefill_sm: f64,
+    /// SM fraction its decode jobs request.
+    pub decode_sm: f64,
+    /// Intra-op parallel degree on this mesh.
+    pub tp: usize,
+}
+
+/// Estimate of one unit's steady state.
+#[derive(Clone, Debug)]
+pub struct UnitEstimate {
+    /// Per-member request throughput (req/s), rate-capped.
+    pub tpt: Vec<f64>,
+    /// Per-member stable batch size.
+    pub batch: Vec<f64>,
+    /// Sum of member throughputs — F(b, W_b) of Eq. 1.
+    pub total: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Estimator {
+    pub cost: CostModel,
+    /// Maximum decode batch considered.
+    pub max_batch: f64,
+    /// Fraction of the analytic KV capacity available (must match the
+    /// serving engine's `EngineConfig::kv_capacity_frac` so the optimizer
+    /// plans for the memory it will actually have).
+    pub kv_frac: f64,
+}
+
+impl Estimator {
+    pub fn new(cost: CostModel) -> Self {
+        Estimator { cost, max_batch: 256.0, kv_frac: 1.0 }
+    }
+
+    pub fn with_kv_frac(cost: CostModel, kv_frac: f64) -> Self {
+        Estimator { cost, max_batch: 256.0, kv_frac }
+    }
+
+    /// Cycle time for member `m` given everyone's batch sizes (Eq. 3
+    /// denominator): all prefills serialize, m's decode runs `l_o` steps.
+    fn cycle_time(&self, members: &[UnitMember], batches: &[f64], m: usize) -> f64 {
+        let prefill_sum: f64 = members
+            .iter()
+            .zip(batches)
+            .map(|(mem, b)| {
+                let tokens = b * mem.workload.mean_prompt_len;
+                if tokens <= 0.0 {
+                    0.0
+                } else {
+                    self.cost.prefill_latency(
+                        &mem.spec,
+                        tokens,
+                        mem.workload.mean_prompt_len,
+                        mem.prefill_sm,
+                        mem.tp,
+                    )
+                }
+            })
+            .sum();
+        let mem = &members[m];
+        let avg_ctx = mem.workload.mean_prompt_len
+            + mem.workload.mean_output_len / 2.0;
+        let t_d = self.cost.decode_latency(
+            &mem.spec,
+            batches[m],
+            avg_ctx,
+            mem.decode_sm,
+            mem.tp,
+        );
+        prefill_sum + t_d * mem.workload.mean_output_len
+    }
+
+    /// Throughput of member m at the given batch vector.
+    fn member_tpt(&self, members: &[UnitMember], batches: &[f64], m: usize) -> f64 {
+        let cycle = self.cycle_time(members, batches, m);
+        if cycle <= 0.0 {
+            return 0.0;
+        }
+        (batches[m] / cycle).min(members[m].workload.rate)
+    }
+
+    /// Max batch sizes the unit's KV capacity supports, split by the
+    /// members' rate×size-normalized demand (the quota initialisation).
+    pub fn kv_batch_caps(&self, members: &[UnitMember], mesh_gpus: usize) -> Vec<f64> {
+        let specs: Vec<&ModelSpec> = members.iter().map(|m| &m.spec).collect();
+        let tp = members.first().map(|m| m.tp).unwrap_or(1).min(mesh_gpus);
+        let cap_bytes =
+            self.cost.kv_capacity_bytes(&specs, tp, mesh_gpus) * self.kv_frac;
+        let demand: Vec<f64> = members
+            .iter()
+            .map(|m| {
+                m.workload.rate
+                    * m.workload.mean_total_len()
+                    * m.spec.kv_bytes_per_token()
+            })
+            .collect();
+        let dsum: f64 = demand.iter().sum::<f64>().max(1e-9);
+        members
+            .iter()
+            .zip(&demand)
+            .map(|(m, d)| {
+                let share = cap_bytes * d / dsum;
+                let per_req =
+                    m.workload.mean_total_len() * m.spec.kv_bytes_per_token();
+                (share / per_req).max(1.0).min(self.max_batch)
+            })
+            .collect()
+    }
+
+    /// Solve Eq. 2 approximately: per-member binary search for the least
+    /// batch meeting its rate, iterated to a fixpoint because members'
+    /// cycle times couple through the prefill sum.
+    pub fn unit_estimate(&self, members: &[UnitMember], mesh_gpus: usize) -> UnitEstimate {
+        let n = members.len();
+        if n == 0 {
+            return UnitEstimate { tpt: vec![], batch: vec![], total: 0.0 };
+        }
+        let caps = self.kv_batch_caps(members, mesh_gpus);
+        let mut batches = vec![1.0_f64; n];
+        // Memoized per-member prefill latency at the current batch vector.
+        let prefill_of = |mem: &UnitMember, b: f64| {
+            let tokens = b * mem.workload.mean_prompt_len;
+            if tokens <= 0.0 {
+                0.0
+            } else {
+                self.cost.prefill_latency(
+                    &mem.spec,
+                    tokens,
+                    mem.workload.mean_prompt_len,
+                    mem.prefill_sm,
+                    mem.tp,
+                )
+            }
+        };
+        let mut prefill_lat: Vec<f64> = members
+            .iter()
+            .zip(&batches)
+            .map(|(mem, b)| prefill_of(mem, *b))
+            .collect();
+        for _round in 0..8 {
+            let mut changed = false;
+            for m in 0..n {
+                // During m's binary search only m's own terms change, so
+                // the other members' prefill latencies are reused.
+                let others: f64 = prefill_lat
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != m)
+                    .map(|(_, t)| *t)
+                    .sum();
+                let mem = &members[m];
+                let avg_ctx = mem.workload.mean_prompt_len
+                    + mem.workload.mean_output_len / 2.0;
+                let tpt_at = |b: f64| {
+                    let t_d = self.cost.decode_latency(
+                        &mem.spec, b, avg_ctx, mem.decode_sm, mem.tp,
+                    );
+                    let cycle = others
+                        + prefill_of(mem, b)
+                        + t_d * mem.workload.mean_output_len;
+                    if cycle <= 0.0 {
+                        0.0
+                    } else {
+                        (b / cycle).min(mem.workload.rate)
+                    }
+                };
+                // Binary search least b in [1, cap] with tpt >= rate.
+                let (mut lo, mut hi) = (1.0_f64, caps[m]);
+                let best = if tpt_at(hi) < mem.workload.rate - 1e-9 {
+                    hi // cannot meet the rate: take the cap.
+                } else {
+                    for _ in 0..24 {
+                        let mid = 0.5 * (lo + hi);
+                        if tpt_at(mid) >= mem.workload.rate - 1e-9 {
+                            hi = mid;
+                        } else {
+                            lo = mid;
+                        }
+                    }
+                    hi
+                };
+                if (best - batches[m]).abs() > 1e-6 {
+                    changed = true;
+                }
+                batches[m] = best;
+                prefill_lat[m] = prefill_of(&members[m], best);
+            }
+            if !changed {
+                break;
+            }
+        }
+        let tpt: Vec<f64> =
+            (0..n).map(|m| self.member_tpt(members, &batches, m)).collect();
+        let total = tpt.iter().sum();
+        UnitEstimate { tpt, batch: batches, total }
+    }
+
+    /// Alg. 2's `estimate_throughput(m, num_sm, p)`: single-LLM unit on a
+    /// `tp`-GPU mesh with `sm` fraction. Returns (throughput, batch).
+    pub fn single_llm(
+        &self,
+        spec: &ModelSpec,
+        workload: &WorkloadSpec,
+        sm: f64,
+        tp: usize,
+    ) -> (f64, f64) {
+        let member = UnitMember {
+            spec: spec.clone(),
+            workload: workload.clone(),
+            prefill_sm: sm,
+            decode_sm: sm,
+            tp,
+        };
+        let est = self.unit_estimate(std::slice::from_ref(&member), tp);
+        (est.total, est.batch[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llama_spec;
+
+    fn member(params_b: f64, rate: f64, sm: f64, tp: usize) -> UnitMember {
+        UnitMember {
+            spec: llama_spec(&format!("{params_b}b"), params_b),
+            workload: WorkloadSpec::sharegpt(rate),
+            prefill_sm: sm,
+            decode_sm: sm,
+            tp,
+        }
+    }
+
+    #[test]
+    fn single_llm_meets_low_rate() {
+        let est = Estimator::new(CostModel::a100());
+        let m = member(6.7, 0.5, 1.0, 1);
+        let e = est.unit_estimate(std::slice::from_ref(&m), 1);
+        assert!((e.total - 0.5).abs() < 0.02, "tpt={}", e.total);
+    }
+
+    #[test]
+    fn throughput_capped_by_rate() {
+        let est = Estimator::new(CostModel::a100());
+        let m = member(6.7, 0.1, 1.0, 1);
+        let e = est.unit_estimate(std::slice::from_ref(&m), 1);
+        assert!(e.total <= 0.1 + 1e-9);
+    }
+
+    #[test]
+    fn saturates_under_extreme_rate() {
+        let est = Estimator::new(CostModel::a100());
+        let lo = est.unit_estimate(&[member(6.7, 1.0, 1.0, 1)], 1).total;
+        let hi = est.unit_estimate(&[member(6.7, 1000.0, 1.0, 1)], 1).total;
+        assert!(hi < 1000.0, "saturated tpt={hi}");
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn colocation_of_light_llms_preserves_each() {
+        // Two lightly-loaded 7Bs on one mesh should both meet their rates.
+        let est = Estimator::new(CostModel::a100());
+        let ms = [member(6.7, 0.3, 0.6, 1), member(6.7, 0.3, 0.6, 1)];
+        let e = est.unit_estimate(&ms, 1);
+        assert!((e.total - 0.6).abs() < 0.05, "total={}", e.total);
+    }
+
+    #[test]
+    fn more_sm_more_throughput_when_saturated() {
+        let est = Estimator::new(CostModel::a100());
+        let (lo, _) = est.single_llm(
+            &llama_spec("7b", 6.7),
+            &WorkloadSpec::sharegpt(1e9),
+            0.3,
+            1,
+        );
+        let (hi, _) = est.single_llm(
+            &llama_spec("7b", 6.7),
+            &WorkloadSpec::sharegpt(1e9),
+            1.0,
+            1,
+        );
+        assert!(hi > lo, "hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn batch_grows_with_rate() {
+        let est = Estimator::new(CostModel::a100());
+        let (_, b_lo) = est.single_llm(
+            &llama_spec("7b", 6.7),
+            &WorkloadSpec::sharegpt(0.2),
+            1.0,
+            1,
+        );
+        let (_, b_hi) = est.single_llm(
+            &llama_spec("7b", 6.7),
+            &WorkloadSpec::sharegpt(5.0),
+            1.0,
+            1,
+        );
+        assert!(b_hi > b_lo, "b_hi={b_hi} b_lo={b_lo}");
+    }
+
+    #[test]
+    fn kv_caps_respect_capacity() {
+        let est = Estimator::new(CostModel::a100());
+        let ms = [member(6.7, 2.0, 1.0, 1), member(13.0, 1.0, 1.0, 1)];
+        let caps = est.kv_batch_caps(&ms, 2);
+        let total_bytes: f64 = ms
+            .iter()
+            .zip(&caps)
+            .map(|(m, b)| {
+                b * m.workload.mean_total_len() * m.spec.kv_bytes_per_token()
+            })
+            .sum();
+        let specs: Vec<&ModelSpec> = ms.iter().map(|m| &m.spec).collect();
+        let cap = est.cost.kv_capacity_bytes(&specs, 1, 2);
+        assert!(total_bytes <= cap * 1.01, "{total_bytes} > {cap}");
+    }
+
+    #[test]
+    fn empty_unit_is_zero() {
+        let est = Estimator::new(CostModel::a100());
+        assert_eq!(est.unit_estimate(&[], 1).total, 0.0);
+    }
+}

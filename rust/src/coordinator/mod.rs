@@ -1,0 +1,16 @@
+//! The Layer-3 coordination contribution of the paper: throughput
+//! estimation (Eq. 3), the enumeration-based greedy placement algorithm
+//! (Alg. 1 + 2), and the adaptive batch scheduling policy types (Alg. 3)
+//! shared by the simulator and the real serving path.
+
+pub mod estimator;
+pub mod placement;
+pub mod scheduler;
+
+pub use estimator::{Estimator, UnitMember};
+pub use placement::{
+    enumerate_mesh_groups, memory_greedy_placement, muxserve_placement,
+    parallel_candidates, spatial_placement, Placement, PlacementUnit,
+    ParallelCandidate,
+};
+pub use scheduler::{EngineConfig, Policy};

@@ -1,0 +1,512 @@
+//! LLM placement (§3.2): enumeration-based greedy placement (Alg. 1),
+//! parallel-candidate generation (Alg. 2), plus the ablation baseline
+//! (memory-greedy, Fig. 8) and the spatial-partitioning baseline (§4.1).
+
+use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
+use crate::coordinator::estimator::{Estimator, UnitMember};
+
+/// One feasible (tp, sm) configuration for an LLM (Alg. 2): the fewest SMs
+/// at this TP degree that satisfy the workload, with its stable batch.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelCandidate {
+    pub tp: usize,
+    pub sm: f64,
+    pub batch: f64,
+    pub tpt: f64,
+    /// Whether this candidate actually meets the workload rate.
+    pub meets_rate: bool,
+}
+
+/// An LLM unit after placement: a mesh and the LLMs colocated on it.
+#[derive(Clone, Debug)]
+pub struct PlacementUnit {
+    pub mesh_gpus: usize,
+    /// (model index, chosen candidate) for each colocated LLM.
+    pub members: Vec<(usize, ParallelCandidate)>,
+}
+
+/// A full cluster placement.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub units: Vec<PlacementUnit>,
+    /// Estimator value Σ_b F(b, W_b) used to select this placement.
+    pub est_total: f64,
+}
+
+impl Placement {
+    /// Members of unit `u` in estimator form.
+    pub fn unit_members(
+        &self,
+        u: usize,
+        specs: &[ModelSpec],
+        workloads: &[WorkloadSpec],
+    ) -> Vec<UnitMember> {
+        self.units[u]
+            .members
+            .iter()
+            .map(|(i, c)| UnitMember {
+                spec: specs[*i].clone(),
+                workload: workloads[*i].clone(),
+                prefill_sm: c.sm,
+                decode_sm: c.sm,
+                tp: self.units[u].mesh_gpus,
+            })
+            .collect()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.units.iter().map(|u| u.mesh_gpus).sum()
+    }
+
+    pub fn n_placed(&self) -> usize {
+        self.units.iter().map(|u| u.members.len()).sum()
+    }
+}
+
+/// Alg. 2: per-LLM parallel candidates. For each feasible TP degree,
+/// the *fewest* SMs whose estimated throughput meets the workload.
+pub fn parallel_candidates(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+) -> Vec<Vec<ParallelCandidate>> {
+    let sm_list: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    specs
+        .iter()
+        .zip(workloads)
+        .map(|(spec, w)| {
+            let min_tp = spec.min_tp(cluster.gpu.mem_bytes, 0.3);
+            let mut cands = Vec::new();
+            for &tp in cluster.mesh_sizes().iter().filter(|t| **t >= min_tp) {
+                let mut found = false;
+                for &sm in &sm_list {
+                    let (tpt, batch) = est.single_llm(spec, w, sm, tp);
+                    if tpt >= w.rate * 0.999 {
+                        cands.push(ParallelCandidate {
+                            tp,
+                            sm,
+                            batch,
+                            tpt,
+                            meets_rate: true,
+                        });
+                        found = true;
+                        break;
+                    }
+                }
+                if !found {
+                    // Even all SMs cannot meet the rate: keep the saturated
+                    // config so the LLM can still be served.
+                    let (tpt, batch) = est.single_llm(spec, w, 1.0, tp);
+                    cands.push(ParallelCandidate {
+                        tp,
+                        sm: 1.0,
+                        batch,
+                        tpt,
+                        meets_rate: false,
+                    });
+                }
+            }
+            cands
+        })
+        .collect()
+}
+
+/// Enumerate device mesh groups: unordered partitions of the cluster's
+/// GPUs into meshes of the allowed sizes (§3.2's pruned search space:
+/// TP is intra-node, so parts are powers of two up to one node).
+pub fn enumerate_mesh_groups(cluster: &ClusterSpec) -> Vec<Vec<usize>> {
+    let sizes = cluster.mesh_sizes();
+    let total = cluster.total_gpus();
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    // Descending parts => canonical (non-increasing) partitions only.
+    fn rec(
+        remaining: usize,
+        max_part_idx: usize,
+        sizes: &[usize],
+        cur: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if remaining == 0 {
+            out.push(cur.clone());
+            return;
+        }
+        for i in (0..=max_part_idx).rev() {
+            let s = sizes[i];
+            if s <= remaining {
+                cur.push(s);
+                rec(remaining - s, i, sizes, cur, out);
+                cur.pop();
+            }
+        }
+    }
+    rec(total, sizes.len() - 1, &sizes, &mut cur, &mut out);
+    out
+}
+
+/// Pick the candidate for model `mi` usable on a mesh of `gpus` GPUs:
+/// colocated LLMs run TP across the whole mesh, so we need the candidate
+/// with tp == mesh size (meshes are intra-node by construction).
+fn candidate_for_mesh(
+    cands: &[ParallelCandidate],
+    gpus: usize,
+) -> Option<ParallelCandidate> {
+    cands.iter().find(|c| c.tp == gpus).copied()
+}
+
+/// Alg. 1: enumeration-based greedy placement.
+pub fn muxserve_placement(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+) -> Option<Placement> {
+    let cands = parallel_candidates(specs, workloads, cluster, est);
+    // Sort LLMs by computation requirement (scale × popularity), Alg. 1.
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    let comp = |i: usize| {
+        workloads[i].rate
+            * specs[i].flops(
+                workloads[i].mean_total_len(),
+                workloads[i].mean_total_len(),
+            )
+    };
+    order.sort_by(|a, b| comp(*b).partial_cmp(&comp(*a)).unwrap());
+
+    // Workload-based pruning (§3.2): the biggest LLM constrains the
+    // minimum largest mesh.
+    let max_min_tp = specs
+        .iter()
+        .map(|s| s.min_tp(cluster.gpu.mem_bytes, 0.3))
+        .max()
+        .unwrap_or(1);
+
+    let mut best: Option<Placement> = None;
+    for group in enumerate_mesh_groups(cluster) {
+        if *group.iter().max().unwrap_or(&0) < max_min_tp {
+            continue;
+        }
+        if let Some(p) = greedy_place_on_group(
+            &group, &order, specs, workloads, &cands, est,
+        ) {
+            if best.as_ref().map_or(true, |b| p.est_total > b.est_total) {
+                best = Some(p);
+            }
+        }
+    }
+    best
+}
+
+/// Inner loop of Alg. 1: place LLMs (already demand-ordered) greedily on a
+/// fixed mesh group, maximizing the estimated throughput delta.
+fn greedy_place_on_group(
+    group: &[usize],
+    order: &[usize],
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cands: &[Vec<ParallelCandidate>],
+    est: &Estimator,
+) -> Option<Placement> {
+    let mut units: Vec<PlacementUnit> = group
+        .iter()
+        .map(|g| PlacementUnit { mesh_gpus: *g, members: vec![] })
+        .collect();
+    let mut unit_f: Vec<f64> = vec![0.0; units.len()];
+
+    let members_of = |unit: &PlacementUnit| -> Vec<UnitMember> {
+        unit.members
+            .iter()
+            .map(|(i, c)| UnitMember {
+                spec: specs[*i].clone(),
+                workload: workloads[*i].clone(),
+                prefill_sm: c.sm,
+                decode_sm: c.sm,
+                tp: unit.mesh_gpus,
+            })
+            .collect()
+    };
+
+    for &mi in order {
+        let mut best_delta = f64::NEG_INFINITY;
+        let mut best_u: Option<(usize, ParallelCandidate)> = None;
+        for (u, unit) in units.iter().enumerate() {
+            let Some(cand) = candidate_for_mesh(&cands[mi], unit.mesh_gpus)
+            else {
+                continue;
+            };
+            // Memory feasibility: all weights must fit on the mesh.
+            let mut mspecs: Vec<&ModelSpec> =
+                unit.members.iter().map(|(i, _)| &specs[*i]).collect();
+            mspecs.push(&specs[mi]);
+            if !est.cost.fits(&mspecs, unit.mesh_gpus, unit.mesh_gpus) {
+                continue;
+            }
+            let mut ms = members_of(unit);
+            ms.push(UnitMember {
+                spec: specs[mi].clone(),
+                workload: workloads[mi].clone(),
+                prefill_sm: cand.sm,
+                decode_sm: cand.sm,
+                tp: unit.mesh_gpus,
+            });
+            let delta = est.unit_estimate(&ms, unit.mesh_gpus).total - unit_f[u];
+            if delta > best_delta {
+                best_delta = delta;
+                best_u = Some((u, cand));
+            }
+        }
+        let (u, cand) = best_u?; // group infeasible for this LLM
+        units[u].members.push((mi, cand));
+        let ms = members_of(&units[u]);
+        unit_f[u] = est.unit_estimate(&ms, units[u].mesh_gpus).total;
+    }
+    Some(Placement { est_total: unit_f.iter().sum(), units })
+}
+
+/// Fig. 8 ablation baseline: prioritize high-rate LLMs, place each on the
+/// mesh with the largest available free memory.
+pub fn memory_greedy_placement(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+    group: &[usize],
+) -> Option<Placement> {
+    let cands = parallel_candidates(specs, workloads, cluster, est);
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    order.sort_by(|a, b| {
+        workloads[*b].rate.partial_cmp(&workloads[*a].rate).unwrap()
+    });
+    let mut units: Vec<PlacementUnit> = group
+        .iter()
+        .map(|g| PlacementUnit { mesh_gpus: *g, members: vec![] })
+        .collect();
+    let usable =
+        cluster.gpu.mem_bytes * (1.0 - crate::costmodel::ACTIVATION_RESERVE);
+    let mut free: Vec<f64> =
+        group.iter().map(|g| usable * *g as f64).collect();
+    for &mi in &order {
+        // Mesh with the largest free memory where the model fits.
+        let mut best: Option<usize> = None;
+        for (u, unit) in units.iter().enumerate() {
+            if candidate_for_mesh(&cands[mi], unit.mesh_gpus).is_none() {
+                continue;
+            }
+            if free[u] < specs[mi].weight_bytes() {
+                continue;
+            }
+            if best.map_or(true, |b| free[u] > free[b]) {
+                best = Some(u);
+            }
+        }
+        let u = best?;
+        let cand = candidate_for_mesh(&cands[mi], units[u].mesh_gpus)?;
+        units[u].members.push((mi, cand));
+        free[u] -= specs[mi].weight_bytes();
+    }
+    // Evaluate with the same estimator for apples-to-apples comparison.
+    let mut total = 0.0;
+    for unit in &units {
+        let ms: Vec<UnitMember> = unit
+            .members
+            .iter()
+            .map(|(i, c)| UnitMember {
+                spec: specs[*i].clone(),
+                workload: workloads[*i].clone(),
+                prefill_sm: c.sm,
+                decode_sm: c.sm,
+                tp: unit.mesh_gpus,
+            })
+            .collect();
+        total += est.unit_estimate(&ms, unit.mesh_gpus).total;
+    }
+    Some(Placement { units, est_total: total })
+}
+
+/// Spatial-partitioning baseline (§4.1): every LLM gets its own dedicated
+/// mesh (vLLM per model). Starts each at its minimal feasible mesh, then
+/// spends leftover GPUs on the most overloaded LLMs.
+pub fn spatial_placement(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+) -> Option<Placement> {
+    let cands = parallel_candidates(specs, workloads, cluster, est);
+    let sizes = cluster.mesh_sizes();
+    let mut mesh: Vec<usize> = specs
+        .iter()
+        .map(|s| s.min_tp(cluster.gpu.mem_bytes, 0.3))
+        .collect();
+    let used: usize = mesh.iter().sum();
+    if used > cluster.total_gpus() {
+        return None;
+    }
+    let mut spare = cluster.total_gpus() - used;
+    // Greedy upgrades: double the mesh of the most rate-starved LLM.
+    loop {
+        let mut best: Option<(usize, f64, usize)> = None; // (llm, gap, cost)
+        for i in 0..specs.len() {
+            let cur = mesh[i];
+            let Some(&next) = sizes.iter().find(|s| **s > cur) else {
+                continue;
+            };
+            let upgrade_cost = next - cur;
+            if upgrade_cost > spare {
+                continue;
+            }
+            let (tpt, _) = est.single_llm(&specs[i], &workloads[i], 1.0, cur);
+            let gap = workloads[i].rate - tpt;
+            if gap > 1e-6 && best.map_or(true, |(_, g, _)| gap > g) {
+                best = Some((i, gap, upgrade_cost));
+            }
+        }
+        match best {
+            Some((i, _, cost)) => {
+                mesh[i] = *sizes.iter().find(|s| **s > mesh[i]).unwrap();
+                spare -= cost;
+            }
+            None => break,
+        }
+    }
+    let mut units = Vec::new();
+    let mut total = 0.0;
+    for (i, spec) in specs.iter().enumerate() {
+        let cand = candidate_for_mesh(&cands[i], mesh[i]).unwrap_or(
+            ParallelCandidate {
+                tp: mesh[i],
+                sm: 1.0,
+                batch: 1.0,
+                tpt: 0.0,
+                meets_rate: false,
+            },
+        );
+        let member = UnitMember {
+            spec: spec.clone(),
+            workload: workloads[i].clone(),
+            prefill_sm: 1.0, // dedicated GPUs: full SM
+            decode_sm: 1.0,
+            tp: mesh[i],
+        };
+        total += est.unit_estimate(std::slice::from_ref(&member), mesh[i]).total;
+        units.push(PlacementUnit {
+            mesh_gpus: mesh[i],
+            members: vec![(
+                i,
+                ParallelCandidate { sm: 1.0, ..cand },
+            )],
+        });
+    }
+    Some(Placement { units, est_total: total })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llama_spec;
+    use crate::costmodel::CostModel;
+
+    fn setup(
+        params: &[f64],
+        rates: &[f64],
+    ) -> (Vec<ModelSpec>, Vec<WorkloadSpec>, Estimator) {
+        let specs: Vec<ModelSpec> = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| llama_spec(&format!("m{i}"), *p))
+            .collect();
+        let wl: Vec<WorkloadSpec> =
+            rates.iter().map(|r| WorkloadSpec::sharegpt(*r)).collect();
+        (specs, wl, Estimator::new(CostModel::a100()))
+    }
+
+    #[test]
+    fn mesh_groups_cover_cluster() {
+        let c = ClusterSpec::new(1, 8);
+        let groups = enumerate_mesh_groups(&c);
+        assert!(groups.iter().all(|g| g.iter().sum::<usize>() == 8));
+        // Contains the trivial and the finest partitions.
+        assert!(groups.contains(&vec![8]));
+        assert!(groups.contains(&vec![1; 8]));
+        // Canonical: non-increasing parts, no duplicates.
+        let mut seen = std::collections::HashSet::new();
+        for g in &groups {
+            assert!(g.windows(2).all(|w| w[0] >= w[1]));
+            assert!(seen.insert(g.clone()));
+        }
+    }
+
+    #[test]
+    fn candidates_prefer_fewest_sms() {
+        let (specs, wl, est) = setup(&[6.7], &[0.2]);
+        let c = ClusterSpec::new(1, 8);
+        let cands = parallel_candidates(&specs, &wl, &c, &est);
+        let c1 = cands[0].iter().find(|c| c.tp == 1).unwrap();
+        assert!(c1.meets_rate);
+        assert!(c1.sm < 1.0, "low rate should need few SMs, got {}", c1.sm);
+    }
+
+    #[test]
+    fn candidates_saturate_when_rate_unmeetable() {
+        let (specs, wl, est) = setup(&[6.7], &[1e6]);
+        let c = ClusterSpec::new(1, 2);
+        let cands = parallel_candidates(&specs, &wl, &c, &est);
+        assert!(cands[0].iter().all(|c| !c.meets_rate && c.sm == 1.0));
+    }
+
+    #[test]
+    fn muxserve_places_all_llms() {
+        let (specs, wl, est) = setup(&[6.7, 6.7, 13.0, 30.0], &[8.0, 2.0, 1.0, 0.2]);
+        let c = ClusterSpec::new(1, 8);
+        let p = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        assert_eq!(p.n_placed(), 4);
+        assert_eq!(p.total_gpus(), 8);
+        assert!(p.est_total > 0.0);
+    }
+
+    #[test]
+    fn muxserve_beats_memory_greedy_estimate() {
+        // Fig. 8 setting: popular small LLMs + unpopular large one.
+        let (specs, wl, est) =
+            setup(&[6.7, 6.7, 13.0, 30.0], &[10.0, 8.0, 0.5, 0.1]);
+        let c = ClusterSpec::new(1, 8);
+        let ours = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        let greedy =
+            memory_greedy_placement(&specs, &wl, &c, &est, &[4, 4]).unwrap();
+        assert!(
+            ours.est_total >= greedy.est_total,
+            "ours={} greedy={}",
+            ours.est_total,
+            greedy.est_total
+        );
+    }
+
+    #[test]
+    fn spatial_gives_every_llm_its_own_mesh() {
+        let (specs, wl, est) = setup(&[6.7, 13.0, 30.0], &[5.0, 1.0, 0.5]);
+        let c = ClusterSpec::new(1, 8);
+        let p = spatial_placement(&specs, &wl, &c, &est).unwrap();
+        assert_eq!(p.units.len(), 3);
+        assert!(p.units.iter().all(|u| u.members.len() == 1));
+        assert!(p.total_gpus() <= 8);
+    }
+
+    #[test]
+    fn spatial_infeasible_when_too_many_llms() {
+        let (specs, wl, est) = setup(&[6.7; 10], &[1.0; 10]);
+        let c = ClusterSpec::new(1, 8);
+        assert!(spatial_placement(&specs, &wl, &c, &est).is_none());
+    }
+
+    #[test]
+    fn placement_units_expose_members() {
+        let (specs, wl, est) = setup(&[6.7, 6.7], &[3.0, 0.5]);
+        let c = ClusterSpec::new(1, 2);
+        let p = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        let all: usize = (0..p.units.len())
+            .map(|u| p.unit_members(u, &specs, &wl).len())
+            .sum();
+        assert_eq!(all, 2);
+    }
+}

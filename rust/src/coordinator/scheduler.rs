@@ -1,0 +1,117 @@
+//! Batch-scheduling policy types (Alg. 3 and the §4.4 ablation axes).
+//!
+//! The actual scheduling loop lives in `simulator::unit` (driving the
+//! analytic cost model) and in `serving::engine` (driving real PJRT
+//! executables); both consume these shared policy knobs so ablations and
+//! baselines use the exact same code paths.
+
+/// Intra-unit scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Adaptive batch scheduling (Alg. 3): prefill-prioritized round-robin
+    /// with token-block quotas and periodic quota adaptation.
+    Adbs,
+    /// Round-robin over LLMs without quota enforcement (Fig. 9 baseline).
+    RoundRobin,
+    /// First-come-first-serve temporal multiplexing (AlpaServe-like,
+    /// Fig. 9 baseline and §4.1's temporal baseline).
+    FcfsTemporal,
+}
+
+/// Unit-engine configuration: policy plus the two resource-manager
+/// switches ablated in Figure 10.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub policy: Policy,
+    /// Computation management: partition SMs so prefill/decode jobs of
+    /// different LLMs co-run. Off = jobs serialize at full SM (temporal).
+    pub sm_partition: bool,
+    /// Memory management: unified KV cache with adaptive quotas. Off =
+    /// static per-LLM partitions sized at startup.
+    pub unified_kv: bool,
+    /// Quota adaptation period, seconds (ignored unless `unified_kv`).
+    pub adapt_period: f64,
+    /// Cap on prompt tokens admitted into one prefill job.
+    pub max_prefill_tokens: usize,
+    /// Cap on sequences in one decode iteration.
+    pub max_decode_batch: usize,
+    /// Fraction of the hardware KV capacity actually available (models
+    /// deployments with larger activation/fragmentation reserves; 1.0 =
+    /// the full analytic capacity).
+    pub kv_capacity_frac: f64,
+}
+
+impl EngineConfig {
+    /// Full MuxServe (the paper's system).
+    pub fn muxserve() -> Self {
+        EngineConfig {
+            policy: Policy::Adbs,
+            sm_partition: true,
+            unified_kv: true,
+            adapt_period: 2.0,
+            max_prefill_tokens: 2048,
+            max_decode_batch: 256,
+            kv_capacity_frac: 1.0,
+        }
+    }
+
+    /// Temporal multiplexing baseline (AlpaServe-like, §4.1): LLMs
+    /// interleave round-robin with continuous batching, but exactly one
+    /// job runs at a time at full SM (no prefill/decode co-location), and
+    /// the KV cache is statically partitioned per LLM.
+    pub fn temporal() -> Self {
+        EngineConfig {
+            policy: Policy::RoundRobin,
+            sm_partition: false,
+            unified_kv: false,
+            ..Self::muxserve()
+        }
+    }
+
+    /// Spatial partitioning baseline: each unit hosts exactly one LLM
+    /// (vLLM-like continuous batching on dedicated GPUs).
+    pub fn spatial() -> Self {
+        EngineConfig {
+            policy: Policy::Adbs, // degenerates to vLLM when |unit| = 1
+            sm_partition: true,
+            unified_kv: true,
+            ..Self::muxserve()
+        }
+    }
+
+    /// Fig. 10 middle bar: computation management only.
+    pub fn compute_mgmt_only() -> Self {
+        EngineConfig { unified_kv: false, ..Self::muxserve() }
+    }
+
+    /// Fig. 9 baseline: round-robin, no quota fairness.
+    pub fn round_robin() -> Self {
+        EngineConfig { policy: Policy::RoundRobin, ..Self::muxserve() }
+    }
+
+    /// Fig. 9 baseline: FCFS with everything else MuxServe-like.
+    pub fn fcfs() -> Self {
+        EngineConfig { policy: Policy::FcfsTemporal, ..Self::muxserve() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_differ_in_the_documented_axes() {
+        let mux = EngineConfig::muxserve();
+        assert_eq!(mux.policy, Policy::Adbs);
+        assert!(mux.sm_partition && mux.unified_kv);
+
+        let tmp = EngineConfig::temporal();
+        assert_eq!(tmp.policy, Policy::RoundRobin);
+        assert!(!tmp.sm_partition && !tmp.unified_kv);
+
+        let cm = EngineConfig::compute_mgmt_only();
+        assert!(cm.sm_partition && !cm.unified_kv);
+
+        assert_eq!(EngineConfig::round_robin().policy, Policy::RoundRobin);
+    }
+}

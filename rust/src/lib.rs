@@ -1,0 +1,31 @@
+//! # MuxServe (ICML 2024) — reproduction
+//!
+//! Flexible spatial-temporal multiplexing for multiple LLM serving, built
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: placement optimizer
+//!   (Alg 1+2), ADBS scheduler (Alg 3), unified head-wise KV cache, SM
+//!   partition runtime, discrete-event cluster simulator, baselines,
+//!   workload generators, metrics, and a real PJRT serving path.
+//! * **Layer 2** — JAX transformer graphs (`python/compile/model.py`),
+//!   AOT-lowered to HLO text consumed by [`runtime`].
+//! * **Layer 1** — Pallas kernels: head-wise paged decode attention and
+//!   flash prefill (`python/compile/kernels/`).
+//!
+//! Python runs only at build time (`make artifacts`); the request path is
+//! pure rust + PJRT.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod memory;
+pub mod metrics;
+pub mod simulator;
+pub mod smpartition;
+pub mod util;
+pub mod workload;
+
+pub mod bench;
+pub mod cli;
+pub mod runtime;
+pub mod serving;

@@ -1,0 +1,5 @@
+//! MuxServe CLI — leader entrypoint.
+
+fn main() -> anyhow::Result<()> {
+    muxserve::cli::main()
+}

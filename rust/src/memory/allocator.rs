@@ -1,0 +1,157 @@
+//! Concrete block-id allocator for the real PJRT serving path.
+//!
+//! The compiled JAX graphs address the shared K/V pools through block
+//! tables; this allocator hands out actual pool slots. It is the rust-side
+//! twin of the paper's memory-manager process (implemented there in C++
+//! over CUDA IPC; here the pool lives in host literals fed to PJRT).
+
+/// Free-list allocator over `n_blocks` pool slots with per-owner tracking.
+#[derive(Clone, Debug)]
+pub struct BlockAllocator {
+    free: Vec<u32>,
+    owner: Vec<Option<u32>>,
+    allocated_per_owner: Vec<usize>,
+}
+
+impl BlockAllocator {
+    pub fn new(n_blocks: usize, n_owners: usize) -> Self {
+        BlockAllocator {
+            // LIFO free list: recently-freed (cache-warm) blocks reused first.
+            free: (0..n_blocks as u32).rev().collect(),
+            owner: vec![None; n_blocks],
+            allocated_per_owner: vec![0; n_owners],
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_by(&self, owner: usize) -> usize {
+        self.allocated_per_owner[owner]
+    }
+
+    /// Allocate `n` blocks for `owner`; returns their pool ids or None if
+    /// the pool cannot satisfy the request (all-or-nothing).
+    pub fn alloc(&mut self, owner: usize, n: usize) -> Option<Vec<u32>> {
+        if self.free.len() < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.free.pop().unwrap();
+            debug_assert!(self.owner[b as usize].is_none());
+            self.owner[b as usize] = Some(owner as u32);
+            out.push(b);
+        }
+        self.allocated_per_owner[owner] += n;
+        Some(out)
+    }
+
+    /// Return blocks to the pool. Panics on double-free or foreign blocks —
+    /// those are correctness bugs upstream.
+    pub fn free_blocks(&mut self, owner: usize, blocks: &[u32]) {
+        for &b in blocks {
+            assert_eq!(
+                self.owner[b as usize],
+                Some(owner as u32),
+                "block {b} not owned by {owner}"
+            );
+            self.owner[b as usize] = None;
+            self.free.push(b);
+        }
+        self.allocated_per_owner[owner] -= blocks.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proplite, Rng};
+
+    #[test]
+    fn alloc_free_round_trip() {
+        let mut a = BlockAllocator::new(16, 2);
+        let b0 = a.alloc(0, 5).unwrap();
+        let b1 = a.alloc(1, 5).unwrap();
+        assert_eq!(a.n_free(), 6);
+        assert_eq!(a.used_by(0), 5);
+        // No overlap between owners.
+        assert!(b0.iter().all(|x| !b1.contains(x)));
+        a.free_blocks(0, &b0);
+        assert_eq!(a.n_free(), 11);
+        assert_eq!(a.used_by(0), 0);
+    }
+
+    #[test]
+    fn all_or_nothing() {
+        let mut a = BlockAllocator::new(4, 1);
+        assert!(a.alloc(0, 5).is_none());
+        assert_eq!(a.n_free(), 4);
+        assert!(a.alloc(0, 4).is_some());
+        assert!(a.alloc(0, 1).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "not owned")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(4, 1);
+        let b = a.alloc(0, 2).unwrap();
+        a.free_blocks(0, &b);
+        a.free_blocks(0, &b);
+    }
+
+    /// Property: any interleaving of allocs/frees conserves blocks, never
+    /// double-allocates, and restores full capacity once all users free.
+    #[test]
+    fn prop_alloc_free_conservation() {
+        proplite::check(200, |rng: &mut Rng| {
+            let n_blocks = rng.range(1, 64) as usize;
+            let n_owners = rng.range(1, 4) as usize;
+            let mut a = BlockAllocator::new(n_blocks, n_owners);
+            let mut held: Vec<(usize, Vec<u32>)> = Vec::new();
+            for _ in 0..rng.range(1, 50) {
+                if rng.f64() < 0.6 || held.is_empty() {
+                    let owner = rng.below(n_owners);
+                    let want = rng.range(1, 8) as usize;
+                    if let Some(blocks) = a.alloc(owner, want) {
+                        crate::prop_assert!(
+                            blocks.len() == want,
+                            "short allocation"
+                        );
+                        held.push((owner, blocks));
+                    }
+                } else {
+                    let i = rng.below(held.len());
+                    let (owner, blocks) = held.swap_remove(i);
+                    a.free_blocks(owner, &blocks);
+                }
+                // Invariant: held + free == total, no overlap.
+                let held_count: usize =
+                    held.iter().map(|(_, b)| b.len()).sum();
+                crate::prop_assert!(
+                    held_count + a.n_free() == n_blocks,
+                    "leak: held={held_count} free={}",
+                    a.n_free()
+                );
+                let mut all: Vec<u32> = held
+                    .iter()
+                    .flat_map(|(_, b)| b.iter().copied())
+                    .collect();
+                all.sort();
+                let before = all.len();
+                all.dedup();
+                crate::prop_assert!(all.len() == before, "double allocation");
+            }
+            for (owner, blocks) in held.drain(..) {
+                a.free_blocks(owner, &blocks);
+            }
+            crate::prop_assert!(a.n_free() == n_blocks, "capacity not restored");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,39 @@
+//! Unified KV cache manager (§3.4) — the memory half of MuxServe's
+//! resource manager.
+//!
+//! GPU memory in a unit is split into three partitions: (1) a unified KV
+//! cache of small **head-wise blocks** (each block holds K+V of ONE
+//! attention head for `block_size` tokens — possible because head size is
+//! uniform across the LLM family), (2) a single replica of each LLM's
+//! weights shared by its prefill and decode jobs, (3) an activation
+//! reserve. This module manages partition (1):
+//!
+//! * [`QuotaCache`] — counting view used by the scheduler/simulator:
+//!   per-LLM token-block quotas (the fairness device of §3.3) with
+//!   periodic adaptation that moves blocks from low- to high-utilization
+//!   LLMs.
+//! * [`BlockAllocator`] — concrete block-id allocator used by the real
+//!   PJRT serving path, handing out slots in the shared pools that the
+//!   compiled graphs index via block tables.
+
+mod allocator;
+mod quota;
+
+pub use allocator::BlockAllocator;
+pub use quota::{QuotaCache, QuotaError};
+
+/// Bytes of one head-wise block: K+V, fp16, `block_size` tokens, one head.
+pub fn block_bytes(block_size: usize, head_dim: usize) -> f64 {
+    (2 * 2 * block_size * head_dim) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_bytes_for_paper_heads() {
+        // head_dim 128 (LLaMA/GPT-3), 16-token blocks: 2*2*16*128 = 8 KiB.
+        assert_eq!(block_bytes(16, 128), 8192.0);
+    }
+}

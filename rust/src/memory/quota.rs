@@ -1,0 +1,302 @@
+//! Token-block quota accounting (§3.3): R(·,·) is token-block usage,
+//! normalized by request rate; ADBS assigns each LLM a quota and adapts it
+//! periodically by transferring blocks from low- to high-utilization LLMs.
+
+/// Error cases surfaced to the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuotaError {
+    /// The LLM's quota would be exceeded.
+    QuotaExceeded,
+    /// The pool itself has no free blocks.
+    PoolExhausted,
+}
+
+/// Counting model of the unified KV cache: per-LLM quota and usage over a
+/// shared pool of `total_blocks` head-wise blocks.
+#[derive(Clone, Debug)]
+pub struct QuotaCache {
+    total_blocks: usize,
+    quota: Vec<usize>,
+    used: Vec<usize>,
+    /// Peak usage since the last adaptation round (demand signal).
+    peak: Vec<usize>,
+    /// Demand that could not be admitted since last adaptation.
+    denied: Vec<usize>,
+}
+
+impl QuotaCache {
+    /// Initial quota split proportional to `weights` (the paper seeds this
+    /// with rate-and-scale-normalized shares; see `init_weights`).
+    pub fn new(total_blocks: usize, weights: &[f64]) -> Self {
+        let n = weights.len();
+        if n == 0 {
+            // An empty unit (mesh with no LLMs placed) holds no quotas.
+            return QuotaCache {
+                total_blocks,
+                quota: vec![],
+                used: vec![],
+                peak: vec![],
+                denied: vec![],
+            };
+        }
+        let wsum: f64 = weights.iter().sum();
+        let mut quota: Vec<usize> = weights
+            .iter()
+            .map(|w| {
+                ((w / wsum) * total_blocks as f64).floor().max(1.0) as usize
+            })
+            .collect();
+        // Fix rounding so quotas sum to exactly the pool size. If the pool
+        // is smaller than the LLM count the floor of 1 block each cannot
+        // be reduced further — quotas may then exceed the pool, which is
+        // safe because allocation always checks the pool too.
+        let mut diff = total_blocks as i64
+            - quota.iter().sum::<usize>() as i64;
+        let mut i = 0;
+        while diff != 0 && i < 4 * n * (diff.unsigned_abs() as usize + 1) {
+            if diff > 0 {
+                quota[i % n] += 1;
+                diff -= 1;
+            } else if quota[i % n] > 1 {
+                quota[i % n] -= 1;
+                diff += 1;
+            }
+            i += 1;
+        }
+        QuotaCache {
+            total_blocks,
+            quota,
+            used: vec![0; n],
+            peak: vec![0; n],
+            denied: vec![0; n],
+        }
+    }
+
+    /// Paper-faithful initial weights: token-block demand of an LLM is its
+    /// request rate × mean tokens × blocks-per-token, i.e. proportional to
+    /// rate × layers × heads (scale) — "normalized to account for varying
+    /// LLM scales and popularity".
+    pub fn init_weights(
+        rates: &[f64],
+        blocks_per_req: &[f64],
+    ) -> Vec<f64> {
+        rates
+            .iter()
+            .zip(blocks_per_req)
+            .map(|(r, b)| (r * b).max(1e-9))
+            .collect()
+    }
+
+    pub fn n_llms(&self) -> usize {
+        self.quota.len()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn quota(&self, llm: usize) -> usize {
+        self.quota[llm]
+    }
+
+    pub fn used(&self, llm: usize) -> usize {
+        self.used[llm]
+    }
+
+    pub fn total_used(&self) -> usize {
+        self.used.iter().sum()
+    }
+
+    pub fn free_in_pool(&self) -> usize {
+        self.total_blocks - self.total_used()
+    }
+
+    /// Can `n` blocks be allocated for `llm` right now?
+    pub fn can_alloc(&self, llm: usize, n: usize) -> Result<(), QuotaError> {
+        if self.used[llm] + n > self.quota[llm] {
+            return Err(QuotaError::QuotaExceeded);
+        }
+        if self.total_used() + n > self.total_blocks {
+            return Err(QuotaError::PoolExhausted);
+        }
+        Ok(())
+    }
+
+    /// Allocate, recording denial pressure for the adaptor on failure.
+    pub fn alloc(&mut self, llm: usize, n: usize) -> Result<(), QuotaError> {
+        match self.can_alloc(llm, n) {
+            Ok(()) => {
+                self.used[llm] += n;
+                self.peak[llm] = self.peak[llm].max(self.used[llm]);
+                Ok(())
+            }
+            Err(e) => {
+                self.denied[llm] += n;
+                Err(e)
+            }
+        }
+    }
+
+    /// Allocate checking only the shared pool, ignoring the per-LLM quota
+    /// (the Round-Robin baseline of Fig. 9: first-come-first-served cache).
+    pub fn alloc_pool_only(&mut self, llm: usize, n: usize) -> Result<(), QuotaError> {
+        if self.total_used() + n > self.total_blocks {
+            self.denied[llm] += n;
+            return Err(QuotaError::PoolExhausted);
+        }
+        self.used[llm] += n;
+        self.peak[llm] = self.peak[llm].max(self.used[llm]);
+        Ok(())
+    }
+
+    pub fn free(&mut self, llm: usize, n: usize) {
+        assert!(self.used[llm] >= n, "free {n} > used {}", self.used[llm]);
+        self.used[llm] -= n;
+    }
+
+    /// Utilization of an LLM's quota in [0, 1].
+    pub fn utilization(&self, llm: usize) -> f64 {
+        if self.quota[llm] == 0 {
+            return 1.0;
+        }
+        self.used[llm] as f64 / self.quota[llm] as f64
+    }
+
+    /// Periodic quota adaptation (§3.3): identify low-utilization LLMs and
+    /// transfer their surplus quota to LLMs with unmet demand. `demand[i]`
+    /// is the target block count (peak usage + denied since last round).
+    pub fn adapt(&mut self) {
+        let n = self.quota.len();
+        let demand: Vec<usize> = (0..n)
+            .map(|i| self.peak[i] + self.denied[i])
+            .collect();
+        // Surplus: quota above max(demand, current usage) with 10% slack.
+        let mut surplus_total = 0usize;
+        let mut deficit: Vec<usize> = vec![0; n];
+        let mut deficit_total = 0usize;
+        for i in 0..n {
+            let want = ((demand[i] as f64 * 1.1).ceil() as usize)
+                .max(self.used[i])
+                .max(1);
+            if self.quota[i] > want {
+                surplus_total += self.quota[i] - want;
+                self.quota[i] = want;
+            } else if want > self.quota[i] {
+                deficit[i] = want - self.quota[i];
+                deficit_total += deficit[i];
+            }
+        }
+        if deficit_total == 0 {
+            // No pressure: return surplus evenly so the pool stays covered.
+            let share = surplus_total / n.max(1);
+            for q in self.quota.iter_mut() {
+                *q += share;
+            }
+            let rem = surplus_total - share * n;
+            for q in self.quota.iter_mut().take(rem) {
+                *q += 1;
+            }
+        } else {
+            // Distribute surplus proportionally to deficit.
+            let mut given = 0usize;
+            for i in 0..n {
+                let g = (surplus_total as f64 * deficit[i] as f64
+                    / deficit_total as f64)
+                    .floor() as usize;
+                self.quota[i] += g;
+                given += g;
+            }
+            // Round-off leftovers to the largest deficit.
+            if surplus_total > given {
+                if let Some((imax, _)) = deficit
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, d)| **d)
+                {
+                    self.quota[imax] += surplus_total - given;
+                }
+            }
+        }
+        self.peak = self.used.clone();
+        self.denied = vec![0; n];
+        debug_assert!(
+            self.quota.iter().sum::<usize>() >= self.total_blocks.min(n),
+        );
+    }
+
+    /// Fairness measure |R_i - R_j| of Eq. 2: normalized block usage spread.
+    /// `norm[i]` is each LLM's normalizer (rate × blocks per request).
+    pub fn fairness_spread(&self, norm: &[f64]) -> f64 {
+        let rs: Vec<f64> = (0..self.n_llms())
+            .map(|i| self.used[i] as f64 / norm[i].max(1e-9))
+            .collect();
+        let max = rs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let min = rs.iter().cloned().fold(f64::INFINITY, f64::min);
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quotas_sum_to_pool() {
+        let q = QuotaCache::new(1000, &[3.0, 1.0, 1.0]);
+        let total: usize = (0..3).map(|i| q.quota(i)).sum();
+        assert_eq!(total, 1000);
+        assert!(q.quota(0) > q.quota(1));
+    }
+
+    #[test]
+    fn alloc_respects_quota() {
+        let mut q = QuotaCache::new(100, &[1.0, 1.0]);
+        assert_eq!(q.quota(0), 50);
+        assert!(q.alloc(0, 50).is_ok());
+        assert_eq!(q.alloc(0, 1), Err(QuotaError::QuotaExceeded));
+        q.free(0, 10);
+        assert!(q.alloc(0, 10).is_ok());
+    }
+
+    #[test]
+    fn adapt_moves_blocks_to_pressured_llm() {
+        let mut q = QuotaCache::new(100, &[1.0, 1.0]);
+        // LLM 0 idle; LLM 1 fills its quota and gets denied.
+        assert!(q.alloc(1, 50).is_ok());
+        assert_eq!(q.alloc(1, 30), Err(QuotaError::QuotaExceeded));
+        q.adapt();
+        assert!(
+            q.quota(1) > 60,
+            "quota after adapt: {} (expected growth)",
+            q.quota(1)
+        );
+        assert!(q.quota(0) < 50);
+        // Now the denied allocation fits.
+        assert!(q.alloc(1, 30).is_ok());
+    }
+
+    #[test]
+    fn adapt_never_strands_used_blocks() {
+        let mut q = QuotaCache::new(64, &[1.0, 1.0, 1.0, 1.0]);
+        assert!(q.alloc(2, 10).is_ok());
+        q.adapt();
+        assert!(q.quota(2) >= q.used(2));
+    }
+
+    #[test]
+    fn fairness_spread_zero_when_balanced() {
+        let mut q = QuotaCache::new(100, &[1.0, 1.0]);
+        q.alloc(0, 20).unwrap();
+        q.alloc(1, 20).unwrap();
+        assert!(q.fairness_spread(&[1.0, 1.0]) < 1e-9);
+        q.alloc(0, 20).unwrap();
+        assert!(q.fairness_spread(&[1.0, 1.0]) > 0.0);
+    }
+
+    #[test]
+    fn pool_exhaustion_detected() {
+        let mut q = QuotaCache::new(10, &[1.0]);
+        assert!(q.alloc(0, 10).is_ok());
+        assert_eq!(q.alloc(0, 1), Err(QuotaError::QuotaExceeded));
+    }
+}

@@ -1,0 +1,185 @@
+//! Serving metrics (§4.1): rate-weighted aggregate throughput, SLO
+//! attainment, and P99 latency / TTFT / TPOT (Appendix A.1).
+
+use crate::util::Summary;
+
+/// Completion record for one request, emitted by every serving system
+/// (simulated or real) in identical form so comparisons are apples-to-apples.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub llm: usize,
+    pub arrival: f64,
+    /// Time the first output token was produced (end of prefill).
+    pub first_token: f64,
+    /// Time the last token was produced.
+    pub finish: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    /// Contention-free reference latency used for the SLO definition.
+    pub ideal_latency: f64,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    /// Time-to-first-token.
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Time-per-output-token over the decode phase.
+    pub fn tpot(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        (self.finish - self.first_token) / (self.output_len - 1) as f64
+    }
+
+    pub fn meets_slo(&self, scale: f64) -> bool {
+        self.latency() <= scale * self.ideal_latency
+    }
+}
+
+/// Aggregated evaluation of one run.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub n_llms: usize,
+    pub duration: f64,
+    pub records: Vec<RequestRecord>,
+}
+
+impl Evaluation {
+    pub fn new(n_llms: usize, duration: f64, records: Vec<RequestRecord>) -> Self {
+        Evaluation { n_llms, duration, records }
+    }
+
+    /// Completed requests per second for one LLM.
+    pub fn llm_throughput(&self, llm: usize) -> f64 {
+        self.records.iter().filter(|r| r.llm == llm).count() as f64
+            / self.duration
+    }
+
+    /// Rate-weighted aggregate throughput (§4.1): per-LLM throughputs
+    /// averaged with weights proportional to their arrival rates.
+    pub fn aggregate_throughput(&self, rates: &[f64]) -> f64 {
+        let total_rate: f64 = rates.iter().sum();
+        if total_rate <= 0.0 {
+            return 0.0;
+        }
+        (0..self.n_llms)
+            .map(|i| self.llm_throughput(i) * rates[i] / total_rate)
+            .sum::<f64>()
+            * self.n_llms as f64
+    }
+
+    /// Plain total completions per second.
+    pub fn total_throughput(&self) -> f64 {
+        self.records.len() as f64 / self.duration
+    }
+
+    /// Fraction of requests finishing within `scale × ideal` (§4.1).
+    pub fn slo_attainment(&self, scale: f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().filter(|r| r.meets_slo(scale)).count() as f64
+            / self.records.len() as f64
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        s.extend(self.records.iter().map(|r| r.latency()));
+        s
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        s.extend(self.records.iter().map(|r| r.ttft()));
+        s
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        s.extend(
+            self.records
+                .iter()
+                .filter(|r| r.output_len > 1)
+                .map(|r| r.tpot()),
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(llm: usize, arrival: f64, first: f64, finish: f64, out: usize,
+           ideal: f64) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            llm,
+            arrival,
+            first_token: first,
+            finish,
+            prompt_len: 10,
+            output_len: out,
+            ideal_latency: ideal,
+        }
+    }
+
+    #[test]
+    fn latency_components() {
+        let r = rec(0, 1.0, 1.5, 3.5, 5, 1.0);
+        assert_eq!(r.latency(), 2.5);
+        assert_eq!(r.ttft(), 0.5);
+        assert_eq!(r.tpot(), 0.5);
+        assert!(r.meets_slo(3.0));
+        assert!(!r.meets_slo(2.0));
+    }
+
+    #[test]
+    fn tpot_single_token_is_zero() {
+        assert_eq!(rec(0, 0.0, 1.0, 1.0, 1, 1.0).tpot(), 0.0);
+    }
+
+    #[test]
+    fn slo_attainment_fraction() {
+        let ev = Evaluation::new(1, 10.0, vec![
+            rec(0, 0.0, 0.5, 1.0, 2, 1.0),  // latency 1.0, meets 2x
+            rec(0, 0.0, 4.0, 8.0, 2, 1.0),  // latency 8.0, misses 2x
+        ]);
+        assert_eq!(ev.slo_attainment(2.0), 0.5);
+    }
+
+    #[test]
+    fn aggregate_weights_by_rate() {
+        // LLM 0 (high rate) completes 10, LLM 1 completes 2.
+        let mut records = Vec::new();
+        for i in 0..10 {
+            records.push(rec(0, i as f64, i as f64 + 0.1, i as f64 + 0.2, 2, 1.0));
+        }
+        for i in 0..2 {
+            records.push(rec(1, i as f64, i as f64 + 0.1, i as f64 + 0.2, 2, 1.0));
+        }
+        let ev = Evaluation::new(2, 10.0, records);
+        assert_eq!(ev.llm_throughput(0), 1.0);
+        assert_eq!(ev.llm_throughput(1), 0.2);
+        assert_eq!(ev.total_throughput(), 1.2);
+        // Weighted: (1.0*0.9 + 0.2*0.1) * 2 = 1.84 with rates 9:1.
+        let agg = ev.aggregate_throughput(&[9.0, 1.0]);
+        assert!((agg - 1.84).abs() < 1e-12, "agg={agg}");
+    }
+
+    #[test]
+    fn summaries_cover_percentiles() {
+        let ev = Evaluation::new(1, 1.0, (0..100)
+            .map(|i| rec(0, 0.0, 0.1, 0.1 + i as f64, 2, 1.0))
+            .collect());
+        assert!(ev.latency_summary().p99() > ev.latency_summary().p50());
+        assert_eq!(ev.ttft_summary().count(), 100);
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT execution of the AOT artifacts: HLO text → compile → run.
+//!
+//! Follows the reference wiring of /opt/xla-example/load_hlo: the artifact
+//! is HLO *text* (jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1's proto path rejects; the text parser reassigns
+//! ids). One executable per (model, phase, batch) variant, compiled once
+//! and cached; weights are uploaded once per model and reused across calls.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+
+/// Host-side tensor handed to / returned by the runtime.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+}
+
+/// Outputs of one model step.
+pub struct StepOutput {
+    /// [batch, vocab] logits, row-major.
+    pub logits: Vec<f32>,
+    /// Updated K pool, flat [N, S, D].
+    pub k_pool: Vec<f32>,
+    /// Updated V pool, flat [N, S, D].
+    pub v_pool: Vec<f32>,
+}
+
+/// The PJRT runtime: client + executable cache + uploaded weights.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<(String, String, usize), xla::PjRtLoadedExecutable>,
+    /// Per-model parameter literals in PARAM_ORDER.
+    weights: HashMap<String, Vec<xla::Literal>>,
+    /// Cumulative executions, for the serving report.
+    pub n_executions: u64,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            weights: HashMap::new(),
+            n_executions: 0,
+        })
+    }
+
+    /// Upload a model's weights (idempotent).
+    pub fn load_model(&mut self, model: &str) -> Result<()> {
+        if self.weights.contains_key(model) {
+            return Ok(());
+        }
+        let flat = self.manifest.load_weights(model)?;
+        let entry = &self.manifest.models[model];
+        let mut lits = Vec::new();
+        for p in &entry.param_layout {
+            let chunk = &flat[p.offset_floats..p.offset_floats + p.len_floats];
+            let dims: Vec<i64> = p.shape.iter().map(|d| *d as i64).collect();
+            lits.push(xla::Literal::vec1(chunk).reshape(&dims)?);
+        }
+        self.weights.insert(model.to_string(), lits);
+        Ok(())
+    }
+
+    /// Compile (model, phase, batch) if not cached.
+    pub fn ensure_compiled(&mut self, model: &str, phase: &str, batch: usize) -> Result<()> {
+        let key = (model.to_string(), phase.to_string(), batch);
+        if self.executables.contains_key(&key) {
+            return Ok(());
+        }
+        let art = self
+            .manifest
+            .artifact(model, phase, batch)
+            .ok_or_else(|| anyhow!("no artifact {model}/{phase}/b{batch}"))?;
+        let path = self.manifest.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("pjrt compile")?;
+        self.executables.insert(key, exe);
+        Ok(())
+    }
+
+    fn artifact(&self, model: &str, phase: &str, batch: usize) -> Result<&ArtifactEntry> {
+        self.manifest
+            .artifact(model, phase, batch)
+            .ok_or_else(|| anyhow!("no artifact {model}/{phase}/b{batch}"))
+    }
+
+    /// Execute one step. `data_inputs` are the non-parameter inputs in
+    /// manifest order (tokens, lens/positions, block_tables, k_pool,
+    /// v_pool); the weights are prepended automatically.
+    pub fn run_step(
+        &mut self,
+        model: &str,
+        phase: &str,
+        batch: usize,
+        data_inputs: &[HostTensor],
+    ) -> Result<StepOutput> {
+        self.load_model(model)?;
+        self.ensure_compiled(model, phase, batch)?;
+        let art = self.artifact(model, phase, batch)?.clone();
+        let n_params = self.manifest.models[model].param_layout.len();
+        anyhow::ensure!(
+            data_inputs.len() + n_params == art.inputs.len(),
+            "expected {} data inputs, got {}",
+            art.inputs.len() - n_params,
+            data_inputs.len()
+        );
+        // Assemble literals: weights (cached) then data.
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(art.inputs.len());
+        let w = &self.weights[model];
+        inputs.extend(w.iter());
+        let mut data_lits = Vec::with_capacity(data_inputs.len());
+        for (t, sig) in data_inputs.iter().zip(&art.inputs[n_params..]) {
+            data_lits.push(t.to_literal(&sig.shape)?);
+        }
+        inputs.extend(data_lits.iter());
+
+        let exe = &self.executables[&(model.to_string(), phase.to_string(), batch)];
+        let result = exe.execute::<&xla::Literal>(&inputs)?;
+        self.n_executions += 1;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        let mut it = parts.into_iter();
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        let k_pool = it.next().unwrap().to_vec::<f32>()?;
+        let v_pool = it.next().unwrap().to_vec::<f32>()?;
+        Ok(StepOutput { logits, k_pool, v_pool })
+    }
+
+    pub fn pool_len(&self) -> usize {
+        self.manifest.pool_blocks
+            * self.manifest.pool_block_size
+            * self.manifest.pool_head_dim
+    }
+}
+
+/// Greedy sampling over a [batch, vocab] logits buffer.
+pub fn argmax_rows(logits: &[f32], vocab: usize) -> Vec<i32> {
+    logits
+        .chunks_exact(vocab)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let logits = vec![0.1, 0.9, 0.5, /* row 2 */ 2.0, -1.0, 0.0];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+}

@@ -1,0 +1,319 @@
+//! Parser for `artifacts/manifest.json` — the contract between the AOT
+//! compile path (python) and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape+dtype signature of one executable input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: v
+                .field("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("sig name not a string"))?
+                .to_string(),
+            shape: v
+                .field("shape")?
+                .usize_arr()
+                .ok_or_else(|| anyhow!("sig shape not an int array"))?,
+            dtype: v
+                .field("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow!("sig dtype not a string"))?
+                .to_string(),
+        })
+    }
+}
+
+/// One weight tensor's position in `<model>_weights.bin`.
+#[derive(Clone, Debug)]
+pub struct ParamLayout {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_floats: usize,
+    pub len_floats: usize,
+}
+
+/// One compiled (model, phase, batch) HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub model: String,
+    pub phase: String,
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One compiled model's static description.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab_size: usize,
+    pub block_size: usize,
+    pub max_blocks_per_seq: usize,
+    pub max_ctx: usize,
+    pub weights_file: String,
+    pub param_layout: Vec<ParamLayout>,
+    pub prefill_batches: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub pool_blocks: usize,
+    pub pool_block_size: usize,
+    pub pool_head_dim: usize,
+    pub prefill_seq_len: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let pool = v.field("pool")?;
+        let num = |j: &Json, k: &str| -> Result<usize> {
+            j.field(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("field {k} not a number"))
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .field("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            let mut param_layout = Vec::new();
+            for e in m
+                .field("param_layout")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("param_layout not an array"))?
+            {
+                param_layout.push(ParamLayout {
+                    name: e
+                        .field("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: e
+                        .field("shape")?
+                        .usize_arr()
+                        .ok_or_else(|| anyhow!("param shape"))?,
+                    offset_floats: num(e, "offset_floats")?,
+                    len_floats: num(e, "len_floats")?,
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    n_layers: num(m, "n_layers")?,
+                    d_model: num(m, "d_model")?,
+                    n_heads: num(m, "n_heads")?,
+                    head_dim: num(m, "head_dim")?,
+                    vocab_size: num(m, "vocab_size")?,
+                    block_size: num(m, "block_size")?,
+                    max_blocks_per_seq: num(m, "max_blocks_per_seq")?,
+                    max_ctx: num(m, "max_ctx")?,
+                    weights_file: m
+                        .field("weights_file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("weights_file"))?
+                        .to_string(),
+                    param_layout,
+                    prefill_batches: m
+                        .field("prefill_batches")?
+                        .usize_arr()
+                        .ok_or_else(|| anyhow!("prefill_batches"))?,
+                    decode_batches: m
+                        .field("decode_batches")?
+                        .usize_arr()
+                        .ok_or_else(|| anyhow!("decode_batches"))?,
+                },
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for a in v
+            .field("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+        {
+            let sig = |k: &str| -> Result<Vec<TensorSig>> {
+                a.field(k)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{k} not an array"))?
+                    .iter()
+                    .map(TensorSig::parse)
+                    .collect()
+            };
+            artifacts.push(ArtifactEntry {
+                model: a
+                    .field("model")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact model"))?
+                    .to_string(),
+                phase: a
+                    .field("phase")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact phase"))?
+                    .to_string(),
+                batch: num(a, "batch")?,
+                file: a
+                    .field("file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact file"))?
+                    .to_string(),
+                inputs: sig("inputs")?,
+                outputs: sig("outputs")?,
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            pool_blocks: num(pool, "num_blocks")?,
+            pool_block_size: num(pool, "block_size")?,
+            pool_head_dim: num(pool, "head_dim")?,
+            prefill_seq_len: num(&v, "prefill_seq_len")?,
+            models,
+            artifacts,
+        })
+    }
+
+    /// Locate the artifact for (model, phase, batch).
+    pub fn artifact(&self, model: &str, phase: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.phase == phase && a.batch == batch)
+    }
+
+    /// Smallest compiled batch >= `want` for (model, phase); falls back to
+    /// the largest if `want` exceeds every compiled variant.
+    pub fn batch_for(&self, model: &str, phase: &str, want: usize) -> Option<usize> {
+        let m = self.models.get(model)?;
+        let batches = if phase == "prefill" {
+            &m.prefill_batches
+        } else {
+            &m.decode_batches
+        };
+        batches
+            .iter()
+            .copied()
+            .filter(|b| *b >= want)
+            .min()
+            .or_else(|| batches.iter().copied().max())
+    }
+
+    /// Read a model's weights as f32 (little-endian on-disk layout).
+    pub fn load_weights(&self, model: &str) -> Result<Vec<f32>> {
+        let m = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        let path = self.dir.join(&m.weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "weights not f32-aligned");
+        let mut out = Vec::with_capacity(bytes.len() / 4);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        let expect: usize = m.param_layout.iter().map(|p| p.len_floats).sum();
+        anyhow::ensure!(
+            out.len() == expect,
+            "weights size {} != layout {}",
+            out.len(),
+            expect
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.pool_block_size, 16);
+        assert_eq!(m.pool_head_dim, 64);
+        assert!(m.models.contains_key("muxa"));
+        assert!(m.models.contains_key("muxb"));
+        assert!(m.artifact("muxa", "decode", 1).is_some());
+        assert!(m.artifact("muxa", "nope", 1).is_none());
+    }
+
+    #[test]
+    fn batch_selection_rounds_up() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.batch_for("muxa", "decode", 3), Some(4));
+        assert_eq!(m.batch_for("muxa", "decode", 1), Some(1));
+        // Beyond the largest compiled batch: clamp to max.
+        assert_eq!(m.batch_for("muxa", "decode", 100), Some(8));
+        assert_eq!(m.batch_for("muxa", "prefill", 2), Some(2));
+    }
+
+    #[test]
+    fn weights_match_layout() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let w = m.load_weights("muxb").unwrap();
+        let expect: usize = m.models["muxb"]
+            .param_layout
+            .iter()
+            .map(|p| p.len_floats)
+            .sum();
+        assert_eq!(w.len(), expect);
+        // First tensor is the embedding: vocab × d_model.
+        let e = &m.models["muxb"].param_layout[0];
+        assert_eq!(e.name, "embed");
+        assert_eq!(e.shape, vec![512, 128]);
+    }
+}

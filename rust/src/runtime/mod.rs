@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the only module that touches the `xla` crate.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{argmax_rows, HostTensor, PjrtRuntime, StepOutput};
+pub use manifest::{ArtifactEntry, Manifest, ModelEntry, TensorSig};

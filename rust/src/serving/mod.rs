@@ -1,0 +1,6 @@
+//! Real serving path: the coordinator driving actual PJRT executables
+//! (the end-to-end proof that all three layers compose).
+
+pub mod engine;
+
+pub use engine::{ServeConfig, ServeReport, ServingEngine};

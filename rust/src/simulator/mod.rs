@@ -1,0 +1,206 @@
+//! Discrete-event cluster simulator — the A100-testbed substitute.
+//!
+//! Replays a request stream against a [`Placement`] (a set of LLM units),
+//! with each unit running the intra-unit scheduling engine of
+//! [`unit::UnitSim`] over the analytic [`CostModel`]. All three systems
+//! compared in the paper (MuxServe, spatial partitioning, temporal
+//! multiplexing) run through this same engine, differing only in their
+//! [`EngineConfig`] and placement — so relative results are attributable
+//! to the algorithms, not simulator details.
+
+pub mod unit;
+
+pub use unit::{Job, JobPhase, UnitModelCfg, UnitSim};
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::{ModelSpec, WorkloadSpec};
+use crate::coordinator::{EngineConfig, Placement};
+use crate::costmodel::CostModel;
+use crate::metrics::Evaluation;
+use crate::workload::Request;
+
+#[derive(Clone, Debug)]
+enum EventKind {
+    Arrival(Request),
+    JobDone(u64),
+    Adapt,
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    unit: usize,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earlier time first; seq breaks ties deterministically.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Cluster-level simulation: a set of units plus the LLM→unit routing map
+/// (the request router of the real system).
+pub struct Simulation {
+    pub units: Vec<UnitSim>,
+    /// Global LLM index -> (unit index, local index).
+    pub llm_map: Vec<(usize, usize)>,
+    n_llms: usize,
+}
+
+impl Simulation {
+    /// Build a simulation from a placement.
+    pub fn from_placement(
+        placement: &Placement,
+        specs: &[ModelSpec],
+        workloads: &[WorkloadSpec],
+        cfg: EngineConfig,
+        cost: &CostModel,
+    ) -> Self {
+        let mut llm_map = vec![(usize::MAX, usize::MAX); specs.len()];
+        let mut units = Vec::new();
+        for (u, pu) in placement.units.iter().enumerate() {
+            let mut models = Vec::new();
+            for (local, (gi, cand)) in pu.members.iter().enumerate() {
+                llm_map[*gi] = (u, local);
+                models.push(UnitModelCfg {
+                    spec: specs[*gi].clone(),
+                    rate: workloads[*gi].rate,
+                    mean_total_len: workloads[*gi].mean_total_len(),
+                    prefill_sm: cand.sm,
+                    decode_sm: cand.sm,
+                    tp: pu.mesh_gpus,
+                    canonical_tp: specs[*gi]
+                        .min_tp(cost.gpu.mem_bytes, 0.3),
+                });
+            }
+            units.push(UnitSim::new(models, pu.mesh_gpus, cfg, cost.clone()));
+        }
+        Simulation { units, llm_map, n_llms: specs.len() }
+    }
+
+    /// Replay `requests` (global LLM ids, arrival-sorted) for `duration`
+    /// seconds of simulated time.
+    pub fn run(&mut self, requests: &[Request], duration: f64) -> Evaluation {
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut seq = 0u64;
+        for r in requests {
+            let (u, local) = self.llm_map[r.llm];
+            if u == usize::MAX {
+                continue; // LLM not placed (shouldn't happen)
+            }
+            let mut lr = r.clone();
+            lr.llm = local;
+            heap.push(Event {
+                time: r.arrival,
+                seq,
+                unit: u,
+                kind: EventKind::Arrival(lr),
+            });
+            seq += 1;
+        }
+        // Periodic quota adaptation (§3.3) per unit.
+        for (u, unit) in self.units.iter().enumerate() {
+            if unit.adaptive() {
+                let period = unit.cfg.adapt_period;
+                let mut t = period;
+                while t < duration {
+                    heap.push(Event {
+                        time: t,
+                        seq,
+                        unit: u,
+                        kind: EventKind::Adapt,
+                    });
+                    seq += 1;
+                    t += period;
+                }
+            }
+        }
+
+        while let Some(ev) = heap.pop() {
+            if ev.time > duration {
+                break;
+            }
+            let unit = &mut self.units[ev.unit];
+            unit.advance_time(ev.time);
+            match ev.kind {
+                EventKind::Arrival(r) => unit.on_arrival(ev.time, r),
+                EventKind::JobDone(id) => unit.on_job_done(ev.time, id),
+                EventKind::Adapt => unit.on_adapt(),
+            }
+            for (t_done, job_id) in unit.drain_started() {
+                heap.push(Event {
+                    time: t_done,
+                    seq,
+                    unit: ev.unit,
+                    kind: EventKind::JobDone(job_id),
+                });
+                seq += 1;
+            }
+        }
+
+        // Collect records, mapping local LLM ids back to global ones.
+        let mut records = Vec::new();
+        for (u, unit) in self.units.iter_mut().enumerate() {
+            for mut rec in unit.take_records() {
+                let global = self
+                    .llm_map
+                    .iter()
+                    .position(|(uu, ll)| *uu == u && *ll == rec.llm)
+                    .expect("record from unmapped llm");
+                rec.llm = global;
+                records.push(rec);
+            }
+        }
+        Evaluation::new(self.n_llms, duration, records)
+    }
+
+    /// Per-LLM time-averaged KV block usage (Fig. 9's cache-usage bars),
+    /// mapped to global LLM indices.
+    pub fn avg_block_usage(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_llms];
+        for (gi, (u, local)) in self.llm_map.iter().enumerate() {
+            if *u != usize::MAX {
+                out[gi] = self.units[*u].avg_block_usage(*local);
+            }
+        }
+        out
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.units.iter().map(|u| u.dropped()).sum()
+    }
+
+    /// Cluster-wide GPU utilization: per-unit SM utilization weighted by
+    /// mesh size (Figure 1's aggregate).
+    pub fn avg_gpu_utilization(&self) -> f64 {
+        let total: usize = self.units.iter().map(|u| u.mesh_gpus()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.units
+            .iter()
+            .map(|u| u.avg_sm_utilization() * u.mesh_gpus() as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+}

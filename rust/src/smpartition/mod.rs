@@ -1,0 +1,160 @@
+//! SM-partition runtime model — the CUDA MPS substitute (§3.4).
+//!
+//! The paper partitions streaming multiprocessors with NVIDIA MPS and lets
+//! the parallel runtime assign SMs to prefill/decode jobs dynamically at
+//! runtime rather than statically. We model the same contract: a mesh-wide
+//! budget of normalized SM capacity (1.0 = all SMs of every GPU in the
+//! unit, since colocated jobs run tensor-parallel across the whole mesh),
+//! from which jobs reserve fractions and to which they return them on
+//! completion. The cost model maps a fraction to latency (Figure 3).
+
+/// Tracks SM occupancy of one LLM unit.
+#[derive(Clone, Debug)]
+pub struct SmPool {
+    capacity: f64,
+    used: f64,
+    active_jobs: usize,
+}
+
+impl SmPool {
+    pub fn new() -> Self {
+        SmPool { capacity: 1.0, used: 0.0, active_jobs: 0 }
+    }
+
+    pub fn available(&self) -> f64 {
+        (self.capacity - self.used).max(0.0)
+    }
+
+    pub fn used(&self) -> f64 {
+        self.used
+    }
+
+    pub fn active_jobs(&self) -> usize {
+        self.active_jobs
+    }
+
+    /// Try to reserve `frac` of the SMs; the dynamic-assignment policy
+    /// (§3.4, Fig. 4 right) lets a job take *more* than it asked for when
+    /// it runs alone — the scheduler passes the clamped grant back in.
+    pub fn try_reserve(&mut self, frac: f64) -> Option<f64> {
+        const EPS: f64 = 1e-9;
+        if frac <= 0.0 || frac > self.available() + EPS {
+            return None;
+        }
+        let grant = frac.min(self.available());
+        self.used += grant;
+        self.active_jobs += 1;
+        Some(grant)
+    }
+
+    /// Grant whatever is available, up to `want` (dynamic assignment: a
+    /// lone compute-heavy job gets all SMs, as in Fig. 4 step 1).
+    pub fn reserve_up_to(&mut self, want: f64, min: f64) -> Option<f64> {
+        let avail = self.available();
+        if avail + 1e-9 < min || min <= 0.0 {
+            return None;
+        }
+        let grant = want.clamp(min, avail.max(min)).min(avail.max(min));
+        self.used += grant;
+        self.active_jobs += 1;
+        Some(grant)
+    }
+
+    pub fn release(&mut self, frac: f64) {
+        self.used = (self.used - frac).max(0.0);
+        assert!(self.active_jobs > 0, "release without active job");
+        self.active_jobs -= 1;
+    }
+}
+
+impl Default for SmPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proplite, Rng};
+
+    #[test]
+    fn reserve_release_cycle() {
+        let mut p = SmPool::new();
+        let g = p.try_reserve(0.4).unwrap();
+        assert_eq!(g, 0.4);
+        assert!((p.available() - 0.6).abs() < 1e-12);
+        assert_eq!(p.active_jobs(), 1);
+        p.release(g);
+        assert!((p.available() - 1.0).abs() < 1e-12);
+        assert_eq!(p.active_jobs(), 0);
+    }
+
+    #[test]
+    fn over_reservation_rejected() {
+        let mut p = SmPool::new();
+        let _ = p.try_reserve(0.8).unwrap();
+        assert!(p.try_reserve(0.3).is_none());
+        assert!(p.try_reserve(0.2).is_some());
+    }
+
+    #[test]
+    fn reserve_up_to_grants_all_when_alone() {
+        let mut p = SmPool::new();
+        let g = p.reserve_up_to(1.0, 0.3).unwrap();
+        assert_eq!(g, 1.0);
+        p.release(g);
+        // With half taken, a min-0.3 job gets the remaining half.
+        let a = p.try_reserve(0.5).unwrap();
+        let g2 = p.reserve_up_to(1.0, 0.3).unwrap();
+        assert!((g2 - 0.5).abs() < 1e-12);
+        p.release(a);
+        p.release(g2);
+    }
+
+    #[test]
+    fn reserve_up_to_rejects_below_min() {
+        let mut p = SmPool::new();
+        let _ = p.try_reserve(0.9).unwrap();
+        assert!(p.reserve_up_to(1.0, 0.3).is_none());
+    }
+
+    /// Property: usage never exceeds capacity; full release restores it.
+    #[test]
+    fn prop_never_oversubscribed() {
+        proplite::check(200, |rng: &mut Rng| {
+            let mut p = SmPool::new();
+            let mut grants: Vec<f64> = Vec::new();
+            for _ in 0..rng.range(1, 40) {
+                if rng.f64() < 0.6 || grants.is_empty() {
+                    let want = rng.f64();
+                    let min = want * rng.f64();
+                    if let Some(g) = p.reserve_up_to(want, min.max(0.01)) {
+                        grants.push(g);
+                    }
+                } else {
+                    let g = grants.swap_remove(rng.below(grants.len()));
+                    p.release(g);
+                }
+                crate::prop_assert!(
+                    p.used() <= 1.0 + 1e-9,
+                    "oversubscribed: {}",
+                    p.used()
+                );
+                crate::prop_assert!(
+                    p.active_jobs() == grants.len(),
+                    "job count drift"
+                );
+            }
+            for g in grants.drain(..) {
+                p.release(g);
+            }
+            crate::prop_assert!(
+                (p.available() - 1.0).abs() < 1e-9,
+                "capacity not restored: {}",
+                p.available()
+            );
+            Ok(())
+        });
+    }
+}

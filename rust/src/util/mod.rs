@@ -1,0 +1,10 @@
+//! Shared utilities built from scratch (the offline toolchain has no rand /
+//! serde_json / proptest, so this crate carries its own substrates).
+
+pub mod json;
+pub mod proplite;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

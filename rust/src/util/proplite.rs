@@ -1,0 +1,81 @@
+//! Tiny property-based testing harness (the offline registry has no
+//! proptest). Runs a property over many seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed exactly.
+//!
+//! Usage:
+//! ```ignore
+//! proplite::check(256, |rng| {
+//!     let n = rng.range(1, 100) as usize;
+//!     // ... build a case from rng, assert the invariant, return Ok(())
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of one property evaluation: Err carries a human-readable
+/// counterexample description.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> PropResult>(cases: u64, mut prop: F) {
+    // Env override lets a failure be replayed: PROPLITE_SEED=<n>.
+    if let Ok(seed) = std::env::var("PROPLITE_SEED") {
+        let seed: u64 = seed.parse().expect("PROPLITE_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {seed}/{cases} \
+                 (replay: PROPLITE_SEED={}): {msg}",
+                0xC0FFEEu64 ^ seed.wrapping_mul(0x9E3779B97F4A7C15)
+            );
+        }
+    }
+}
+
+/// Assert helper that returns Err instead of panicking, so `check` can
+/// report the seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(64, |rng| {
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay")]
+    fn reports_seed_on_failure() {
+        check(64, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.5, "x = {x}");
+            Ok(())
+        });
+    }
+}

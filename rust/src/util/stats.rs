@@ -1,0 +1,95 @@
+//! Small statistics helpers shared by metrics and the bench harness.
+
+/// Streaming summary of a sample: count / mean / min / max / percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    xs: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { xs: Vec::new() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        self.xs.extend(xs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Nearest-rank percentile, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        s.extend([3.0, 1.0, 2.0]);
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert_eq!(s.p50(), 2.0);
+    }
+
+    #[test]
+    fn percentile_of_uniform() {
+        let mut s = Summary::new();
+        s.extend((0..=100).map(|i| i as f64));
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(99.0), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.p99().is_nan());
+    }
+}

@@ -1,0 +1,157 @@
+//! Workload synthesis: power-law popularity, Poisson arrivals, ShareGPT-like
+//! request lengths, and a ChatLMSYS-like multi-day trace (§4.2, §4.3).
+
+mod powerlaw;
+mod trace;
+
+pub use powerlaw::{cumulative_rate_distribution, power_law_rates};
+pub use trace::{chatlmsys_like_trace, daily_rate_curve, TraceSpec};
+
+use crate::config::WorkloadSpec;
+use crate::util::Rng;
+
+/// One inference request as seen by every serving system in this repo.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Index of the LLM this request targets.
+    pub llm: usize,
+    /// Arrival time, seconds from experiment start.
+    pub arrival: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+}
+
+impl Request {
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.output_len
+    }
+}
+
+/// Sample request lengths from ShareGPT-like log-normal marginals.
+pub fn sample_lengths(spec: &WorkloadSpec, rng: &mut Rng) -> (usize, usize) {
+    let p = spec
+        .mean_prompt_len
+        .min(spec.mean_prompt_len * 8.0)
+        .max(1.0);
+    let prompt =
+        rng.log_normal_mean(p, spec.len_sigma).round().clamp(4.0, 1024.0);
+    let output = rng
+        .log_normal_mean(spec.mean_output_len, spec.len_sigma)
+        .round()
+        .clamp(1.0, 1024.0);
+    (prompt as usize, output as usize)
+}
+
+/// Generate Poisson arrivals for one LLM over `[0, duration)` seconds.
+pub fn poisson_requests(
+    llm: usize,
+    spec: &WorkloadSpec,
+    duration: f64,
+    rng: &mut Rng,
+) -> Vec<Request> {
+    let mut out = Vec::new();
+    if spec.rate <= 0.0 {
+        return out;
+    }
+    let mut t = rng.exponential(spec.rate);
+    let mut id = (llm as u64) << 40;
+    while t < duration {
+        let (prompt_len, output_len) = sample_lengths(spec, rng);
+        out.push(Request { id, llm, arrival: t, prompt_len, output_len });
+        id += 1;
+        t += rng.exponential(spec.rate);
+    }
+    out
+}
+
+/// Merge per-LLM request streams into one arrival-ordered stream.
+pub fn merge_streams(mut streams: Vec<Vec<Request>>) -> Vec<Request> {
+    let mut all: Vec<Request> = streams.drain(..).flatten().collect();
+    all.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    all
+}
+
+/// Build the full synthetic workload of §4.2: per-LLM power-law rates,
+/// Poisson arrivals, ShareGPT lengths.
+pub fn synthetic_workload(
+    n_llms: usize,
+    alpha: f64,
+    max_rate: f64,
+    duration: f64,
+    seed: u64,
+) -> (Vec<WorkloadSpec>, Vec<Request>) {
+    let rates = power_law_rates(n_llms, alpha, max_rate);
+    let specs: Vec<WorkloadSpec> =
+        rates.iter().map(|r| WorkloadSpec::sharegpt(*r)).collect();
+    let mut rng = Rng::new(seed);
+    let streams = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut sub = rng.fork(i as u64);
+            poisson_requests(i, s, duration, &mut sub)
+        })
+        .collect();
+    (specs, merge_streams(streams))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let spec = WorkloadSpec::sharegpt(5.0);
+        let mut rng = Rng::new(3);
+        let reqs = poisson_requests(0, &spec, 2_000.0, &mut rng);
+        let rate = reqs.len() as f64 / 2_000.0;
+        assert!((rate - 5.0).abs() < 0.25, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_sorted_after_merge() {
+        let (_, reqs) = synthetic_workload(4, 0.9, 4.0, 50.0, 7);
+        assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(!reqs.is_empty());
+    }
+
+    #[test]
+    fn lengths_have_sharegpt_means() {
+        let spec = WorkloadSpec::sharegpt(1.0);
+        let mut rng = Rng::new(11);
+        let n = 50_000;
+        let (mut sp, mut so) = (0.0, 0.0);
+        for _ in 0..n {
+            let (p, o) = sample_lengths(&spec, &mut rng);
+            sp += p as f64;
+            so += o as f64;
+        }
+        let (mp, mo) = (sp / n as f64, so / n as f64);
+        assert!((mp - 161.0).abs() / 161.0 < 0.1, "prompt mean {mp}");
+        assert!((mo - 338.0).abs() / 338.0 < 0.1, "output mean {mo}");
+    }
+
+    #[test]
+    fn zero_rate_produces_no_requests() {
+        let spec = WorkloadSpec::sharegpt(0.0);
+        let mut rng = Rng::new(1);
+        assert!(poisson_requests(0, &spec, 100.0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn request_ids_unique() {
+        let (_, reqs) = synthetic_workload(6, 1.3, 8.0, 30.0, 5);
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), reqs.len());
+    }
+
+    #[test]
+    fn workload_deterministic_per_seed() {
+        let (_, a) = synthetic_workload(5, 0.9, 4.0, 20.0, 9);
+        let (_, b) = synthetic_workload(5, 0.9, 4.0, 20.0, 9);
+        assert_eq!(a, b);
+    }
+}

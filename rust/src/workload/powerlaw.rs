@@ -1,0 +1,72 @@
+//! Power-law popularity (§4.2): rate of the i-th most popular LLM is
+//! proportional to (i+1)^-alpha; alpha controls skew (Figure 6).
+//!
+//! alpha = 0.9 -> ~20 % of LLMs receive ~50 % of traffic;
+//! alpha = 2.1 -> ~20 % of LLMs receive ~90 % of traffic.
+
+/// Rates for `n` LLMs, most popular first, scaled so the max is `max_rate`.
+pub fn power_law_rates(n: usize, alpha: f64, max_rate: f64) -> Vec<f64> {
+    assert!(n > 0);
+    let weights: Vec<f64> =
+        (0..n).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    let w0 = weights[0];
+    weights.iter().map(|w| w / w0 * max_rate).collect()
+}
+
+/// Cumulative share of total traffic captured by the top-k LLMs, for
+/// k = 1..n (the Figure 6 curve).
+pub fn cumulative_rate_distribution(rates: &[f64]) -> Vec<f64> {
+    let total: f64 = rates.iter().sum();
+    let mut sorted = rates.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut acc = 0.0;
+    sorted
+        .iter()
+        .map(|r| {
+            acc += r;
+            acc / total
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_rate_is_first() {
+        let r = power_law_rates(19, 0.9, 20.0);
+        assert_eq!(r[0], 20.0);
+        assert!(r.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn fig6_alpha09_top20pct_near_half() {
+        let r = power_law_rates(19, 0.9, 20.0);
+        let cum = cumulative_rate_distribution(&r);
+        let top20 = cum[3]; // top 4 of 19 ~ 20 %
+        assert!((top20 - 0.5).abs() < 0.1, "top20={top20}");
+    }
+
+    #[test]
+    fn fig6_alpha21_top20pct_near_ninety() {
+        let r = power_law_rates(19, 2.1, 20.0);
+        let cum = cumulative_rate_distribution(&r);
+        let top20 = cum[3];
+        assert!((top20 - 0.9).abs() < 0.05, "top20={top20}");
+    }
+
+    #[test]
+    fn alpha_zero_is_uniform() {
+        let r = power_law_rates(5, 0.0, 2.0);
+        assert!(r.iter().all(|x| (*x - 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn cumulative_ends_at_one() {
+        let r = power_law_rates(7, 1.3, 10.0);
+        let cum = cumulative_rate_distribution(&r);
+        assert!((cum.last().unwrap() - 1.0).abs() < 1e-12);
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

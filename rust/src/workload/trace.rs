@@ -1,0 +1,155 @@
+//! ChatLMSYS-like trace synthesis (§4.3, Figure 2).
+//!
+//! The paper samples LLMs and workloads from a production trace of a
+//! multi-LLM web service: 16 LLMs on 32 GPUs, 20 % of the popular LLMs
+//! receiving 50 % of the traffic, with day-scale rate fluctuation. The
+//! trace itself is proprietary, so we synthesize one with the same
+//! published aggregate statistics: power-law popularity (alpha such that
+//! top-20 % ≈ 50 %), diurnal modulation per LLM with randomized phase, and
+//! Poisson arrivals within each time bucket (non-homogeneous thinning).
+
+use super::{merge_streams, sample_lengths, Request};
+use crate::config::WorkloadSpec;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub n_llms: usize,
+    /// Average (over time and LLMs) arrival rate, req/s.
+    pub avg_rate: f64,
+    /// Experiment duration in seconds.
+    pub duration: f64,
+    /// Period of the diurnal modulation, seconds (scaled down from 24 h).
+    pub period: f64,
+    /// Modulation depth in [0, 1).
+    pub depth: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            n_llms: 16,
+            avg_rate: 1.0,
+            duration: 240.0,
+            period: 120.0,
+            depth: 0.6,
+            seed: 0,
+        }
+    }
+}
+
+/// Instantaneous rate multiplier at time `t` for LLM `i` (Fig 2's
+/// day-scale waves, phase-shifted per LLM).
+pub fn daily_rate_curve(spec: &TraceSpec, llm: usize, t: f64) -> f64 {
+    let phase = llm as f64 * 0.7;
+    1.0 + spec.depth
+        * (2.0 * std::f64::consts::PI * t / spec.period + phase).sin()
+}
+
+/// Synthesize the trace. Returns per-LLM *mean* workload specs (used by the
+/// placement optimizer, which plans on averages — §3.1's note that workload
+/// is estimated from history) and the concrete arrival stream.
+pub fn chatlmsys_like_trace(spec: &TraceSpec) -> (Vec<WorkloadSpec>, Vec<Request>) {
+    // alpha = 0.9 reproduces "20 % of LLMs get 50 % of traffic" at n = 16.
+    let weights = super::power_law_rates(spec.n_llms, 0.9, 1.0);
+    let wsum: f64 = weights.iter().sum();
+    let rates: Vec<f64> = weights
+        .iter()
+        .map(|w| w / wsum * spec.avg_rate * spec.n_llms as f64)
+        .collect();
+    let specs: Vec<WorkloadSpec> =
+        rates.iter().map(|r| WorkloadSpec::sharegpt(*r)).collect();
+
+    let mut rng = Rng::new(spec.seed);
+    let mut streams = Vec::new();
+    for (i, w) in specs.iter().enumerate() {
+        let mut sub = rng.fork(i as u64);
+        // Non-homogeneous Poisson via thinning against the peak rate.
+        let peak = w.rate * (1.0 + spec.depth);
+        let mut t = 0.0;
+        let mut id = (i as u64) << 40;
+        let mut reqs = Vec::new();
+        if peak > 0.0 {
+            loop {
+                t += sub.exponential(peak);
+                if t >= spec.duration {
+                    break;
+                }
+                let accept =
+                    w.rate * daily_rate_curve(spec, i, t) / peak;
+                if sub.f64() < accept {
+                    let (prompt_len, output_len) = sample_lengths(w, &mut sub);
+                    reqs.push(Request {
+                        id,
+                        llm: i,
+                        arrival: t,
+                        prompt_len,
+                        output_len,
+                    });
+                    id += 1;
+                }
+            }
+        }
+        streams.push(reqs);
+    }
+    (specs, merge_streams(streams))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cumulative_rate_distribution;
+
+    #[test]
+    fn trace_statistics_match_paper() {
+        let spec = TraceSpec { duration: 600.0, ..Default::default() };
+        let (specs, reqs) = chatlmsys_like_trace(&spec);
+        assert_eq!(specs.len(), 16);
+        // Mean rate ~ avg_rate * n_llms.
+        let measured = reqs.len() as f64 / spec.duration;
+        let expected = spec.avg_rate * 16.0;
+        assert!(
+            (measured - expected).abs() / expected < 0.15,
+            "measured={measured} expected={expected}"
+        );
+        // Top 20 % of LLMs get ~50 % of traffic.
+        let mut counts = vec![0.0; 16];
+        for r in &reqs {
+            counts[r.llm] += 1.0;
+        }
+        let cum = cumulative_rate_distribution(&counts);
+        assert!((cum[2] - 0.5).abs() < 0.12, "top3 share={}", cum[2]);
+    }
+
+    #[test]
+    fn modulation_visible_in_time_buckets() {
+        let spec = TraceSpec {
+            n_llms: 1,
+            avg_rate: 30.0,
+            duration: 240.0,
+            period: 120.0,
+            depth: 0.8,
+            seed: 4,
+        };
+        let (_, reqs) = chatlmsys_like_trace(&spec);
+        // Bucket into 24 windows; peak-to-trough must exceed 1.5x.
+        let mut buckets = vec![0.0; 24];
+        for r in &reqs {
+            buckets[(r.arrival / 10.0) as usize % 24] += 1.0;
+        }
+        let max = buckets.iter().cloned().fold(0.0, f64::max);
+        let min = buckets.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min.max(1.0) > 1.5, "max={max} min={min}");
+    }
+
+    #[test]
+    fn curve_oscillates_around_one() {
+        let spec = TraceSpec::default();
+        let avg: f64 = (0..1200)
+            .map(|i| daily_rate_curve(&spec, 3, i as f64 * 0.1))
+            .sum::<f64>()
+            / 1200.0;
+        assert!((avg - 1.0).abs() < 0.05, "avg={avg}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Integration tests for the placement pipeline (Alg. 1 + 2) at paper
+//! scale: the Table-1 zoo on the 32-GPU testbed.
+
+use muxserve::config::{synthetic_zoo, ClusterSpec, WorkloadSpec};
+use muxserve::coordinator::estimator::Estimator;
+use muxserve::coordinator::{
+    enumerate_mesh_groups, memory_greedy_placement, muxserve_placement,
+    parallel_candidates, spatial_placement,
+};
+use muxserve::costmodel::CostModel;
+use muxserve::workload::power_law_rates;
+
+fn zoo_workloads(alpha: f64) -> Vec<WorkloadSpec> {
+    power_law_rates(19, alpha, 20.0)
+        .into_iter()
+        .map(WorkloadSpec::sharegpt)
+        .collect()
+}
+
+#[test]
+fn paper_scale_placement_is_complete_and_fast() {
+    let specs = synthetic_zoo();
+    let workloads = zoo_workloads(0.9);
+    let cluster = ClusterSpec::paper_testbed();
+    let est = Estimator::new(CostModel::a100());
+    let t0 = std::time::Instant::now();
+    let p = muxserve_placement(&specs, &workloads, &cluster, &est)
+        .expect("placement must exist");
+    let elapsed = t0.elapsed();
+    assert_eq!(p.n_placed(), 19, "all LLMs placed");
+    assert_eq!(p.total_gpus(), 32, "uses exactly the cluster");
+    assert!(p.est_total > 0.0);
+    // O(MCD) with pruning: must finish in seconds, not minutes.
+    assert!(elapsed.as_secs() < 120, "placement took {elapsed:?}");
+}
+
+#[test]
+fn mesh_group_enumeration_is_canonical() {
+    let cluster = ClusterSpec::paper_testbed();
+    let groups = enumerate_mesh_groups(&cluster);
+    assert!(!groups.is_empty());
+    for g in &groups {
+        assert_eq!(g.iter().sum::<usize>(), 32);
+        assert!(g.windows(2).all(|w| w[0] >= w[1]), "non-canonical {g:?}");
+        assert!(g.iter().all(|s| [1, 2, 4, 8].contains(s)));
+    }
+    // No duplicates.
+    let mut sorted = groups.clone();
+    sorted.sort();
+    sorted.dedup();
+    assert_eq!(sorted.len(), groups.len());
+}
+
+#[test]
+fn candidates_cover_feasible_tp_degrees() {
+    let specs = synthetic_zoo();
+    let workloads = zoo_workloads(2.1);
+    let cluster = ClusterSpec::paper_testbed();
+    let est = Estimator::new(CostModel::a100());
+    let cands = parallel_candidates(&specs, &workloads, &cluster, &est);
+    assert_eq!(cands.len(), 19);
+    for (spec, cs) in specs.iter().zip(&cands) {
+        assert!(!cs.is_empty(), "{} has no candidates", spec.name);
+        let min_tp = spec.min_tp(cluster.gpu.mem_bytes, 0.3);
+        for c in cs {
+            assert!(c.tp >= min_tp, "{}: tp {} < min {min_tp}", spec.name, c.tp);
+            assert!(c.sm > 0.0 && c.sm <= 1.0);
+            assert!(c.batch >= 1.0);
+        }
+        // The 65B model must need multi-GPU TP.
+        if spec.n_params > 60e9 {
+            assert!(min_tp >= 4);
+        }
+    }
+}
+
+#[test]
+fn muxserve_beats_memory_greedy_at_scale() {
+    // Fig. 8's qualitative claim, evaluated on the estimator at both
+    // ablation scales.
+    let est = Estimator::new(CostModel::a100());
+    for (n_llms, gpus) in [(4usize, 8usize), (7, 16)] {
+        let specs: Vec<_> = synthetic_zoo().into_iter().take(n_llms).collect();
+        let workloads: Vec<WorkloadSpec> =
+            power_law_rates(n_llms, 1.3, 12.0)
+                .into_iter()
+                .map(WorkloadSpec::sharegpt)
+                .collect();
+        let cluster = ClusterSpec::new(gpus / 8.max(1), 8.min(gpus));
+        let ours = muxserve_placement(&specs, &workloads, &cluster, &est)
+            .expect("ours");
+        let greedy = memory_greedy_placement(
+            &specs, &workloads, &cluster, &est, &vec![4; gpus / 4],
+        )
+        .expect("greedy");
+        assert!(
+            ours.est_total >= greedy.est_total * 0.999,
+            "{n_llms} LLMs/{gpus} GPUs: ours {} < greedy {}",
+            ours.est_total,
+            greedy.est_total
+        );
+    }
+}
+
+#[test]
+fn spatial_placement_dedicates_meshes() {
+    let specs = synthetic_zoo();
+    let workloads = zoo_workloads(0.9);
+    let cluster = ClusterSpec::paper_testbed();
+    let est = Estimator::new(CostModel::a100());
+    let p = spatial_placement(&specs, &workloads, &cluster, &est)
+        .expect("spatial fits 19 LLMs in 32 GPUs");
+    assert_eq!(p.units.len(), 19);
+    assert!(p.units.iter().all(|u| u.members.len() == 1));
+    assert!(p.total_gpus() <= 32);
+    // The 65B model needs at least 4 GPUs.
+    let xl = p
+        .units
+        .iter()
+        .find(|u| specs[u.members[0].0].n_params > 60e9)
+        .unwrap();
+    assert!(xl.mesh_gpus >= 4);
+}
+
+#[test]
+fn placement_responds_to_popularity_shift() {
+    // When one small LLM becomes hugely popular, Alg. 1 should give its
+    // unit more SMs / fewer co-tenants than in the uniform case.
+    let specs: Vec<_> = synthetic_zoo().into_iter().take(6).collect();
+    let cluster = ClusterSpec::new(1, 8);
+    let est = Estimator::new(CostModel::a100());
+    let uniform: Vec<WorkloadSpec> =
+        vec![WorkloadSpec::sharegpt(1.0); 6];
+    let skewed: Vec<WorkloadSpec> = power_law_rates(6, 2.1, 30.0)
+        .into_iter()
+        .map(WorkloadSpec::sharegpt)
+        .collect();
+    let p_uniform =
+        muxserve_placement(&specs, &uniform, &cluster, &est).unwrap();
+    let p_skewed =
+        muxserve_placement(&specs, &skewed, &cluster, &est).unwrap();
+    // The skewed placement should estimate at least the uniform total
+    // under its own (heavier) workload only if it adapts; weak sanity:
+    // both complete and place everything.
+    assert_eq!(p_uniform.n_placed(), 6);
+    assert_eq!(p_skewed.n_placed(), 6);
+}

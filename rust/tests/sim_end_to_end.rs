@@ -1,0 +1,91 @@
+//! Integration tests: full placement → simulation pipeline for all three
+//! systems, asserting the paper's qualitative results hold.
+
+use muxserve::bench::{compare_three_systems, fig5_setup};
+use muxserve::config::{llama_spec, ClusterSpec, WorkloadSpec};
+use muxserve::coordinator::estimator::Estimator;
+use muxserve::coordinator::{muxserve_placement, EngineConfig};
+use muxserve::costmodel::CostModel;
+use muxserve::simulator::Simulation;
+use muxserve::workload::synthetic_workload;
+
+#[test]
+fn small_cluster_three_systems() {
+    // 8 GPUs, 4 LLMs, skewed popularity — every system must complete work,
+    // and MuxServe must not lose to the baselines.
+    let specs = vec![
+        llama_spec("7b-hot", 6.7),
+        llama_spec("7b-warm", 6.7),
+        llama_spec("13b", 13.0),
+        llama_spec("30b", 30.0),
+    ];
+    let duration = 60.0;
+    let (_, requests) = synthetic_workload(4, 1.3, 6.0, duration, 42);
+    let workloads: Vec<WorkloadSpec> =
+        muxserve::workload::power_law_rates(4, 1.3, 6.0)
+            .into_iter()
+            .map(WorkloadSpec::sharegpt)
+            .collect();
+    let cluster = ClusterSpec::new(1, 8);
+    let results =
+        compare_three_systems(&specs, &workloads, &cluster, &requests, duration);
+    assert_eq!(results.len(), 3);
+    let tpt = |name: &str| {
+        results.iter().find(|r| r.name == name).unwrap().throughput()
+    };
+    let (mux, spatial, temporal) =
+        (tpt("muxserve"), tpt("spatial"), tpt("temporal"));
+    println!("muxserve={mux:.3} spatial={spatial:.3} temporal={temporal:.3}");
+    assert!(mux > 0.0 && spatial > 0.0 && temporal > 0.0);
+    assert!(mux >= 0.95 * spatial, "mux={mux} spatial={spatial}");
+    assert!(mux >= 0.95 * temporal, "mux={mux} temporal={temporal}");
+}
+
+#[test]
+fn muxserve_completes_all_at_low_load() {
+    let specs = vec![llama_spec("7b", 6.7), llama_spec("13b", 13.0)];
+    let workloads = vec![
+        WorkloadSpec::sharegpt(0.5),
+        WorkloadSpec::sharegpt(0.2),
+    ];
+    let duration = 120.0;
+    let (_, requests) = synthetic_workload(2, 0.9, 0.5, duration, 7);
+    let cluster = ClusterSpec::new(1, 2);
+    let est = Estimator::new(CostModel::a100());
+    let p = muxserve_placement(&specs, &workloads, &cluster, &est).unwrap();
+    let cost = CostModel::a100();
+    let mut sim = Simulation::from_placement(
+        &p, &specs, &workloads, EngineConfig::muxserve(), &cost,
+    );
+    let eval = sim.run(&requests, duration);
+    // At this load nearly everything arriving early enough finishes.
+    let arrived_early = requests
+        .iter()
+        .filter(|r| r.arrival < duration * 0.8)
+        .count();
+    assert!(
+        eval.records.len() >= arrived_early * 9 / 10,
+        "completed {} of {} early arrivals",
+        eval.records.len(),
+        arrived_early
+    );
+    assert_eq!(sim.dropped(), 0);
+    // SLO attainment should be high at low load.
+    let slo = eval.slo_attainment(8.0);
+    assert!(slo > 0.9, "slo={slo}");
+}
+
+#[test]
+fn records_are_causally_consistent() {
+    let (specs, workloads, requests) = fig5_setup(0.9, 2.0, 30.0, 3);
+    let cluster = ClusterSpec::paper_testbed();
+    let results =
+        compare_three_systems(&specs, &workloads, &cluster, &requests, 30.0);
+    for r in &results {
+        for rec in &r.eval.records {
+            assert!(rec.first_token >= rec.arrival, "{}: ttft<0", r.name);
+            assert!(rec.finish >= rec.first_token, "{}: finish<first", r.name);
+            assert!(rec.ideal_latency > 0.0);
+        }
+    }
+}
