@@ -1,0 +1,67 @@
+//! Dynamic workloads + online re-placement: a flash crowd hits the least
+//! popular LLM, and the re-placement controller re-runs the placement
+//! optimizer (Alg. 1+2) on the windowed live rates — paying a migration
+//! downtime — while the static baseline keeps serving the spike through
+//! a placement sized for the cold-start popularity.
+//!
+//! Run: `cargo run --release --example dynamic_workload`
+
+use muxserve::bench::drift::{run_scenario, scenario_cluster};
+use muxserve::coordinator::ReplanConfig;
+use muxserve::workload::{Scenario, ScenarioShape};
+
+fn main() {
+    let scenario = Scenario::new(ScenarioShape::FlashCrowd);
+    let cluster = scenario_cluster();
+    println!(
+        "flash crowd: {} LLMs on {} single-GPU meshes for {:.0}s;",
+        scenario.n_llms,
+        cluster.total_gpus(),
+        scenario.duration
+    );
+    println!(
+        "the coldest LLM spikes from {:.2} to {:.1} req/s mid-run.\n",
+        scenario.planning_rates()[scenario.n_llms - 1],
+        scenario.max_rate * 1.25
+    );
+
+    println!("{:<10} {:>6} {:>8} {:>7} {:>9} {:>6}", "mode", "done",
+             "tpt", "slo@8", "p99(s)", "migr");
+    let mut rows = Vec::new();
+    for adaptive in [false, true] {
+        let replan = adaptive.then(ReplanConfig::default);
+        let (report, arrived) =
+            run_scenario(&scenario, &cluster, replan).expect("placement");
+        println!(
+            "{:<10} {:>6} {:>8.2} {:>7.3} {:>9.2} {:>6}",
+            if adaptive { "replan" } else { "static" },
+            format!("{}/{arrived}", report.eval.records.len()),
+            report.eval.total_throughput(),
+            report.eval.slo_attainment(8.0),
+            report.eval.latency_summary().p99(),
+            report.migrations
+        );
+        rows.push(report);
+    }
+
+    println!("\nre-placement timeline (adaptive run):");
+    for r in &rows[1].replans {
+        println!(
+            "  t={:>6.1}s drift={:.2} -> {}",
+            r.time,
+            r.drift,
+            if r.migrated {
+                "migrated to a new placement (1s downtime)"
+            } else {
+                "optimizer kept the current placement"
+            }
+        );
+    }
+    println!(
+        "\nThe static placement granted the cold LLM the minimal SM share \
+         its old rate\njustified (Alg. 2), so the spike saturates it; \
+         re-placement re-sizes the share\nand the spike is absorbed. \
+         Intra-unit quota adaptation alone (the paper's §3.3)\ncannot fix \
+         this — the bottleneck is the placement, not the cache split."
+    );
+}

@@ -1,0 +1,174 @@
+//! Drift figure: online re-placement vs. static placement on dynamic
+//! workloads — the evaluation axis the paper's stationary setup (§4.2)
+//! cannot express. One row per (scenario shape, adaptation mode).
+
+use crate::config::{ClusterSpec, WorkloadSpec};
+use crate::coordinator::{EngineConfig, ReplanConfig};
+use crate::metrics::Evaluation;
+use crate::simulator::{DynamicReport, DynamicSimulation};
+use crate::workload::{Request, Scenario, ScenarioData, ScenarioShape};
+
+/// Outcome of one scenario run (static or adaptive).
+pub struct ScenarioResult {
+    pub shape: &'static str,
+    pub adaptive: bool,
+    pub completed: usize,
+    pub arrived: usize,
+    pub throughput: f64,
+    pub slo8: f64,
+    pub p99_latency: f64,
+    pub migrations: usize,
+    pub dropped: usize,
+}
+
+impl ScenarioResult {
+    fn from_report(
+        shape: &'static str,
+        adaptive: bool,
+        arrived: usize,
+        report: &DynamicReport,
+    ) -> ScenarioResult {
+        let eval: &Evaluation = &report.eval;
+        ScenarioResult {
+            shape,
+            adaptive,
+            completed: eval.records.len(),
+            arrived,
+            throughput: eval.total_throughput(),
+            slo8: eval.slo_attainment(8.0),
+            p99_latency: eval.latency_summary().p99(),
+            migrations: report.migrations,
+            dropped: report.dropped,
+        }
+    }
+}
+
+/// Default cluster for the dynamic scenarios: four single-GPU meshes, so
+/// colocation is forced (6 LLMs on 4 units) and placement decisions bind.
+pub fn scenario_cluster() -> ClusterSpec {
+    ClusterSpec::new(4, 1)
+}
+
+/// Run an already-materialized scenario with adaptation on or off
+/// (None when no placement exists). Lets callers reuse one
+/// [`ScenarioData`] across the static run, the adaptive run, and a
+/// trace export without re-synthesizing the stream.
+pub fn run_scenario_on(
+    scenario: &Scenario,
+    data: &ScenarioData,
+    cluster: &ClusterSpec,
+    replan: Option<ReplanConfig>,
+) -> Option<DynamicReport> {
+    let specs = scenario.model_specs();
+    let adaptive = replan.is_some();
+    let sim = DynamicSimulation::new(
+        &specs,
+        &data.planning_workloads,
+        cluster,
+        EngineConfig::muxserve(),
+        replan.unwrap_or_default(),
+        adaptive,
+    )?;
+    Some(sim.run(&data.requests, scenario.duration))
+}
+
+/// Run one scenario once, with adaptation on or off. Returns the full
+/// dynamic report plus the arrival count (None when no placement exists).
+pub fn run_scenario(
+    scenario: &Scenario,
+    cluster: &ClusterSpec,
+    replan: Option<ReplanConfig>,
+) -> Option<(DynamicReport, usize)> {
+    let data = scenario.build();
+    let report = run_scenario_on(scenario, &data, cluster, replan)?;
+    Some((report, data.requests.len()))
+}
+
+/// Replay a frozen trace (see [`crate::workload::read_trace_file`])
+/// through the dynamic engine. The planning workloads are estimated from
+/// the trace's initial 30% window — the same history-based view a static
+/// optimizer plans from — so exported scenarios replay faithfully and
+/// external traces slot straight in. Returns `None` when no placement
+/// exists for the estimated rates.
+pub fn run_trace(
+    requests: &[Request],
+    duration: f64,
+    cluster: &ClusterSpec,
+    replan: Option<ReplanConfig>,
+) -> Option<DynamicReport> {
+    let n_llms = requests.iter().map(|r| r.llm + 1).max()?;
+    let window = (0.30 * duration).max(1e-9);
+    let mut counts = vec![0usize; n_llms];
+    for r in requests.iter().filter(|r| r.arrival < window) {
+        counts[r.llm] += 1;
+    }
+    let workloads: Vec<WorkloadSpec> = counts
+        .iter()
+        .map(|c| WorkloadSpec::sharegpt((*c as f64 / window).max(0.05)))
+        .collect();
+    let specs = Scenario {
+        n_llms,
+        ..Scenario::new(ScenarioShape::Stationary)
+    }
+    .model_specs();
+    let adaptive = replan.is_some();
+    let sim = DynamicSimulation::new(
+        &specs,
+        &workloads,
+        cluster,
+        EngineConfig::muxserve(),
+        replan.unwrap_or_default(),
+        adaptive,
+    )?;
+    Some(sim.run(requests, duration))
+}
+
+/// The drift-vs-static figure: every scenario shape, static then
+/// adaptive, on a shared workload per shape.
+pub fn fig_drift(duration: f64, seed: u64) -> Vec<ScenarioResult> {
+    let cluster = scenario_cluster();
+    let mut out = Vec::new();
+    println!(
+        "\n== Drift figure: static vs online re-placement \
+         (6 LLMs, 4x1 GPUs, {duration:.0}s) =="
+    );
+    println!(
+        "{:<12} {:<9} {:>5} {:>6} {:>7} {:>6} {:>8} {:>5}",
+        "shape", "mode", "done", "arriv", "tpt", "slo@8", "p99(s)", "migr"
+    );
+    for shape in ScenarioShape::all() {
+        let scenario = Scenario {
+            duration,
+            seed,
+            ..Scenario::new(shape)
+        };
+        for adaptive in [false, true] {
+            let replan = adaptive.then(ReplanConfig::default);
+            let Some((report, arrived)) =
+                run_scenario(&scenario, &cluster, replan)
+            else {
+                println!("{:<12} infeasible placement", shape.name());
+                continue;
+            };
+            let row = ScenarioResult::from_report(
+                shape.name(),
+                adaptive,
+                arrived,
+                &report,
+            );
+            println!(
+                "{:<12} {:<9} {:>5} {:>6} {:>7.2} {:>6.2} {:>8.2} {:>5}",
+                row.shape,
+                if adaptive { "replan" } else { "static" },
+                row.completed,
+                row.arrived,
+                row.throughput,
+                row.slo8,
+                row.p99_latency,
+                row.migrations
+            );
+            out.push(row);
+        }
+    }
+    out
+}

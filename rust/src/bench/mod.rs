@@ -1,6 +1,12 @@
-//! Figure/table regeneration harnesses (filled in per DESIGN.md §4).
+//! Figure/table regeneration harnesses (filled in per DESIGN.md §4),
+//! plus the drift figure for the dynamic-workload scenarios.
 
+pub mod drift;
 pub mod experiments;
 pub mod figures;
 
+pub use drift::{
+    fig_drift, run_scenario, run_scenario_on, run_trace, scenario_cluster,
+    ScenarioResult,
+};
 pub use experiments::*;

@@ -1,7 +1,8 @@
 //! Command-line interface (hand-rolled: no clap in the offline registry).
 //!
 //! `muxserve bench-figN` regenerates one paper figure; `bench-all` runs the
-//! whole evaluation; `serve` drives the real PJRT path.
+//! whole evaluation; `scenario` drives the dynamic-workload engine with
+//! online re-placement on or off; `serve` drives the real PJRT path.
 
 use anyhow::Result;
 
@@ -13,6 +14,44 @@ fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+fn flag_str<'a>(args: &'a [String], name: &str, default: &'a str) -> &'a str {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or(default)
+}
+
+/// Strict flag parser: unlike `flag_f64` (where a typo silently falls
+/// back to the default, and an integer detour through f64 would corrupt
+/// large values), malformed input is an error. Used for every
+/// reproducibility-critical `scenario` parameter — the seed, counts,
+/// and the floats that shape the generated stream.
+fn flag_val<T: std::str::FromStr>(
+    args: &[String],
+    name: &str,
+    default: T,
+) -> Result<T> {
+    match args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)) {
+        Some(v) => v.parse::<T>().map_err(|_| {
+            anyhow::anyhow!("{name} expects a valid value, got `{v}`")
+        }),
+        None => Ok(default),
+    }
+}
+
+/// Path-valued flag: present-with-value, absent, or an error when the
+/// flag is given bare (a forgotten path must not silently switch modes).
+fn flag_path<'a>(args: &'a [String], name: &str) -> Result<Option<&'a str>> {
+    match args.iter().position(|a| a == name) {
+        Some(i) => match args.get(i + 1) {
+            Some(v) => Ok(Some(v.as_str())),
+            None => Err(anyhow::anyhow!("{name} requires a file path")),
+        },
+        None => Ok(None),
+    }
 }
 
 pub fn main() -> Result<()> {
@@ -59,6 +98,9 @@ pub fn main() -> Result<()> {
         "bench-fig12" => {
             figures::fig12(duration);
         }
+        "bench-drift" => {
+            crate::bench::fig_drift(duration, 2024);
+        }
         "bench-all" => {
             figures::fig1();
             figures::fig2();
@@ -71,6 +113,10 @@ pub fn main() -> Result<()> {
             figures::fig10(&[0.7, 1.3, 2.1], duration);
             figures::fig11(&[0.9, 2.1], duration);
             figures::fig12(duration);
+            crate::bench::fig_drift(duration, 2024);
+        }
+        "scenario" => {
+            scenario_cmd(&args)?;
         }
         "serve" => {
             serve_cmd(&args)?;
@@ -80,6 +126,139 @@ pub fn main() -> Result<()> {
         }
         "version" => println!("muxserve {}", env!("CARGO_PKG_VERSION")),
         _ => print_help(),
+    }
+    Ok(())
+}
+
+/// Dynamic-workload scenario runner: non-stationary arrivals against the
+/// MuxServe engine, with online re-placement on or off.
+fn scenario_cmd(args: &[String]) -> Result<()> {
+    use crate::bench::drift::{run_scenario_on, scenario_cluster};
+    use crate::coordinator::ReplanConfig;
+    use crate::workload::{Scenario, ScenarioShape};
+
+    let shape_name = flag_str(args, "--shape", "flash-crowd");
+    let shape = ScenarioShape::parse(shape_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown shape `{shape_name}` (expected stationary | diurnal \
+             | bursty | flash-crowd | drift)"
+        )
+    })?;
+    let replan_arg = flag_str(args, "--replan", "on");
+    let adaptive = match replan_arg {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--replan takes on|off, got `{other}`"),
+    };
+    let scenario = Scenario {
+        duration: flag_val(args, "--duration", 120.0f64)?,
+        seed: flag_val(args, "--seed", 2024u64)?,
+        max_rate: flag_val(args, "--max-rate", 6.0f64)?,
+        alpha: flag_val(args, "--alpha", 1.7f64)?,
+        n_llms: flag_val(args, "--n-llms", 6usize)?,
+        ..Scenario::new(shape)
+    };
+    let cluster = scenario_cluster();
+    let replan = adaptive.then(ReplanConfig::default);
+
+    let (report, arrived) = if let Some(path) = flag_path(args, "--replay-trace")? {
+        // Replay path: a frozen trace supplies the stream; planning
+        // rates are estimated from its initial window, as a
+        // history-based static optimizer would.
+        let requests = crate::workload::read_trace_file(path)?;
+        anyhow::ensure!(!requests.is_empty(), "trace `{path}` is empty");
+        let trace_end = requests
+            .iter()
+            .map(|r| r.arrival)
+            .fold(0.0_f64, f64::max);
+        // Unless the user pinned --duration, cover the whole trace plus
+        // a short drain window; a too-short explicit duration silently
+        // truncating the tail would misreport completed/arrived.
+        let duration = if args.iter().any(|a| a == "--duration") {
+            if scenario.duration < trace_end {
+                println!(
+                    "warning: --duration {:.0}s < trace end {trace_end:.1}s \
+                     — the trace tail will not be simulated",
+                    scenario.duration
+                );
+            }
+            scenario.duration
+        } else {
+            (trace_end + 5.0).ceil()
+        };
+        println!(
+            "replaying {} requests from {path} for {duration:.0}s on {} \
+             GPUs, re-placement {}",
+            requests.len(),
+            cluster.total_gpus(),
+            if adaptive { "ON" } else { "OFF" }
+        );
+        let n = requests.len();
+        let report = crate::bench::drift::run_trace(
+            &requests, duration, &cluster, replan,
+        )
+        .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
+        (report, n)
+    } else {
+        println!(
+            "scenario `{}`: {} LLMs on {} GPUs for {:.0}s, re-placement {}",
+            shape.name(),
+            scenario.n_llms,
+            cluster.total_gpus(),
+            scenario.duration,
+            if adaptive { "ON" } else { "OFF" }
+        );
+        let planned = scenario.planning_rates();
+        let means = scenario.mean_rates();
+        println!("llm   planned(req/s)   long-run-mean(req/s)");
+        for i in 0..scenario.n_llms {
+            println!("{i:<5} {:<16.2} {:<.2}", planned[i], means[i]);
+        }
+
+        // Materialize the workload once; the run and the optional trace
+        // export share the exact same stream.
+        let data = scenario.build();
+        // Optionally freeze the workload for later --replay-trace runs.
+        if let Some(path) = flag_path(args, "--export-trace")? {
+            crate::workload::write_trace_file(path, &data.requests)?;
+            println!("trace written to {path}");
+        }
+        let arrived = data.requests.len();
+        let report = run_scenario_on(&scenario, &data, &cluster, replan)
+            .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
+        (report, arrived)
+    };
+
+    let eval = &report.eval;
+    println!(
+        "\ncompleted {}/{} requests  tpt={:.2} req/s  slo@8={:.3}  \
+         p50={:.2}s p99={:.2}s  dropped={}",
+        eval.records.len(),
+        arrived,
+        eval.total_throughput(),
+        eval.slo_attainment(8.0),
+        eval.latency_summary().p50(),
+        eval.latency_summary().p99(),
+        report.dropped
+    );
+    if adaptive {
+        println!(
+            "re-placements: {} checks fired, {} migrations",
+            report.replans.len(),
+            report.migrations
+        );
+        for r in &report.replans {
+            let rates: Vec<String> =
+                r.rates.iter().map(|x| format!("{x:.1}")).collect();
+            println!(
+                "  t={:>6.1}s drift={:.2} {} -> {} units, rates [{}]",
+                r.time,
+                r.drift,
+                if r.migrated { "MIGRATED" } else { "kept placement" },
+                r.units,
+                rates.join(", ")
+            );
+        }
     }
     Ok(())
 }
@@ -172,7 +351,17 @@ fn print_help() {
          USAGE: muxserve <command> [--duration S]\n\n\
          COMMANDS:\n  \
          bench-fig1 .. bench-fig12   regenerate one paper figure\n  \
+         bench-drift                 static vs online re-placement figure\n  \
          bench-all                   full evaluation suite\n  \
+         scenario [--shape S] [--replan on|off] [--duration S] [--seed N]\n  \
+         \x20                            dynamic workload (stationary | \
+         diurnal | bursty |\n  \
+         \x20                            flash-crowd | drift) with online \
+         re-placement;\n  \
+         \x20                            --export-trace FILE freezes the \
+         stream,\n  \
+         \x20                            --replay-trace FILE re-runs a \
+         frozen stream\n  \
          place [--alpha A]           run the placement optimizer (Alg. 1)\n  \
          serve [--rate-a R]          real PJRT serving demo (needs `make \
          artifacts`)\n  \

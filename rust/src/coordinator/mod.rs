@@ -1,10 +1,13 @@
 //! The Layer-3 coordination contribution of the paper: throughput
 //! estimation (Eq. 3), the enumeration-based greedy placement algorithm
-//! (Alg. 1 + 2), and the adaptive batch scheduling policy types (Alg. 3)
-//! shared by the simulator and the real serving path.
+//! (Alg. 1 + 2), the adaptive batch scheduling policy types (Alg. 3)
+//! shared by the simulator and the real serving path, and — beyond the
+//! paper — the online re-placement controller ([`replan`]) that re-runs
+//! Alg. 1 when live traffic drifts from the rates it was optimized for.
 
 pub mod estimator;
 pub mod placement;
+pub mod replan;
 pub mod scheduler;
 
 pub use estimator::{Estimator, UnitMember};
@@ -13,4 +16,5 @@ pub use placement::{
     parallel_candidates, spatial_placement, Placement, PlacementUnit,
     ParallelCandidate,
 };
+pub use replan::{ReplanConfig, ReplanController, ReplanDecision};
 pub use scheduler::{EngineConfig, Policy};

@@ -1,0 +1,325 @@
+//! Online re-placement controller — the adaptation layer the paper leaves
+//! open (§3.1 plans once from historical averages; §5 notes workload
+//! changes as future work).
+//!
+//! The controller watches the live request stream inside the simulator
+//! event loop: it keeps a sliding window of per-LLM arrival timestamps
+//! and the recent SLO attainment, and compares the windowed rates against
+//! the rate vector the current placement was optimized for. When the
+//! relative drift of any LLM exceeds a threshold (or the windowed SLO
+//! attainment collapses while rates have moved), it asks for the
+//! placement optimizer (Alg. 1 + 2) to be re-run with the fresh rates.
+//! The caller (see [`crate::simulator::dynamic`]) applies the new
+//! placement with a migration cost modeled as unit downtime.
+//!
+//! Design notes:
+//! * Drift is normalized by `max(planned, observed, rate_floor)` so
+//!   sparse LLMs (a handful of arrivals per window) do not trigger
+//!   replanning from Poisson noise alone.
+//! * `min_replan_interval` rate-limits migrations during a ramp, so a
+//!   flash crowd causes one or two placements, not one per check tick.
+
+use std::collections::VecDeque;
+
+/// Tuning knobs for the online re-placement controller.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplanConfig {
+    /// Seconds between drift checks (the simulator's `Replan` tick).
+    pub check_period: f64,
+    /// Sliding measurement window for rate estimation, seconds.
+    pub window: f64,
+    /// Relative rate drift (observed below planned) that triggers
+    /// re-placement — the downsizing direction, where the current
+    /// placement merely wastes capacity.
+    pub drift_threshold: f64,
+    /// Relative rate drift (observed ABOVE planned) that triggers
+    /// re-placement. Asymmetric and lower than `drift_threshold` because
+    /// under-provisioning saturates a unit and collapses its SLO, while
+    /// over-provisioning only wastes headroom — and a ramping flash crowd
+    /// must be chased while it is still growing.
+    pub surge_threshold: f64,
+    /// Multiplier applied to observed rates when re-optimizing, so the
+    /// new placement carries headroom over a still-growing spike instead
+    /// of being sized to a mid-ramp snapshot.
+    pub plan_headroom: f64,
+    /// Windowed SLO attainment below which re-placement is considered
+    /// even at half the surge threshold.
+    pub slo_floor: f64,
+    /// SLO scale used for the windowed attainment monitor.
+    pub slo_scale: f64,
+    /// Unit downtime charged for applying a new placement, seconds
+    /// (weight reload + KV recompute; requests queue but are not lost).
+    pub migration_downtime: f64,
+    /// Minimum seconds between two applied re-placements (checks that do
+    /// not change the placement are not rate-limited — they are cheap).
+    pub min_replan_interval: f64,
+    /// Rates below this floor never drive drift on their own (req/s).
+    pub rate_floor: f64,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            check_period: 5.0,
+            window: 10.0,
+            // High enough that windowed Poisson noise on moderate rates
+            // stays well below it, while real regime changes (flash
+            // crowds, popularity reversals) land near 1.0.
+            drift_threshold: 0.75,
+            surge_threshold: 0.4,
+            plan_headroom: 1.25,
+            slo_floor: 0.5,
+            slo_scale: 8.0,
+            migration_downtime: 1.0,
+            min_replan_interval: 10.0,
+            rate_floor: 1.0,
+        }
+    }
+}
+
+/// Decision returned by a drift check.
+#[derive(Clone, Debug)]
+pub struct ReplanDecision {
+    /// Fresh per-LLM rate estimates to re-optimize for.
+    pub rates: Vec<f64>,
+    /// The drift value that triggered the decision.
+    pub drift: f64,
+}
+
+/// Sliding-window drift monitor over per-LLM arrivals.
+#[derive(Clone, Debug)]
+pub struct ReplanController {
+    cfg: ReplanConfig,
+    /// Per-LLM arrival timestamps within the window (front = oldest).
+    arrivals: Vec<VecDeque<f64>>,
+    /// Rates the current placement was optimized for.
+    planned: Vec<f64>,
+    last_replan: f64,
+}
+
+impl ReplanController {
+    pub fn new(cfg: ReplanConfig, planned_rates: Vec<f64>) -> Self {
+        let n = planned_rates.len();
+        ReplanController {
+            cfg,
+            arrivals: vec![VecDeque::new(); n],
+            planned: planned_rates,
+            last_replan: 0.0,
+        }
+    }
+
+    pub fn config(&self) -> &ReplanConfig {
+        &self.cfg
+    }
+
+    pub fn planned_rates(&self) -> &[f64] {
+        &self.planned
+    }
+
+    /// Record one arrival for LLM `llm` at time `t`.
+    pub fn observe_arrival(&mut self, llm: usize, t: f64) {
+        self.arrivals[llm].push_back(t);
+    }
+
+    /// Windowed per-LLM arrival-rate estimates at time `t`. Evicts
+    /// timestamps older than the window as a side effect.
+    pub fn windowed_rates(&mut self, t: f64) -> Vec<f64> {
+        let lo = t - self.cfg.window;
+        let effective = self.cfg.window.min(t).max(1e-9);
+        self.arrivals
+            .iter_mut()
+            .map(|q| {
+                while q.front().is_some_and(|x| *x < lo) {
+                    q.pop_front();
+                }
+                q.len() as f64 / effective
+            })
+            .collect()
+    }
+
+    /// Per-LLM relative drift split by direction:
+    /// (max surge — observed above planned, max sag — observed below).
+    /// Each is `|o - p| / max(p, o, rate_floor)`.
+    pub fn drift_split(&self, observed: &[f64]) -> (f64, f64) {
+        let mut surge = 0.0_f64;
+        let mut sag = 0.0_f64;
+        for (o, p) in observed.iter().zip(&self.planned) {
+            let rel = (o - p).abs() / p.max(*o).max(self.cfg.rate_floor);
+            if o > p {
+                surge = surge.max(rel);
+            } else {
+                sag = sag.max(rel);
+            }
+        }
+        (surge, sag)
+    }
+
+    /// Max relative drift between observed and planned rates.
+    pub fn drift(&self, observed: &[f64]) -> f64 {
+        let (surge, sag) = self.drift_split(observed);
+        surge.max(sag)
+    }
+
+    /// Drift check at time `t`. `window_slo` is the recent SLO attainment
+    /// (None when no request finished in the window). Returns the rates
+    /// to re-optimize for when adaptation is warranted.
+    pub fn should_replan(
+        &mut self,
+        t: f64,
+        window_slo: Option<f64>,
+    ) -> Option<ReplanDecision> {
+        if t - self.last_replan < self.cfg.min_replan_interval {
+            return None;
+        }
+        let observed = self.windowed_rates(t);
+        let (surge, sag) = self.drift_split(&observed);
+        let drift = surge.max(sag);
+        let slo_bad = window_slo.is_some_and(|s| s < self.cfg.slo_floor);
+        let trigger = surge > self.cfg.surge_threshold
+            || sag > self.cfg.drift_threshold
+            || (slo_bad && drift > 0.5 * self.cfg.surge_threshold);
+        if !trigger {
+            return None;
+        }
+        // Plan for the observed rates with headroom (a ramping spike is
+        // still growing), floored so every LLM keeps a nonzero share.
+        let rates: Vec<f64> = observed
+            .iter()
+            .map(|r| (r * self.cfg.plan_headroom).max(0.05))
+            .collect();
+        Some(ReplanDecision { rates, drift })
+    }
+
+    /// Commit a decision that was actually applied (placement migrated),
+    /// or acknowledged as a no-op for an infeasible rate vector: updates
+    /// the planned rates and starts the migration rate-limit window.
+    pub fn note_replanned(&mut self, t: f64, rates: Vec<f64>) {
+        self.planned = rates;
+        self.last_replan = t;
+    }
+
+    /// Acknowledge a check whose optimal placement shape turned out to be
+    /// unchanged: the current placement is already right for these rates,
+    /// so adopt them as the drift baseline — otherwise a sustained shift
+    /// whose optimum shares the old shape would re-run the optimizer on
+    /// every tick forever. Does NOT start the migration rate-limit, so a
+    /// spike that keeps growing past this estimate can still migrate at
+    /// the very next tick.
+    pub fn note_checked(&mut self, rates: Vec<f64>) {
+        self.planned = rates;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(planned: &[f64]) -> ReplanController {
+        ReplanController::new(ReplanConfig::default(), planned.to_vec())
+    }
+
+    #[test]
+    fn stationary_traffic_never_triggers() {
+        let mut c = ctl(&[4.0, 1.0]);
+        // Feed arrivals at exactly the planned rates for 60s.
+        for i in 0..240 {
+            c.observe_arrival(0, i as f64 * 0.25);
+        }
+        for i in 0..60 {
+            c.observe_arrival(1, i as f64);
+        }
+        assert!(c.should_replan(60.0, Some(0.95)).is_none());
+    }
+
+    #[test]
+    fn spike_triggers_with_fresh_rates() {
+        let mut c = ctl(&[4.0, 0.2]);
+        // LLM 1 flash-crowds to ~10 req/s inside the window.
+        for i in 0..100 {
+            c.observe_arrival(1, 50.0 + i as f64 * 0.1);
+        }
+        for i in 0..40 {
+            c.observe_arrival(0, 50.0 + i as f64 * 0.25);
+        }
+        let d = c.should_replan(60.0, Some(0.9)).expect("must trigger");
+        assert!(d.drift > 0.5, "drift={}", d.drift);
+        assert!(d.rates[1] > 5.0, "rates={:?}", d.rates);
+        c.note_replanned(60.0, d.rates.clone());
+        // Rate-limited immediately after the re-placement.
+        assert!(c.should_replan(61.0, Some(0.9)).is_none());
+        // Traffic continues at the new rates: no further drift.
+        for i in 0..200 {
+            c.observe_arrival(1, 60.0 + i as f64 * 0.1);
+        }
+        for i in 0..80 {
+            c.observe_arrival(0, 60.0 + i as f64 * 0.25);
+        }
+        assert!(c.should_replan(80.0, Some(0.9)).is_none());
+    }
+
+    #[test]
+    fn sparse_llm_noise_stays_below_threshold() {
+        let mut c = ctl(&[4.0, 0.1]);
+        // LLM 1 planned at 0.1 req/s sees 3 arrivals in the window —
+        // 0.3 req/s observed, a 3x relative jump but absolutely tiny.
+        for t in [52.0, 55.0, 58.0] {
+            c.observe_arrival(1, t);
+        }
+        for i in 0..40 {
+            c.observe_arrival(0, 50.0 + i as f64 * 0.25);
+        }
+        assert!(c.should_replan(60.0, Some(0.95)).is_none());
+    }
+
+    #[test]
+    fn slo_collapse_lowers_the_bar() {
+        let mut c = ctl(&[4.0, 1.0]);
+        // Moderate sag (0.375 relative on LLM 0): below the downsize
+        // threshold, above half the surge threshold.
+        for i in 0..25 {
+            c.observe_arrival(0, 50.0 + i as f64 * 0.4);
+        }
+        for i in 0..10 {
+            c.observe_arrival(1, 50.0 + i as f64);
+        }
+        assert!(c.should_replan(60.0, Some(0.9)).is_none());
+        let mut c2 = c.clone();
+        assert!(c2.should_replan(60.0, Some(0.2)).is_some());
+    }
+
+    #[test]
+    fn surge_triggers_earlier_than_sag() {
+        // Observed 2x the plan (relative drift 0.5): over the surge
+        // threshold…
+        let mut c = ctl(&[4.0, 1.0]);
+        for i in 0..80 {
+            c.observe_arrival(0, 50.0 + i as f64 * 0.125);
+        }
+        for i in 0..10 {
+            c.observe_arrival(1, 50.0 + i as f64);
+        }
+        let d = c.should_replan(60.0, Some(0.95)).expect("surge triggers");
+        // …and the new plan carries headroom over the observation.
+        assert!(d.rates[0] > 8.0, "rates={:?}", d.rates);
+        // The mirror image (observed at half the plan, same 0.5 relative
+        // drift) stays below the downsize threshold.
+        let mut c2 = ctl(&[6.0, 1.0]);
+        for i in 0..30 {
+            c2.observe_arrival(0, 50.0 + i as f64 / 3.0);
+        }
+        for i in 0..10 {
+            c2.observe_arrival(1, 50.0 + i as f64);
+        }
+        assert!(c2.should_replan(60.0, Some(0.95)).is_none());
+    }
+
+    #[test]
+    fn windowed_rates_evict_old_arrivals() {
+        let mut c = ctl(&[1.0]);
+        for i in 0..10 {
+            c.observe_arrival(0, i as f64);
+        }
+        // At t=30 with a 10s window, all arrivals have aged out.
+        assert_eq!(c.windowed_rates(30.0)[0], 0.0);
+    }
+}

@@ -5,7 +5,8 @@ use crate::util::Summary;
 
 /// Completion record for one request, emitted by every serving system
 /// (simulated or real) in identical form so comparisons are apples-to-apples.
-#[derive(Clone, Debug)]
+/// `PartialEq` is derived so replay tests can assert bit-identical runs.
+#[derive(Clone, Debug, PartialEq)]
 pub struct RequestRecord {
     pub id: u64,
     pub llm: usize,
@@ -44,7 +45,7 @@ impl RequestRecord {
 }
 
 /// Aggregated evaluation of one run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Evaluation {
     pub n_llms: usize,
     pub duration: f64,

@@ -8,8 +8,10 @@
 //! [`EngineConfig`] and placement — so relative results are attributable
 //! to the algorithms, not simulator details.
 
+pub mod dynamic;
 pub mod unit;
 
+pub use dynamic::{DynamicReport, DynamicSimulation, ReplanOutcome};
 pub use unit::{Job, JobPhase, UnitModelCfg, UnitSim};
 
 use std::cmp::Ordering;
@@ -22,18 +24,26 @@ use crate::metrics::Evaluation;
 use crate::workload::Request;
 
 #[derive(Clone, Debug)]
-enum EventKind {
+pub(crate) enum EventKind {
     Arrival(Request),
     JobDone(u64),
+    /// Periodic intra-unit quota adaptation (§3.3).
     Adapt,
+    /// Online re-placement check (used by [`dynamic::DynamicSimulation`];
+    /// the static [`Simulation`] never schedules one).
+    Replan,
 }
 
 #[derive(Clone, Debug)]
-struct Event {
-    time: f64,
-    seq: u64,
-    unit: usize,
-    kind: EventKind,
+pub(crate) struct Event {
+    pub(crate) time: f64,
+    pub(crate) seq: u64,
+    pub(crate) unit: usize,
+    /// Placement generation the event belongs to. Unit-addressed events
+    /// from an epoch that has been migrated away are stale and dropped.
+    /// The static simulation runs entirely in epoch 0.
+    pub(crate) epoch: u64,
+    pub(crate) kind: EventKind,
 }
 
 impl PartialEq for Event {
@@ -114,6 +124,7 @@ impl Simulation {
                 time: r.arrival,
                 seq,
                 unit: u,
+                epoch: 0,
                 kind: EventKind::Arrival(lr),
             });
             seq += 1;
@@ -128,6 +139,7 @@ impl Simulation {
                         time: t,
                         seq,
                         unit: u,
+                        epoch: 0,
                         kind: EventKind::Adapt,
                     });
                     seq += 1;
@@ -146,12 +158,14 @@ impl Simulation {
                 EventKind::Arrival(r) => unit.on_arrival(ev.time, r),
                 EventKind::JobDone(id) => unit.on_job_done(ev.time, id),
                 EventKind::Adapt => unit.on_adapt(),
+                EventKind::Replan => {} // static run: never scheduled
             }
             for (t_done, job_id) in unit.drain_started() {
                 heap.push(Event {
                     time: t_done,
                     seq,
                     unit: ev.unit,
+                    epoch: 0,
                     kind: EventKind::JobDone(job_id),
                 });
                 seq += 1;
@@ -159,18 +173,7 @@ impl Simulation {
         }
 
         // Collect records, mapping local LLM ids back to global ones.
-        let mut records = Vec::new();
-        for (u, unit) in self.units.iter_mut().enumerate() {
-            for mut rec in unit.take_records() {
-                let global = self
-                    .llm_map
-                    .iter()
-                    .position(|(uu, ll)| *uu == u && *ll == rec.llm)
-                    .expect("record from unmapped llm");
-                rec.llm = global;
-                records.push(rec);
-            }
-        }
+        let records = self.harvest_records();
         Evaluation::new(self.n_llms, duration, records)
     }
 
@@ -188,6 +191,59 @@ impl Simulation {
 
     pub fn dropped(&self) -> usize {
         self.units.iter().map(|u| u.dropped()).sum()
+    }
+
+    /// Number of (global) LLMs this simulation serves.
+    pub fn n_llms(&self) -> usize {
+        self.n_llms
+    }
+
+    /// Take every unit's completion records, remapped to global LLM ids
+    /// (shared by the end-of-run collection above and the dynamic
+    /// simulation's incremental harvesting).
+    pub fn harvest_records(&mut self) -> Vec<crate::metrics::RequestRecord> {
+        let mut records = Vec::new();
+        for u in 0..self.units.len() {
+            for mut rec in self.units[u].take_records() {
+                let global = self
+                    .llm_map
+                    .iter()
+                    .position(|(uu, ll)| *uu == u && *ll == rec.llm)
+                    .expect("record from unmapped llm");
+                rec.llm = global;
+                records.push(rec);
+            }
+        }
+        records
+    }
+
+    /// Cancel all in-flight work and return every admitted-but-unfinished
+    /// request with *global* LLM ids — the preempt-and-recompute half of a
+    /// live migration (see [`dynamic::DynamicSimulation`]).
+    pub fn drain_all_requests(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for u in 0..self.units.len() {
+            // Local -> global LLM id for this unit.
+            let rev: Vec<usize> = (0..self.units[u].n_llms())
+                .map(|local| {
+                    self.llm_map
+                        .iter()
+                        .position(|(uu, ll)| *uu == u && *ll == local)
+                        .expect("unit llm not in map")
+                })
+                .collect();
+            for mut r in self.units[u].drain_requests() {
+                r.llm = rev[r.llm];
+                out.push(r);
+            }
+        }
+        out.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        out
     }
 
     /// Cluster-wide GPU utilization: per-unit SM utilization weighted by

@@ -183,6 +183,38 @@ impl UnitSim {
         std::mem::take(&mut self.records)
     }
 
+    /// Cancel every in-flight job and return all admitted-but-unfinished
+    /// requests (waiting + active, LOCAL llm ids) so a live migration can
+    /// requeue them elsewhere. Partially decoded requests are returned
+    /// whole — re-placement uses preempt-and-recompute semantics (the
+    /// vLLM recovery path), and their original arrival times are kept so
+    /// the migration penalty shows up in their measured latency. Block
+    /// holdings are released; the unit is left idle and consistent (it is
+    /// normally discarded right after).
+    pub fn drain_requests(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for q in self.waiting.iter_mut() {
+            out.extend(q.drain(..));
+        }
+        for llm in 0..self.active.len() {
+            let drained: Vec<Active> = self.active[llm].drain(..).collect();
+            for a in drained {
+                self.quota.free(llm, a.blocks);
+                out.push(a.req);
+            }
+        }
+        // Cancel in-flight jobs; reset the SM pool wholesale (summing the
+        // individual releases in HashMap order would be nondeterministic
+        // in the last float bits, and the unit is being torn down anyway).
+        self.inflight.clear();
+        self.started.clear();
+        self.sm = SmPool::new();
+        self.decode_inflight.iter_mut().for_each(|x| *x = false);
+        self.prefill_inflight = false;
+        self.prefill_waiting = false;
+        out
+    }
+
     pub fn dropped(&self) -> usize {
         self.dropped
     }
@@ -926,6 +958,30 @@ mod tests {
         }
         assert_eq!(unit.take_records().len(), 5);
         assert_eq!(unit.quota_used(0), 0, "blocks leaked");
+    }
+
+    #[test]
+    fn drain_returns_unfinished_and_frees_blocks() {
+        let mut unit = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 0.6), cfg_model(6.7, 1.0, 0.6)],
+            1,
+            EngineConfig::muxserve(),
+            CostModel::a100(),
+        );
+        // Three admitted requests across two LLMs; one decode in flight.
+        unit.on_arrival(0.0, req(0, 1, 0.0, 32, 8));
+        unit.on_arrival(0.01, req(0, 2, 0.01, 32, 8));
+        unit.on_arrival(0.02, req(1, 3, 0.02, 32, 8));
+        let _ = unit.drain_started();
+        let drained = unit.drain_requests();
+        assert_eq!(drained.len(), 3, "all unfinished requests returned");
+        // Local llm ids preserved for the caller to remap.
+        assert_eq!(drained.iter().filter(|r| r.llm == 1).count(), 1);
+        assert_eq!(unit.quota_used(0) + unit.quota_used(1), 0, "blocks leak");
+        assert!(unit.drain_started().is_empty());
+        // Unit is reusable: a fresh arrival schedules normally.
+        unit.on_arrival(1.0, req(0, 9, 1.0, 16, 2));
+        assert_eq!(unit.drain_started().len(), 1);
     }
 
     #[test]

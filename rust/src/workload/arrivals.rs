@@ -1,0 +1,366 @@
+//! Non-stationary arrival processes — the dynamic-workload substrate.
+//!
+//! The paper evaluates MuxServe on *stationary* Poisson streams with
+//! power-law popularity (§4.2), but real multi-LLM traffic drifts,
+//! bursts, and flash-crowds (AlpaServe §6; the ChatLMSYS trace of §4.3).
+//! This module generalizes the workload layer behind one trait:
+//!
+//! * [`ArrivalProcess`] — an instantaneous-rate function `rate(t)` with a
+//!   known peak, from which request streams are drawn by Lewis–Shedler
+//!   thinning (exact for non-homogeneous Poisson processes).
+//! * Implementations: [`ConstantRate`] (the paper's stationary case),
+//!   [`Diurnal`] (day-scale sinusoidal waves), [`MarkovModulated`]
+//!   (two-state MMPP bursts), [`FlashCrowd`] (a ramped spike), and
+//!   [`RateDrift`] (popularity migrating from one level to another).
+//!
+//! All processes are deterministic given their construction parameters
+//! (the MMPP pre-samples its state path from an explicit seed), so every
+//! experiment remains exactly reproducible.
+
+use super::{sample_lengths, Request};
+use crate::config::WorkloadSpec;
+use crate::util::Rng;
+
+/// A time-varying arrival-rate function for one LLM's request stream.
+pub trait ArrivalProcess {
+    /// Instantaneous arrival rate (req/s) at time `t` seconds.
+    fn rate(&self, t: f64) -> f64;
+
+    /// An upper bound on `rate(t)` over the process's horizon (used as
+    /// the thinning envelope; must be >= every `rate(t)`).
+    fn peak_rate(&self) -> f64;
+
+    /// Mean rate over `[0, duration)`, by numeric integration (512-point
+    /// midpoint rule — plenty for the smooth curves used here).
+    fn mean_rate(&self, duration: f64) -> f64 {
+        if duration <= 0.0 {
+            return 0.0;
+        }
+        let n = 512;
+        let dt = duration / n as f64;
+        (0..n).map(|i| self.rate((i as f64 + 0.5) * dt)).sum::<f64>()
+            / n as f64
+    }
+}
+
+/// Stationary Poisson arrivals — the paper's §4.2 setting.
+#[derive(Clone, Debug)]
+pub struct ConstantRate {
+    pub rate: f64,
+}
+
+impl ArrivalProcess for ConstantRate {
+    fn rate(&self, _t: f64) -> f64 {
+        self.rate
+    }
+
+    fn peak_rate(&self) -> f64 {
+        self.rate
+    }
+}
+
+/// Sinusoidal day-scale modulation around a base rate (Fig. 2's waves).
+#[derive(Clone, Debug)]
+pub struct Diurnal {
+    pub base: f64,
+    /// Modulation depth in [0, 1).
+    pub depth: f64,
+    /// Period of one "day", seconds.
+    pub period: f64,
+    /// Phase offset, radians (staggers LLMs against each other).
+    pub phase: f64,
+}
+
+impl ArrivalProcess for Diurnal {
+    fn rate(&self, t: f64) -> f64 {
+        self.base
+            * (1.0
+                + self.depth
+                    * (2.0 * std::f64::consts::PI * t / self.period
+                        + self.phase)
+                        .sin())
+    }
+
+    fn peak_rate(&self) -> f64 {
+        self.base * (1.0 + self.depth)
+    }
+}
+
+/// Two-state Markov-modulated Poisson process: the rate alternates between
+/// a quiet `base` and a `burst` level with exponentially distributed dwell
+/// times. The state path is pre-sampled at construction from `seed`, so
+/// `rate(t)` is a deterministic lookup and runs replay exactly.
+#[derive(Clone, Debug)]
+pub struct MarkovModulated {
+    pub base: f64,
+    pub burst: f64,
+    /// Times at which the process switches INTO the burst state, paired
+    /// with the time it switches back out: (burst_start, burst_end).
+    bursts: Vec<(f64, f64)>,
+}
+
+impl MarkovModulated {
+    /// Pre-sample the state path over `[0, horizon)`. `mean_quiet` /
+    /// `mean_burst` are the expected dwell times in each state.
+    pub fn new(
+        base: f64,
+        burst: f64,
+        mean_quiet: f64,
+        mean_burst: f64,
+        horizon: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(mean_quiet > 0.0 && mean_burst > 0.0);
+        let mut rng = Rng::new(seed ^ 0x4D4D5050); // "MMPP"
+        let mut bursts = Vec::new();
+        let mut t = 0.0;
+        while t < horizon {
+            t += rng.exponential(1.0 / mean_quiet);
+            if t >= horizon {
+                break;
+            }
+            let end = t + rng.exponential(1.0 / mean_burst);
+            bursts.push((t, end.min(horizon)));
+            t = end;
+        }
+        MarkovModulated { base, burst, bursts }
+    }
+
+    /// Whether the process is in its burst state at `t`.
+    pub fn in_burst(&self, t: f64) -> bool {
+        self.bursts.iter().any(|(s, e)| *s <= t && t < *e)
+    }
+}
+
+impl ArrivalProcess for MarkovModulated {
+    fn rate(&self, t: f64) -> f64 {
+        if self.in_burst(t) {
+            self.burst
+        } else {
+            self.base
+        }
+    }
+
+    fn peak_rate(&self) -> f64 {
+        self.base.max(self.burst)
+    }
+}
+
+/// A flash crowd: baseline rate, then a linear ramp up to `spike`, a hold,
+/// and a linear ramp back down — the regime where a placement computed for
+/// the baseline popularity is maximally wrong.
+#[derive(Clone, Debug)]
+pub struct FlashCrowd {
+    pub base: f64,
+    pub spike: f64,
+    /// Ramp-up starts here (seconds).
+    pub start: f64,
+    /// Duration of each linear ramp.
+    pub ramp: f64,
+    /// Duration of the full-intensity plateau between the ramps.
+    pub hold: f64,
+}
+
+impl ArrivalProcess for FlashCrowd {
+    fn rate(&self, t: f64) -> f64 {
+        let up_end = self.start + self.ramp;
+        let down_start = up_end + self.hold;
+        let down_end = down_start + self.ramp;
+        if t < self.start || t >= down_end {
+            self.base
+        } else if t < up_end {
+            let f = (t - self.start) / self.ramp.max(1e-9);
+            self.base + f * (self.spike - self.base)
+        } else if t < down_start {
+            self.spike
+        } else {
+            let f = (t - down_start) / self.ramp.max(1e-9);
+            self.spike + f * (self.base - self.spike)
+        }
+    }
+
+    fn peak_rate(&self) -> f64 {
+        self.base.max(self.spike)
+    }
+}
+
+/// Popularity drift: the rate moves linearly from `from` to `to` between
+/// `t_start` and `t_end` and is flat outside that window. Crossing two
+/// such processes (one rising, one falling) models traffic migrating
+/// between LLMs — e.g. a newly released model eclipsing an old one.
+#[derive(Clone, Debug)]
+pub struct RateDrift {
+    pub from: f64,
+    pub to: f64,
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl ArrivalProcess for RateDrift {
+    fn rate(&self, t: f64) -> f64 {
+        if t <= self.t_start {
+            self.from
+        } else if t >= self.t_end {
+            self.to
+        } else {
+            let f = (t - self.t_start) / (self.t_end - self.t_start);
+            self.from + f * (self.to - self.from)
+        }
+    }
+
+    fn peak_rate(&self) -> f64 {
+        self.from.max(self.to)
+    }
+}
+
+/// Draw one LLM's request stream from an arrival process over
+/// `[0, duration)` by thinning against the peak rate, with ShareGPT-like
+/// lengths from `lengths`. Deterministic in `rng`.
+pub fn generate_requests(
+    llm: usize,
+    process: &dyn ArrivalProcess,
+    lengths: &WorkloadSpec,
+    duration: f64,
+    rng: &mut Rng,
+) -> Vec<Request> {
+    let peak = process.peak_rate();
+    let mut out = Vec::new();
+    if peak <= 0.0 {
+        return out;
+    }
+    let mut t = 0.0;
+    let mut id = (llm as u64) << 40;
+    loop {
+        t += rng.exponential(peak);
+        if t >= duration {
+            break;
+        }
+        let accept = process.rate(t) / peak;
+        if rng.f64() < accept {
+            let (prompt_len, output_len) = sample_lengths(lengths, rng);
+            out.push(Request { id, llm, arrival: t, prompt_len, output_len });
+            id += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(p: &dyn ArrivalProcess, duration: f64, seed: u64) -> Vec<Request> {
+        let spec = WorkloadSpec::sharegpt(1.0);
+        let mut rng = Rng::new(seed);
+        generate_requests(0, p, &spec, duration, &mut rng)
+    }
+
+    #[test]
+    fn constant_matches_poisson_rate() {
+        let p = ConstantRate { rate: 4.0 };
+        let reqs = stream(&p, 2_000.0, 3);
+        let rate = reqs.len() as f64 / 2_000.0;
+        assert!((rate - 4.0).abs() < 0.2, "rate={rate}");
+    }
+
+    #[test]
+    fn diurnal_mean_is_base() {
+        let p = Diurnal { base: 3.0, depth: 0.8, period: 100.0, phase: 0.4 };
+        // Whole periods: the sinusoid integrates to the base rate.
+        assert!((p.mean_rate(1_000.0) - 3.0).abs() < 0.01);
+        assert!(p.peak_rate() >= p.rate(25.0));
+        let reqs = stream(&p, 2_000.0, 5);
+        let rate = reqs.len() as f64 / 2_000.0;
+        assert!((rate - 3.0).abs() < 0.25, "rate={rate}");
+    }
+
+    #[test]
+    fn diurnal_modulation_shows_in_buckets() {
+        let p = Diurnal { base: 20.0, depth: 0.9, period: 100.0, phase: 0.0 };
+        let reqs = stream(&p, 400.0, 7);
+        let mut buckets = [0usize; 8]; // 4 per period
+        for r in &reqs {
+            buckets[((r.arrival / 25.0) as usize) % 8] += 1;
+        }
+        let max = *buckets.iter().max().unwrap() as f64;
+        let min = *buckets.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) > 1.5, "buckets={buckets:?}");
+    }
+
+    #[test]
+    fn mmpp_is_deterministic_and_bursty() {
+        let a = MarkovModulated::new(1.0, 8.0, 10.0, 10.0, 300.0, 11);
+        let b = MarkovModulated::new(1.0, 8.0, 10.0, 10.0, 300.0, 11);
+        for i in 0..300 {
+            assert_eq!(a.rate(i as f64), b.rate(i as f64));
+        }
+        // The path must actually visit both states.
+        let visited_burst = (0..3000).any(|i| a.in_burst(i as f64 * 0.1));
+        let visited_quiet = (0..3000).any(|i| !a.in_burst(i as f64 * 0.1));
+        assert!(visited_burst && visited_quiet);
+        assert_eq!(a.peak_rate(), 8.0);
+    }
+
+    #[test]
+    fn flash_crowd_shape() {
+        let p = FlashCrowd {
+            base: 0.5,
+            spike: 10.0,
+            start: 100.0,
+            ramp: 20.0,
+            hold: 60.0,
+        };
+        assert_eq!(p.rate(0.0), 0.5);
+        assert_eq!(p.rate(99.9), 0.5);
+        assert!((p.rate(110.0) - 5.25).abs() < 1e-9); // mid-ramp
+        assert_eq!(p.rate(130.0), 10.0);
+        assert_eq!(p.rate(179.9), 10.0);
+        assert_eq!(p.rate(200.0), 0.5);
+        assert_eq!(p.peak_rate(), 10.0);
+    }
+
+    #[test]
+    fn drift_interpolates() {
+        let p = RateDrift { from: 6.0, to: 0.5, t_start: 40.0, t_end: 80.0 };
+        assert_eq!(p.rate(0.0), 6.0);
+        assert!((p.rate(60.0) - 3.25).abs() < 1e-9);
+        assert_eq!(p.rate(100.0), 0.5);
+        assert_eq!(p.peak_rate(), 6.0);
+    }
+
+    #[test]
+    fn generation_deterministic_per_seed() {
+        let p = FlashCrowd {
+            base: 1.0,
+            spike: 6.0,
+            start: 20.0,
+            ramp: 5.0,
+            hold: 20.0,
+        };
+        assert_eq!(stream(&p, 100.0, 42), stream(&p, 100.0, 42));
+        assert_ne!(stream(&p, 100.0, 42), stream(&p, 100.0, 43));
+    }
+
+    #[test]
+    fn thinning_tracks_instantaneous_rate() {
+        // Flash crowd: the spike window must hold far more arrivals than
+        // an equal-length baseline window.
+        let p = FlashCrowd {
+            base: 1.0,
+            spike: 12.0,
+            start: 200.0,
+            ramp: 10.0,
+            hold: 100.0,
+        };
+        let reqs = stream(&p, 600.0, 9);
+        let count = |lo: f64, hi: f64| {
+            reqs.iter().filter(|r| r.arrival >= lo && r.arrival < hi).count()
+        };
+        let quiet = count(50.0, 150.0);
+        let spike = count(210.0, 310.0);
+        assert!(
+            spike as f64 > 5.0 * quiet.max(1) as f64,
+            "spike={spike} quiet={quiet}"
+        );
+    }
+}

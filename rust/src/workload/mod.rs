@@ -1,11 +1,23 @@
 //! Workload synthesis: power-law popularity, Poisson arrivals, ShareGPT-like
-//! request lengths, and a ChatLMSYS-like multi-day trace (§4.2, §4.3).
+//! request lengths, a ChatLMSYS-like multi-day trace (§4.2, §4.3), and —
+//! beyond the paper — non-stationary arrival processes ([`arrivals`]) with
+//! named dynamic scenarios ([`scenario`]) and trace export/replay.
 
+pub mod arrivals;
 mod powerlaw;
+pub mod scenario;
 mod trace;
 
+pub use arrivals::{
+    generate_requests, ArrivalProcess, ConstantRate, Diurnal, FlashCrowd,
+    MarkovModulated, RateDrift,
+};
 pub use powerlaw::{cumulative_rate_distribution, power_law_rates};
-pub use trace::{chatlmsys_like_trace, daily_rate_curve, TraceSpec};
+pub use scenario::{Scenario, ScenarioData, ScenarioShape};
+pub use trace::{
+    chatlmsys_like_trace, daily_rate_curve, read_trace_file,
+    requests_from_trace, requests_to_trace, write_trace_file, TraceSpec,
+};
 
 use crate::config::WorkloadSpec;
 use crate::util::Rng;

@@ -1,0 +1,316 @@
+//! Named dynamic-workload scenarios — the experiment axis the static
+//! paper setup cannot express.
+//!
+//! A [`Scenario`] combines power-law base popularity (§4.2) with one of
+//! five temporal shapes built on [`ArrivalProcess`]:
+//!
+//! * `stationary`  — the paper's Poisson baseline (control group);
+//! * `diurnal`     — staggered day-scale waves (§4.3's trace, Fig. 2);
+//! * `bursty`      — per-LLM two-state MMPP bursts;
+//! * `flash-crowd` — the least-popular LLM spikes to above the most
+//!   popular one's rate mid-run (placement computed at t=0 is maximally
+//!   wrong during the spike);
+//! * `drift`       — the popularity ranking reverses over the middle of
+//!   the run (hot LLMs cool down, cold ones heat up).
+//!
+//! `build()` returns both the *planning view* (mean rates over the
+//! initial window — what a static optimizer would see, mirroring §3.1's
+//! "workload estimated from history") and the concrete arrival stream,
+//! so static-vs-adaptive comparisons share one workload.
+
+use super::arrivals::{
+    ArrivalProcess, ConstantRate, Diurnal, FlashCrowd, MarkovModulated,
+    RateDrift,
+};
+use super::{generate_requests, merge_streams, power_law_rates, Request};
+use crate::config::{llama_spec, ModelSpec, WorkloadSpec};
+use crate::util::Rng;
+
+/// The temporal shape of a scenario's arrival streams.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioShape {
+    Stationary,
+    Diurnal,
+    Bursty,
+    FlashCrowd,
+    Drift,
+}
+
+impl ScenarioShape {
+    pub fn parse(s: &str) -> Option<ScenarioShape> {
+        match s {
+            "stationary" => Some(ScenarioShape::Stationary),
+            "diurnal" => Some(ScenarioShape::Diurnal),
+            "bursty" | "burst" => Some(ScenarioShape::Bursty),
+            "flash-crowd" | "flashcrowd" => Some(ScenarioShape::FlashCrowd),
+            "drift" => Some(ScenarioShape::Drift),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioShape::Stationary => "stationary",
+            ScenarioShape::Diurnal => "diurnal",
+            ScenarioShape::Bursty => "bursty",
+            ScenarioShape::FlashCrowd => "flash-crowd",
+            ScenarioShape::Drift => "drift",
+        }
+    }
+
+    pub fn all() -> [ScenarioShape; 5] {
+        [
+            ScenarioShape::Stationary,
+            ScenarioShape::Diurnal,
+            ScenarioShape::Bursty,
+            ScenarioShape::FlashCrowd,
+            ScenarioShape::Drift,
+        ]
+    }
+}
+
+/// A fully parameterized dynamic-workload scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub shape: ScenarioShape,
+    pub n_llms: usize,
+    pub duration: f64,
+    /// Power-law skew of the base popularity.
+    pub alpha: f64,
+    /// Base rate of the most popular LLM (req/s).
+    pub max_rate: f64,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Defaults sized for a small single-GPU-mesh cluster (4×1 GPUs):
+    /// six mixed 7B/13B LLMs, two minutes, skewed popularity.
+    pub fn new(shape: ScenarioShape) -> Scenario {
+        Scenario {
+            shape,
+            n_llms: 6,
+            duration: 120.0,
+            alpha: 1.7,
+            max_rate: 6.0,
+            seed: 2024,
+        }
+    }
+
+    /// Analytic model zoo for this scenario: small models (7B/13B class)
+    /// so every LLM fits a single-GPU mesh and placement stays flexible.
+    pub fn model_specs(&self) -> Vec<ModelSpec> {
+        let sizes = [6.7, 6.7, 13.0];
+        (0..self.n_llms)
+            .map(|i| llama_spec(&format!("dyn-{i:02}"), sizes[i % sizes.len()]))
+            .collect()
+    }
+
+    /// Per-LLM arrival processes realizing this scenario's shape.
+    pub fn processes(&self) -> Vec<Box<dyn ArrivalProcess>> {
+        let base = power_law_rates(self.n_llms, self.alpha, self.max_rate);
+        let n = self.n_llms;
+        let d = self.duration;
+        match self.shape {
+            ScenarioShape::Stationary => base
+                .iter()
+                .map(|r| {
+                    Box::new(ConstantRate { rate: *r })
+                        as Box<dyn ArrivalProcess>
+                })
+                .collect(),
+            ScenarioShape::Diurnal => base
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    Box::new(Diurnal {
+                        base: *r,
+                        depth: 0.7,
+                        period: d / 2.0,
+                        phase: i as f64 * 2.0 * std::f64::consts::PI
+                            / n as f64,
+                    }) as Box<dyn ArrivalProcess>
+                })
+                .collect(),
+            ScenarioShape::Bursty => base
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    Box::new(MarkovModulated::new(
+                        *r,
+                        (*r * 4.0).min(self.max_rate * 1.25),
+                        d / 6.0,
+                        d / 15.0,
+                        d,
+                        self.seed ^ (i as u64).wrapping_mul(0x9E37),
+                    )) as Box<dyn ArrivalProcess>
+                })
+                .collect(),
+            ScenarioShape::FlashCrowd => base
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    if i == n - 1 {
+                        // The cold LLM flash-crowds above the hottest one.
+                        Box::new(FlashCrowd {
+                            base: *r,
+                            spike: self.max_rate * 1.25,
+                            start: 0.35 * d,
+                            ramp: 0.05 * d,
+                            hold: 0.30 * d,
+                        }) as Box<dyn ArrivalProcess>
+                    } else {
+                        Box::new(ConstantRate { rate: *r })
+                            as Box<dyn ArrivalProcess>
+                    }
+                })
+                .collect(),
+            ScenarioShape::Drift => base
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    Box::new(RateDrift {
+                        from: *r,
+                        to: base[n - 1 - i],
+                        t_start: 0.35 * d,
+                        t_end: 0.60 * d,
+                    }) as Box<dyn ArrivalProcess>
+                })
+                .collect(),
+        }
+    }
+
+    /// Mean rates over the *initial* 30% window — what a static optimizer
+    /// planning from history would see at deployment time. Flash-crowd
+    /// and drift deviate only after this window, so their planning rates
+    /// equal the power-law base rates; diurnal and bursty planners see
+    /// the window mean of their modulation, as a history-based planner
+    /// would.
+    pub fn planning_rates(&self) -> Vec<f64> {
+        let window = 0.30 * self.duration;
+        self.processes().iter().map(|p| p.mean_rate(window)).collect()
+    }
+
+    /// Long-run mean rates over the whole duration (for reporting).
+    pub fn mean_rates(&self) -> Vec<f64> {
+        self.processes().iter().map(|p| p.mean_rate(self.duration)).collect()
+    }
+
+    /// Materialize the scenario: planning workloads + the arrival stream.
+    pub fn build(&self) -> ScenarioData {
+        let planning = self.planning_rates();
+        let workloads: Vec<WorkloadSpec> =
+            planning.iter().map(|r| WorkloadSpec::sharegpt(*r)).collect();
+        let procs = self.processes();
+        let mut rng = Rng::new(self.seed);
+        let streams: Vec<Vec<Request>> = procs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut sub = rng.fork(i as u64);
+                generate_requests(
+                    i,
+                    p.as_ref(),
+                    &workloads[i],
+                    self.duration,
+                    &mut sub,
+                )
+            })
+            .collect();
+        ScenarioData {
+            planning_workloads: workloads,
+            mean_rates: self.mean_rates(),
+            requests: merge_streams(streams),
+        }
+    }
+}
+
+/// A materialized scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioData {
+    /// Per-LLM workloads with *planning-window* mean rates — feed these
+    /// to the placement optimizer for the honest static baseline.
+    pub planning_workloads: Vec<WorkloadSpec>,
+    /// Per-LLM long-run mean rates.
+    pub mean_rates: Vec<f64>,
+    /// The merged, arrival-sorted request stream.
+    pub requests: Vec<Request>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_parse_round_trip() {
+        for s in ScenarioShape::all() {
+            assert_eq!(ScenarioShape::parse(s.name()), Some(s));
+        }
+        assert_eq!(ScenarioShape::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let s = Scenario::new(ScenarioShape::FlashCrowd);
+        let a = s.build();
+        let b = s.build();
+        assert_eq!(a.requests, b.requests);
+        assert!(!a.requests.is_empty());
+        assert!(a
+            .requests
+            .windows(2)
+            .all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn planning_rates_match_base_popularity() {
+        // Flash crowd and drift only deviate after the planning window,
+        // so planning rates must equal the power-law base rates.
+        for shape in [ScenarioShape::FlashCrowd, ScenarioShape::Drift] {
+            let s = Scenario::new(shape);
+            let base = power_law_rates(s.n_llms, s.alpha, s.max_rate);
+            for (p, b) in s.planning_rates().iter().zip(&base) {
+                assert!((p - b).abs() < 1e-6, "plan={p} base={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn flash_crowd_inverts_popularity_mid_run() {
+        let s = Scenario::new(ScenarioShape::FlashCrowd);
+        let procs = s.processes();
+        let mid = 0.5 * s.duration;
+        let cold = procs[s.n_llms - 1].rate(mid);
+        let hot = procs[0].rate(mid);
+        assert!(cold > hot, "cold={cold} hot={hot}");
+        // And the spike really shows in the generated stream.
+        let data = s.build();
+        let spike_window = |r: &Request| {
+            r.llm == s.n_llms - 1
+                && r.arrival >= 0.42 * s.duration
+                && r.arrival < 0.62 * s.duration
+        };
+        let in_spike = data.requests.iter().filter(|r| spike_window(r)).count();
+        let expect = (s.max_rate * 1.25) * 0.2 * s.duration;
+        assert!(
+            in_spike as f64 > 0.5 * expect,
+            "spike arrivals {in_spike} << expected {expect}"
+        );
+    }
+
+    #[test]
+    fn drift_reverses_ranking() {
+        let s = Scenario::new(ScenarioShape::Drift);
+        let procs = s.processes();
+        let end = s.duration * 0.95;
+        assert!(procs[0].rate(end) < procs[s.n_llms - 1].rate(end));
+        assert!(procs[0].rate(0.0) > procs[s.n_llms - 1].rate(0.0));
+    }
+
+    #[test]
+    fn model_zoo_fits_single_gpu_meshes() {
+        let s = Scenario::new(ScenarioShape::Stationary);
+        for m in s.model_specs() {
+            assert_eq!(m.min_tp(80e9, 0.3), 1, "{} needs tp>1", m.name);
+        }
+    }
+}

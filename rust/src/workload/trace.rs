@@ -96,6 +96,77 @@ pub fn chatlmsys_like_trace(spec: &TraceSpec) -> (Vec<WorkloadSpec>, Vec<Request
     (specs, merge_streams(streams))
 }
 
+// ---------------------------------------------------------------------------
+// Trace export / replay
+// ---------------------------------------------------------------------------
+//
+// Every generator in this crate produces plain `Request` streams, so a
+// one-line-per-request text format is enough to freeze a workload and
+// replay it bit-identically later (or feed it to an external system).
+// Format: a `# muxserve-trace v1` header, then `id,llm,arrival,prompt,
+// output` rows with full-precision arrivals.
+
+/// Serialize a request stream to the portable trace format.
+pub fn requests_to_trace(requests: &[Request]) -> String {
+    let mut out = String::from("# muxserve-trace v1\n");
+    out.push_str("# id,llm,arrival_s,prompt_len,output_len\n");
+    for r in requests {
+        out.push_str(&format!(
+            "{},{},{:.17e},{},{}\n",
+            r.id, r.llm, r.arrival, r.prompt_len, r.output_len
+        ));
+    }
+    out
+}
+
+/// Parse a trace produced by [`requests_to_trace`]. Returns requests in
+/// file order (generators emit arrival-sorted streams).
+pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != 5 {
+            return Err(format!(
+                "trace line {}: expected 5 fields, got {}",
+                lineno + 1,
+                fields.len()
+            ));
+        }
+        let bad = |what: &str| {
+            format!("trace line {}: bad {what}: {line}", lineno + 1)
+        };
+        out.push(Request {
+            id: fields[0].parse().map_err(|_| bad("id"))?,
+            llm: fields[1].parse().map_err(|_| bad("llm"))?,
+            arrival: fields[2].parse().map_err(|_| bad("arrival"))?,
+            prompt_len: fields[3].parse().map_err(|_| bad("prompt_len"))?,
+            output_len: fields[4].parse().map_err(|_| bad("output_len"))?,
+        });
+    }
+    Ok(out)
+}
+
+/// Write a trace file (convenience wrapper).
+pub fn write_trace_file(
+    path: impl AsRef<std::path::Path>,
+    requests: &[Request],
+) -> std::io::Result<()> {
+    std::fs::write(path, requests_to_trace(requests))
+}
+
+/// Read a trace file written by [`write_trace_file`].
+pub fn read_trace_file(
+    path: impl AsRef<std::path::Path>,
+) -> std::io::Result<Vec<Request>> {
+    let text = std::fs::read_to_string(path)?;
+    requests_from_trace(&text)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +212,24 @@ mod tests {
         let max = buckets.iter().cloned().fold(0.0, f64::max);
         let min = buckets.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!(max / min.max(1.0) > 1.5, "max={max} min={min}");
+    }
+
+    #[test]
+    fn trace_export_round_trips_exactly() {
+        let (_, reqs) =
+            chatlmsys_like_trace(&TraceSpec { duration: 60.0, ..Default::default() });
+        assert!(!reqs.is_empty());
+        let text = requests_to_trace(&reqs);
+        let back = requests_from_trace(&text).unwrap();
+        assert_eq!(reqs, back, "replay must be bit-identical");
+    }
+
+    #[test]
+    fn trace_parser_rejects_malformed_rows() {
+        assert!(requests_from_trace("1,2,3").is_err());
+        assert!(requests_from_trace("a,0,1.0,4,4").is_err());
+        // Comments and blank lines are fine.
+        assert_eq!(requests_from_trace("# hi\n\n").unwrap().len(), 0);
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Property tests over the memory layer (quota accounting + concrete
+//! block allocator) under randomized alloc/free/adapt sequences — the
+//! invariants the unified KV cache (§3.3/§3.4) must never break.
+
+use muxserve::memory::{BlockAllocator, QuotaCache, QuotaError};
+use muxserve::prop_assert;
+use muxserve::util::{proplite, Rng};
+
+/// Quota conservation: under quota-enforced allocation and arbitrary
+/// interleavings of alloc / free / adapt, (1) the per-LLM quotas always
+/// sum to exactly the pool size, (2) usage never exceeds the quota or
+/// the pool, and (3) freeing everything restores an empty pool.
+#[test]
+fn prop_quota_conservation_under_adapt() {
+    proplite::check(300, |rng: &mut Rng| {
+        let n = rng.range(1, 6) as usize;
+        // Pool of at least n blocks so the initial rounding fix can land
+        // the quotas exactly on the pool size.
+        let total = rng.range(n as i64, 4096) as usize;
+        let weights: Vec<f64> =
+            (0..n).map(|_| 0.1 + rng.f64() * 10.0).collect();
+        let mut q = QuotaCache::new(total, &weights);
+        let mut held: Vec<(usize, usize)> = Vec::new(); // (llm, n_blocks)
+        for _step in 0..rng.range(1, 120) {
+            match rng.below(4) {
+                0 | 1 => {
+                    let llm = rng.below(n);
+                    let want = rng.range(1, 64) as usize;
+                    match q.alloc(llm, want) {
+                        Ok(()) => held.push((llm, want)),
+                        Err(QuotaError::QuotaExceeded)
+                        | Err(QuotaError::PoolExhausted) => {}
+                    }
+                }
+                2 => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len());
+                        let (llm, k) = held.swap_remove(i);
+                        q.free(llm, k);
+                    }
+                }
+                _ => q.adapt(),
+            }
+            // (1) quota conservation — the §3.3 adaptation moves quota
+            // between LLMs but never mints or destroys blocks.
+            let quota_sum: usize = (0..n).map(|i| q.quota(i)).sum();
+            prop_assert!(
+                quota_sum == total,
+                "quota sum {quota_sum} != pool {total}"
+            );
+            // (2) usage bounded by quota and pool.
+            for i in 0..n {
+                prop_assert!(
+                    q.used(i) <= q.quota(i),
+                    "llm {i}: used {} > quota {}",
+                    q.used(i),
+                    q.quota(i)
+                );
+            }
+            prop_assert!(
+                q.total_used() <= total,
+                "pool oversubscribed: {} > {total}",
+                q.total_used()
+            );
+            prop_assert!(
+                q.free_in_pool() == total - q.total_used(),
+                "free_in_pool inconsistent"
+            );
+        }
+        // (3) full drain restores the empty pool.
+        for (llm, k) in held.drain(..) {
+            q.free(llm, k);
+        }
+        prop_assert!(q.total_used() == 0, "blocks leaked");
+        Ok(())
+    });
+}
+
+/// Adapt must never strand in-use blocks: after any adapt, every LLM's
+/// quota covers its current usage, so no LLM is forced into deficit.
+#[test]
+fn prop_adapt_never_strands_usage() {
+    proplite::check(200, |rng: &mut Rng| {
+        let n = rng.range(2, 8) as usize;
+        let total = rng.range(n as i64 * 8, 8192) as usize;
+        let mut q = QuotaCache::new(total, &vec![1.0; n]);
+        // Random fill, then repeated adapts.
+        for _ in 0..rng.range(1, 40) {
+            let llm = rng.below(n);
+            let _ = q.alloc(llm, rng.range(1, 32) as usize);
+        }
+        for _ in 0..rng.range(1, 4) {
+            q.adapt();
+            for i in 0..n {
+                prop_assert!(
+                    q.quota(i) >= q.used(i),
+                    "adapt stranded llm {i}: used {} quota {}",
+                    q.used(i),
+                    q.quota(i)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pool-only mode (the Fig. 9 round-robin baseline) ignores quotas but
+/// must still never oversubscribe the physical pool.
+#[test]
+fn prop_pool_only_never_oversubscribes() {
+    proplite::check(200, |rng: &mut Rng| {
+        let n = rng.range(1, 4) as usize;
+        let total = rng.range(8, 512) as usize;
+        let mut q = QuotaCache::new(total, &vec![1.0; n]);
+        let mut held: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..rng.range(1, 80) {
+            if rng.f64() < 0.6 || held.is_empty() {
+                let llm = rng.below(n);
+                let want = rng.range(1, 64) as usize;
+                if q.alloc_pool_only(llm, want).is_ok() {
+                    held.push((llm, want));
+                }
+            } else {
+                let i = rng.below(held.len());
+                let (llm, k) = held.swap_remove(i);
+                q.free(llm, k);
+            }
+            prop_assert!(
+                q.total_used() <= total,
+                "pool-only oversubscribed: {} > {total}",
+                q.total_used()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Block-table consistency of the concrete allocator: across randomized
+/// alloc/free sequences with several owners, (1) no block is ever owned
+/// twice, (2) `used_by` matches the held sets exactly, (3) every id stays
+/// in range, and (4) the free count always complements the held count.
+#[test]
+fn prop_allocator_block_table_consistency() {
+    proplite::check(300, |rng: &mut Rng| {
+        let n_blocks = rng.range(1, 256) as usize;
+        let n_owners = rng.range(1, 5) as usize;
+        let mut a = BlockAllocator::new(n_blocks, n_owners);
+        let mut held: Vec<(usize, Vec<u32>)> = Vec::new();
+        for _ in 0..rng.range(1, 100) {
+            if rng.f64() < 0.55 || held.is_empty() {
+                let owner = rng.below(n_owners);
+                let want = rng.range(1, 16) as usize;
+                match a.alloc(owner, want) {
+                    Some(blocks) => {
+                        prop_assert!(
+                            blocks.len() == want,
+                            "short allocation"
+                        );
+                        prop_assert!(
+                            blocks
+                                .iter()
+                                .all(|b| (*b as usize) < n_blocks),
+                            "block id out of range"
+                        );
+                        held.push((owner, blocks));
+                    }
+                    None => {
+                        prop_assert!(
+                            a.n_free() < want,
+                            "refused although {} free >= {want}",
+                            a.n_free()
+                        );
+                    }
+                }
+            } else {
+                let i = rng.below(held.len());
+                let (owner, blocks) = held.swap_remove(i);
+                a.free_blocks(owner, &blocks);
+            }
+            // (1)+(4): uniqueness and conservation.
+            let mut all: Vec<u32> = held
+                .iter()
+                .flat_map(|(_, b)| b.iter().copied())
+                .collect();
+            let held_count = all.len();
+            all.sort_unstable();
+            all.dedup();
+            prop_assert!(all.len() == held_count, "double allocation");
+            prop_assert!(
+                held_count + a.n_free() == n_blocks,
+                "leak: held={held_count} free={}",
+                a.n_free()
+            );
+            // (2): per-owner accounting matches the held table.
+            for owner in 0..n_owners {
+                let mine: usize = held
+                    .iter()
+                    .filter(|(o, _)| *o == owner)
+                    .map(|(_, b)| b.len())
+                    .sum();
+                prop_assert!(
+                    a.used_by(owner) == mine,
+                    "owner {owner}: used_by {} != held {mine}",
+                    a.used_by(owner)
+                );
+            }
+        }
+        for (owner, blocks) in held.drain(..) {
+            a.free_blocks(owner, &blocks);
+        }
+        prop_assert!(a.n_free() == n_blocks, "capacity not restored");
+        Ok(())
+    });
+}
+
+/// Quota + allocator in lock-step — the real serving engine's pattern
+/// (admit under quota, then take concrete ids): the two views must agree
+/// at every step.
+#[test]
+fn prop_quota_and_allocator_stay_in_lock_step() {
+    proplite::check(200, |rng: &mut Rng| {
+        let n = rng.range(1, 4) as usize;
+        let total = rng.range(n as i64, 512) as usize;
+        let mut q = QuotaCache::new(total, &vec![1.0; n]);
+        let mut a = BlockAllocator::new(total, n);
+        let mut held: Vec<(usize, Vec<u32>)> = Vec::new();
+        for _ in 0..rng.range(1, 80) {
+            if rng.f64() < 0.55 || held.is_empty() {
+                let llm = rng.below(n);
+                let want = rng.range(1, 32) as usize;
+                if q.alloc(llm, want).is_ok() {
+                    // Quota admitted ⇒ the pool MUST have the ids.
+                    let ids = a.alloc(llm, want);
+                    prop_assert!(
+                        ids.is_some(),
+                        "quota admitted {want} but allocator refused"
+                    );
+                    held.push((llm, ids.unwrap()));
+                }
+            } else {
+                let i = rng.below(held.len());
+                let (llm, blocks) = held.swap_remove(i);
+                q.free(llm, blocks.len());
+                a.free_blocks(llm, &blocks);
+            }
+            prop_assert!(
+                q.total_used() == total - a.n_free(),
+                "views diverged: quota {} vs allocator {}",
+                q.total_used(),
+                total - a.n_free()
+            );
+            for llm in 0..n {
+                prop_assert!(
+                    q.used(llm) == a.used_by(llm),
+                    "llm {llm}: quota used {} vs allocator {}",
+                    q.used(llm),
+                    a.used_by(llm)
+                );
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,145 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real serving path (`runtime::executor`) drives compiled HLO
+//! artifacts through a PJRT client. That native runtime is not available
+//! in this offline build environment, so this crate provides the same API
+//! surface with every device-touching entry point returning a descriptive
+//! error. The first such call is `PjRtClient::cpu()`, so the serving
+//! engine fails fast at construction with a clear message while the whole
+//! simulator / placement / scheduling stack (which never touches PJRT)
+//! is unaffected. Point the `xla` path dependency at the real bindings to
+//! enable the end-to-end serving path.
+
+use std::fmt;
+
+/// Error type for all stubbed operations.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT runtime unavailable (offline `xla` stub — \
+         point the workspace `xla` dependency at the real bindings to \
+         enable the real serving path)"
+    )))
+}
+
+/// Host literal. The stub records only the element count so shape checks
+/// stay meaningful up to the first device operation.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    numel: usize,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(data: &[T]) -> Literal {
+        Literal { numel: data.len() }
+    }
+
+    /// Reshape to the given dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.numel {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.numel
+            )));
+        }
+        Ok(self.clone())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub): construction fails fast with a clear message.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_fast_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_shape_bookkeeping() {
+        let lit = Literal::vec1(&[1.0f32; 6]);
+        assert!(lit.reshape(&[2, 3]).is_ok());
+        assert!(lit.reshape(&[4, 2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
