@@ -1,12 +1,15 @@
 //! Figure/table regeneration harnesses (filled in per DESIGN.md §4),
-//! plus the drift figure for the dynamic-workload scenarios.
+//! the drift figure for the dynamic-workload scenarios, and the
+//! `bench-perf` event-core performance baseline.
 
 pub mod drift;
 pub mod experiments;
 pub mod figures;
+pub mod perf;
 
 pub use drift::{
     fig_drift, run_scenario, run_scenario_on, run_trace, scenario_cluster,
     ScenarioResult,
 };
 pub use experiments::*;
+pub use perf::{run_bench_perf, PerfConfig, PerfReport};

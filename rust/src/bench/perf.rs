@@ -1,0 +1,303 @@
+//! `bench-perf`: the event-core performance baseline (the BENCH_N.json
+//! trajectory; BENCH_3.json is the first committed point).
+//!
+//! Runs the paper-scale setting — the 19-LLM synthetic zoo (§4.2,
+//! Table 1) on the 4×8 A100 testbed — through three hot paths:
+//!
+//! 1. **Static event loop**: cold placement + a stationary Poisson replay,
+//!    reporting wall-clock and events/sec (the simulator-core metric the
+//!    id-index work optimizes).
+//! 2. **Dynamic flash-crowd**: the online re-placement loop armed, with
+//!    the warm-started optimizer, over the same duration.
+//! 3. **Replan decision latency**: the from-scratch optimizer vs. the
+//!    warm start on one drifted rate vector (a locally absorbable sag —
+//!    the warm fast path), plus the hopeless-spike case where warm-start
+//!    must fall back to the full search.
+//!
+//! `--smoke` shrinks everything to a 6-LLM / 4-GPU config that finishes
+//! in seconds — the CI gross-regression tripwire (`--max-wall`), not a
+//! micro-benchmark.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::config::{synthetic_zoo, ClusterSpec, ModelSpec};
+use crate::coordinator::estimator::Estimator;
+use crate::coordinator::{
+    muxserve_placement, muxserve_placement_warm, EngineConfig, ReplanConfig,
+};
+use crate::costmodel::CostModel;
+use crate::simulator::{DynamicSimulation, Simulation};
+use crate::util::json::Json;
+use crate::workload::{synthetic_workload, Scenario, ScenarioShape};
+
+/// Knobs of one `bench-perf` run.
+#[derive(Clone, Debug)]
+pub struct PerfConfig {
+    /// Simulated seconds per scenario run.
+    pub duration: f64,
+    /// Repetitions for the replan-latency timings (min is reported).
+    pub reps: u32,
+    /// Smoke mode: 6 LLMs / 4 GPUs instead of 19 / 32.
+    pub smoke: bool,
+}
+
+impl PerfConfig {
+    /// The paper-scale baseline configuration.
+    pub fn full() -> Self {
+        PerfConfig { duration: 120.0, reps: 3, smoke: false }
+    }
+
+    /// The CI tripwire configuration.
+    pub fn smoke() -> Self {
+        PerfConfig { duration: 20.0, reps: 1, smoke: true }
+    }
+}
+
+/// One simulated run's throughput numbers.
+#[derive(Clone, Debug)]
+pub struct SimPerf {
+    pub label: &'static str,
+    pub requests: usize,
+    pub completed: usize,
+    pub events: u64,
+    pub wall_s: f64,
+    pub events_per_s: f64,
+}
+
+/// Replan decision latencies (milliseconds, min over reps).
+#[derive(Clone, Debug)]
+pub struct ReplanPerf {
+    /// From-scratch `muxserve_placement` on the drifted rates.
+    pub full_ms: f64,
+    /// `muxserve_placement_warm` on the same rates (local fast path).
+    pub warm_ms: f64,
+    /// `full_ms / warm_ms`.
+    pub speedup: f64,
+    /// Warm start on a hopeless spike — includes the internal fallback
+    /// to the full search, so it bounds the warm path's worst case.
+    pub warm_fallback_ms: f64,
+}
+
+/// Everything `bench-perf` measures.
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    pub n_llms: usize,
+    pub gpus: usize,
+    pub duration: f64,
+    pub smoke: bool,
+    /// Cold (deployment-time) placement latency, milliseconds.
+    pub placement_cold_ms: f64,
+    pub sims: Vec<SimPerf>,
+    pub replan: ReplanPerf,
+    /// Whole-benchmark wall clock, seconds (the `--max-wall` subject).
+    pub wall_total_s: f64,
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+impl PerfReport {
+    /// Serialize in the BENCH_N.json schema.
+    pub fn to_json(&self) -> Json {
+        let mut cfg = BTreeMap::new();
+        cfg.insert("n_llms".to_string(), Json::Num(self.n_llms as f64));
+        cfg.insert("gpus".to_string(), Json::Num(self.gpus as f64));
+        cfg.insert("duration_s".to_string(), Json::Num(self.duration));
+        cfg.insert("smoke".to_string(), Json::Bool(self.smoke));
+
+        let sims: Vec<Json> = self
+            .sims
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "label".to_string(),
+                    Json::Str(s.label.to_string()),
+                );
+                m.insert("requests".to_string(), Json::Num(s.requests as f64));
+                m.insert(
+                    "completed".to_string(),
+                    Json::Num(s.completed as f64),
+                );
+                m.insert("events".to_string(), Json::Num(s.events as f64));
+                m.insert("wall_s".to_string(), Json::Num(round3(s.wall_s)));
+                m.insert(
+                    "events_per_s".to_string(),
+                    Json::Num(s.events_per_s.round()),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+
+        let mut rp = BTreeMap::new();
+        rp.insert("full_ms".to_string(), Json::Num(round3(self.replan.full_ms)));
+        rp.insert("warm_ms".to_string(), Json::Num(round3(self.replan.warm_ms)));
+        rp.insert(
+            "speedup".to_string(),
+            Json::Num(round3(self.replan.speedup)),
+        );
+        rp.insert(
+            "warm_fallback_ms".to_string(),
+            Json::Num(round3(self.replan.warm_fallback_ms)),
+        );
+
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("bench-perf".to_string()));
+        root.insert(
+            "generator".to_string(),
+            Json::Str(
+                "muxserve bench-perf --out BENCH_N.json (regenerate on \
+                 the target host; wall-clock numbers are host-dependent)"
+                    .to_string(),
+            ),
+        );
+        root.insert("config".to_string(), Json::Obj(cfg));
+        root.insert(
+            "placement_cold_ms".to_string(),
+            Json::Num(round3(self.placement_cold_ms)),
+        );
+        root.insert("sims".to_string(), Json::Arr(sims));
+        root.insert("replan".to_string(), Json::Obj(rp));
+        root.insert(
+            "wall_total_s".to_string(),
+            Json::Num(round3(self.wall_total_s)),
+        );
+        Json::Obj(root)
+    }
+}
+
+/// Minimum wall time of `reps` calls, in milliseconds.
+fn time_ms<T>(reps: u32, mut f: impl FnMut() -> T) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    best
+}
+
+/// The benchmark scale: (analytic zoo, cluster, power-law alpha, max rate).
+fn perf_scale(smoke: bool) -> (Vec<ModelSpec>, ClusterSpec, f64, f64) {
+    if smoke {
+        let sc = Scenario {
+            n_llms: 6,
+            ..Scenario::new(ScenarioShape::Stationary)
+        };
+        (sc.model_specs(), ClusterSpec::new(4, 1), 1.7, 6.0)
+    } else {
+        (synthetic_zoo(), ClusterSpec::paper_testbed(), 0.9, 20.0)
+    }
+}
+
+/// Run the whole benchmark; deterministic modulo wall-clock noise.
+pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
+    let (specs, cluster, alpha, max_rate) = perf_scale(cfg.smoke);
+    let n = specs.len();
+    let t_all = Instant::now();
+
+    // 1. Cold placement + stationary event loop.
+    let (workloads, requests) =
+        synthetic_workload(n, alpha, max_rate, cfg.duration, 2024);
+    let engine = EngineConfig::muxserve();
+    let cost = CostModel::new(cluster.gpu.clone());
+    let est = Estimator::with_kv_frac(cost.clone(), engine.kv_capacity_frac);
+    let t0 = Instant::now();
+    let placement = muxserve_placement(&specs, &workloads, &cluster, &est)
+        .expect("bench-perf scale must have a feasible placement");
+    let placement_cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut sims = Vec::new();
+    {
+        let mut sim = Simulation::from_placement(
+            &placement, &specs, &workloads, engine, &cost,
+        );
+        let t0 = Instant::now();
+        let eval = sim.run(&requests, cfg.duration);
+        let wall = t0.elapsed().as_secs_f64();
+        sims.push(SimPerf {
+            label: "stationary",
+            requests: requests.len(),
+            completed: eval.records.len(),
+            events: sim.events_processed(),
+            wall_s: wall,
+            events_per_s: sim.events_processed() as f64 / wall.max(1e-9),
+        });
+    }
+
+    // 2. Flash-crowd with the online re-placement loop armed, warm-started.
+    {
+        let scenario = Scenario {
+            shape: ScenarioShape::FlashCrowd,
+            n_llms: n,
+            duration: cfg.duration,
+            alpha,
+            max_rate,
+            seed: 2024,
+        };
+        let data = scenario.build();
+        // Same analytic zoo as the stationary section (NOT the scenario's
+        // small-model zoo), so every BENCH row shares one model mix.
+        let rcfg = ReplanConfig { warm_start: true, ..Default::default() };
+        let dyn_sim = DynamicSimulation::new(
+            &specs,
+            &data.planning_workloads,
+            &cluster,
+            engine,
+            rcfg,
+            true,
+        )
+        .expect("bench-perf flash-crowd placement must exist");
+        let t0 = Instant::now();
+        let report = dyn_sim.run(&data.requests, cfg.duration);
+        let wall = t0.elapsed().as_secs_f64();
+        sims.push(SimPerf {
+            label: "flash-crowd+replan",
+            requests: data.requests.len(),
+            completed: report.eval.records.len(),
+            events: report.events,
+            wall_s: wall,
+            events_per_s: report.events as f64 / wall.max(1e-9),
+        });
+    }
+
+    // 3. Replan decision latency on one drifted rate vector: a sag on the
+    // hottest LLM is always locally absorbable, so it exercises the warm
+    // fast path; the ×50 spike forces the documented fallback.
+    let mut drifted = workloads.clone();
+    drifted[0].rate = (drifted[0].rate * 0.25).max(0.05);
+    let dirty: Vec<bool> = (0..n).map(|i| i == 0).collect();
+    let full_ms = time_ms(cfg.reps, || {
+        muxserve_placement(&specs, &drifted, &cluster, &est)
+    });
+    let warm_ms = time_ms(cfg.reps, || {
+        muxserve_placement_warm(
+            &specs, &drifted, &cluster, &est, &placement, &dirty,
+        )
+    });
+    let mut spiked = workloads.clone();
+    spiked[0].rate *= 50.0;
+    let warm_fallback_ms = time_ms(cfg.reps, || {
+        muxserve_placement_warm(
+            &specs, &spiked, &cluster, &est, &placement, &dirty,
+        )
+    });
+
+    PerfReport {
+        n_llms: n,
+        gpus: cluster.total_gpus(),
+        duration: cfg.duration,
+        smoke: cfg.smoke,
+        placement_cold_ms,
+        sims,
+        replan: ReplanPerf {
+            full_ms,
+            warm_ms,
+            speedup: full_ms / warm_ms.max(1e-9),
+            warm_fallback_ms,
+        },
+        wall_total_s: t_all.elapsed().as_secs_f64(),
+    }
+}

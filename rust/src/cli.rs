@@ -101,6 +101,9 @@ pub fn main() -> Result<()> {
         "bench-drift" => {
             crate::bench::fig_drift(duration, 2024);
         }
+        "bench-perf" => {
+            bench_perf_cmd(&args)?;
+        }
         "bench-all" => {
             figures::fig1();
             figures::fig2();
@@ -130,6 +133,64 @@ pub fn main() -> Result<()> {
     Ok(())
 }
 
+/// Event-core performance baseline: paper-scale (19 LLMs / 32 GPUs)
+/// simulation throughput + replan decision latency (cold vs warm-started
+/// placement). `--smoke` shrinks to the CI tripwire config; `--out FILE`
+/// writes the BENCH_N.json record; `--max-wall S` fails the run when the
+/// total wall clock exceeds the ceiling (gross-regression guard).
+fn bench_perf_cmd(args: &[String]) -> Result<()> {
+    use crate::bench::perf::{run_bench_perf, PerfConfig};
+
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let mut cfg =
+        if smoke { PerfConfig::smoke() } else { PerfConfig::full() };
+    cfg.duration = flag_val(args, "--duration", cfg.duration)?;
+    let max_wall = flag_val(args, "--max-wall", f64::INFINITY)?;
+
+    println!(
+        "bench-perf: {} config, duration {:.0}s (running...)",
+        if smoke { "smoke" } else { "paper-scale" },
+        cfg.duration
+    );
+    let report = run_bench_perf(&cfg);
+    println!(
+        "scale: {} LLMs / {} GPUs   cold placement: {:.1} ms",
+        report.n_llms, report.gpus, report.placement_cold_ms
+    );
+    for s in &report.sims {
+        println!(
+            "{:<20} {:>7} reqs  {:>7} done  {:>9} events  {:>8.3}s wall  \
+             {:>10.0} events/s",
+            s.label, s.requests, s.completed, s.events, s.wall_s,
+            s.events_per_s
+        );
+    }
+    println!(
+        "replan decision:    full {:.2} ms  warm {:.2} ms  ({:.1}x)  \
+         warm-with-fallback {:.2} ms",
+        report.replan.full_ms,
+        report.replan.warm_ms,
+        report.replan.speedup,
+        report.replan.warm_fallback_ms
+    );
+    println!("total wall: {:.2}s", report.wall_total_s);
+
+    if let Some(path) = flag_path(args, "--out")? {
+        let mut text = report.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("report written to {path}");
+    }
+    anyhow::ensure!(
+        report.wall_total_s <= max_wall,
+        "bench-perf exceeded the wall-clock ceiling: {:.2}s > {max_wall}s \
+         — gross event-core regression",
+        report.wall_total_s
+    );
+    Ok(())
+}
+
 /// Dynamic-workload scenario runner: non-stationary arrivals against the
 /// MuxServe engine, with online re-placement on or off.
 fn scenario_cmd(args: &[String]) -> Result<()> {
@@ -150,6 +211,14 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         "off" | "false" | "0" => false,
         other => anyhow::bail!("--replan takes on|off, got `{other}`"),
     };
+    // Warm-started re-placement (milliseconds-scale decisions; may keep
+    // a stale shape — see coordinator::placement docs). Off by default.
+    let warm_arg = flag_str(args, "--warm", "off");
+    let warm_start = match warm_arg {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--warm takes on|off, got `{other}`"),
+    };
     let scenario = Scenario {
         duration: flag_val(args, "--duration", 120.0f64)?,
         seed: flag_val(args, "--seed", 2024u64)?,
@@ -159,7 +228,8 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         ..Scenario::new(shape)
     };
     let cluster = scenario_cluster();
-    let replan = adaptive.then(ReplanConfig::default);
+    let replan = adaptive
+        .then(|| ReplanConfig { warm_start, ..Default::default() });
 
     let (report, arrived) = if let Some(path) = flag_path(args, "--replay-trace")? {
         // Replay path: a frozen trace supplies the stream; planning
@@ -352,8 +422,14 @@ fn print_help() {
          COMMANDS:\n  \
          bench-fig1 .. bench-fig12   regenerate one paper figure\n  \
          bench-drift                 static vs online re-placement figure\n  \
+         bench-perf [--smoke] [--out FILE] [--max-wall S]\n  \
+         \x20                            event-core perf baseline: 19 LLMs \
+         / 32 GPUs\n  \
+         \x20                            events/sec + replan latency \
+         (cold vs warm)\n  \
          bench-all                   full evaluation suite\n  \
-         scenario [--shape S] [--replan on|off] [--duration S] [--seed N]\n  \
+         scenario [--shape S] [--replan on|off] [--warm on|off] \
+         [--duration S] [--seed N]\n  \
          \x20                            dynamic workload (stationary | \
          diurnal | bursty |\n  \
          \x20                            flash-crowd | drift) with online \

@@ -12,9 +12,9 @@ pub mod scheduler;
 
 pub use estimator::{Estimator, UnitMember};
 pub use placement::{
-    enumerate_mesh_groups, memory_greedy_placement, muxserve_placement,
-    parallel_candidates, spatial_placement, Placement, PlacementUnit,
-    ParallelCandidate,
+    enumerate_mesh_groups, enumerate_partitions, memory_greedy_placement,
+    muxserve_placement, muxserve_placement_warm, parallel_candidates,
+    spatial_placement, Placement, PlacementUnit, ParallelCandidate,
 };
 pub use replan::{ReplanConfig, ReplanController, ReplanDecision};
 pub use scheduler::{EngineConfig, Policy};

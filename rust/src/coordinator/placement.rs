@@ -1,6 +1,32 @@
 //! LLM placement (§3.2): enumeration-based greedy placement (Alg. 1),
 //! parallel-candidate generation (Alg. 2), plus the ablation baseline
 //! (memory-greedy, Fig. 8) and the spatial-partitioning baseline (§4.1).
+//!
+//! ## Warm-started (incremental) re-placement
+//!
+//! [`muxserve_placement`] enumerates every mesh partition of the whole
+//! cluster — seconds per run at the paper's 19-LLM / 32-GPU scale, which
+//! is fine once at deployment but too slow inside the online replan loop.
+//! [`muxserve_placement_warm`] starts from the current [`Placement`] and
+//! a per-LLM `dirty` vector (which LLMs crossed the replan thresholds):
+//! units with no dirty member are kept verbatim (their estimator value is
+//! re-scored against the fresh workloads, but membership and SM
+//! configuration — and therefore the placement *signature* — are
+//! unchanged), and only the dirty units' LLMs are re-placed, with the
+//! mesh-partition search restricted to the dirty units' GPU pool.
+//!
+//! **Contract.** The warm result may be *stale* in two ways, both
+//! deliberate: (1) when no LLM is dirty the previous placement is
+//! returned as-is (rescored), even if a cold-start search would now
+//! prefer a different shape; (2) kept units retain the parallel
+//! candidates chosen at their original planning time, so their recorded
+//! `batch`/`tpt`/`meets_rate` metadata reflects the rates they were
+//! planned for. Warm-start falls back to the full search when the local
+//! move cannot be trusted: when a dirty LLM has no feasible candidate on
+//! the dirty pool, when the chosen candidate of a dirty LLM cannot meet
+//! its new rate even with every SM (`meets_rate == false` — only a
+//! cluster-wide rebalance can help), or when the warm `est_total`
+//! regresses below simply keeping the stale placement.
 
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
 use crate::coordinator::estimator::{Estimator, UnitMember};
@@ -112,14 +138,16 @@ pub fn parallel_candidates(
         .collect()
 }
 
-/// Enumerate device mesh groups: unordered partitions of the cluster's
-/// GPUs into meshes of the allowed sizes (§3.2's pruned search space:
-/// TP is intra-node, so parts are powers of two up to one node).
-pub fn enumerate_mesh_groups(cluster: &ClusterSpec) -> Vec<Vec<usize>> {
-    let sizes = cluster.mesh_sizes();
-    let total = cluster.total_gpus();
+/// Unordered partitions of `total` GPUs into parts drawn from `sizes`
+/// (canonical non-increasing form). Factored out of
+/// [`enumerate_mesh_groups`] so the warm-start path can re-partition just
+/// a sub-pool of the cluster.
+pub fn enumerate_partitions(total: usize, sizes: &[usize]) -> Vec<Vec<usize>> {
     let mut out = Vec::new();
     let mut cur = Vec::new();
+    if sizes.is_empty() {
+        return out;
+    }
     // Descending parts => canonical (non-increasing) partitions only.
     fn rec(
         remaining: usize,
@@ -141,8 +169,15 @@ pub fn enumerate_mesh_groups(cluster: &ClusterSpec) -> Vec<Vec<usize>> {
             }
         }
     }
-    rec(total, sizes.len() - 1, &sizes, &mut cur, &mut out);
+    rec(total, sizes.len() - 1, sizes, &mut cur, &mut out);
     out
+}
+
+/// Enumerate device mesh groups: unordered partitions of the cluster's
+/// GPUs into meshes of the allowed sizes (§3.2's pruned search space:
+/// TP is intra-node, so parts are powers of two up to one node).
+pub fn enumerate_mesh_groups(cluster: &ClusterSpec) -> Vec<Vec<usize>> {
+    enumerate_partitions(cluster.total_gpus(), &cluster.mesh_sizes())
 }
 
 /// Pick the candidate for model `mi` usable on a mesh of `gpus` GPUs:
@@ -155,6 +190,24 @@ fn candidate_for_mesh(
     cands.iter().find(|c| c.tp == gpus).copied()
 }
 
+/// Alg. 1's LLM ordering: descending computation requirement
+/// (scale × popularity), over the given model indices.
+fn demand_ordered(
+    mut indices: Vec<usize>,
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+) -> Vec<usize> {
+    let comp = |i: usize| {
+        workloads[i].rate
+            * specs[i].flops(
+                workloads[i].mean_total_len(),
+                workloads[i].mean_total_len(),
+            )
+    };
+    indices.sort_by(|a, b| comp(*b).partial_cmp(&comp(*a)).unwrap());
+    indices
+}
+
 /// Alg. 1: enumeration-based greedy placement.
 pub fn muxserve_placement(
     specs: &[ModelSpec],
@@ -164,15 +217,7 @@ pub fn muxserve_placement(
 ) -> Option<Placement> {
     let cands = parallel_candidates(specs, workloads, cluster, est);
     // Sort LLMs by computation requirement (scale × popularity), Alg. 1.
-    let mut order: Vec<usize> = (0..specs.len()).collect();
-    let comp = |i: usize| {
-        workloads[i].rate
-            * specs[i].flops(
-                workloads[i].mean_total_len(),
-                workloads[i].mean_total_len(),
-            )
-    };
-    order.sort_by(|a, b| comp(*b).partial_cmp(&comp(*a)).unwrap());
+    let order = demand_ordered((0..specs.len()).collect(), specs, workloads);
 
     // Workload-based pruning (§3.2): the biggest LLM constrains the
     // minimum largest mesh.
@@ -196,6 +241,127 @@ pub fn muxserve_placement(
         }
     }
     best
+}
+
+/// Incremental Alg. 1, warm-started from `prev` — see the module docs for
+/// the staleness/fallback contract. `dirty[i]` marks LLMs whose observed
+/// rate crossed the replan thresholds (see
+/// [`crate::coordinator::replan::ReplanDecision::dirty`]); only units
+/// containing a dirty member are re-placed, over their own GPU pool. At
+/// the paper's 19-LLM / 32-GPU scale this turns a seconds-long cold
+/// search into a milliseconds-long local one whenever the drift is
+/// confined to a few units.
+pub fn muxserve_placement_warm(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+    prev: &Placement,
+    dirty: &[bool],
+) -> Option<Placement> {
+    // The warm path only makes sense when `prev` covers exactly this LLM
+    // set; anything else is a cold-start problem.
+    if dirty.len() != specs.len() || prev.n_placed() != specs.len() {
+        return muxserve_placement(specs, workloads, cluster, est);
+    }
+    // Re-score every previous unit against the fresh workloads (member
+    // sets and SM configs unchanged — only the estimator value moves).
+    let unit_scores: Vec<f64> = (0..prev.units.len())
+        .map(|u| {
+            let ms = prev.unit_members(u, specs, workloads);
+            est.unit_estimate(&ms, prev.units[u].mesh_gpus).total
+        })
+        .collect();
+    let stale_total: f64 = unit_scores.iter().sum();
+
+    // Split units into kept (no member crossed a threshold) and dirty.
+    let mut kept: Vec<PlacementUnit> = Vec::new();
+    let mut kept_total = 0.0;
+    let mut dirty_llms: Vec<usize> = Vec::new();
+    let mut pool = 0usize;
+    for (u, unit) in prev.units.iter().enumerate() {
+        if unit.members.iter().any(|(i, _)| dirty[*i]) {
+            dirty_llms.extend(unit.members.iter().map(|(i, _)| *i));
+            pool += unit.mesh_gpus;
+        } else {
+            kept_total += unit_scores[u];
+            kept.push(unit.clone());
+        }
+    }
+    if dirty_llms.is_empty() {
+        // Nothing crossed a threshold: the stale placement, rescored, IS
+        // the warm answer (same signature ⇒ the caller skips migration).
+        return Some(Placement { units: prev.units.clone(), est_total: stale_total });
+    }
+
+    // Candidates only for the LLMs being re-placed (the kept ones reuse
+    // their recorded configuration).
+    let mut cands: Vec<Vec<ParallelCandidate>> = vec![Vec::new(); specs.len()];
+    for &mi in &dirty_llms {
+        cands[mi] = parallel_candidates(
+            std::slice::from_ref(&specs[mi]),
+            std::slice::from_ref(&workloads[mi]),
+            cluster,
+            est,
+        )
+        .pop()
+        .unwrap_or_default();
+    }
+    let order = demand_ordered(dirty_llms.clone(), specs, workloads);
+    let max_min_tp = dirty_llms
+        .iter()
+        .map(|&i| specs[i].min_tp(cluster.gpu.mem_bytes, 0.3))
+        .max()
+        .unwrap_or(1);
+
+    // Re-partition only the dirty units' GPU pool.
+    let mut best_dirty: Option<Placement> = None;
+    for group in enumerate_partitions(pool, &cluster.mesh_sizes()) {
+        if *group.iter().max().unwrap_or(&0) < max_min_tp {
+            continue;
+        }
+        if let Some(p) = greedy_place_on_group(
+            &group, &order, specs, workloads, &cands, est,
+        ) {
+            if best_dirty
+                .as_ref()
+                .map_or(true, |b| p.est_total > b.est_total)
+            {
+                best_dirty = Some(p);
+            }
+        }
+    }
+    let Some(dirty_p) = best_dirty else {
+        // No feasible local re-placement at all: cold search — and if
+        // even that comes up empty, the stale placement still serves.
+        return muxserve_placement(specs, workloads, cluster, est).or(Some(
+            Placement { units: prev.units.clone(), est_total: stale_total },
+        ));
+    };
+
+    // Fallback triggers (module-doc contract): a dirty LLM that cannot
+    // meet its new rate even saturated needs GPUs from outside its pool,
+    // and a warm total below the do-nothing baseline means the local move
+    // hurt — both demand the cluster-wide search.
+    let needs_global = dirty_p.units.iter().any(|unit| {
+        unit.members.iter().any(|(i, c)| dirty[*i] && !c.meets_rate)
+    });
+    let warm_total = kept_total + dirty_p.est_total;
+    // Relative epsilon: re-deriving an identical configuration can move
+    // the float sum in the last bits, which must not trigger a cold run.
+    if needs_global || warm_total < stale_total * (1.0 - 1e-9) {
+        let stale = Placement {
+            units: prev.units.clone(),
+            est_total: stale_total,
+        };
+        // The cold search can itself come up empty (it searches the same
+        // space from scratch); keeping the stale placement still serves.
+        return muxserve_placement(specs, workloads, cluster, est)
+            .or(Some(stale));
+    }
+    let mut units = kept;
+    units.extend(dirty_p.units);
+    Some(Placement { units, est_total: warm_total })
 }
 
 /// Inner loop of Alg. 1: place LLMs (already demand-ordered) greedily on a
@@ -497,6 +663,128 @@ mod tests {
         let (specs, wl, est) = setup(&[6.7; 10], &[1.0; 10]);
         let c = ClusterSpec::new(1, 8);
         assert!(spatial_placement(&specs, &wl, &c, &est).is_none());
+    }
+
+    /// Canonical (mesh, sorted member ids) shape, for structure asserts.
+    fn shape_of(p: &Placement) -> Vec<(usize, Vec<usize>)> {
+        let mut units: Vec<(usize, Vec<usize>)> = p
+            .units
+            .iter()
+            .map(|u| {
+                let mut ms: Vec<usize> =
+                    u.members.iter().map(|(i, _)| *i).collect();
+                ms.sort_unstable();
+                (u.mesh_gpus, ms)
+            })
+            .collect();
+        units.sort();
+        units
+    }
+
+    #[test]
+    fn warm_start_with_no_dirty_llms_keeps_the_placement() {
+        let (specs, mut wl, est) =
+            setup(&[6.7, 6.7, 13.0, 30.0], &[8.0, 2.0, 1.0, 0.2]);
+        let c = ClusterSpec::new(1, 8);
+        let prev = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        // Rates move a little, but nothing crossed a threshold.
+        wl[0].rate = 8.4;
+        let warm = muxserve_placement_warm(
+            &specs, &wl, &c, &est, &prev, &[false; 4],
+        )
+        .unwrap();
+        assert_eq!(shape_of(&warm), shape_of(&prev));
+        assert!(warm.est_total > 0.0);
+    }
+
+    #[test]
+    fn warm_start_replaces_only_dirty_units() {
+        let (specs, mut wl, est) =
+            setup(&[6.7, 6.7, 13.0, 30.0], &[8.0, 2.0, 1.0, 0.2]);
+        let c = ClusterSpec::new(1, 8);
+        let prev = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        // A sag is always locally absorbable (the old pool met the higher
+        // rate), so the warm path cannot hit a fallback trigger here.
+        wl[1].rate = 0.5;
+        // Stale total under the new rates, for the regression guard below.
+        let stale_total: f64 = (0..prev.units.len())
+            .map(|u| {
+                est.unit_estimate(
+                    &prev.unit_members(u, &specs, &wl),
+                    prev.units[u].mesh_gpus,
+                )
+                .total
+            })
+            .sum();
+        let dirty = [false, true, false, false];
+        let warm =
+            muxserve_placement_warm(&specs, &wl, &c, &est, &prev, &dirty)
+                .unwrap();
+        // Everything still placed on the same GPU budget…
+        assert_eq!(warm.n_placed(), 4);
+        assert_eq!(warm.total_gpus(), prev.total_gpus());
+        // …and the units without a dirty member survive verbatim.
+        let kept_prev: Vec<(usize, Vec<usize>)> = shape_of(&prev)
+            .into_iter()
+            .filter(|(_, ms)| !ms.contains(&1))
+            .collect();
+        let warm_shape = shape_of(&warm);
+        for ku in &kept_prev {
+            assert!(
+                warm_shape.contains(ku),
+                "clean unit {ku:?} was disturbed: {warm_shape:?}"
+            );
+        }
+        // The warm move never regresses below doing nothing.
+        assert!(
+            warm.est_total >= stale_total * (1.0 - 1e-9),
+            "warm {} < stale {stale_total}",
+            warm.est_total
+        );
+    }
+
+    #[test]
+    fn warm_start_falls_back_to_full_search_on_hopeless_spike() {
+        let (specs, mut wl, est) =
+            setup(&[6.7, 6.7, 13.0, 30.0], &[8.0, 2.0, 1.0, 0.2]);
+        let c = ClusterSpec::new(1, 8);
+        let prev = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        // LLM 1 spikes far beyond what its unit's pool can serve: the
+        // chosen candidate cannot meet the rate, so the contract demands
+        // the cluster-wide search.
+        wl[1].rate = 1e6;
+        let dirty = [false, true, false, false];
+        let warm =
+            muxserve_placement_warm(&specs, &wl, &c, &est, &prev, &dirty)
+                .unwrap();
+        let full = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        assert_eq!(shape_of(&warm), shape_of(&full));
+        assert!((warm.est_total - full.est_total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_start_with_mismatched_inputs_degrades_to_full_search() {
+        let (specs, wl, est) = setup(&[6.7, 6.7], &[3.0, 0.5]);
+        let c = ClusterSpec::new(1, 2);
+        let prev = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        // Wrong dirty length (e.g. the LLM zoo itself changed).
+        let warm = muxserve_placement_warm(
+            &specs, &wl, &c, &est, &prev, &[false; 5],
+        )
+        .unwrap();
+        let full = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        assert_eq!(shape_of(&warm), shape_of(&full));
+    }
+
+    #[test]
+    fn sub_pool_partitions_cover_the_pool() {
+        let sizes = [1usize, 2, 4, 8];
+        let parts = enumerate_partitions(6, &sizes);
+        assert!(!parts.is_empty());
+        assert!(parts.iter().all(|p| p.iter().sum::<usize>() == 6));
+        assert!(parts.contains(&vec![4, 2]));
+        assert!(parts.contains(&vec![1; 6]));
+        assert!(enumerate_partitions(0, &sizes).len() <= 1);
     }
 
     #[test]

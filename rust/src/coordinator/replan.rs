@@ -55,6 +55,14 @@ pub struct ReplanConfig {
     pub min_replan_interval: f64,
     /// Rates below this floor never drive drift on their own (req/s).
     pub rate_floor: f64,
+    /// Use the warm-started incremental optimizer
+    /// ([`crate::coordinator::muxserve_placement_warm`]) at replan time
+    /// instead of the from-scratch search. Off by default: warm-start may
+    /// keep a stale shape where the cold search would migrate (see the
+    /// placement module docs), so the paper-faithful full search stays
+    /// the baseline behavior; flip this on for interactive paper-scale
+    /// runs where decision latency dominates.
+    pub warm_start: bool,
 }
 
 impl Default for ReplanConfig {
@@ -73,6 +81,7 @@ impl Default for ReplanConfig {
             migration_downtime: 1.0,
             min_replan_interval: 10.0,
             rate_floor: 1.0,
+            warm_start: false,
         }
     }
 }
@@ -84,6 +93,13 @@ pub struct ReplanDecision {
     pub rates: Vec<f64>,
     /// The drift value that triggered the decision.
     pub drift: f64,
+    /// Per-LLM: whether this LLM's observed rate crossed its replan
+    /// threshold (surge or sag, same normalization as `drift_split`).
+    /// Feeds the warm-started optimizer, which re-places only the units
+    /// holding a dirty LLM. A decision triggered purely by the SLO-floor
+    /// monitor can have every flag false — warm-start then keeps the
+    /// placement, while the from-scratch search may still reshape it.
+    pub dirty: Vec<bool>,
 }
 
 /// Sliding-window drift monitor over per-LLM arrivals.
@@ -137,14 +153,20 @@ impl ReplanController {
             .collect()
     }
 
+    /// One LLM's relative drift: `|o - p| / max(p, o, rate_floor)` — the
+    /// single normalization shared by the trigger (`drift_split`) and the
+    /// per-LLM dirty flags, so the two can never disagree.
+    fn rel_drift(&self, o: f64, p: f64) -> f64 {
+        (o - p).abs() / p.max(o).max(self.cfg.rate_floor)
+    }
+
     /// Per-LLM relative drift split by direction:
     /// (max surge — observed above planned, max sag — observed below).
-    /// Each is `|o - p| / max(p, o, rate_floor)`.
     pub fn drift_split(&self, observed: &[f64]) -> (f64, f64) {
         let mut surge = 0.0_f64;
         let mut sag = 0.0_f64;
         for (o, p) in observed.iter().zip(&self.planned) {
-            let rel = (o - p).abs() / p.max(*o).max(self.cfg.rate_floor);
+            let rel = self.rel_drift(*o, *p);
             if o > p {
                 surge = surge.max(rel);
             } else {
@@ -181,13 +203,27 @@ impl ReplanController {
         if !trigger {
             return None;
         }
+        // Which LLMs individually crossed their threshold — the warm
+        // optimizer's re-place set.
+        let dirty: Vec<bool> = observed
+            .iter()
+            .zip(&self.planned)
+            .map(|(o, p)| {
+                let rel = self.rel_drift(*o, *p);
+                if o > p {
+                    rel > self.cfg.surge_threshold
+                } else {
+                    rel > self.cfg.drift_threshold
+                }
+            })
+            .collect();
         // Plan for the observed rates with headroom (a ramping spike is
         // still growing), floored so every LLM keeps a nonzero share.
         let rates: Vec<f64> = observed
             .iter()
             .map(|r| (r * self.cfg.plan_headroom).max(0.05))
             .collect();
-        Some(ReplanDecision { rates, drift })
+        Some(ReplanDecision { rates, drift, dirty })
     }
 
     /// Commit a decision that was actually applied (placement migrated),
@@ -311,6 +347,21 @@ mod tests {
             c2.observe_arrival(1, 50.0 + i as f64);
         }
         assert!(c2.should_replan(60.0, Some(0.95)).is_none());
+    }
+
+    #[test]
+    fn dirty_flags_mark_only_threshold_crossers() {
+        let mut c = ctl(&[4.0, 0.2]);
+        // LLM 1 spikes to ~10 req/s; LLM 0 stays exactly on plan.
+        for i in 0..100 {
+            c.observe_arrival(1, 50.0 + i as f64 * 0.1);
+        }
+        for i in 0..40 {
+            c.observe_arrival(0, 50.0 + i as f64 * 0.25);
+        }
+        let d = c.should_replan(60.0, Some(0.9)).expect("must trigger");
+        assert!(d.dirty[1], "spiking LLM must be marked dirty");
+        assert!(!d.dirty[0], "on-plan LLM must stay clean: {:?}", d.dirty);
     }
 
     #[test]

@@ -25,7 +25,9 @@ use std::collections::BinaryHeap;
 use super::{Event, EventKind, Simulation};
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
 use crate::coordinator::replan::{ReplanConfig, ReplanController};
-use crate::coordinator::{muxserve_placement, EngineConfig, Placement};
+use crate::coordinator::{
+    muxserve_placement, muxserve_placement_warm, EngineConfig, Placement,
+};
 use crate::coordinator::estimator::Estimator;
 use crate::costmodel::CostModel;
 use crate::metrics::{Evaluation, RequestRecord};
@@ -54,6 +56,9 @@ pub struct DynamicReport {
     /// Number of replans that actually migrated the placement.
     pub migrations: usize,
     pub dropped: usize,
+    /// Events processed by the run loop (arrivals incl. blackout
+    /// re-deliveries, completions, adapt and replan ticks).
+    pub events: u64,
 }
 
 /// Placement shape up to member order and fine sm jitter: mesh size plus
@@ -91,6 +96,8 @@ pub struct DynamicSimulation {
     adaptive: bool,
     controller: ReplanController,
     sim: Simulation,
+    /// The currently applied placement — the warm-start seed.
+    placement: Placement,
     signature: Vec<(usize, Vec<(usize, u32)>)>,
     epoch: u64,
     /// No unit may start work before this time (migration blackout).
@@ -103,6 +110,7 @@ pub struct DynamicSimulation {
     replans: Vec<ReplanOutcome>,
     migrations: usize,
     dropped: usize,
+    events: u64,
 }
 
 impl DynamicSimulation {
@@ -140,6 +148,7 @@ impl DynamicSimulation {
             adaptive,
             controller: ReplanController::new(rcfg, planned),
             signature: placement_signature(&placement),
+            placement,
             sim,
             epoch: 0,
             resume_at: 0.0,
@@ -148,6 +157,7 @@ impl DynamicSimulation {
             replans: Vec::new(),
             migrations: 0,
             dropped: 0,
+            events: 0,
         })
     }
 
@@ -194,9 +204,12 @@ impl DynamicSimulation {
         self.schedule_adapt_ticks(0.0, duration, &mut heap, &mut seq);
 
         while let Some(ev) = heap.pop() {
-            if ev.time > duration {
+            // Negated form so a NaN time (which sorts last) also stops
+            // the run instead of being processed and poisoning `now`.
+            if !(ev.time <= duration) {
                 break;
             }
+            self.events += 1;
             match ev.kind {
                 EventKind::Arrival(r) => {
                     // First delivery (event time == arrival time) feeds
@@ -283,6 +296,7 @@ impl DynamicSimulation {
             replans: self.replans,
             migrations: self.migrations,
             dropped,
+            events: self.events,
         }
     }
 
@@ -369,12 +383,27 @@ impl DynamicSimulation {
                 w
             })
             .collect();
-        let Some(placement) = muxserve_placement(
-            &self.specs,
-            &new_workloads,
-            &self.cluster,
-            &self.est,
-        ) else {
+        // Decision path: warm-start re-places only the drifted units
+        // (falling back to the cold search per the placement-module
+        // contract); the default is the paper-faithful full search.
+        let searched = if self.controller.config().warm_start {
+            muxserve_placement_warm(
+                &self.specs,
+                &new_workloads,
+                &self.cluster,
+                &self.est,
+                &self.placement,
+                &decision.dirty,
+            )
+        } else {
+            muxserve_placement(
+                &self.specs,
+                &new_workloads,
+                &self.cluster,
+                &self.est,
+            )
+        };
+        let Some(placement) = searched else {
             // No feasible placement for the observed rates: keep serving
             // with the current one, but stop re-triggering every tick.
             self.controller.note_replanned(t, decision.rates);
@@ -405,6 +434,7 @@ impl DynamicSimulation {
                 self.cfg,
                 &self.cost,
             );
+            self.placement = placement;
             self.signature = new_sig;
             self.epoch += 1;
             self.migrations += 1;

@@ -48,7 +48,7 @@ pub(crate) struct Event {
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl Eq for Event {}
@@ -60,10 +60,11 @@ impl PartialOrd for Event {
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap: earlier time first; seq breaks ties deterministically.
+        // `total_cmp` so a NaN time (cost-model pathology) orders after
+        // every finite time instead of panicking the whole event loop.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap()
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -74,7 +75,14 @@ pub struct Simulation {
     pub units: Vec<UnitSim>,
     /// Global LLM index -> (unit index, local index).
     pub llm_map: Vec<(usize, usize)>,
+    /// Reverse routing map: `rev_map[unit][local]` = global LLM index.
+    /// Precomputed so per-record id recovery in [`Self::harvest_records`]
+    /// and [`Self::drain_all_requests`] is O(1) instead of an O(n_llms)
+    /// `position` scan per record.
+    rev_map: Vec<Vec<usize>>,
     n_llms: usize,
+    /// Events processed by [`Self::run`] (arrival/completion/adapt pops).
+    events: u64,
 }
 
 impl Simulation {
@@ -87,9 +95,13 @@ impl Simulation {
         cost: &CostModel,
     ) -> Self {
         let mut llm_map = vec![(usize::MAX, usize::MAX); specs.len()];
+        let mut rev_map = Vec::with_capacity(placement.units.len());
         let mut units = Vec::new();
         for (u, pu) in placement.units.iter().enumerate() {
             let mut models = Vec::new();
+            rev_map.push(
+                pu.members.iter().map(|(gi, _)| *gi).collect::<Vec<_>>(),
+            );
             for (local, (gi, cand)) in pu.members.iter().enumerate() {
                 llm_map[*gi] = (u, local);
                 models.push(UnitModelCfg {
@@ -105,7 +117,7 @@ impl Simulation {
             }
             units.push(UnitSim::new(models, pu.mesh_gpus, cfg, cost.clone()));
         }
-        Simulation { units, llm_map, n_llms: specs.len() }
+        Simulation { units, llm_map, rev_map, n_llms: specs.len(), events: 0 }
     }
 
     /// Replay `requests` (global LLM ids, arrival-sorted) for `duration`
@@ -149,9 +161,12 @@ impl Simulation {
         }
 
         while let Some(ev) = heap.pop() {
-            if ev.time > duration {
+            // Negated form so a NaN time (which sorts last) also stops
+            // the run instead of being processed and poisoning `now`.
+            if !(ev.time <= duration) {
                 break;
             }
+            self.events += 1;
             let unit = &mut self.units[ev.unit];
             unit.advance_time(ev.time);
             match ev.kind {
@@ -198,19 +213,21 @@ impl Simulation {
         self.n_llms
     }
 
+    /// Events processed by [`Self::run`] so far — the denominator of the
+    /// `bench-perf` events/sec figure.
+    pub fn events_processed(&self) -> u64 {
+        self.events
+    }
+
     /// Take every unit's completion records, remapped to global LLM ids
-    /// (shared by the end-of-run collection above and the dynamic
-    /// simulation's incremental harvesting).
+    /// via the precomputed reverse map (shared by the end-of-run
+    /// collection above and the dynamic simulation's incremental
+    /// harvesting).
     pub fn harvest_records(&mut self) -> Vec<crate::metrics::RequestRecord> {
         let mut records = Vec::new();
         for u in 0..self.units.len() {
             for mut rec in self.units[u].take_records() {
-                let global = self
-                    .llm_map
-                    .iter()
-                    .position(|(uu, ll)| *uu == u && *ll == rec.llm)
-                    .expect("record from unmapped llm");
-                rec.llm = global;
+                rec.llm = self.rev_map[u][rec.llm];
                 records.push(rec);
             }
         }
@@ -223,25 +240,13 @@ impl Simulation {
     pub fn drain_all_requests(&mut self) -> Vec<Request> {
         let mut out = Vec::new();
         for u in 0..self.units.len() {
-            // Local -> global LLM id for this unit.
-            let rev: Vec<usize> = (0..self.units[u].n_llms())
-                .map(|local| {
-                    self.llm_map
-                        .iter()
-                        .position(|(uu, ll)| *uu == u && *ll == local)
-                        .expect("unit llm not in map")
-                })
-                .collect();
             for mut r in self.units[u].drain_requests() {
-                r.llm = rev[r.llm];
+                r.llm = self.rev_map[u][r.llm];
                 out.push(r);
             }
         }
         out.sort_by(|a, b| {
-            a.arrival
-                .partial_cmp(&b.arrival)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
+            a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id))
         });
         out
     }

@@ -7,8 +7,27 @@
 //! durations come from the analytic cost model; the identical engine
 //! (policy knobs aside) serves MuxServe, spatial, temporal, and the Fig. 9
 //! / Fig. 10 ablations.
+//!
+//! ## Indexed request tracking
+//!
+//! The hot paths are O(1) per request, not O(active list):
+//!
+//! * `slot_index: id → (llm, slot)` locates any admitted request in its
+//!   `active[llm]` list. It is maintained slab-style: removal is
+//!   `swap_remove` plus a fix-up of the entry for the request that was
+//!   moved into the vacated slot, so lookups never scan.
+//! * `ready_ids[llm]` is the set of request ids currently in
+//!   [`ReqState::Ready`], ordered by id (a `BTreeSet`, so decode batch
+//!   assembly walks it oldest-id-first — the same order the previous
+//!   full-list scan produced). It subsumes a plain `ready_count`: the
+//!   scheduler's "has decode work" probes are `is_empty()` checks, and
+//!   preemption-victim selection walks only the Ready set.
+//!
+//! Every state transition goes through `set_state` / `insert_active` /
+//! `remove_active`, which keep both structures in lock-step with the
+//! active lists; `index_inconsistency` (test-only) audits the invariant.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 
 use crate::coordinator::{EngineConfig, Policy};
 use crate::costmodel::CostModel;
@@ -96,6 +115,10 @@ pub struct UnitSim {
     sm: SmPool,
     waiting: Vec<VecDeque<Request>>,
     active: Vec<Vec<Active>>,
+    /// Request id → (llm, slot in `active[llm]`); see module docs.
+    slot_index: HashMap<u64, (usize, usize)>,
+    /// Per-LLM ids in `ReqState::Ready`, ascending (= admission id order).
+    ready_ids: Vec<BTreeSet<u64>>,
     decode_inflight: Vec<bool>,
     prefill_inflight: bool,
     prefill_waiting: bool,
@@ -152,6 +175,8 @@ impl UnitSim {
             sm: SmPool::new(),
             waiting: vec![VecDeque::new(); n],
             active: vec![Vec::new(); n],
+            slot_index: HashMap::new(),
+            ready_ids: vec![BTreeSet::new(); n],
             decode_inflight: vec![false; n],
             prefill_inflight: false,
             prefill_waiting: false,
@@ -202,7 +227,9 @@ impl UnitSim {
                 self.quota.free(llm, a.blocks);
                 out.push(a.req);
             }
+            self.ready_ids[llm].clear();
         }
+        self.slot_index.clear();
         // Cancel in-flight jobs; reset the SM pool wholesale (summing the
         // individual releases in HashMap order would be nondeterministic
         // in the last float bits, and the unit is being torn down anyway).
@@ -260,6 +287,97 @@ impl UnitSim {
         self.now = t;
     }
 
+    // -- index maintenance ---------------------------------------------------
+
+    /// Admit `a` into `active[llm]`, registering it in the slot index
+    /// (and the Ready set, should a caller ever admit in Ready state).
+    fn insert_active(&mut self, llm: usize, a: Active) {
+        let id = a.req.id;
+        let slot = self.active[llm].len();
+        if a.state == ReqState::Ready {
+            self.ready_ids[llm].insert(id);
+        }
+        self.active[llm].push(a);
+        self.slot_index.insert(id, (llm, slot));
+    }
+
+    /// Remove the request at `active[llm][idx]` with `swap_remove`,
+    /// unregistering it and re-pointing the index entry of the former
+    /// tail element that now occupies `idx`.
+    fn remove_active(&mut self, llm: usize, idx: usize) -> Active {
+        let a = self.active[llm].swap_remove(idx);
+        self.slot_index.remove(&a.req.id);
+        if a.state == ReqState::Ready {
+            self.ready_ids[llm].remove(&a.req.id);
+        }
+        if let Some(moved) = self.active[llm].get(idx) {
+            self.slot_index.insert(moved.req.id, (llm, idx));
+        }
+        a
+    }
+
+    /// Single point of state transition: keeps `ready_ids` in lock-step
+    /// with the `Active::state` fields.
+    fn set_state(&mut self, llm: usize, idx: usize, state: ReqState) {
+        let a = &mut self.active[llm][idx];
+        let id = a.req.id;
+        let was_ready = a.state == ReqState::Ready;
+        a.state = state;
+        let is_ready = state == ReqState::Ready;
+        if was_ready && !is_ready {
+            self.ready_ids[llm].remove(&id);
+        } else if !was_ready && is_ready {
+            self.ready_ids[llm].insert(id);
+        }
+    }
+
+    /// Test-only audit: the slot index and Ready sets must exactly mirror
+    /// the active lists. Returns a description of the first violation
+    /// found, `None` when consistent.
+    #[doc(hidden)]
+    pub fn index_inconsistency(&self) -> Option<String> {
+        let total: usize = self.active.iter().map(|v| v.len()).sum();
+        if self.slot_index.len() != total {
+            return Some(format!(
+                "slot index holds {} entries but active lists hold {total}",
+                self.slot_index.len()
+            ));
+        }
+        for (llm, list) in self.active.iter().enumerate() {
+            let mut ready = 0usize;
+            for (slot, a) in list.iter().enumerate() {
+                match self.slot_index.get(&a.req.id) {
+                    Some(&(l, s)) if l == llm && s == slot => {}
+                    other => {
+                        return Some(format!(
+                            "request {} sits at ({llm}, {slot}) but is \
+                             indexed as {other:?}",
+                            a.req.id
+                        ))
+                    }
+                }
+                if a.state == ReqState::Ready {
+                    ready += 1;
+                    if !self.ready_ids[llm].contains(&a.req.id) {
+                        return Some(format!(
+                            "Ready request {} missing from ready set of \
+                             llm {llm}",
+                            a.req.id
+                        ));
+                    }
+                }
+            }
+            if self.ready_ids[llm].len() != ready {
+                return Some(format!(
+                    "llm {llm}: ready set holds {} ids but {ready} active \
+                     requests are Ready",
+                    self.ready_ids[llm].len()
+                ));
+            }
+        }
+        None
+    }
+
     // -- events -------------------------------------------------------------
 
     pub fn on_arrival(&mut self, t: f64, req: Request) {
@@ -276,17 +394,14 @@ impl UnitSim {
     pub fn on_job_done(&mut self, t: f64, job_id: u64) {
         let job = self.inflight.remove(&job_id).expect("unknown job");
         self.sm.release(job.sm_grant);
-        // One pass over the LLM's active list instead of a scan per id
-        // (decode batches reach 256 — the per-id scan was O(b^2)).
-        let mut ids = job.req_ids.clone();
-        ids.sort_unstable();
-        let mut idxs: Vec<usize> = self.active[job.llm]
+        // O(1) slot lookup per id (decode batches reach 256 — even the
+        // one-pass list scan this replaces was O(n_active) per job).
+        let mut idxs: Vec<usize> = job
+            .req_ids
             .iter()
-            .enumerate()
-            .filter(|(_, a)| ids.binary_search(&a.req.id).is_ok())
-            .map(|(i, _)| i)
+            .filter_map(|id| self.slot_index.get(id).map(|&(_, slot)| slot))
             .collect();
-        // Descending: swap_remove only disturbs indices above the cursor.
+        // Descending: swap_remove only disturbs slots above the cursor.
         idxs.sort_unstable_by(|a, b| b.cmp(a));
         match job.phase {
             JobPhase::Prefill => {
@@ -311,8 +426,8 @@ impl UnitSim {
             debug_assert_eq!(a.state, ReqState::Prefilling);
             a.generated = 1; // prefill emits the first token
             a.first_token = t;
-            a.state = ReqState::Ready;
         }
+        self.set_state(llm, idx, ReqState::Ready);
         if self.active[llm][idx].generated
             >= self.active[llm][idx].req.output_len
         {
@@ -325,8 +440,8 @@ impl UnitSim {
             let a = &mut self.active[llm][idx];
             debug_assert_eq!(a.state, ReqState::Decoding);
             a.generated += 1;
-            a.state = ReqState::Ready;
         }
+        self.set_state(llm, idx, ReqState::Ready);
         if self.active[llm][idx].generated
             >= self.active[llm][idx].req.output_len
         {
@@ -335,7 +450,7 @@ impl UnitSim {
     }
 
     fn finish_request(&mut self, t: f64, llm: usize, idx: usize) {
-        let a = self.active[llm].swap_remove(idx);
+        let a = self.remove_active(llm, idx);
         self.quota.free(llm, a.blocks);
         let m = &self.models[llm];
         let ideal = self.cost.ideal_request_latency(
@@ -398,21 +513,32 @@ impl UnitSim {
     /// Preempt (vLLM-style recompute) the youngest Ready request of `llm`,
     /// returning it to the wait queue and freeing its blocks.
     fn preempt_youngest(&mut self, llm: usize) -> bool {
-        let Some(idx) = self.active[llm]
-            .iter()
-            .enumerate()
-            .filter(|(_, a)| a.state == ReqState::Ready)
-            .max_by(|(_, a), (_, b)| {
-                a.req.arrival.partial_cmp(&b.req.arrival).unwrap()
-            })
-            .map(|(i, _)| i)
-        else {
+        let Some(vid) = self.youngest_ready(llm, None) else {
             return false;
         };
-        let a = self.active[llm].swap_remove(idx);
+        let idx = self.slot_index[&vid].1;
+        let a = self.remove_active(llm, idx);
         self.quota.free(llm, a.blocks);
         self.waiting[llm].push_front(a.req);
         true
+    }
+
+    /// Latest-arriving Ready request of `llm` (excluding `skip`), walking
+    /// only the Ready set instead of the whole active list. Arrival ties
+    /// resolve to the larger id — deterministic either way.
+    fn youngest_ready(&self, llm: usize, skip: Option<u64>) -> Option<u64> {
+        let mut best: Option<(f64, u64)> = None;
+        for &vid in &self.ready_ids[llm] {
+            if Some(vid) == skip {
+                continue;
+            }
+            let slot = self.slot_index[&vid].1;
+            let arr = self.active[llm][slot].req.arrival;
+            if best.map_or(true, |(ba, _)| arr.total_cmp(&ba).is_ge()) {
+                best = Some((arr, vid));
+            }
+        }
+        best.map(|(_, vid)| vid)
     }
 
     // -- scheduling ----------------------------------------------------------
@@ -524,10 +650,7 @@ impl UnitSim {
         let m = &self.models[llm];
         let grant = if self.cfg.sm_partition {
             let decode_pending = (0..self.models.len()).any(|i| {
-                !self.decode_inflight[i]
-                    && self.active[i]
-                        .iter()
-                        .any(|a| a.state == ReqState::Ready)
+                !self.decode_inflight[i] && !self.ready_ids[i].is_empty()
             });
             let want = if decode_pending {
                 (1.0 - DECODE_SM_TARGET).max(m.prefill_sm)
@@ -556,7 +679,9 @@ impl UnitSim {
             m.tp,
         ) * self.cost.interference(self.sm.active_jobs());
         let req_ids: Vec<u64> = admitted.iter().map(|a| a.req.id).collect();
-        self.active[llm].extend(admitted);
+        for a in admitted {
+            self.insert_active(llm, a);
+        }
         self.launch(t, dur, Job {
             llm,
             phase: JobPhase::Prefill,
@@ -575,7 +700,7 @@ impl UnitSim {
             if self.decode_inflight[i] {
                 continue;
             }
-            if !self.active[i].iter().any(|a| a.state == ReqState::Ready) {
+            if self.ready_ids[i].is_empty() {
                 continue;
             }
             if self.start_decode_job(t, i) {
@@ -592,64 +717,42 @@ impl UnitSim {
         if !self.cfg.sm_partition && self.sm.active_jobs() > 0 {
             return false;
         }
-        // Gather the continuous batch, growing block holdings for the next
-        // token; preempt the youngest Ready request on allocation failure.
-        // Batched requests are marked Decoding immediately, so index lists
-        // only need rebuilding after a (rare) preemption.
+        // Gather the continuous batch straight off the Ready set (already
+        // oldest-id-first), growing block holdings for the next token;
+        // preempt the youngest Ready request on allocation failure.
+        // Batched requests are marked Decoding immediately and thus leave
+        // the Ready set; preempted victims drop out of the slot index, so
+        // both staleness checks are O(1) lookups.
         let mut batch: Vec<u64> = Vec::new();
         let mut ctx_sum = 0usize;
-        let mut order: Vec<(u64, usize)> = self.active[llm]
-            .iter()
-            .enumerate()
-            .filter(|(_, a)| a.state == ReqState::Ready)
-            .map(|(i, a)| (a.req.id, i))
-            .collect();
-        order.sort_unstable(); // oldest id first
-        let mut cursor = 0;
-        while cursor < order.len() {
+        let order: Vec<u64> = self.ready_ids[llm].iter().copied().collect();
+        for id in order {
             if batch.len() >= self.cfg.max_decode_batch {
                 break;
             }
-            let (id, mut idx) = order[cursor];
-            cursor += 1;
-            if self.active[llm].get(idx).map(|a| a.req.id) != Some(id) {
-                // Index went stale after a preemption: re-locate.
-                match self.active[llm].iter().position(|a| a.req.id == id) {
-                    Some(i) => idx = i,
-                    None => continue, // preempted away
-                }
-            }
+            // Preempted away by an earlier iteration?
+            let Some(&(_, mut idx)) = self.slot_index.get(&id) else {
+                continue;
+            };
             let next_ctx = self.active[llm][idx].ctx() + 1;
             let mut ok = self.ensure_blocks(llm, idx, next_ctx);
             while !ok {
                 // Free memory by preempting the youngest Ready request
                 // (batched ones are already Decoding and thus immune).
-                let victim = self.active[llm]
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, a)| {
-                        a.state == ReqState::Ready && a.req.id != id
-                    })
-                    .max_by(|(_, a), (_, b)| {
-                        a.req.arrival.partial_cmp(&b.req.arrival).unwrap()
-                    })
-                    .map(|(i, _)| i);
-                match victim {
-                    Some(v) => {
-                        let a = self.active[llm].swap_remove(v);
+                match self.youngest_ready(llm, Some(id)) {
+                    Some(vid) => {
+                        let vidx = self.slot_index[&vid].1;
+                        let a = self.remove_active(llm, vidx);
                         self.quota.free(llm, a.blocks);
                         self.waiting[llm].push_front(a.req);
-                        idx = self.active[llm]
-                            .iter()
-                            .position(|a| a.req.id == id)
-                            .unwrap();
+                        idx = self.slot_index[&id].1;
                         ok = self.ensure_blocks(llm, idx, next_ctx);
                     }
                     None => break,
                 }
             }
             if ok {
-                self.active[llm][idx].state = ReqState::Decoding;
+                self.set_state(llm, idx, ReqState::Decoding);
                 ctx_sum += self.active[llm][idx].ctx();
                 batch.push(id);
             }
@@ -669,10 +772,8 @@ impl UnitSim {
         let Some(grant) = grant else {
             // Roll back state marks.
             for id in &batch {
-                if let Some(a) =
-                    self.active[llm].iter_mut().find(|a| a.req.id == *id)
-                {
-                    a.state = ReqState::Ready;
+                if let Some(&(_, idx)) = self.slot_index.get(id) {
+                    self.set_state(llm, idx, ReqState::Ready);
                 }
             }
             return false;
@@ -708,17 +809,18 @@ impl UnitSim {
                 }
             }
             if !self.decode_inflight[i] {
-                if let Some(a) = self.active[i]
+                if let Some(a) = self.ready_ids[i]
                     .iter()
-                    .filter(|a| a.state == ReqState::Ready)
-                    .map(|a| a.req.arrival)
-                    .min_by(|a, b| a.partial_cmp(b).unwrap())
+                    .map(|id| {
+                        self.active[i][self.slot_index[id].1].req.arrival
+                    })
+                    .min_by(|a, b| a.total_cmp(b))
                 {
                     cands.push((a, i, false));
                 }
             }
         }
-        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        cands.sort_by(|a, b| a.0.total_cmp(&b.0));
         for (_, llm, is_prefill) in cands {
             let started = if is_prefill {
                 matches!(
@@ -743,11 +845,9 @@ impl UnitSim {
         while self.inflight.is_empty() && self.has_work() && guard < 1024 {
             guard += 1;
             self.prefill_waiting = false;
-            let preempted =
-                (0..self.models.len()).any(|i| {
-                    self.active[i].iter().any(|a| a.state == ReqState::Ready)
-                        && self.preempt_youngest(i)
-                });
+            let preempted = (0..self.models.len()).any(|i| {
+                !self.ready_ids[i].is_empty() && self.preempt_youngest(i)
+            });
             if !preempted {
                 // Drop the first waiting request that cannot ever fit.
                 let mut dropped_any = false;

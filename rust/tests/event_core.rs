@@ -1,0 +1,189 @@
+//! Event-core regression pins for the indexed request tracking:
+//!
+//! 1. A property test drives `UnitSim` through randomized
+//!    admit / complete / preempt / drain sequences and asserts the
+//!    id→slot index and Ready sets stay consistent with the active lists
+//!    after every event (the slab fix-up invariant).
+//! 2. A throughput-floor pin on the `bench-perf` smoke config, so an
+//!    accidental return of the O(n) active-list scans (or worse) cannot
+//!    land silently. The floor is set far below any healthy debug-mode
+//!    run — it is a gross-regression tripwire, not a micro-benchmark.
+//! 3. Warm-started re-placement wired through the dynamic engine keeps
+//!    the flash-crowd adaptation working end to end.
+
+use muxserve::bench::perf::{run_bench_perf, PerfConfig};
+use muxserve::bench::{run_scenario, scenario_cluster};
+use muxserve::config::llama_spec;
+use muxserve::coordinator::{EngineConfig, ReplanConfig};
+use muxserve::costmodel::CostModel;
+use muxserve::prop_assert;
+use muxserve::simulator::{UnitModelCfg, UnitSim};
+use muxserve::util::{proplite, Rng};
+use muxserve::workload::{Request, Scenario, ScenarioShape};
+
+fn unit_model(params_b: f64, rate: f64, sm: f64) -> UnitModelCfg {
+    UnitModelCfg {
+        spec: llama_spec(&format!("ec-{params_b}b"), params_b),
+        rate,
+        mean_total_len: 499.0,
+        prefill_sm: sm,
+        decode_sm: sm,
+        tp: 1,
+        canonical_tp: 1,
+    }
+}
+
+/// The id→(llm, slot) index must mirror the active lists across every
+/// admit, swap_remove, preemption, and drain — under all three policies
+/// and with a KV pool small enough that preemption happens constantly.
+#[test]
+fn prop_slot_index_mirrors_active_lists() {
+    proplite::check(120, |rng: &mut Rng| {
+        let n = rng.range(1, 4) as usize;
+        let models: Vec<UnitModelCfg> = (0..n)
+            .map(|i| {
+                unit_model(
+                    if i % 2 == 0 { 6.7 } else { 13.0 },
+                    0.5 + rng.f64() * 4.0,
+                    0.3 + rng.f64() * 0.7,
+                )
+            })
+            .collect();
+        let base = match rng.below(3) {
+            0 => EngineConfig::muxserve(),
+            1 => EngineConfig::round_robin(),
+            _ => EngineConfig::fcfs(),
+        };
+        // Tiny pool: decode growth outruns the quota quickly, so the
+        // preemption and rollback paths (the swap_remove fix-up sites)
+        // fire often instead of almost never.
+        let cfg = EngineConfig {
+            kv_capacity_frac: 0.01 + rng.f64() * 0.05,
+            ..base
+        };
+        let mut unit = UnitSim::new(models, 1, cfg, CostModel::a100());
+
+        let mut pending: Vec<(f64, u64)> = Vec::new();
+        let mut now = 0.0_f64;
+        let mut next_id = 1u64;
+        let steps = rng.range(30, 250);
+        for step in 0..steps {
+            if pending.is_empty() || rng.f64() < 0.45 {
+                now += rng.f64() * 0.05;
+                let llm = rng.below(unit.n_llms());
+                let prompt_len = 16 + rng.below(1009);
+                let output_len = 1 + rng.below(64);
+                unit.advance_time(now);
+                unit.on_arrival(
+                    now,
+                    Request {
+                        id: next_id,
+                        llm,
+                        arrival: now,
+                        prompt_len,
+                        output_len,
+                    },
+                );
+                next_id += 1;
+            } else {
+                // Deliver the earliest in-flight completion.
+                let i = pending
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let (t, job) = pending.swap_remove(i);
+                now = now.max(t);
+                unit.advance_time(now);
+                unit.on_job_done(now, job);
+            }
+            pending.extend(unit.drain_started());
+            if rng.f64() < 0.02 {
+                // Live-migration drain: everything must unwind cleanly.
+                let drained = unit.drain_requests();
+                pending.clear();
+                prop_assert!(
+                    drained.iter().all(|r| r.llm < unit.n_llms()),
+                    "drained request with out-of-range llm"
+                );
+            }
+            if let Some(msg) = unit.index_inconsistency() {
+                return Err(format!("after step {step}: {msg}"));
+            }
+        }
+        // Wind down: deliver every outstanding completion.
+        while !pending.is_empty() {
+            let i = pending
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                .map(|(i, _)| i)
+                .unwrap();
+            let (t, job) = pending.swap_remove(i);
+            now = now.max(t);
+            unit.advance_time(now);
+            unit.on_job_done(now, job);
+            pending.extend(unit.drain_started());
+            if let Some(msg) = unit.index_inconsistency() {
+                return Err(format!("during wind-down: {msg}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Gross-regression tripwire: the smoke benchmark must clear a floor that
+/// any healthy build (debug included) beats by well over an order of
+/// magnitude. If the O(1) hot paths regress to scans-of-scans, the
+/// events/sec here collapses first.
+#[test]
+fn smoke_bench_clears_events_per_sec_floor() {
+    let report = run_bench_perf(&PerfConfig {
+        duration: 10.0,
+        reps: 1,
+        smoke: true,
+    });
+    let stationary = report
+        .sims
+        .iter()
+        .find(|s| s.label == "stationary")
+        .expect("stationary run present");
+    assert!(
+        stationary.events > 500,
+        "smoke run too small to measure: {} events",
+        stationary.events
+    );
+    assert!(
+        stationary.events_per_s >= 500.0,
+        "event core below the floor: {:.0} events/s (wall {:.2}s for {} \
+         events)",
+        stationary.events_per_s,
+        stationary.wall_s,
+        stationary.events
+    );
+    // The decision-latency section must produce usable numbers too.
+    assert!(report.replan.full_ms > 0.0);
+    assert!(report.replan.warm_ms > 0.0);
+}
+
+/// Warm-started re-placement, wired end to end: the flash crowd must
+/// still trigger at least one migration and complete work (the
+/// cold-search SLO comparison lives in tests/dynamic_workload.rs; this
+/// pins the warm path's plumbing, including its full-search fallback).
+#[test]
+fn flash_crowd_with_warm_start_still_migrates() {
+    let scenario = Scenario::new(ScenarioShape::FlashCrowd);
+    let warm_cfg = ReplanConfig { warm_start: true, ..Default::default() };
+    let (report, arrived) =
+        run_scenario(&scenario, &scenario_cluster(), Some(warm_cfg))
+            .expect("warm-start placement");
+    assert!(arrived > 0);
+    assert!(
+        report.migrations >= 1,
+        "flash crowd must migrate under warm start: {:?}",
+        report.replans
+    );
+    assert!(!report.eval.records.is_empty());
+    assert!(report.events > 0, "event counter must tick");
+}
