@@ -1,0 +1,507 @@
+//! `ab`: the adaptation-policy A/B harness — every replan policy × the
+//! dynamic scenario suite, on identical request streams.
+//!
+//! The harness materializes each scenario ONCE (the build is
+//! deterministic in its seed) and replays the exact same arrival stream
+//! through a static reference run and through every `policy ×
+//! {cold, warm}` combination, so differences in the comparison table are
+//! attributable to the adaptation policy alone — the AlpaServe-style
+//! controlled comparison ROADMAP's "Adaptation policy" item asked for.
+//!
+//! Per cell it reports SLO attainment, p99 latency, migration count,
+//! replan count, and the replan decision latency (placement-search wall
+//! time, from [`ReplanOutcome::decision_ms`]). Everything except the
+//! wall-clock latency columns is deterministic: two runs with the same
+//! config produce byte-identical `to_json(false)` / `to_markdown(false)`
+//! output (pinned by a test), which is what makes the table trustworthy
+//! evidence for the warm-start default contract: the report computes the
+//! minimum warm−cold SLO delta across all cells and a parity verdict
+//! against [`WARM_PARITY_EPS`].
+//!
+//! [`ReplanOutcome::decision_ms`]: crate::simulator::ReplanOutcome
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::bench::drift::{run_scenario_on, scenario_cluster};
+use crate::coordinator::replan::PolicyKind;
+use crate::coordinator::ReplanConfig;
+use crate::util::json::Json;
+use crate::workload::{Scenario, ScenarioShape};
+
+/// Warm-start counts as SLO-parity when the worst warm−cold attainment
+/// delta across all policy × scenario cells is no lower than this.
+pub const WARM_PARITY_EPS: f64 = 0.02;
+
+/// Knobs of one `ab` run.
+#[derive(Clone, Debug)]
+pub struct AbConfig {
+    /// Simulated seconds per run.
+    pub duration: f64,
+    /// Workload seed (shared by every cell — identical streams).
+    pub seed: u64,
+    /// Policies to compare.
+    pub policies: Vec<PolicyKind>,
+    /// Scenario shapes to run.
+    pub shapes: Vec<ScenarioShape>,
+    /// Warm-start modes crossed with the policies.
+    pub warm_modes: Vec<bool>,
+    /// SLO scale for attainment reporting.
+    pub slo_scale: f64,
+}
+
+impl AbConfig {
+    /// The full comparison: three policies × the four dynamic scenarios
+    /// × {cold, warm}, at the scenario default duration.
+    pub fn full() -> AbConfig {
+        AbConfig {
+            duration: 120.0,
+            seed: 2024,
+            policies: PolicyKind::all().to_vec(),
+            shapes: ScenarioShape::dynamic().to_vec(),
+            warm_modes: vec![false, true],
+            slo_scale: 8.0,
+        }
+    }
+
+    /// CI smoke: the same grid, shorter runs.
+    pub fn smoke() -> AbConfig {
+        AbConfig { duration: 60.0, ..AbConfig::full() }
+    }
+}
+
+/// One adaptive run's row in the comparison.
+#[derive(Clone, Debug)]
+pub struct AbCell {
+    pub shape: &'static str,
+    pub policy: &'static str,
+    pub warm: bool,
+    pub arrived: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    /// SLO attainment at the configured scale (rounded to 1e-4).
+    pub slo: f64,
+    /// p99 request latency, seconds (rounded to 1e-3).
+    pub p99_latency: f64,
+    pub replans: usize,
+    pub migrations: usize,
+    /// Replan decision latency (placement-search wall time), mean and
+    /// max milliseconds over fired checks; 0 when none fired.
+    /// Host-dependent — excluded from the deterministic outputs.
+    pub decision_ms_mean: f64,
+    pub decision_ms_max: f64,
+}
+
+/// The static (never-replan) reference row for one scenario.
+#[derive(Clone, Debug)]
+pub struct AbBaseline {
+    pub shape: &'static str,
+    pub arrived: usize,
+    pub completed: usize,
+    pub slo: f64,
+    pub p99_latency: f64,
+}
+
+/// Everything one `ab` invocation measured.
+#[derive(Clone, Debug)]
+pub struct AbReport {
+    pub duration: f64,
+    pub seed: u64,
+    pub slo_scale: f64,
+    pub baselines: Vec<AbBaseline>,
+    pub cells: Vec<AbCell>,
+    /// Minimum warm−cold SLO delta over all (policy, shape) pairs that
+    /// ran in both modes (None when the grid held no such pair).
+    pub warm_delta_min: Option<f64>,
+}
+
+fn round(x: f64, unit: f64) -> f64 {
+    (x / unit).round() * unit
+}
+
+impl AbReport {
+    /// The warm-start parity verdict: does warm-start hold SLO within
+    /// [`WARM_PARITY_EPS`] of the cold search on every cell?
+    pub fn warm_parity(&self) -> Option<bool> {
+        self.warm_delta_min.map(|d| d >= -WARM_PARITY_EPS)
+    }
+
+    /// The comparison as a markdown table (one row per static baseline
+    /// and per policy × warm cell). `include_timing` adds the
+    /// wall-clock decision-latency columns, which are host-dependent —
+    /// pass `false` for byte-reproducible output.
+    pub fn to_markdown(&self, include_timing: bool) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "## ab: adaptation policies × scenarios ({}s, seed {}, \
+             slo@{})",
+            self.duration, self.seed, self.slo_scale
+        );
+        let timing_hdr = if include_timing {
+            " decide-mean(ms) | decide-max(ms) |"
+        } else {
+            ""
+        };
+        let _ = writeln!(
+            out,
+            "| scenario | policy | warm | slo | p99(s) | migr | replans \
+             | done/arrived |{timing_hdr}"
+        );
+        let timing_sep = if include_timing { "---|---|" } else { "" };
+        let _ = writeln!(
+            out,
+            "|---|---|---|---|---|---|---|---|{timing_sep}"
+        );
+        for b in &self.baselines {
+            let _ = writeln!(
+                out,
+                "| {} | static | - | {:.4} | {:.3} | 0 | 0 | {}/{} |{}",
+                b.shape,
+                b.slo,
+                b.p99_latency,
+                b.completed,
+                b.arrived,
+                if include_timing { " - | - |" } else { "" }
+            );
+        }
+        for c in &self.cells {
+            let timing = if include_timing {
+                format!(
+                    " {:.2} | {:.2} |",
+                    c.decision_ms_mean, c.decision_ms_max
+                )
+            } else {
+                String::new()
+            };
+            let _ = writeln!(
+                out,
+                "| {} | {} | {} | {:.4} | {:.3} | {} | {} | {}/{} |{}",
+                c.shape,
+                c.policy,
+                if c.warm { "on" } else { "off" },
+                c.slo,
+                c.p99_latency,
+                c.migrations,
+                c.replans,
+                c.completed,
+                c.arrived,
+                timing
+            );
+        }
+        match (self.warm_delta_min, self.warm_parity()) {
+            (Some(d), Some(ok)) => {
+                let _ = writeln!(
+                    out,
+                    "\nwarm-start parity: min warm-cold slo delta \
+                     {:.4} (eps {WARM_PARITY_EPS}) => {}",
+                    d,
+                    if ok {
+                        "PARITY — warm-start is safe to default on"
+                    } else {
+                        "NO PARITY — keep the cold default"
+                    }
+                );
+            }
+            _ => {
+                let _ = writeln!(
+                    out,
+                    "\nwarm-start parity: not measured (grid held no \
+                     cold/warm pair)"
+                );
+            }
+        }
+        out
+    }
+
+    /// The comparison in the AB_N.json schema. `include_timing` adds the
+    /// host-dependent decision-latency fields; pass `false` for
+    /// byte-reproducible output (the determinism test compares this).
+    pub fn to_json(&self, include_timing: bool) -> Json {
+        let mut cfg = BTreeMap::new();
+        cfg.insert("duration_s".to_string(), Json::Num(self.duration));
+        cfg.insert("seed".to_string(), Json::Num(self.seed as f64));
+        cfg.insert("slo_scale".to_string(), Json::Num(self.slo_scale));
+
+        let baselines: Vec<Json> = self
+            .baselines
+            .iter()
+            .map(|b| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "shape".to_string(),
+                    Json::Str(b.shape.to_string()),
+                );
+                m.insert(
+                    "arrived".to_string(),
+                    Json::Num(b.arrived as f64),
+                );
+                m.insert(
+                    "completed".to_string(),
+                    Json::Num(b.completed as f64),
+                );
+                m.insert("slo".to_string(), Json::Num(b.slo));
+                m.insert(
+                    "p99_latency_s".to_string(),
+                    Json::Num(b.p99_latency),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "shape".to_string(),
+                    Json::Str(c.shape.to_string()),
+                );
+                m.insert(
+                    "policy".to_string(),
+                    Json::Str(c.policy.to_string()),
+                );
+                m.insert("warm".to_string(), Json::Bool(c.warm));
+                m.insert(
+                    "arrived".to_string(),
+                    Json::Num(c.arrived as f64),
+                );
+                m.insert(
+                    "completed".to_string(),
+                    Json::Num(c.completed as f64),
+                );
+                m.insert(
+                    "dropped".to_string(),
+                    Json::Num(c.dropped as f64),
+                );
+                m.insert("slo".to_string(), Json::Num(c.slo));
+                m.insert(
+                    "p99_latency_s".to_string(),
+                    Json::Num(c.p99_latency),
+                );
+                m.insert(
+                    "replans".to_string(),
+                    Json::Num(c.replans as f64),
+                );
+                m.insert(
+                    "migrations".to_string(),
+                    Json::Num(c.migrations as f64),
+                );
+                if include_timing {
+                    m.insert(
+                        "decision_ms_mean".to_string(),
+                        Json::Num(round(c.decision_ms_mean, 1e-3)),
+                    );
+                    m.insert(
+                        "decision_ms_max".to_string(),
+                        Json::Num(round(c.decision_ms_max, 1e-3)),
+                    );
+                }
+                Json::Obj(m)
+            })
+            .collect();
+
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("ab".to_string()));
+        root.insert(
+            "generator".to_string(),
+            Json::Str(
+                "muxserve ab --out AB_N.json (decision-latency fields \
+                 are host-dependent; all other fields are deterministic \
+                 in the config)"
+                    .to_string(),
+            ),
+        );
+        root.insert("config".to_string(), Json::Obj(cfg));
+        root.insert("baselines".to_string(), Json::Arr(baselines));
+        root.insert("cells".to_string(), Json::Arr(cells));
+        root.insert(
+            "warm_delta_min".to_string(),
+            match self.warm_delta_min {
+                Some(d) => Json::Num(d),
+                None => Json::Null,
+            },
+        );
+        root.insert(
+            "warm_parity".to_string(),
+            match self.warm_parity() {
+                Some(ok) => Json::Bool(ok),
+                None => Json::Null,
+            },
+        );
+        root.insert(
+            "warm_parity_eps".to_string(),
+            Json::Num(WARM_PARITY_EPS),
+        );
+        Json::Obj(root)
+    }
+}
+
+/// Minimum warm−cold SLO delta over matched (shape, policy) pairs.
+fn warm_delta_min(cells: &[AbCell]) -> Option<f64> {
+    let mut min: Option<f64> = None;
+    for w in cells.iter().filter(|c| c.warm) {
+        let cold = cells
+            .iter()
+            .find(|c| !c.warm && c.shape == w.shape && c.policy == w.policy);
+        if let Some(cold) = cold {
+            let d = w.slo - cold.slo;
+            min = Some(match min {
+                Some(m) => m.min(d),
+                None => d,
+            });
+        }
+    }
+    min
+}
+
+/// Run the whole grid. Scenarios that admit no initial placement are
+/// skipped (none of the built-in shapes do on the default cluster).
+pub fn run_ab(cfg: &AbConfig) -> AbReport {
+    let cluster = scenario_cluster();
+    let mut baselines = Vec::new();
+    let mut cells = Vec::new();
+    for &shape in &cfg.shapes {
+        let scenario = Scenario {
+            duration: cfg.duration,
+            seed: cfg.seed,
+            ..Scenario::new(shape)
+        };
+        // One materialization per shape: every mode below replays the
+        // exact same request stream.
+        let data = scenario.build();
+        let arrived = data.requests.len();
+        if let Some(report) =
+            run_scenario_on(&scenario, &data, &cluster, None)
+        {
+            baselines.push(AbBaseline {
+                shape: shape.name(),
+                arrived,
+                completed: report.eval.records.len(),
+                slo: round(report.eval.slo_attainment(cfg.slo_scale), 1e-4),
+                p99_latency: round(
+                    report.eval.latency_summary().p99(),
+                    1e-3,
+                ),
+            });
+        }
+        for &policy in &cfg.policies {
+            for &warm in &cfg.warm_modes {
+                let rcfg = ReplanConfig {
+                    policy,
+                    warm_start: warm,
+                    ..Default::default()
+                };
+                let Some(report) =
+                    run_scenario_on(&scenario, &data, &cluster, Some(rcfg))
+                else {
+                    continue;
+                };
+                let fired = report.replans.len();
+                let (mean_ms, max_ms) = if fired > 0 {
+                    let sum: f64 =
+                        report.replans.iter().map(|r| r.decision_ms).sum();
+                    let max = report
+                        .replans
+                        .iter()
+                        .map(|r| r.decision_ms)
+                        .fold(0.0_f64, f64::max);
+                    (sum / fired as f64, max)
+                } else {
+                    (0.0, 0.0)
+                };
+                cells.push(AbCell {
+                    shape: shape.name(),
+                    policy: policy.name(),
+                    warm,
+                    arrived,
+                    completed: report.eval.records.len(),
+                    dropped: report.dropped,
+                    slo: round(
+                        report.eval.slo_attainment(cfg.slo_scale),
+                        1e-4,
+                    ),
+                    p99_latency: round(
+                        report.eval.latency_summary().p99(),
+                        1e-3,
+                    ),
+                    replans: fired,
+                    migrations: report.migrations,
+                    decision_ms_mean: mean_ms,
+                    decision_ms_max: max_ms,
+                });
+            }
+        }
+    }
+    let warm_delta = warm_delta_min(&cells);
+    AbReport {
+        duration: cfg.duration,
+        seed: cfg.seed,
+        slo_scale: cfg.slo_scale,
+        baselines,
+        cells,
+        warm_delta_min: warm_delta,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ab_comparison_is_deterministic_and_covers_the_grid() {
+        // A reduced grid keeps the test fast while still crossing two
+        // policies, two scenarios, and both warm modes.
+        let cfg = AbConfig {
+            duration: 40.0,
+            shapes: vec![ScenarioShape::FlashCrowd, ScenarioShape::Drift],
+            policies: vec![PolicyKind::Threshold, PolicyKind::Forecast],
+            warm_modes: vec![false, true],
+            ..AbConfig::smoke()
+        };
+        let a = run_ab(&cfg);
+        let b = run_ab(&cfg);
+        assert_eq!(
+            a.to_json(false).to_string(),
+            b.to_json(false).to_string(),
+            "same seed must give a byte-identical comparison"
+        );
+        assert_eq!(a.to_markdown(false), b.to_markdown(false));
+        // Full grid: every policy × shape × warm cell plus a baseline
+        // row per shape.
+        assert_eq!(a.cells.len(), 2 * 2 * 2, "cells: {:?}", a.cells);
+        assert_eq!(a.baselines.len(), 2);
+        // The parity verdict is measured, whichever way it lands.
+        assert!(a.warm_delta_min.is_some());
+        assert!(a.warm_parity().is_some());
+    }
+
+    #[test]
+    fn warm_delta_min_matches_hand_computation() {
+        let mk = |shape, policy, warm, slo| AbCell {
+            shape,
+            policy,
+            warm,
+            arrived: 100,
+            completed: 90,
+            dropped: 0,
+            slo,
+            p99_latency: 1.0,
+            replans: 1,
+            migrations: 1,
+            decision_ms_mean: 0.0,
+            decision_ms_max: 0.0,
+        };
+        let cells = vec![
+            mk("flash-crowd", "threshold", false, 0.90),
+            mk("flash-crowd", "threshold", true, 0.88),
+            mk("drift", "threshold", false, 0.70),
+            mk("drift", "threshold", true, 0.75),
+        ];
+        let d = warm_delta_min(&cells).expect("two matched pairs");
+        assert!((d - (-0.02)).abs() < 1e-12, "d={d}");
+        // A cell with no matching cold twin contributes nothing.
+        assert!(warm_delta_min(&cells[1..2]).is_none());
+    }
+}

@@ -1,12 +1,15 @@
 //! Figure/table regeneration harnesses (filled in per DESIGN.md §4),
-//! the drift figure for the dynamic-workload scenarios, and the
-//! `bench-perf` event-core performance baseline.
+//! the drift figure for the dynamic-workload scenarios, the
+//! `bench-perf` event-core performance baseline, and the `ab`
+//! adaptation-policy A/B harness.
 
+pub mod ab;
 pub mod drift;
 pub mod experiments;
 pub mod figures;
 pub mod perf;
 
+pub use ab::{run_ab, AbConfig, AbReport, WARM_PARITY_EPS};
 pub use drift::{
     fig_drift, run_scenario, run_scenario_on, run_trace, scenario_cluster,
     ScenarioResult,

@@ -121,6 +121,9 @@ pub fn main() -> Result<()> {
         "scenario" => {
             scenario_cmd(&args)?;
         }
+        "ab" => {
+            ab_cmd(&args)?;
+        }
         "serve" => {
             serve_cmd(&args)?;
         }
@@ -191,10 +194,58 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Adaptation-policy A/B harness: every replan policy × the dynamic
+/// scenario suite on identical request streams, with the warm-start
+/// parity verdict. `--smoke` shortens the runs for CI; `--policy P`
+/// restricts the grid to one policy; `--out FILE` writes the AB_N.json
+/// record (decision-latency fields are host-dependent, everything else
+/// is deterministic in the config).
+fn ab_cmd(args: &[String]) -> Result<()> {
+    use crate::bench::ab::{run_ab, AbConfig};
+    use crate::coordinator::replan::PolicyKind;
+
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let mut cfg = if smoke { AbConfig::smoke() } else { AbConfig::full() };
+    cfg.duration = flag_val(args, "--duration", cfg.duration)?;
+    cfg.seed = flag_val(args, "--seed", cfg.seed)?;
+    if let Some(p) = flag_path(args, "--policy")? {
+        let kind = PolicyKind::parse(p).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown policy `{p}` (expected threshold | forecast | \
+                 hysteresis)"
+            )
+        })?;
+        cfg.policies = vec![kind];
+    }
+    let shapes: Vec<&str> =
+        cfg.shapes.iter().map(|s| s.name()).collect();
+    let policies: Vec<&str> =
+        cfg.policies.iter().map(|p| p.name()).collect();
+    println!(
+        "ab: policies [{}] x scenarios [{}] x warm {{off,on}}, {:.0}s \
+         each, seed {} (identical streams per scenario; running...)",
+        policies.join(", "),
+        shapes.join(", "),
+        cfg.duration,
+        cfg.seed
+    );
+    let report = run_ab(&cfg);
+    print!("{}", report.to_markdown(true));
+    if let Some(path) = flag_path(args, "--out")? {
+        let mut text = report.to_json(true).to_string();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
 /// Dynamic-workload scenario runner: non-stationary arrivals against the
 /// MuxServe engine, with online re-placement on or off.
 fn scenario_cmd(args: &[String]) -> Result<()> {
     use crate::bench::drift::{run_scenario_on, scenario_cluster};
+    use crate::coordinator::replan::PolicyKind;
     use crate::coordinator::ReplanConfig;
     use crate::workload::{Scenario, ScenarioShape};
 
@@ -219,6 +270,15 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         "off" | "false" | "0" => false,
         other => anyhow::bail!("--warm takes on|off, got `{other}`"),
     };
+    // Which replan trigger policy drives the controller (see the `ab`
+    // subcommand for the side-by-side comparison).
+    let policy_name = flag_str(args, "--policy", "threshold");
+    let policy = PolicyKind::parse(policy_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown policy `{policy_name}` (expected threshold | \
+             forecast | hysteresis)"
+        )
+    })?;
     let scenario = Scenario {
         duration: flag_val(args, "--duration", 120.0f64)?,
         seed: flag_val(args, "--seed", 2024u64)?,
@@ -229,7 +289,7 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
     };
     let cluster = scenario_cluster();
     let replan = adaptive
-        .then(|| ReplanConfig { warm_start, ..Default::default() });
+        .then(|| ReplanConfig { warm_start, policy, ..Default::default() });
 
     let (report, arrived) = if let Some(path) = flag_path(args, "--replay-trace")? {
         // Replay path: a frozen trace supplies the stream; planning
@@ -429,15 +489,26 @@ fn print_help() {
          (cold vs warm)\n  \
          bench-all                   full evaluation suite\n  \
          scenario [--shape S] [--replan on|off] [--warm on|off] \
-         [--duration S] [--seed N]\n  \
+         [--policy P]\n  \
+         \x20        [--duration S] [--seed N]\n  \
          \x20                            dynamic workload (stationary | \
          diurnal | bursty |\n  \
          \x20                            flash-crowd | drift) with online \
          re-placement;\n  \
+         \x20                            --policy picks the replan \
+         trigger (threshold |\n  \
+         \x20                            forecast | hysteresis),\n  \
          \x20                            --export-trace FILE freezes the \
          stream,\n  \
          \x20                            --replay-trace FILE re-runs a \
          frozen stream\n  \
+         ab [--smoke] [--policy P] [--out FILE] [--duration S] \
+         [--seed N]\n  \
+         \x20                            adaptation-policy A/B harness: \
+         every replan\n  \
+         \x20                            policy x scenario on identical \
+         streams, with\n  \
+         \x20                            the warm-start parity verdict\n  \
          place [--alpha A]           run the placement optimizer (Alg. 1)\n  \
          serve [--rate-a R]          real PJRT serving demo (needs `make \
          artifacts`)\n  \

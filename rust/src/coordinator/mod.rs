@@ -16,5 +16,9 @@ pub use placement::{
     muxserve_placement, muxserve_placement_warm, parallel_candidates,
     spatial_placement, Placement, PlacementUnit, ParallelCandidate,
 };
-pub use replan::{ReplanConfig, ReplanController, ReplanDecision};
+pub use replan::{
+    ForecastPolicy, HysteresisPolicy, PolicyKind, ReplanConfig,
+    ReplanController, ReplanDecision, ReplanObservation, ReplanPolicy,
+    SloWindow, ThresholdPolicy,
+};
 pub use scheduler::{EngineConfig, Policy};

@@ -1,16 +1,34 @@
-//! Online re-placement controller — the adaptation layer the paper leaves
-//! open (§3.1 plans once from historical averages; §5 notes workload
-//! changes as future work).
+//! Online re-placement controllers — the adaptation layer the paper
+//! leaves open (§3.1 plans once from historical averages; §5 notes
+//! workload changes as future work).
 //!
-//! The controller watches the live request stream inside the simulator
-//! event loop: it keeps a sliding window of per-LLM arrival timestamps
-//! and the recent SLO attainment, and compares the windowed rates against
-//! the rate vector the current placement was optimized for. When the
-//! relative drift of any LLM exceeds a threshold (or the windowed SLO
-//! attainment collapses while rates have moved), it asks for the
-//! placement optimizer (Alg. 1 + 2) to be re-run with the fresh rates.
-//! The caller (see [`crate::simulator::dynamic`]) applies the new
-//! placement with a migration cost modeled as unit downtime.
+//! The [`ReplanController`] watches the live request stream inside the
+//! simulator event loop: it keeps a sliding window of per-LLM arrival
+//! timestamps and the recent SLO attainment, and hands that observation
+//! to a pluggable [`ReplanPolicy`] each check tick. When the policy
+//! decides traffic has drifted (or soon will), it asks for the placement
+//! optimizer (Alg. 1 + 2) to be re-run with fresh rates. The caller (see
+//! [`crate::simulator::dynamic`]) applies the new placement with a
+//! migration cost modeled as unit downtime.
+//!
+//! Three built-in policies share one decision core
+//! ([`threshold_decision`]):
+//!
+//! * [`ThresholdPolicy`] — the original hard-coded rule: asymmetric
+//!   surge/sag thresholds on the windowed rates, with an SLO-floor
+//!   override that lowers the bar when attainment collapses.
+//! * [`ForecastPolicy`] — Holt double-exponential smoothing (level +
+//!   trend) per LLM; the rule runs on the rates *predicted* a couple of
+//!   ticks ahead, so a ramping flash crowd is chased before it peaks
+//!   instead of after the measurement window catches up.
+//! * [`HysteresisPolicy`] — the threshold rule behind a floating trigger
+//!   bar learned from the *measured* migration cost (downtime ×
+//!   preempted work): expensive migrations make the next trigger harder,
+//!   and the caution relaxes multiplicatively with quiet ticks.
+//!
+//! Every policy is a deterministic function of its observations, so the
+//! A/B harness ([`crate::bench::ab`]) can compare them on identical
+//! request streams and reproduce the table bit-for-bit.
 //!
 //! Design notes:
 //! * Drift is normalized by `max(planned, observed, rate_floor)` so
@@ -20,6 +38,52 @@
 //!   flash crowd causes one or two placements, not one per check tick.
 
 use std::collections::VecDeque;
+
+/// Which built-in [`ReplanPolicy`] a controller runs. Selecting the
+/// policy through config (instead of constructing trait objects at every
+/// call site) keeps `ReplanConfig` plain data — `Copy`, CLI-parseable,
+/// and sweepable by the A/B harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// The original asymmetric surge/sag threshold rule.
+    Threshold,
+    /// Holt/EWMA forecasting: replans on *predicted* threshold crossings.
+    Forecast,
+    /// Threshold rule with a trigger bar learned from migration cost.
+    Hysteresis,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "threshold" => Some(PolicyKind::Threshold),
+            "forecast" | "ewma" | "holt" => Some(PolicyKind::Forecast),
+            "hysteresis" => Some(PolicyKind::Hysteresis),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Threshold => "threshold",
+            PolicyKind::Forecast => "forecast",
+            PolicyKind::Hysteresis => "hysteresis",
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 3] {
+        [PolicyKind::Threshold, PolicyKind::Forecast, PolicyKind::Hysteresis]
+    }
+
+    /// Construct the built-in implementation for this kind.
+    pub fn build(&self) -> Box<dyn ReplanPolicy> {
+        match self {
+            PolicyKind::Threshold => Box::new(ThresholdPolicy),
+            PolicyKind::Forecast => Box::<ForecastPolicy>::default(),
+            PolicyKind::Hysteresis => Box::<HysteresisPolicy>::default(),
+        }
+    }
+}
 
 /// Tuning knobs for the online re-placement controller.
 #[derive(Clone, Copy, Debug)]
@@ -55,13 +119,19 @@ pub struct ReplanConfig {
     pub min_replan_interval: f64,
     /// Rates below this floor never drive drift on their own (req/s).
     pub rate_floor: f64,
+    /// Which trigger policy drives the controller (see [`PolicyKind`]).
+    pub policy: PolicyKind,
     /// Use the warm-started incremental optimizer
     /// ([`crate::coordinator::muxserve_placement_warm`]) at replan time
     /// instead of the from-scratch search. Off by default: warm-start may
     /// keep a stale shape where the cold search would migrate (see the
     /// placement module docs), so the paper-faithful full search stays
     /// the baseline behavior; flip this on for interactive paper-scale
-    /// runs where decision latency dominates.
+    /// runs where decision latency dominates. The `ab` harness compares
+    /// both modes on identical streams — the flip-the-default contract
+    /// in ROADMAP.md cites its output. Note the engine routes decisions
+    /// with no per-LLM dirty flag (pure SLO-floor triggers) to the cold
+    /// search even when this is on — see [`ReplanDecision::dirty`].
     pub warm_start: bool,
 }
 
@@ -81,6 +151,7 @@ impl Default for ReplanConfig {
             migration_downtime: 1.0,
             min_replan_interval: 10.0,
             rate_floor: 1.0,
+            policy: PolicyKind::Threshold,
             warm_start: false,
         }
     }
@@ -93,16 +164,372 @@ pub struct ReplanDecision {
     pub rates: Vec<f64>,
     /// The drift value that triggered the decision.
     pub drift: f64,
-    /// Per-LLM: whether this LLM's observed rate crossed its replan
-    /// threshold (surge or sag, same normalization as `drift_split`).
-    /// Feeds the warm-started optimizer, which re-places only the units
-    /// holding a dirty LLM. A decision triggered purely by the SLO-floor
-    /// monitor can have every flag false — warm-start then keeps the
-    /// placement, while the from-scratch search may still reshape it.
+    /// Per-LLM: whether this LLM's rate crossed its replan threshold
+    /// (surge or sag, same normalization as `drift_split`). Feeds the
+    /// warm-started optimizer, which re-places only the units holding a
+    /// dirty LLM. A decision triggered purely by the SLO-floor monitor
+    /// has every flag false — the engine must then fall back to the cold
+    /// full search, because the warm optimizer keeps an all-clean
+    /// placement verbatim (see `slo_driven`).
     pub dirty: Vec<bool>,
+    /// True when only the SLO-floor clause fired (no LLM crossed a rate
+    /// threshold on its own). Such decisions carry no dirty flags, so
+    /// warm-start has nothing local to re-place — the engine routes them
+    /// to the from-scratch search instead of silently no-opping.
+    pub slo_driven: bool,
 }
 
-/// Sliding-window drift monitor over per-LLM arrivals.
+/// One check tick's view of the world — assembled by the controller,
+/// consumed by the policy. Policies must be deterministic functions of
+/// this observation (plus their own deterministically-evolved state);
+/// that property is what makes the A/B harness's identical-stream
+/// comparisons, and the simulator's bit-exact replays, meaningful.
+#[derive(Clone, Debug)]
+pub struct ReplanObservation {
+    /// Check time, seconds.
+    pub t: f64,
+    /// Windowed per-LLM arrival-rate estimates.
+    pub observed: Vec<f64>,
+    /// Rates the current placement was optimized for.
+    pub planned: Vec<f64>,
+    /// Windowed SLO attainment (None when nothing finished recently —
+    /// an idle system is not a collapsed one).
+    pub window_slo: Option<f64>,
+}
+
+/// A pluggable replan trigger: observations in, decision out.
+///
+/// The controller calls [`observe`](Self::observe) on every check tick
+/// that reaches it — including ticks inside the migration *rate-limit*
+/// window, so stateful policies keep their estimates warm — and
+/// [`decide`](Self::decide) only on ticks where a migration would be
+/// allowed. Note the engine skips ticks that land inside a migration
+/// *blackout* entirely (see [`crate::simulator::dynamic`]), so with a
+/// `migration_downtime` longer than `check_period` a stateful policy
+/// sees a correspondingly sparser update cadence.
+/// [`note_migration_cost`](Self::note_migration_cost) feeds back the
+/// measured cost of each applied migration.
+pub trait ReplanPolicy: std::fmt::Debug {
+    fn kind(&self) -> PolicyKind;
+
+    /// State update, called every check tick.
+    fn observe(&mut self, _cfg: &ReplanConfig, _obs: &ReplanObservation) {}
+
+    /// The decision proper — a pure function of the observation and the
+    /// policy's state (no clocks, no randomness).
+    fn decide(
+        &self,
+        cfg: &ReplanConfig,
+        obs: &ReplanObservation,
+    ) -> Option<ReplanDecision>;
+
+    /// Measured cost of an applied migration: migration downtime ×
+    /// preempted in-flight/queued requests.
+    fn note_migration_cost(&mut self, _cost: f64) {}
+
+    fn box_clone(&self) -> Box<dyn ReplanPolicy>;
+}
+
+impl Clone for Box<dyn ReplanPolicy> {
+    fn clone(&self) -> Self {
+        self.box_clone()
+    }
+}
+
+/// One LLM's relative drift: `|o - p| / max(p, o, floor)` — the single
+/// normalization shared by the trigger and the per-LLM dirty flags, so
+/// the two can never disagree.
+fn rel_drift(o: f64, p: f64, floor: f64) -> f64 {
+    (o - p).abs() / p.max(o).max(floor)
+}
+
+/// The asymmetric-threshold decision core shared by every built-in
+/// policy. `rates` drive both the trigger and the new plan — the
+/// threshold policy passes the observed rates, the forecasting policy
+/// its predictions. `bar` multiplies both thresholds (1.0 is the
+/// baseline rule; hysteresis raises it after costly migrations).
+fn threshold_decision(
+    cfg: &ReplanConfig,
+    rates: &[f64],
+    planned: &[f64],
+    window_slo: Option<f64>,
+    bar: f64,
+) -> Option<ReplanDecision> {
+    let surge_thr = cfg.surge_threshold * bar;
+    let sag_thr = cfg.drift_threshold * bar;
+    let mut surge = 0.0_f64;
+    let mut sag = 0.0_f64;
+    for (o, p) in rates.iter().zip(planned) {
+        let rel = rel_drift(*o, *p, cfg.rate_floor);
+        if o > p {
+            surge = surge.max(rel);
+        } else {
+            sag = sag.max(rel);
+        }
+    }
+    let drift = surge.max(sag);
+    let slo_bad = window_slo.is_some_and(|s| s < cfg.slo_floor);
+    let rate_trigger = surge > surge_thr || sag > sag_thr;
+    let slo_trigger = slo_bad && drift > 0.5 * surge_thr;
+    if !rate_trigger && !slo_trigger {
+        return None;
+    }
+    // Which LLMs individually crossed their threshold — the warm
+    // optimizer's re-place set.
+    let dirty: Vec<bool> = rates
+        .iter()
+        .zip(planned)
+        .map(|(o, p)| {
+            let rel = rel_drift(*o, *p, cfg.rate_floor);
+            if o > p {
+                rel > surge_thr
+            } else {
+                rel > sag_thr
+            }
+        })
+        .collect();
+    // Plan for the trigger rates with headroom (a ramping spike is
+    // still growing), floored so every LLM keeps a nonzero share.
+    let plan: Vec<f64> = rates
+        .iter()
+        .map(|r| (r * cfg.plan_headroom).max(0.05))
+        .collect();
+    Some(ReplanDecision {
+        rates: plan,
+        drift,
+        dirty,
+        slo_driven: !rate_trigger,
+    })
+}
+
+/// The original hard-coded rule, unchanged: asymmetric surge/sag
+/// thresholds on the windowed rates, with the SLO-floor override.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ThresholdPolicy;
+
+impl ReplanPolicy for ThresholdPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Threshold
+    }
+
+    fn decide(
+        &self,
+        cfg: &ReplanConfig,
+        obs: &ReplanObservation,
+    ) -> Option<ReplanDecision> {
+        threshold_decision(cfg, &obs.observed, &obs.planned, obs.window_slo, 1.0)
+    }
+
+    fn box_clone(&self) -> Box<dyn ReplanPolicy> {
+        Box::new(*self)
+    }
+}
+
+/// Holt double-exponential smoothing (level + trend) per LLM, updated at
+/// every check tick; the decision runs the threshold rule on the rates
+/// *predicted* `horizon_ticks` ahead, so a ramping flash crowd is chased
+/// before it peaks instead of after the window catches up. On stationary
+/// traffic the trend hugs zero and the policy degenerates to the
+/// threshold rule on a smoothed rate.
+#[derive(Clone, Debug)]
+pub struct ForecastPolicy {
+    /// Level-smoothing gain in (0, 1].
+    pub alpha: f64,
+    /// Trend-smoothing gain in (0, 1].
+    pub beta: f64,
+    /// How many check ticks ahead to predict.
+    pub horizon_ticks: f64,
+    /// Per-LLM (level, trend), lazily sized on the first observation.
+    state: Vec<(f64, f64)>,
+}
+
+impl Default for ForecastPolicy {
+    fn default() -> Self {
+        ForecastPolicy {
+            alpha: 0.5,
+            beta: 0.4,
+            horizon_ticks: 2.0,
+            state: Vec::new(),
+        }
+    }
+}
+
+impl ForecastPolicy {
+    /// The rates the policy currently predicts `horizon_ticks` ahead
+    /// (the observed rates before any observation has arrived).
+    pub fn predicted(&self, obs: &ReplanObservation) -> Vec<f64> {
+        if self.state.len() == obs.observed.len() {
+            self.state
+                .iter()
+                .map(|(l, tr)| (l + tr * self.horizon_ticks).max(0.0))
+                .collect()
+        } else {
+            obs.observed.clone()
+        }
+    }
+}
+
+impl ReplanPolicy for ForecastPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Forecast
+    }
+
+    fn observe(&mut self, _cfg: &ReplanConfig, obs: &ReplanObservation) {
+        if self.state.len() != obs.observed.len() {
+            // First observation (or LLM-set change): seed levels at the
+            // observed rates with flat trends.
+            self.state = obs.observed.iter().map(|o| (*o, 0.0)).collect();
+            return;
+        }
+        let (alpha, beta) = (self.alpha, self.beta);
+        for ((level, trend), o) in self.state.iter_mut().zip(&obs.observed) {
+            let prev = *level;
+            *level = alpha * o + (1.0 - alpha) * (prev + *trend);
+            *trend = beta * (*level - prev) + (1.0 - beta) * *trend;
+        }
+    }
+
+    fn decide(
+        &self,
+        cfg: &ReplanConfig,
+        obs: &ReplanObservation,
+    ) -> Option<ReplanDecision> {
+        let predicted = self.predicted(obs);
+        threshold_decision(cfg, &predicted, &obs.planned, obs.window_slo, 1.0)
+    }
+
+    fn box_clone(&self) -> Box<dyn ReplanPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// The threshold rule behind a floating trigger bar: every applied
+/// migration reports its measured cost (downtime × preempted work), the
+/// bar rises with the running mean cost — expensive migrations make the
+/// next trigger harder to reach — and relaxes multiplicatively toward
+/// 1.0 at every check tick, so the caution decays once traffic quiets.
+#[derive(Clone, Debug)]
+pub struct HysteresisPolicy {
+    /// Migration cost treated as bar-doubling: a mean cost of
+    /// `cost_scale` (downtime-seconds × preempted requests) puts the bar
+    /// at 2.0.
+    pub cost_scale: f64,
+    /// Per-tick multiplicative relaxation of the bar toward 1.0.
+    pub relax: f64,
+    /// Cap on the bar (thresholds never exceed `max_bar` × base).
+    pub max_bar: f64,
+    bar: f64,
+    mean_cost: f64,
+    migrations: u32,
+}
+
+impl Default for HysteresisPolicy {
+    fn default() -> Self {
+        HysteresisPolicy {
+            cost_scale: 60.0,
+            relax: 0.85,
+            max_bar: 2.5,
+            bar: 1.0,
+            mean_cost: 0.0,
+            migrations: 0,
+        }
+    }
+}
+
+impl HysteresisPolicy {
+    /// Current trigger-bar multiplier (≥ 1).
+    pub fn bar(&self) -> f64 {
+        self.bar
+    }
+}
+
+impl ReplanPolicy for HysteresisPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Hysteresis
+    }
+
+    fn observe(&mut self, _cfg: &ReplanConfig, _obs: &ReplanObservation) {
+        self.bar = 1.0 + (self.bar - 1.0) * self.relax;
+    }
+
+    fn decide(
+        &self,
+        cfg: &ReplanConfig,
+        obs: &ReplanObservation,
+    ) -> Option<ReplanDecision> {
+        threshold_decision(
+            cfg,
+            &obs.observed,
+            &obs.planned,
+            obs.window_slo,
+            self.bar,
+        )
+    }
+
+    fn note_migration_cost(&mut self, cost: f64) {
+        // Equal-weight EWMA of the measured cost; the first migration
+        // seeds it directly.
+        self.mean_cost = if self.migrations == 0 {
+            cost
+        } else {
+            0.5 * self.mean_cost + 0.5 * cost
+        };
+        self.migrations += 1;
+        self.bar = (1.0 + self.mean_cost / self.cost_scale)
+            .clamp(1.0, self.max_bar);
+    }
+
+    fn box_clone(&self) -> Box<dyn ReplanPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// Sliding window over request completions feeding the SLO-floor
+/// monitor: push `(finish, met-SLO)` pairs as records are harvested, ask
+/// for the windowed attainment at each check tick. Eviction happens at
+/// query time, so each tick costs O(window) instead of O(run so far).
+#[derive(Clone, Debug, Default)]
+pub struct SloWindow {
+    window: f64,
+    recent: Vec<(f64, bool)>,
+}
+
+impl SloWindow {
+    pub fn new(window: f64) -> SloWindow {
+        SloWindow { window, recent: Vec::new() }
+    }
+
+    /// Record one completion at time `finish`.
+    pub fn push(&mut self, finish: f64, met: bool) {
+        self.recent.push((finish, met));
+    }
+
+    /// Completions currently retained (pre-eviction).
+    pub fn len(&self) -> usize {
+        self.recent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recent.is_empty()
+    }
+
+    /// Windowed attainment at time `t`: evicts completions that finished
+    /// before `t - window`, then returns the met fraction — or `None`
+    /// when no request finished inside the window, so the SLO-floor
+    /// trigger cannot fire on silence.
+    pub fn attainment(&mut self, t: f64) -> Option<f64> {
+        let lo = t - self.window;
+        self.recent.retain(|(finish, _)| *finish >= lo);
+        if self.recent.is_empty() {
+            return None;
+        }
+        let met = self.recent.iter().filter(|(_, m)| *m).count();
+        Some(met as f64 / self.recent.len() as f64)
+    }
+}
+
+/// Sliding-window drift monitor over per-LLM arrivals, delegating the
+/// trigger decision to its [`ReplanPolicy`].
 #[derive(Clone, Debug)]
 pub struct ReplanController {
     cfg: ReplanConfig,
@@ -111,16 +538,30 @@ pub struct ReplanController {
     /// Rates the current placement was optimized for.
     planned: Vec<f64>,
     last_replan: f64,
+    policy: Box<dyn ReplanPolicy>,
 }
 
 impl ReplanController {
+    /// Build a controller running the policy selected by `cfg.policy`.
     pub fn new(cfg: ReplanConfig, planned_rates: Vec<f64>) -> Self {
+        let policy = cfg.policy.build();
+        Self::with_policy(cfg, planned_rates, policy)
+    }
+
+    /// Inject a custom policy implementation (the trait is public, so
+    /// external experiments can bring their own trigger rule).
+    pub fn with_policy(
+        cfg: ReplanConfig,
+        planned_rates: Vec<f64>,
+        policy: Box<dyn ReplanPolicy>,
+    ) -> Self {
         let n = planned_rates.len();
         ReplanController {
             cfg,
             arrivals: vec![VecDeque::new(); n],
             planned: planned_rates,
             last_replan: 0.0,
+            policy,
         }
     }
 
@@ -130,6 +571,11 @@ impl ReplanController {
 
     pub fn planned_rates(&self) -> &[f64] {
         &self.planned
+    }
+
+    /// Which policy kind this controller runs.
+    pub fn policy_kind(&self) -> PolicyKind {
+        self.policy.kind()
     }
 
     /// Record one arrival for LLM `llm` at time `t`.
@@ -153,20 +599,13 @@ impl ReplanController {
             .collect()
     }
 
-    /// One LLM's relative drift: `|o - p| / max(p, o, rate_floor)` — the
-    /// single normalization shared by the trigger (`drift_split`) and the
-    /// per-LLM dirty flags, so the two can never disagree.
-    fn rel_drift(&self, o: f64, p: f64) -> f64 {
-        (o - p).abs() / p.max(o).max(self.cfg.rate_floor)
-    }
-
     /// Per-LLM relative drift split by direction:
     /// (max surge — observed above planned, max sag — observed below).
     pub fn drift_split(&self, observed: &[f64]) -> (f64, f64) {
         let mut surge = 0.0_f64;
         let mut sag = 0.0_f64;
         for (o, p) in observed.iter().zip(&self.planned) {
-            let rel = self.rel_drift(*o, *p);
+            let rel = rel_drift(*o, *p, self.cfg.rate_floor);
             if o > p {
                 surge = surge.max(rel);
             } else {
@@ -184,46 +623,27 @@ impl ReplanController {
 
     /// Drift check at time `t`. `window_slo` is the recent SLO attainment
     /// (None when no request finished in the window). Returns the rates
-    /// to re-optimize for when adaptation is warranted.
+    /// to re-optimize for when the policy decides adaptation is
+    /// warranted. The policy's state update runs on every call — even
+    /// inside the migration rate-limit window — so forecasts and
+    /// hysteresis bars stay warm.
     pub fn should_replan(
         &mut self,
         t: f64,
         window_slo: Option<f64>,
     ) -> Option<ReplanDecision> {
+        let observed = self.windowed_rates(t);
+        let obs = ReplanObservation {
+            t,
+            observed,
+            planned: self.planned.clone(),
+            window_slo,
+        };
+        self.policy.observe(&self.cfg, &obs);
         if t - self.last_replan < self.cfg.min_replan_interval {
             return None;
         }
-        let observed = self.windowed_rates(t);
-        let (surge, sag) = self.drift_split(&observed);
-        let drift = surge.max(sag);
-        let slo_bad = window_slo.is_some_and(|s| s < self.cfg.slo_floor);
-        let trigger = surge > self.cfg.surge_threshold
-            || sag > self.cfg.drift_threshold
-            || (slo_bad && drift > 0.5 * self.cfg.surge_threshold);
-        if !trigger {
-            return None;
-        }
-        // Which LLMs individually crossed their threshold — the warm
-        // optimizer's re-place set.
-        let dirty: Vec<bool> = observed
-            .iter()
-            .zip(&self.planned)
-            .map(|(o, p)| {
-                let rel = self.rel_drift(*o, *p);
-                if o > p {
-                    rel > self.cfg.surge_threshold
-                } else {
-                    rel > self.cfg.drift_threshold
-                }
-            })
-            .collect();
-        // Plan for the observed rates with headroom (a ramping spike is
-        // still growing), floored so every LLM keeps a nonzero share.
-        let rates: Vec<f64> = observed
-            .iter()
-            .map(|r| (r * self.cfg.plan_headroom).max(0.05))
-            .collect();
-        Some(ReplanDecision { rates, drift, dirty })
+        self.policy.decide(&self.cfg, &obs)
     }
 
     /// Commit a decision that was actually applied (placement migrated),
@@ -243,6 +663,13 @@ impl ReplanController {
     /// the very next tick.
     pub fn note_checked(&mut self, rates: Vec<f64>) {
         self.planned = rates;
+    }
+
+    /// Report the measured cost of an applied migration (downtime ×
+    /// preempted work) to the policy. Hysteresis learns its trigger bar
+    /// from this; the other built-ins ignore it.
+    pub fn note_migration_cost(&mut self, cost: f64) {
+        self.policy.note_migration_cost(cost);
     }
 }
 
@@ -280,6 +707,7 @@ mod tests {
         let d = c.should_replan(60.0, Some(0.9)).expect("must trigger");
         assert!(d.drift > 0.5, "drift={}", d.drift);
         assert!(d.rates[1] > 5.0, "rates={:?}", d.rates);
+        assert!(!d.slo_driven, "a rate crossing is not SLO-driven");
         c.note_replanned(60.0, d.rates.clone());
         // Rate-limited immediately after the re-placement.
         assert!(c.should_replan(61.0, Some(0.9)).is_none());
@@ -321,6 +749,28 @@ mod tests {
         assert!(c.should_replan(60.0, Some(0.9)).is_none());
         let mut c2 = c.clone();
         assert!(c2.should_replan(60.0, Some(0.2)).is_some());
+    }
+
+    #[test]
+    fn slo_driven_decision_is_marked_and_carries_no_dirty_flags() {
+        // The exact wart the engine must handle: an SLO-collapse trigger
+        // where no LLM crossed its own rate threshold produces all-false
+        // dirty flags — warm-start would keep the placement verbatim, so
+        // the decision is explicitly marked for the cold-search fallback.
+        let mut c = ctl(&[4.0, 1.0]);
+        for i in 0..25 {
+            c.observe_arrival(0, 50.0 + i as f64 * 0.4);
+        }
+        for i in 0..10 {
+            c.observe_arrival(1, 50.0 + i as f64);
+        }
+        let d = c.should_replan(60.0, Some(0.2)).expect("collapse fires");
+        assert!(d.slo_driven, "only the SLO clause fired");
+        assert!(
+            d.dirty.iter().all(|x| !x),
+            "no LLM crossed its own bar: {:?}",
+            d.dirty
+        );
     }
 
     #[test]
@@ -372,5 +822,126 @@ mod tests {
         }
         // At t=30 with a 10s window, all arrivals have aged out.
         assert_eq!(c.windowed_rates(30.0)[0], 0.0);
+    }
+
+    #[test]
+    fn policy_kinds_parse_round_trip_and_build() {
+        for k in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+            assert_eq!(k.build().kind(), k);
+        }
+        assert_eq!(PolicyKind::parse("nope"), None);
+        // Controller runs the kind its config selects.
+        let cfg = ReplanConfig {
+            policy: PolicyKind::Forecast,
+            ..Default::default()
+        };
+        let c = ReplanController::new(cfg, vec![1.0]);
+        assert_eq!(c.policy_kind(), PolicyKind::Forecast);
+    }
+
+    #[test]
+    fn forecast_fires_before_threshold_on_a_ramp() {
+        // Observed rate ramps 2.0 → 5.0 in 0.25 req/s steps per tick.
+        // The plain threshold rule crosses its 0.4 surge bar at
+        // observed > 10/3 (k = 6); the forecast's trend term must get
+        // there strictly earlier.
+        let cfg = ReplanConfig::default();
+        let planned = vec![2.0];
+        let mut fc = ForecastPolicy::default();
+        let th = ThresholdPolicy;
+        let mut fc_at = None;
+        let mut th_at = None;
+        for k in 0..13 {
+            let obs = ReplanObservation {
+                t: 5.0 * (k + 1) as f64,
+                observed: vec![2.0 + 0.25 * k as f64],
+                planned: planned.clone(),
+                window_slo: Some(0.95),
+            };
+            fc.observe(&cfg, &obs);
+            if fc_at.is_none() && fc.decide(&cfg, &obs).is_some() {
+                fc_at = Some(k);
+            }
+            if th_at.is_none() && th.decide(&cfg, &obs).is_some() {
+                th_at = Some(k);
+            }
+        }
+        let f = fc_at.expect("forecast must fire on the ramp");
+        let t = th_at.expect("threshold must fire on the ramp");
+        assert!(f < t, "forecast fired at tick {f}, threshold at {t}");
+    }
+
+    #[test]
+    fn forecast_decision_marks_the_ramping_llm_dirty() {
+        let cfg = ReplanConfig::default();
+        let mut fc = ForecastPolicy::default();
+        let mut last = None;
+        for k in 0..13 {
+            let obs = ReplanObservation {
+                t: 5.0 * (k + 1) as f64,
+                observed: vec![2.0 + 0.3 * k as f64, 1.0],
+                planned: vec![2.0, 1.0],
+                window_slo: Some(0.95),
+            };
+            fc.observe(&cfg, &obs);
+            if let Some(d) = fc.decide(&cfg, &obs) {
+                last = Some(d);
+                break;
+            }
+        }
+        let d = last.expect("the ramp must fire");
+        assert!(d.dirty[0], "ramping LLM must be dirty: {:?}", d.dirty);
+        assert!(!d.dirty[1], "flat LLM must stay clean: {:?}", d.dirty);
+        assert!(!d.slo_driven);
+    }
+
+    #[test]
+    fn hysteresis_raises_the_bar_after_costly_migrations_then_relaxes() {
+        let cfg = ReplanConfig::default();
+        let obs = ReplanObservation {
+            t: 20.0,
+            // Relative surge 0.4286: just above the base 0.4 bar.
+            observed: vec![3.5],
+            planned: vec![2.0],
+            window_slo: Some(0.95),
+        };
+        let mut hy = HysteresisPolicy::default();
+        assert!(hy.decide(&cfg, &obs).is_some(), "base bar must fire");
+        // An expensive migration (1s downtime × 90 preempted requests)
+        // raises the bar…
+        hy.note_migration_cost(90.0);
+        assert!(hy.bar() > 1.4, "bar={}", hy.bar());
+        assert!(
+            hy.decide(&cfg, &obs).is_none(),
+            "the raised bar must hold the same surge back"
+        );
+        // …and quiet ticks relax it back toward 1.
+        for _ in 0..30 {
+            hy.observe(&cfg, &obs);
+        }
+        assert!(hy.bar() < 1.05, "bar={}", hy.bar());
+        assert!(
+            hy.decide(&cfg, &obs).is_some(),
+            "the relaxed bar fires again"
+        );
+    }
+
+    #[test]
+    fn slo_window_evicts_and_distinguishes_empty_from_measured() {
+        let mut w = SloWindow::new(10.0);
+        assert_eq!(w.attainment(5.0), None, "no completions yet");
+        w.push(1.0, true);
+        w.push(2.0, false);
+        w.push(9.0, true);
+        // All three inside the window at t=10: 2/3 met.
+        let a = w.attainment(10.0).expect("three completions");
+        assert!((a - 2.0 / 3.0).abs() < 1e-12, "a={a}");
+        // At t=15 the window is [5, 15): only the t=9 completion stays.
+        assert_eq!(w.attainment(15.0), Some(1.0));
+        assert_eq!(w.len(), 1);
+        // Slide past everything: back to None (never Some(NaN)).
+        assert_eq!(w.attainment(30.0), None);
+        assert!(w.is_empty());
     }
 }

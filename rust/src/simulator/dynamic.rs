@@ -5,26 +5,36 @@
 //! up-front (§3.1/3.2). This engine adds the adaptation loop the paper
 //! leaves open: a [`ReplanController`] watches windowed per-LLM arrival
 //! rates and SLO attainment from inside the event loop (the `Replan`
-//! event, alongside the paper's intra-unit `Adapt`), and when traffic
-//! drifts past a threshold it re-runs the placement optimizer (Alg. 1+2)
-//! on the fresh rates and *migrates* to the new placement.
+//! event, alongside the paper's intra-unit `Adapt`), delegates the
+//! trigger to a pluggable [`ReplanPolicy`] (threshold, forecasting, or
+//! hysteresis — see [`crate::coordinator::replan`]), and when the policy
+//! fires it re-runs the placement optimizer (Alg. 1+2) on the fresh
+//! rates and *migrates* to the new placement.
 //!
 //! Migration is modeled honestly as unit downtime: every in-flight and
 //! queued request is preempted (vLLM-style recompute — it keeps its
 //! original arrival time, so the penalty lands in its measured latency),
 //! the new units start with cold KV caches, and no job may start for
-//! `migration_downtime` seconds. Arrivals during the blackout queue.
-//! Epoch tags on unit-addressed events make stale completions from the
-//! torn-down placement harmless.
+//! `migration_downtime` seconds. Arrivals during the blackout are
+//! buffered in a side queue and bulk-delivered at resume time (they used
+//! to be re-pushed through the event heap one at a time — the heap-churn
+//! bottleneck ROADMAP's Scale item named). Epoch tags on unit-addressed
+//! events make stale completions from the torn-down placement harmless.
 //!
 //! Everything is deterministic: same stream + same configs ⇒ bit-identical
-//! [`Evaluation`], replans included.
+//! [`Evaluation`], replans included. (The per-decision wall-clock timing
+//! in [`ReplanOutcome::decision_ms`] is the one exception — it is
+//! reporting-only and excluded from every determinism comparison.)
+//!
+//! [`ReplanPolicy`]: crate::coordinator::replan::ReplanPolicy
 
 use std::collections::BinaryHeap;
 
 use super::{Event, EventKind, Simulation};
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
-use crate::coordinator::replan::{ReplanConfig, ReplanController};
+use crate::coordinator::replan::{
+    ReplanConfig, ReplanController, ReplanDecision, SloWindow,
+};
 use crate::coordinator::{
     muxserve_placement, muxserve_placement_warm, EngineConfig, Placement,
 };
@@ -46,6 +56,14 @@ pub struct ReplanOutcome {
     pub rates: Vec<f64>,
     /// Unit count of the active placement afterwards.
     pub units: usize,
+    /// Whether the warm-started optimizer served this decision (false =
+    /// cold full search, which includes every SLO-driven decision with
+    /// no dirty flags — see `on_replan`).
+    pub warm: bool,
+    /// Wall-clock milliseconds the placement search took — the replan
+    /// decision latency the `ab` harness aggregates. Host-dependent:
+    /// excluded from determinism comparisons.
+    pub decision_ms: f64,
 }
 
 /// Result of a dynamic run.
@@ -56,8 +74,9 @@ pub struct DynamicReport {
     /// Number of replans that actually migrated the placement.
     pub migrations: usize,
     pub dropped: usize,
-    /// Events processed by the run loop (arrivals incl. blackout
-    /// re-deliveries, completions, adapt and replan ticks).
+    /// Events processed by the run loop (arrivals, completions, adapt
+    /// and replan ticks; blackout re-deliveries are bulk-applied from
+    /// the side buffer and no longer count as heap events).
     pub events: u64,
 }
 
@@ -102,11 +121,13 @@ pub struct DynamicSimulation {
     epoch: u64,
     /// No unit may start work before this time (migration blackout).
     resume_at: f64,
+    /// Arrivals (and preempted requests) that landed inside a blackout,
+    /// awaiting bulk delivery at `resume_at`.
+    blackout_buf: Vec<Request>,
     completed: Vec<RequestRecord>,
-    /// (finish, met-SLO) of recent completions — the windowed SLO
-    /// monitor's working set, evicted as the window slides so each tick
-    /// costs O(window) instead of O(all records so far).
-    recent_completions: Vec<(f64, bool)>,
+    /// Windowed SLO monitor fed from harvested completions at each
+    /// replan tick.
+    slo: SloWindow,
     replans: Vec<ReplanOutcome>,
     migrations: usize,
     dropped: usize,
@@ -152,8 +173,9 @@ impl DynamicSimulation {
             sim,
             epoch: 0,
             resume_at: 0.0,
+            blackout_buf: Vec::new(),
             completed: Vec::new(),
-            recent_completions: Vec::new(),
+            slo: SloWindow::new(rcfg.window),
             replans: Vec::new(),
             migrations: 0,
             dropped: 0,
@@ -203,32 +225,63 @@ impl DynamicSimulation {
         }
         self.schedule_adapt_ticks(0.0, duration, &mut heap, &mut seq);
 
-        while let Some(ev) = heap.pop() {
+        loop {
+            let Some(ev) = heap.pop() else {
+                // The heap drained mid-blackout (the stream ended while
+                // requests sat buffered): deliver them — their
+                // completions re-seed the heap — and keep going.
+                if !self.blackout_buf.is_empty()
+                    && self.resume_at <= duration
+                {
+                    self.flush_blackout(&mut heap, &mut seq);
+                    continue;
+                }
+                break;
+            };
             // Negated form so a NaN time (which sorts last) also stops
             // the run instead of being processed and poisoning `now`.
             if !(ev.time <= duration) {
+                if !self.blackout_buf.is_empty()
+                    && self.resume_at <= duration
+                {
+                    // The next event lies past the horizon but the
+                    // blackout ends inside it: deliver the buffered work
+                    // (its completions may still land before `duration`)
+                    // and then reconsider this event in order.
+                    self.flush_blackout(&mut heap, &mut seq);
+                    heap.push(ev);
+                    continue;
+                }
                 break;
+            }
+            // Any event at or past the blackout end means the buffered
+            // arrivals are due: bulk-deliver them (admitted at
+            // `resume_at` — no unit has advanced past that point, since
+            // every earlier event either buffered or was epoch-stale),
+            // then re-queue this event: the delivered work's completions
+            // may precede it and must be processed in time order.
+            if !self.blackout_buf.is_empty() && ev.time >= self.resume_at {
+                self.flush_blackout(&mut heap, &mut seq);
+                heap.push(ev);
+                continue;
             }
             self.events += 1;
             match ev.kind {
                 EventKind::Arrival(r) => {
-                    // First delivery (event time == arrival time) feeds
-                    // the drift monitor; blackout re-deliveries do not,
-                    // and a disarmed run records nothing (the window is
-                    // only ever evicted from should_replan, so observing
+                    // Heap arrivals are always first deliveries now that
+                    // blackout re-deliveries bypass the heap (the side
+                    // buffer below), and they feed the drift monitor; a
+                    // disarmed run records nothing (the window is only
+                    // ever evicted from should_replan, so observing
                     // without Replan ticks would accumulate unboundedly).
-                    if self.adaptive && ev.time == r.arrival {
+                    debug_assert!(ev.time == r.arrival);
+                    if self.adaptive {
                         self.controller.observe_arrival(r.llm, ev.time);
                     }
                     if ev.time < self.resume_at {
-                        heap.push(Event {
-                            time: self.resume_at,
-                            seq,
-                            unit: usize::MAX,
-                            epoch: 0,
-                            kind: EventKind::Arrival(r),
-                        });
-                        seq += 1;
+                        // Mid-blackout: hold in the side buffer for bulk
+                        // delivery instead of cycling through the heap.
+                        self.blackout_buf.push(r);
                         continue;
                     }
                     let (u, local) = self.sim.llm_map[r.llm];
@@ -318,6 +371,29 @@ impl DynamicSimulation {
         }
     }
 
+    /// Bulk-deliver every blackout-buffered arrival at `resume_at`
+    /// (preempted requests first — they are buffered at migration time —
+    /// then later arrivals in pop order).
+    fn flush_blackout(
+        &mut self,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let t = self.resume_at;
+        for r in std::mem::take(&mut self.blackout_buf) {
+            let (u, local) = self.sim.llm_map[r.llm];
+            if u == usize::MAX {
+                continue;
+            }
+            let mut lr = r;
+            lr.llm = local;
+            let unit = &mut self.sim.units[u];
+            unit.advance_time(t);
+            unit.on_arrival(t, lr);
+            self.push_started(u, heap, seq);
+        }
+    }
+
     /// Arm the paper's periodic quota adaptation for every (non-empty)
     /// adaptive unit of the current placement.
     fn schedule_adapt_ticks(
@@ -344,8 +420,22 @@ impl DynamicSimulation {
         }
     }
 
-    /// The `Replan` tick: refresh the drift monitor, and when it fires,
-    /// re-optimize and (if the shape changed) migrate with downtime.
+    /// Harvest fresh completions into the windowed SLO monitor and
+    /// return the current attainment (None when nothing finished inside
+    /// the window).
+    fn refresh_slo_window(&mut self, t: f64) -> Option<f64> {
+        let fresh = self.sim.harvest_records();
+        let scale = self.controller.config().slo_scale;
+        for r in &fresh {
+            self.slo.push(r.finish, r.meets_slo(scale));
+        }
+        self.completed.extend(fresh);
+        self.slo.attainment(t)
+    }
+
+    /// The `Replan` tick: refresh the drift monitor, and when the policy
+    /// fires, re-optimize and (if the shape changed) migrate with
+    /// downtime.
     fn on_replan(
         &mut self,
         t: f64,
@@ -356,23 +446,24 @@ impl DynamicSimulation {
         if t < self.resume_at {
             return; // mid-blackout: check again next tick
         }
-        // Harvest completions so the windowed SLO monitor is current.
-        let fresh = self.sim.harvest_records();
-        let lo = t - self.controller.config().window;
-        let scale = self.controller.config().slo_scale;
-        self.recent_completions
-            .extend(fresh.iter().map(|r| (r.finish, r.meets_slo(scale))));
-        self.recent_completions.retain(|(finish, _)| *finish >= lo);
-        self.completed.extend(fresh);
-        let tot = self.recent_completions.len();
-        let met =
-            self.recent_completions.iter().filter(|(_, m)| *m).count();
-        let window_slo = (tot > 0).then(|| met as f64 / tot as f64);
-
+        let window_slo = self.refresh_slo_window(t);
         let Some(decision) = self.controller.should_replan(t, window_slo)
         else {
             return;
         };
+        self.apply_decision(t, duration, decision, heap, seq);
+    }
+
+    /// Act on a fired decision: run the placement search (warm or cold),
+    /// and migrate when the shape changed.
+    fn apply_decision(
+        &mut self,
+        t: f64,
+        duration: f64,
+        decision: ReplanDecision,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
         let new_workloads: Vec<WorkloadSpec> = self
             .workloads
             .iter()
@@ -383,10 +474,20 @@ impl DynamicSimulation {
                 w
             })
             .collect();
-        // Decision path: warm-start re-places only the drifted units
-        // (falling back to the cold search per the placement-module
-        // contract); the default is the paper-faithful full search.
-        let searched = if self.controller.config().warm_start {
+        // Decision path: warm-start re-places only the units holding a
+        // dirty LLM — so a decision with NO dirty flags (in the built-in
+        // policies exactly the `slo_driven` case: the SLO-floor monitor
+        // fired while every LLM sat inside its own threshold) must go to
+        // the cold full search, since handing it to the warm optimizer
+        // would return the placement verbatim and turn the SLO-collapse
+        // trigger into a silent no-op. The routing keys off `dirty`
+        // itself — the operative fact — and stays correct for custom
+        // policies that mark `slo_driven` alongside a dirty flag;
+        // `slo_driven` is the diagnostic label, not the switch.
+        let use_warm = self.controller.config().warm_start
+            && decision.dirty.iter().any(|&d| d);
+        let t0 = std::time::Instant::now();
+        let searched = if use_warm {
             muxserve_placement_warm(
                 &self.specs,
                 &new_workloads,
@@ -403,6 +504,7 @@ impl DynamicSimulation {
                 &self.est,
             )
         };
+        let decision_ms = t0.elapsed().as_secs_f64() * 1e3;
         let Some(placement) = searched else {
             // No feasible placement for the observed rates: keep serving
             // with the current one, but stop re-triggering every tick.
@@ -426,6 +528,11 @@ impl DynamicSimulation {
             // tear down, rebuild, and blackout for the downtime.
             self.dropped += self.sim.dropped();
             let pending = self.sim.drain_all_requests();
+            // Feed the measured cost (downtime × preempted work) back to
+            // the policy — hysteresis learns its trigger bar from it.
+            let downtime = self.controller.config().migration_downtime;
+            self.controller
+                .note_migration_cost(downtime * pending.len() as f64);
             self.workloads = new_workloads;
             self.sim = Simulation::from_placement(
                 &placement,
@@ -438,18 +545,15 @@ impl DynamicSimulation {
             self.signature = new_sig;
             self.epoch += 1;
             self.migrations += 1;
-            self.resume_at =
-                t + self.controller.config().migration_downtime;
-            for r in pending {
-                heap.push(Event {
-                    time: self.resume_at,
-                    seq: *seq,
-                    unit: usize::MAX,
-                    epoch: 0,
-                    kind: EventKind::Arrival(r),
-                });
-                *seq += 1;
-            }
+            self.resume_at = t + downtime;
+            // The preempted work waits in the blackout buffer (it keeps
+            // its original arrival times) and is bulk-delivered at
+            // `resume_at` together with any blackout arrivals — no
+            // per-request heap churn. The buffer is empty here: any
+            // previous blackout was flushed before this Replan event
+            // was processed.
+            debug_assert!(self.blackout_buf.is_empty());
+            self.blackout_buf = pending;
             self.schedule_adapt_ticks(self.resume_at, duration, heap, seq);
         }
         self.replans.push(ReplanOutcome {
@@ -458,6 +562,8 @@ impl DynamicSimulation {
             drift: decision.drift,
             rates: decision.rates,
             units: self.sim.units.len(),
+            warm: use_warm,
+            decision_ms,
         });
     }
 }
@@ -466,7 +572,10 @@ impl DynamicSimulation {
 mod tests {
     use super::*;
     use crate::config::llama_spec;
-    use crate::workload::{merge_streams, poisson_requests};
+    use crate::coordinator::replan::PolicyKind;
+    use crate::workload::{
+        merge_streams, poisson_requests, Scenario, ScenarioShape,
+    };
     use crate::util::Rng;
 
     fn stationary_setup(
@@ -574,5 +683,169 @@ mod tests {
         let (a, b) = (run(), run());
         assert_eq!(a.eval, b.eval);
         assert_eq!(a.migrations, b.migrations);
+    }
+
+    #[test]
+    fn dynamic_run_is_deterministic_under_every_policy() {
+        let (specs, workloads, cluster, requests) = stationary_setup();
+        for policy in PolicyKind::all() {
+            let run = || {
+                let rcfg = ReplanConfig { policy, ..Default::default() };
+                let dy = DynamicSimulation::new(
+                    &specs,
+                    &workloads,
+                    &cluster,
+                    EngineConfig::muxserve(),
+                    rcfg,
+                    true,
+                )
+                .unwrap();
+                dy.run(&requests, 60.0)
+            };
+            let (a, b) = (run(), run());
+            assert_eq!(a.eval, b.eval, "policy {}", policy.name());
+            assert_eq!(a.migrations, b.migrations);
+        }
+    }
+
+    #[test]
+    fn slo_driven_replan_falls_back_to_cold_search_under_warm_start() {
+        // Regression for the silent no-op: a decision triggered purely
+        // by the SLO-floor monitor carries no per-LLM dirty flag, and
+        // `muxserve_placement_warm` with an all-false dirty set returns
+        // the previous placement verbatim — so under warm-start the
+        // SLO-collapse trigger used to change nothing. The engine must
+        // route such decisions to the cold full search.
+        let (specs, workloads, cluster, _) = stationary_setup();
+        let rcfg =
+            ReplanConfig { warm_start: true, ..Default::default() };
+        let mut dy = DynamicSimulation::new(
+            &specs,
+            &workloads,
+            &cluster,
+            EngineConfig::muxserve(),
+            rcfg,
+            true,
+        )
+        .unwrap();
+
+        // An SLO-driven decision: moderately drifted rates (strictly
+        // easier than the planning rates, so a placement certainly
+        // exists), nothing individually over its threshold.
+        let decision = ReplanDecision {
+            rates: vec![1.4, 0.6],
+            drift: 0.3,
+            dirty: vec![false, false],
+            slo_driven: true,
+        };
+
+        // The wart is real: the warm optimizer keeps the shape verbatim
+        // when nothing is flagged dirty.
+        let new_workloads: Vec<WorkloadSpec> = workloads
+            .iter()
+            .zip(&decision.rates)
+            .map(|(w, r)| {
+                let mut w = w.clone();
+                w.rate = *r;
+                w
+            })
+            .collect();
+        let warm = muxserve_placement_warm(
+            &specs,
+            &new_workloads,
+            &cluster,
+            &dy.est,
+            &dy.placement,
+            &decision.dirty,
+        )
+        .expect("warm answer exists");
+        assert_eq!(
+            placement_signature(&warm),
+            dy.signature,
+            "all-false dirty must keep the shape (the documented wart)"
+        );
+
+        // The fixed engine records a cold search for this decision.
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut seq = 0u64;
+        dy.apply_decision(20.0, 60.0, decision, &mut heap, &mut seq);
+        let out = dy.replans.last().expect("decision must be recorded");
+        assert!(
+            !out.warm,
+            "an SLO-driven decision with no dirty flags must fall back \
+             to the cold full search even when warm_start is on"
+        );
+    }
+
+    #[test]
+    fn dirty_decisions_still_use_the_warm_path() {
+        // Complement of the SLO-floor fallback: when a dirty flag IS
+        // set, warm_start must keep routing through the warm optimizer.
+        let (specs, workloads, cluster, _) = stationary_setup();
+        let rcfg =
+            ReplanConfig { warm_start: true, ..Default::default() };
+        let mut dy = DynamicSimulation::new(
+            &specs,
+            &workloads,
+            &cluster,
+            EngineConfig::muxserve(),
+            rcfg,
+            true,
+        )
+        .unwrap();
+        let decision = ReplanDecision {
+            rates: vec![2.0, 3.0],
+            drift: 0.6,
+            dirty: vec![false, true],
+            slo_driven: false,
+        };
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut seq = 0u64;
+        dy.apply_decision(20.0, 60.0, decision, &mut heap, &mut seq);
+        let out = dy.replans.last().expect("decision must be recorded");
+        assert!(out.warm, "dirty decisions take the warm path");
+    }
+
+    #[test]
+    fn blackout_buffered_arrivals_are_all_delivered() {
+        // A long blackout (5s at flash-crowd intensity) buffers many
+        // arrivals; they must be bulk-delivered at resume time, not lost
+        // and not trickled one at a time through the heap.
+        let scenario = Scenario::new(ScenarioShape::FlashCrowd);
+        let data = scenario.build();
+        let specs = scenario.model_specs();
+        let cluster = ClusterSpec::new(4, 1);
+        let rcfg = ReplanConfig {
+            migration_downtime: 5.0,
+            ..Default::default()
+        };
+        let dy = DynamicSimulation::new(
+            &specs,
+            &data.planning_workloads,
+            &cluster,
+            EngineConfig::muxserve(),
+            rcfg,
+            true,
+        )
+        .unwrap();
+        let report = dy.run(&data.requests, scenario.duration);
+        assert!(
+            report.migrations >= 1,
+            "the flash crowd must migrate: {:?}",
+            report.replans
+        );
+        let done = report.eval.records.len();
+        let arrived = data.requests.len();
+        assert!(
+            done + report.dropped <= arrived,
+            "completions + drops cannot exceed arrivals: {done} + {} > \
+             {arrived}",
+            report.dropped
+        );
+        assert!(
+            done as f64 >= arrived as f64 / 3.0,
+            "5s blackouts must not lose the buffered work: {done} of \
+             {arrived}"
+        );
     }
 }

@@ -126,9 +126,16 @@ impl MarkovModulated {
         MarkovModulated { base, burst, bursts }
     }
 
-    /// Whether the process is in its burst state at `t`.
+    /// Whether the process is in its burst state at `t`. The path is
+    /// sorted and non-overlapping by construction, so a `partition_point`
+    /// binary search finds the last burst starting at or before `t` —
+    /// O(log bursts) per call where the old linear scan made
+    /// Lewis–Shedler thinning O(bursts) per *candidate* arrival (the
+    /// envelope samples at the peak rate, so long bursty horizons paid
+    /// quadratically).
     pub fn in_burst(&self, t: f64) -> bool {
-        self.bursts.iter().any(|(s, e)| *s <= t && t < *e)
+        let i = self.bursts.partition_point(|(s, _)| *s <= t);
+        i > 0 && t < self.bursts[i - 1].1
     }
 }
 
@@ -299,6 +306,45 @@ mod tests {
         let visited_quiet = (0..3000).any(|i| !a.in_burst(i as f64 * 0.1));
         assert!(visited_burst && visited_quiet);
         assert_eq!(a.peak_rate(), 8.0);
+    }
+
+    #[test]
+    fn in_burst_boundaries_are_start_inclusive_end_exclusive() {
+        // Hand-built path: the binary search must agree with the
+        // documented interval semantics at every edge.
+        let p = MarkovModulated {
+            base: 1.0,
+            burst: 5.0,
+            bursts: vec![(10.0, 20.0), (30.0, 40.0)],
+        };
+        assert!(!p.in_burst(-5.0));
+        assert!(!p.in_burst(9.999));
+        assert!(p.in_burst(10.0));
+        assert!(p.in_burst(19.999));
+        assert!(!p.in_burst(20.0));
+        assert!(!p.in_burst(25.0));
+        assert!(p.in_burst(30.0));
+        assert!(p.in_burst(39.0));
+        assert!(!p.in_burst(40.0));
+        assert!(!p.in_burst(1e9));
+    }
+
+    #[test]
+    fn in_burst_matches_linear_scan_on_a_sampled_grid() {
+        // Regression for the O(bursts) scan: the binary search must be
+        // extensionally identical to the old linear predicate over a
+        // generated path with many bursts.
+        let p = MarkovModulated::new(1.0, 8.0, 5.0, 3.0, 500.0, 77);
+        assert!(
+            p.bursts.len() > 10,
+            "path must hold many bursts: {}",
+            p.bursts.len()
+        );
+        for k in 0..5200 {
+            let t = k as f64 * 0.1 - 10.0;
+            let linear = p.bursts.iter().any(|(s, e)| *s <= t && t < *e);
+            assert_eq!(p.in_burst(t), linear, "t={t}");
+        }
     }
 
     #[test]

@@ -67,6 +67,18 @@ impl ScenarioShape {
             ScenarioShape::Drift,
         ]
     }
+
+    /// The four non-stationary shapes — the adaptation-policy A/B suite
+    /// (stationary is bench-drift's control group, not an adaptation
+    /// stressor).
+    pub fn dynamic() -> [ScenarioShape; 4] {
+        [
+            ScenarioShape::FlashCrowd,
+            ScenarioShape::Diurnal,
+            ScenarioShape::Bursty,
+            ScenarioShape::Drift,
+        ]
+    }
 }
 
 /// A fully parameterized dynamic-workload scenario.
@@ -246,6 +258,10 @@ mod tests {
             assert_eq!(ScenarioShape::parse(s.name()), Some(s));
         }
         assert_eq!(ScenarioShape::parse("nope"), None);
+        // The dynamic suite is exactly `all` minus the stationary
+        // control group.
+        assert_eq!(ScenarioShape::dynamic().len() + 1, ScenarioShape::all().len());
+        assert!(!ScenarioShape::dynamic().contains(&ScenarioShape::Stationary));
     }
 
     #[test]

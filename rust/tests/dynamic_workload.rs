@@ -10,7 +10,7 @@
 use muxserve::bench::compare_three_systems;
 use muxserve::bench::drift::{run_scenario, run_trace, scenario_cluster};
 use muxserve::config::{llama_spec, ClusterSpec};
-use muxserve::coordinator::ReplanConfig;
+use muxserve::coordinator::{PolicyKind, ReplanConfig};
 use muxserve::simulator::DynamicReport;
 use muxserve::workload::{
     requests_from_trace, requests_to_trace, synthetic_workload, Scenario,
@@ -144,6 +144,36 @@ fn exported_trace_replays_through_the_engine() {
         report.eval.records.len(),
         replayed.len()
     );
+}
+
+#[test]
+fn every_replan_policy_handles_the_flash_crowd_end_to_end() {
+    // Policy injection wired through config: the forecasting and
+    // hysteresis policies must drive the same engine path as the
+    // threshold rule (the SLO comparison between them is the `ab`
+    // harness's job; this pins the plumbing).
+    let scenario = Scenario::new(ScenarioShape::FlashCrowd);
+    let cluster = scenario_cluster();
+    for policy in PolicyKind::all() {
+        let rcfg = ReplanConfig { policy, ..Default::default() };
+        let (report, arrived) =
+            run_scenario(&scenario, &cluster, Some(rcfg))
+                .unwrap_or_else(|| {
+                    panic!("placement for policy {}", policy.name())
+                });
+        assert!(arrived > 0);
+        assert!(
+            report.migrations >= 1,
+            "policy {} must migrate on the flash crowd: {:?}",
+            policy.name(),
+            report.replans
+        );
+        assert!(
+            !report.eval.records.is_empty(),
+            "policy {} completed nothing",
+            policy.name()
+        );
+    }
 }
 
 #[test]
