@@ -4,19 +4,23 @@
 //! The harness materializes each scenario ONCE (the build is
 //! deterministic in its seed) and replays the exact same arrival stream
 //! through a static reference run and through every `policy ×
-//! {cold, warm}` combination, so differences in the comparison table are
-//! attributable to the adaptation policy alone — the AlpaServe-style
-//! controlled comparison ROADMAP's "Adaptation policy" item asked for.
+//! {cold, warm} × {blackout, staged}` combination, so differences in the
+//! comparison table are attributable to the adaptation policy (or the
+//! migration executor) alone — the AlpaServe-style controlled comparison
+//! ROADMAP's "Adaptation policy" item asked for.
 //!
 //! Per cell it reports SLO attainment, p99 latency, migration count,
-//! replan count, and the replan decision latency (placement-search wall
-//! time, from [`ReplanOutcome::decision_ms`]). Everything except the
-//! wall-clock latency columns is deterministic: two runs with the same
-//! config produce byte-identical `to_json(false)` / `to_markdown(false)`
-//! output (pinned by a test), which is what makes the table trustworthy
-//! evidence for the warm-start default contract: the report computes the
-//! minimum warm−cold SLO delta across all cells and a parity verdict
-//! against [`WARM_PARITY_EPS`].
+//! replan count, total migration downtime (LLM-seconds) and priced
+//! migration cost, KV-copy resumes, and the replan decision latency
+//! (placement-search wall time, from [`ReplanOutcome::decision_ms`]).
+//! Everything except the wall-clock latency columns is deterministic:
+//! two runs with the same config produce byte-identical
+//! `to_json(false)` / `to_markdown(false)` output (pinned by a test),
+//! which is what makes the table trustworthy evidence for the two
+//! default-flip contracts: the minimum warm−cold SLO delta and parity
+//! verdict against [`WARM_PARITY_EPS`], and the worst staged−blackout
+//! downtime delta (negative everywhere ⇒ staged strictly cheaper) that
+//! gates the `migration_mode` default.
 //!
 //! [`ReplanOutcome::decision_ms`]: crate::simulator::ReplanOutcome
 
@@ -24,6 +28,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use crate::bench::drift::{run_scenario_on, scenario_cluster};
+use crate::coordinator::migration::MigrationMode;
 use crate::coordinator::replan::PolicyKind;
 use crate::coordinator::ReplanConfig;
 use crate::util::json::Json;
@@ -46,13 +51,16 @@ pub struct AbConfig {
     pub shapes: Vec<ScenarioShape>,
     /// Warm-start modes crossed with the policies.
     pub warm_modes: Vec<bool>,
+    /// Migration executors crossed with everything else.
+    pub migration_modes: Vec<MigrationMode>,
     /// SLO scale for attainment reporting.
     pub slo_scale: f64,
 }
 
 impl AbConfig {
     /// The full comparison: three policies × the four dynamic scenarios
-    /// × {cold, warm}, at the scenario default duration.
+    /// × {cold, warm} × {blackout, staged}, at the scenario default
+    /// duration.
     pub fn full() -> AbConfig {
         AbConfig {
             duration: 120.0,
@@ -60,6 +68,7 @@ impl AbConfig {
             policies: PolicyKind::all().to_vec(),
             shapes: ScenarioShape::dynamic().to_vec(),
             warm_modes: vec![false, true],
+            migration_modes: MigrationMode::all().to_vec(),
             slo_scale: 8.0,
         }
     }
@@ -76,6 +85,8 @@ pub struct AbCell {
     pub shape: &'static str,
     pub policy: &'static str,
     pub warm: bool,
+    /// Migration executor ("blackout" | "staged").
+    pub migration: &'static str,
     pub arrived: usize,
     pub completed: usize,
     pub dropped: usize,
@@ -85,6 +96,12 @@ pub struct AbCell {
     pub p99_latency: f64,
     pub replans: usize,
     pub migrations: usize,
+    /// Σ per-LLM migration unavailability, LLM-seconds (rounded 1e-4).
+    pub downtime_s: f64,
+    /// Σ migration cost charged to the policy (rounded 1e-4).
+    pub migration_cost: f64,
+    /// Requests resumed from copied KV without recompute.
+    pub kv_resumed: usize,
     /// Replan decision latency (placement-search wall time), mean and
     /// max milliseconds over fired checks; 0 when none fired.
     /// Host-dependent — excluded from the deterministic outputs.
@@ -110,9 +127,18 @@ pub struct AbReport {
     pub slo_scale: f64,
     pub baselines: Vec<AbBaseline>,
     pub cells: Vec<AbCell>,
-    /// Minimum warm−cold SLO delta over all (policy, shape) pairs that
-    /// ran in both modes (None when the grid held no such pair).
+    /// Minimum warm−cold SLO delta over all (policy, shape, migration)
+    /// triples that ran in both modes (None when the grid held no such
+    /// pair).
     pub warm_delta_min: Option<f64>,
+    /// Worst (maximum) staged−blackout downtime delta over all
+    /// (policy, shape, warm) triples that ran both executors: negative
+    /// everywhere means staged strictly undercuts blackout on lost
+    /// service — the `migration_mode` default-flip gate.
+    pub staged_downtime_delta_max: Option<f64>,
+    /// Minimum staged−blackout SLO delta over the same pairs (staged
+    /// must not buy its downtime win with attainment).
+    pub staged_slo_delta_min: Option<f64>,
 }
 
 fn round(x: f64, unit: f64) -> f64 {
@@ -145,18 +171,20 @@ impl AbReport {
         };
         let _ = writeln!(
             out,
-            "| scenario | policy | warm | slo | p99(s) | migr | replans \
-             | done/arrived |{timing_hdr}"
+            "| scenario | policy | warm | migration | slo | p99(s) | \
+             migr | replans | downtime(s) | cost | kv-res | \
+             done/arrived |{timing_hdr}"
         );
         let timing_sep = if include_timing { "---|---|" } else { "" };
         let _ = writeln!(
             out,
-            "|---|---|---|---|---|---|---|---|{timing_sep}"
+            "|---|---|---|---|---|---|---|---|---|---|---|---|{timing_sep}"
         );
         for b in &self.baselines {
             let _ = writeln!(
                 out,
-                "| {} | static | - | {:.4} | {:.3} | 0 | 0 | {}/{} |{}",
+                "| {} | static | - | - | {:.4} | {:.3} | 0 | 0 | 0 | 0 \
+                 | 0 | {}/{} |{}",
                 b.shape,
                 b.slo,
                 b.p99_latency,
@@ -176,14 +204,19 @@ impl AbReport {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {:.4} | {:.3} | {} | {} | {}/{} |{}",
+                "| {} | {} | {} | {} | {:.4} | {:.3} | {} | {} | {:.4} \
+                 | {:.4} | {} | {}/{} |{}",
                 c.shape,
                 c.policy,
                 if c.warm { "on" } else { "off" },
+                c.migration,
                 c.slo,
                 c.p99_latency,
                 c.migrations,
                 c.replans,
+                c.downtime_s,
+                c.migration_cost,
+                c.kv_resumed,
                 c.completed,
                 c.arrived,
                 timing
@@ -208,6 +241,28 @@ impl AbReport {
                     out,
                     "\nwarm-start parity: not measured (grid held no \
                      cold/warm pair)"
+                );
+            }
+        }
+        match (self.staged_downtime_delta_max, self.staged_slo_delta_min)
+        {
+            (Some(dt), Some(slo)) => {
+                let _ = writeln!(
+                    out,
+                    "staged-vs-blackout: max downtime delta {dt:.4} \
+                     LLM-s, min slo delta {slo:.4} => {}",
+                    if dt < 0.0 && slo >= -WARM_PARITY_EPS {
+                        "STAGED WINS — staged is safe to default on"
+                    } else {
+                        "NO WIN — keep the blackout default"
+                    }
+                );
+            }
+            _ => {
+                let _ = writeln!(
+                    out,
+                    "staged-vs-blackout: not measured (grid held no \
+                     blackout/staged pair)"
                 );
             }
         }
@@ -264,6 +319,10 @@ impl AbReport {
                 );
                 m.insert("warm".to_string(), Json::Bool(c.warm));
                 m.insert(
+                    "migration".to_string(),
+                    Json::Str(c.migration.to_string()),
+                );
+                m.insert(
                     "arrived".to_string(),
                     Json::Num(c.arrived as f64),
                 );
@@ -287,6 +346,18 @@ impl AbReport {
                 m.insert(
                     "migrations".to_string(),
                     Json::Num(c.migrations as f64),
+                );
+                m.insert(
+                    "downtime_s".to_string(),
+                    Json::Num(c.downtime_s),
+                );
+                m.insert(
+                    "migration_cost".to_string(),
+                    Json::Num(c.migration_cost),
+                );
+                m.insert(
+                    "kv_resumed".to_string(),
+                    Json::Num(c.kv_resumed as f64),
                 );
                 if include_timing {
                     m.insert(
@@ -334,17 +405,35 @@ impl AbReport {
             "warm_parity_eps".to_string(),
             Json::Num(WARM_PARITY_EPS),
         );
+        root.insert(
+            "staged_downtime_delta_max".to_string(),
+            match self.staged_downtime_delta_max {
+                Some(d) => Json::Num(d),
+                None => Json::Null,
+            },
+        );
+        root.insert(
+            "staged_slo_delta_min".to_string(),
+            match self.staged_slo_delta_min {
+                Some(d) => Json::Num(d),
+                None => Json::Null,
+            },
+        );
         Json::Obj(root)
     }
 }
 
-/// Minimum warm−cold SLO delta over matched (shape, policy) pairs.
+/// Minimum warm−cold SLO delta over matched (shape, policy, migration)
+/// pairs.
 fn warm_delta_min(cells: &[AbCell]) -> Option<f64> {
     let mut min: Option<f64> = None;
     for w in cells.iter().filter(|c| c.warm) {
-        let cold = cells
-            .iter()
-            .find(|c| !c.warm && c.shape == w.shape && c.policy == w.policy);
+        let cold = cells.iter().find(|c| {
+            !c.warm
+                && c.shape == w.shape
+                && c.policy == w.policy
+                && c.migration == w.migration
+        });
         if let Some(cold) = cold {
             let d = w.slo - cold.slo;
             min = Some(match min {
@@ -354,6 +443,28 @@ fn warm_delta_min(cells: &[AbCell]) -> Option<f64> {
         }
     }
     min
+}
+
+/// Staged−blackout deltas over matched (shape, policy, warm) pairs:
+/// (max downtime delta, min SLO delta).
+fn staged_deltas(cells: &[AbCell]) -> (Option<f64>, Option<f64>) {
+    let mut dt_max: Option<f64> = None;
+    let mut slo_min: Option<f64> = None;
+    for s in cells.iter().filter(|c| c.migration == "staged") {
+        let b = cells.iter().find(|c| {
+            c.migration == "blackout"
+                && c.shape == s.shape
+                && c.policy == s.policy
+                && c.warm == s.warm
+        });
+        if let Some(b) = b {
+            let dt = s.downtime_s - b.downtime_s;
+            let slo = s.slo - b.slo;
+            dt_max = Some(dt_max.map_or(dt, |m: f64| m.max(dt)));
+            slo_min = Some(slo_min.map_or(slo, |m: f64| m.min(slo)));
+        }
+    }
+    (dt_max, slo_min)
 }
 
 /// Run the whole grid. Scenarios that admit no initial placement are
@@ -388,53 +499,70 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
         }
         for &policy in &cfg.policies {
             for &warm in &cfg.warm_modes {
-                let rcfg = ReplanConfig {
-                    policy,
-                    warm_start: warm,
-                    ..Default::default()
-                };
-                let Some(report) =
-                    run_scenario_on(&scenario, &data, &cluster, Some(rcfg))
-                else {
-                    continue;
-                };
-                let fired = report.replans.len();
-                let (mean_ms, max_ms) = if fired > 0 {
-                    let sum: f64 =
-                        report.replans.iter().map(|r| r.decision_ms).sum();
-                    let max = report
-                        .replans
-                        .iter()
-                        .map(|r| r.decision_ms)
-                        .fold(0.0_f64, f64::max);
-                    (sum / fired as f64, max)
-                } else {
-                    (0.0, 0.0)
-                };
-                cells.push(AbCell {
-                    shape: shape.name(),
-                    policy: policy.name(),
-                    warm,
-                    arrived,
-                    completed: report.eval.records.len(),
-                    dropped: report.dropped,
-                    slo: round(
-                        report.eval.slo_attainment(cfg.slo_scale),
-                        1e-4,
-                    ),
-                    p99_latency: round(
-                        report.eval.latency_summary().p99(),
-                        1e-3,
-                    ),
-                    replans: fired,
-                    migrations: report.migrations,
-                    decision_ms_mean: mean_ms,
-                    decision_ms_max: max_ms,
-                });
+                for &migration_mode in &cfg.migration_modes {
+                    let rcfg = ReplanConfig {
+                        policy,
+                        warm_start: warm,
+                        migration_mode,
+                        ..Default::default()
+                    };
+                    let Some(report) = run_scenario_on(
+                        &scenario,
+                        &data,
+                        &cluster,
+                        Some(rcfg),
+                    ) else {
+                        continue;
+                    };
+                    let fired = report.replans.len();
+                    let (mean_ms, max_ms) = if fired > 0 {
+                        let sum: f64 = report
+                            .replans
+                            .iter()
+                            .map(|r| r.decision_ms)
+                            .sum();
+                        let max = report
+                            .replans
+                            .iter()
+                            .map(|r| r.decision_ms)
+                            .fold(0.0_f64, f64::max);
+                        (sum / fired as f64, max)
+                    } else {
+                        (0.0, 0.0)
+                    };
+                    cells.push(AbCell {
+                        shape: shape.name(),
+                        policy: policy.name(),
+                        warm,
+                        migration: migration_mode.name(),
+                        arrived,
+                        completed: report.eval.records.len(),
+                        dropped: report.dropped,
+                        slo: round(
+                            report.eval.slo_attainment(cfg.slo_scale),
+                            1e-4,
+                        ),
+                        p99_latency: round(
+                            report.eval.latency_summary().p99(),
+                            1e-3,
+                        ),
+                        replans: fired,
+                        migrations: report.migrations,
+                        downtime_s: round(report.downtime_s, 1e-4),
+                        migration_cost: round(
+                            report.migration_cost,
+                            1e-4,
+                        ),
+                        kv_resumed: report.kv_resumed,
+                        decision_ms_mean: mean_ms,
+                        decision_ms_max: max_ms,
+                    });
+                }
             }
         }
     }
     let warm_delta = warm_delta_min(&cells);
+    let (staged_dt, staged_slo) = staged_deltas(&cells);
     AbReport {
         duration: cfg.duration,
         seed: cfg.seed,
@@ -442,6 +570,8 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
         baselines,
         cells,
         warm_delta_min: warm_delta,
+        staged_downtime_delta_max: staged_dt,
+        staged_slo_delta_min: staged_slo,
     }
 }
 
@@ -452,12 +582,14 @@ mod tests {
     #[test]
     fn ab_comparison_is_deterministic_and_covers_the_grid() {
         // A reduced grid keeps the test fast while still crossing two
-        // policies, two scenarios, and both warm modes.
+        // policies, two scenarios, both warm modes, and both migration
+        // executors.
         let cfg = AbConfig {
             duration: 40.0,
             shapes: vec![ScenarioShape::FlashCrowd, ScenarioShape::Drift],
             policies: vec![PolicyKind::Threshold, PolicyKind::Forecast],
             warm_modes: vec![false, true],
+            migration_modes: MigrationMode::all().to_vec(),
             ..AbConfig::smoke()
         };
         let a = run_ab(&cfg);
@@ -468,21 +600,30 @@ mod tests {
             "same seed must give a byte-identical comparison"
         );
         assert_eq!(a.to_markdown(false), b.to_markdown(false));
-        // Full grid: every policy × shape × warm cell plus a baseline
-        // row per shape.
-        assert_eq!(a.cells.len(), 2 * 2 * 2, "cells: {:?}", a.cells);
+        // Full grid: every policy × shape × warm × migration cell plus
+        // a baseline row per shape.
+        assert_eq!(a.cells.len(), 2 * 2 * 2 * 2, "cells: {:?}", a.cells);
         assert_eq!(a.baselines.len(), 2);
-        // The parity verdict is measured, whichever way it lands.
+        // The verdicts are measured, whichever way they land.
         assert!(a.warm_delta_min.is_some());
         assert!(a.warm_parity().is_some());
+        assert!(a.staged_downtime_delta_max.is_some());
+        assert!(a.staged_slo_delta_min.is_some());
     }
 
-    #[test]
-    fn warm_delta_min_matches_hand_computation() {
-        let mk = |shape, policy, warm, slo| AbCell {
+    fn mk_cell(
+        shape: &'static str,
+        policy: &'static str,
+        warm: bool,
+        migration: &'static str,
+        slo: f64,
+        downtime_s: f64,
+    ) -> AbCell {
+        AbCell {
             shape,
             policy,
             warm,
+            migration,
             arrived: 100,
             completed: 90,
             dropped: 0,
@@ -490,8 +631,18 @@ mod tests {
             p99_latency: 1.0,
             replans: 1,
             migrations: 1,
+            downtime_s,
+            migration_cost: 10.0,
+            kv_resumed: 0,
             decision_ms_mean: 0.0,
             decision_ms_max: 0.0,
+        }
+    }
+
+    #[test]
+    fn warm_delta_min_matches_hand_computation() {
+        let mk = |shape, policy, warm, slo| {
+            mk_cell(shape, policy, warm, "blackout", slo, 6.0)
         };
         let cells = vec![
             mk("flash-crowd", "threshold", false, 0.90),
@@ -503,5 +654,29 @@ mod tests {
         assert!((d - (-0.02)).abs() < 1e-12, "d={d}");
         // A cell with no matching cold twin contributes nothing.
         assert!(warm_delta_min(&cells[1..2]).is_none());
+        // Cells in different migration modes never pair up.
+        let cross = vec![
+            mk_cell("drift", "threshold", false, "blackout", 0.7, 6.0),
+            mk_cell("drift", "threshold", true, "staged", 0.9, 1.0),
+        ];
+        assert!(warm_delta_min(&cross).is_none());
+    }
+
+    #[test]
+    fn staged_deltas_match_hand_computation() {
+        let cells = vec![
+            mk_cell("flash-crowd", "threshold", false, "blackout", 0.80, 6.0),
+            mk_cell("flash-crowd", "threshold", false, "staged", 0.85, 1.5),
+            mk_cell("drift", "threshold", false, "blackout", 0.70, 12.0),
+            mk_cell("drift", "threshold", false, "staged", 0.69, 2.0),
+        ];
+        let (dt, slo) = staged_deltas(&cells);
+        // Worst downtime delta: max(1.5-6.0, 2.0-12.0) = -4.5.
+        assert!((dt.unwrap() - (-4.5)).abs() < 1e-12, "dt={dt:?}");
+        // Worst SLO delta: min(0.05, -0.01) = -0.01.
+        assert!((slo.unwrap() - (-0.01)).abs() < 1e-12, "slo={slo:?}");
+        // Unpaired staged cells contribute nothing.
+        let (dt2, slo2) = staged_deltas(&cells[1..2]);
+        assert!(dt2.is_none() && slo2.is_none());
     }
 }

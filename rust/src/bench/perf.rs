@@ -23,8 +23,10 @@ use std::time::Instant;
 
 use crate::config::{synthetic_zoo, ClusterSpec, ModelSpec};
 use crate::coordinator::estimator::Estimator;
+use crate::coordinator::migration::MigrationMode;
 use crate::coordinator::{
-    muxserve_placement, muxserve_placement_warm, EngineConfig, ReplanConfig,
+    muxserve_placement, muxserve_placement_cached, muxserve_placement_warm,
+    EngineConfig, PlacementCache, ReplanConfig,
 };
 use crate::costmodel::CostModel;
 use crate::simulator::{DynamicSimulation, Simulation};
@@ -79,6 +81,22 @@ pub struct ReplanPerf {
     pub warm_fallback_ms: f64,
 }
 
+/// Migration-cost summary from the dynamic flash-crowd runs (all
+/// simulated quantities — deterministic, unlike the wall clocks).
+#[derive(Clone, Debug)]
+pub struct MigrationPerf {
+    /// Blackout run: Σ per-LLM unavailability, LLM-seconds.
+    pub blackout_downtime_s: f64,
+    /// Blackout run: Σ cost charged to the policy.
+    pub blackout_cost: f64,
+    /// Staged run: Σ per-LLM unavailability, LLM-seconds.
+    pub staged_downtime_s: f64,
+    /// Staged run: Σ priced plan cost.
+    pub staged_cost: f64,
+    /// Staged run: requests resumed from copied KV without recompute.
+    pub kv_resumed: usize,
+}
+
 /// Everything `bench-perf` measures.
 #[derive(Clone, Debug)]
 pub struct PerfReport {
@@ -88,8 +106,16 @@ pub struct PerfReport {
     pub smoke: bool,
     /// Cold (deployment-time) placement latency, milliseconds.
     pub placement_cold_ms: f64,
+    /// Unit-estimate memo counters from the cold placement search
+    /// (ROADMAP "Scale": the per-candidate fixpoint, memoized across
+    /// mesh groups); the rate is `PlacementCache::hit_rate` at search
+    /// end.
+    pub placement_cache_hits: u64,
+    pub placement_cache_misses: u64,
+    pub placement_cache_hit_rate: f64,
     pub sims: Vec<SimPerf>,
     pub replan: ReplanPerf,
+    pub migration: MigrationPerf,
     /// Whole-benchmark wall clock, seconds (the `--max-wall` subject).
     pub wall_total_s: f64,
 }
@@ -143,6 +169,42 @@ impl PerfReport {
             Json::Num(round3(self.replan.warm_fallback_ms)),
         );
 
+        let mut mg = BTreeMap::new();
+        mg.insert(
+            "blackout_downtime_s".to_string(),
+            Json::Num(round3(self.migration.blackout_downtime_s)),
+        );
+        mg.insert(
+            "blackout_cost".to_string(),
+            Json::Num(round3(self.migration.blackout_cost)),
+        );
+        mg.insert(
+            "staged_downtime_s".to_string(),
+            Json::Num(round3(self.migration.staged_downtime_s)),
+        );
+        mg.insert(
+            "staged_cost".to_string(),
+            Json::Num(round3(self.migration.staged_cost)),
+        );
+        mg.insert(
+            "kv_resumed".to_string(),
+            Json::Num(self.migration.kv_resumed as f64),
+        );
+
+        let mut pc = BTreeMap::new();
+        pc.insert(
+            "hits".to_string(),
+            Json::Num(self.placement_cache_hits as f64),
+        );
+        pc.insert(
+            "misses".to_string(),
+            Json::Num(self.placement_cache_misses as f64),
+        );
+        pc.insert(
+            "hit_rate".to_string(),
+            Json::Num(round3(self.placement_cache_hit_rate)),
+        );
+
         let mut root = BTreeMap::new();
         root.insert("bench".to_string(), Json::Str("bench-perf".to_string()));
         root.insert(
@@ -158,8 +220,10 @@ impl PerfReport {
             "placement_cold_ms".to_string(),
             Json::Num(round3(self.placement_cold_ms)),
         );
+        root.insert("placement_cache".to_string(), Json::Obj(pc));
         root.insert("sims".to_string(), Json::Arr(sims));
         root.insert("replan".to_string(), Json::Obj(rp));
+        root.insert("migration".to_string(), Json::Obj(mg));
         root.insert(
             "wall_total_s".to_string(),
             Json::Num(round3(self.wall_total_s)),
@@ -204,9 +268,12 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
     let engine = EngineConfig::muxserve();
     let cost = CostModel::new(cluster.gpu.clone());
     let est = Estimator::with_kv_frac(cost.clone(), engine.kv_capacity_frac);
+    let mut cache = PlacementCache::default();
     let t0 = Instant::now();
-    let placement = muxserve_placement(&specs, &workloads, &cluster, &est)
-        .expect("bench-perf scale must have a feasible placement");
+    let placement = muxserve_placement_cached(
+        &specs, &workloads, &cluster, &est, &mut cache,
+    )
+    .expect("bench-perf scale must have a feasible placement");
     let placement_cold_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let mut sims = Vec::new();
@@ -227,8 +294,10 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
         });
     }
 
-    // 2. Flash-crowd with the online re-placement loop armed, warm-started.
-    {
+    // 2. Flash-crowd with the online re-placement loop armed (warm
+    // optimizer), once per migration executor — the staged run also
+    // supplies the BENCH migration-cost summary.
+    let migration = {
         let scenario = Scenario {
             shape: ScenarioShape::FlashCrowd,
             n_llms: n,
@@ -240,28 +309,45 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
         let data = scenario.build();
         // Same analytic zoo as the stationary section (NOT the scenario's
         // small-model zoo), so every BENCH row shares one model mix.
-        let rcfg = ReplanConfig { warm_start: true, ..Default::default() };
-        let dyn_sim = DynamicSimulation::new(
-            &specs,
-            &data.planning_workloads,
-            &cluster,
-            engine,
-            rcfg,
-            true,
-        )
-        .expect("bench-perf flash-crowd placement must exist");
-        let t0 = Instant::now();
-        let report = dyn_sim.run(&data.requests, cfg.duration);
-        let wall = t0.elapsed().as_secs_f64();
-        sims.push(SimPerf {
-            label: "flash-crowd+replan",
-            requests: data.requests.len(),
-            completed: report.eval.records.len(),
-            events: report.events,
-            wall_s: wall,
-            events_per_s: report.events as f64 / wall.max(1e-9),
-        });
-    }
+        let mut run_mode = |label: &'static str, mode: MigrationMode| {
+            let rcfg = ReplanConfig {
+                warm_start: true,
+                migration_mode: mode,
+                ..Default::default()
+            };
+            let dyn_sim = DynamicSimulation::new(
+                &specs,
+                &data.planning_workloads,
+                &cluster,
+                engine,
+                rcfg,
+                true,
+            )
+            .expect("bench-perf flash-crowd placement must exist");
+            let t0 = Instant::now();
+            let report = dyn_sim.run(&data.requests, cfg.duration);
+            let wall = t0.elapsed().as_secs_f64();
+            sims.push(SimPerf {
+                label,
+                requests: data.requests.len(),
+                completed: report.eval.records.len(),
+                events: report.events,
+                wall_s: wall,
+                events_per_s: report.events as f64 / wall.max(1e-9),
+            });
+            report
+        };
+        let blackout =
+            run_mode("flash-crowd+replan", MigrationMode::Blackout);
+        let staged = run_mode("flash-crowd+staged", MigrationMode::Staged);
+        MigrationPerf {
+            blackout_downtime_s: blackout.downtime_s,
+            blackout_cost: blackout.migration_cost,
+            staged_downtime_s: staged.downtime_s,
+            staged_cost: staged.migration_cost,
+            kv_resumed: staged.kv_resumed,
+        }
+    };
 
     // 3. Replan decision latency on one drifted rate vector: a sag on the
     // hottest LLM is always locally absorbable, so it exercises the warm
@@ -291,6 +377,9 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
         duration: cfg.duration,
         smoke: cfg.smoke,
         placement_cold_ms,
+        placement_cache_hits: cache.hits,
+        placement_cache_misses: cache.misses,
+        placement_cache_hit_rate: cache.hit_rate(),
         sims,
         replan: ReplanPerf {
             full_ms,
@@ -298,6 +387,7 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
             speedup: full_ms / warm_ms.max(1e-9),
             warm_fallback_ms,
         },
+        migration,
         wall_total_s: t_all.elapsed().as_secs_f64(),
     }
 }

@@ -157,8 +157,14 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
     );
     let report = run_bench_perf(&cfg);
     println!(
-        "scale: {} LLMs / {} GPUs   cold placement: {:.1} ms",
-        report.n_llms, report.gpus, report.placement_cold_ms
+        "scale: {} LLMs / {} GPUs   cold placement: {:.1} ms   \
+         unit-estimate cache: {:.1}% hit ({} hits / {} misses)",
+        report.n_llms,
+        report.gpus,
+        report.placement_cold_ms,
+        report.placement_cache_hit_rate * 100.0,
+        report.placement_cache_hits,
+        report.placement_cache_misses
     );
     for s in &report.sims {
         println!(
@@ -175,6 +181,15 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
         report.replan.warm_ms,
         report.replan.speedup,
         report.replan.warm_fallback_ms
+    );
+    println!(
+        "migration (flash-crowd): blackout {:.1} LLM-s downtime (cost \
+         {:.0}) vs staged {:.1} LLM-s (cost {:.0}), {} KV-copy resumes",
+        report.migration.blackout_downtime_s,
+        report.migration.blackout_cost,
+        report.migration.staged_downtime_s,
+        report.migration.staged_cost,
+        report.migration.kv_resumed
     );
     println!("total wall: {:.2}s", report.wall_total_s);
 
@@ -202,6 +217,7 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
 /// is deterministic in the config).
 fn ab_cmd(args: &[String]) -> Result<()> {
     use crate::bench::ab::{run_ab, AbConfig};
+    use crate::coordinator::migration::MigrationMode;
     use crate::coordinator::replan::PolicyKind;
 
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -217,15 +233,28 @@ fn ab_cmd(args: &[String]) -> Result<()> {
         })?;
         cfg.policies = vec![kind];
     }
+    if let Some(m) = flag_path(args, "--migration")? {
+        let mode = MigrationMode::parse(m).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown migration mode `{m}` (expected blackout | \
+                 staged)"
+            )
+        })?;
+        cfg.migration_modes = vec![mode];
+    }
     let shapes: Vec<&str> =
         cfg.shapes.iter().map(|s| s.name()).collect();
     let policies: Vec<&str> =
         cfg.policies.iter().map(|p| p.name()).collect();
+    let migrations: Vec<&str> =
+        cfg.migration_modes.iter().map(|m| m.name()).collect();
     println!(
-        "ab: policies [{}] x scenarios [{}] x warm {{off,on}}, {:.0}s \
-         each, seed {} (identical streams per scenario; running...)",
+        "ab: policies [{}] x scenarios [{}] x warm {{off,on}} x \
+         migration [{}], {:.0}s each, seed {} (identical streams per \
+         scenario; running...)",
         policies.join(", "),
         shapes.join(", "),
+        migrations.join(", "),
         cfg.duration,
         cfg.seed
     );
@@ -245,6 +274,7 @@ fn ab_cmd(args: &[String]) -> Result<()> {
 /// MuxServe engine, with online re-placement on or off.
 fn scenario_cmd(args: &[String]) -> Result<()> {
     use crate::bench::drift::{run_scenario_on, scenario_cluster};
+    use crate::coordinator::migration::MigrationMode;
     use crate::coordinator::replan::PolicyKind;
     use crate::coordinator::ReplanConfig;
     use crate::workload::{Scenario, ScenarioShape};
@@ -279,6 +309,17 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
              forecast | hysteresis)"
         )
     })?;
+    // How applied re-placements execute: the legacy whole-cluster
+    // blackout (default — the `ab` harness verdict gates the flip, see
+    // ROADMAP) or the staged, cost-aware MigrationPlan.
+    let migration_name = flag_str(args, "--migration", "blackout");
+    let migration_mode =
+        MigrationMode::parse(migration_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown migration mode `{migration_name}` (expected \
+                 blackout | staged)"
+            )
+        })?;
     let scenario = Scenario {
         duration: flag_val(args, "--duration", 120.0f64)?,
         seed: flag_val(args, "--seed", 2024u64)?,
@@ -288,8 +329,12 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         ..Scenario::new(shape)
     };
     let cluster = scenario_cluster();
-    let replan = adaptive
-        .then(|| ReplanConfig { warm_start, policy, ..Default::default() });
+    let replan = adaptive.then(|| ReplanConfig {
+        warm_start,
+        policy,
+        migration_mode,
+        ..Default::default()
+    });
 
     let (report, arrived) = if let Some(path) = flag_path(args, "--replay-trace")? {
         // Replay path: a frozen trace supplies the stream; planning
@@ -373,20 +418,33 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
     );
     if adaptive {
         println!(
-            "re-placements: {} checks fired, {} migrations",
+            "re-placements: {} checks fired, {} migrations \
+             ({migration_name}): {:.2} LLM-s downtime, cost {:.1}, {} \
+             KV-copy resumes",
             report.replans.len(),
-            report.migrations
+            report.migrations,
+            report.downtime_s,
+            report.migration_cost,
+            report.kv_resumed
         );
         for r in &report.replans {
             let rates: Vec<String> =
                 r.rates.iter().map(|x| format!("{x:.1}")).collect();
             println!(
-                "  t={:>6.1}s drift={:.2} {} -> {} units, rates [{}]",
+                "  t={:>6.1}s drift={:.2} {} -> {} units, rates [{}]{}",
                 r.time,
                 r.drift,
                 if r.migrated { "MIGRATED" } else { "kept placement" },
                 r.units,
-                rates.join(", ")
+                rates.join(", "),
+                if r.migrated {
+                    format!(
+                        " (window {:.2}s, cost {:.1})",
+                        r.window_s, r.cost
+                    )
+                } else {
+                    String::new()
+                }
             );
         }
     }
@@ -490,7 +548,8 @@ fn print_help() {
          bench-all                   full evaluation suite\n  \
          scenario [--shape S] [--replan on|off] [--warm on|off] \
          [--policy P]\n  \
-         \x20        [--duration S] [--seed N]\n  \
+         \x20        [--migration blackout|staged] [--duration S] \
+         [--seed N]\n  \
          \x20                            dynamic workload (stationary | \
          diurnal | bursty |\n  \
          \x20                            flash-crowd | drift) with online \
@@ -498,17 +557,26 @@ fn print_help() {
          \x20                            --policy picks the replan \
          trigger (threshold |\n  \
          \x20                            forecast | hysteresis),\n  \
+         \x20                            --migration picks the executor \
+         (blackout = global\n  \
+         \x20                            preempt-and-recompute, staged = \
+         per-unit priced\n  \
+         \x20                            MigrationPlan with KV copy),\n  \
          \x20                            --export-trace FILE freezes the \
          stream,\n  \
          \x20                            --replay-trace FILE re-runs a \
          frozen stream\n  \
-         ab [--smoke] [--policy P] [--out FILE] [--duration S] \
-         [--seed N]\n  \
+         ab [--smoke] [--policy P] [--migration M] [--out FILE] \
+         [--duration S]\n  \
+         \x20   [--seed N]\n  \
          \x20                            adaptation-policy A/B harness: \
          every replan\n  \
-         \x20                            policy x scenario on identical \
-         streams, with\n  \
-         \x20                            the warm-start parity verdict\n  \
+         \x20                            policy x scenario x warm x \
+         migration mode on\n  \
+         \x20                            identical streams, with the \
+         warm-start parity\n  \
+         \x20                            and staged-vs-blackout \
+         verdicts\n  \
          place [--alpha A]           run the placement optimizer (Alg. 1)\n  \
          serve [--rate-a R]          real PJRT serving demo (needs `make \
          artifacts`)\n  \

@@ -6,15 +6,21 @@
 //! Alg. 1 when live traffic drifts from the rates it was optimized for.
 
 pub mod estimator;
+pub mod migration;
 pub mod placement;
 pub mod replan;
 pub mod scheduler;
 
 pub use estimator::{Estimator, UnitMember};
+pub use migration::{
+    plan_migration, LiveLlm, MigrationMode, MigrationPlan, MoveMethod,
+    MoveOp,
+};
 pub use placement::{
     enumerate_mesh_groups, enumerate_partitions, memory_greedy_placement,
-    muxserve_placement, muxserve_placement_warm, parallel_candidates,
-    spatial_placement, Placement, PlacementUnit, ParallelCandidate,
+    muxserve_placement, muxserve_placement_cached, muxserve_placement_warm,
+    parallel_candidates, spatial_placement, Placement, PlacementCache,
+    PlacementUnit, ParallelCandidate,
 };
 pub use replan::{
     ForecastPolicy, HysteresisPolicy, PolicyKind, ReplanConfig,

@@ -28,8 +28,86 @@
 //! cluster-wide rebalance can help), or when the warm `est_total`
 //! regresses below simply keeping the stale placement.
 
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
 use crate::coordinator::estimator::{Estimator, UnitMember};
+
+/// Memo of `unit_estimate` totals across mesh groups (ROADMAP "Scale"):
+/// Alg. 1 re-evaluates the same (member set, SM config, mesh size) unit
+/// over and over while enumerating partitions — the per-candidate
+/// fixpoint is the placement search's inner hot loop, and most units
+/// recur identically across groups. Keyed by exact SM bits, so a hit
+/// returns a bit-identical total. Valid for ONE (specs, workloads,
+/// estimator) triple — create a fresh cache per optimizer invocation
+/// (the `muxserve_placement` wrapper does).
+/// Memo key: (mesh_gpus, sorted (llm, sm-bits)) — exact, not banded.
+type UnitCacheKey = (usize, Vec<(usize, u64)>);
+
+#[derive(Debug, Default)]
+pub struct PlacementCache {
+    map: HashMap<UnitCacheKey, f64>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PlacementCache {
+    /// Fraction of lookups served from the memo (0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Memoized `est.unit_estimate(members, mesh).total` — the one number
+/// Alg. 1's greedy loop actually consumes.
+fn cached_unit_total(
+    cache: &mut PlacementCache,
+    est: &Estimator,
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    mesh_gpus: usize,
+    members: &[(usize, ParallelCandidate)],
+) -> f64 {
+    let mut key: Vec<(usize, u64)> =
+        members.iter().map(|(i, c)| (*i, c.sm.to_bits())).collect();
+    key.sort_unstable();
+    match cache.map.entry((mesh_gpus, key)) {
+        Entry::Occupied(e) => {
+            cache.hits += 1;
+            *e.get()
+        }
+        Entry::Vacant(e) => {
+            cache.misses += 1;
+            let ms: Vec<UnitMember> = members
+                .iter()
+                .map(|(i, c)| UnitMember {
+                    spec: specs[*i].clone(),
+                    workload: workloads[*i].clone(),
+                    prefill_sm: c.sm,
+                    decode_sm: c.sm,
+                    tp: mesh_gpus,
+                })
+                .collect();
+            let t = est.unit_estimate(&ms, mesh_gpus).total;
+            e.insert(t);
+            t
+        }
+    }
+}
 
 /// One feasible (tp, sm) configuration for an LLM (Alg. 2): the fewest SMs
 /// at this TP degree that satisfy the workload, with its stable batch.
@@ -215,6 +293,21 @@ pub fn muxserve_placement(
     cluster: &ClusterSpec,
     est: &Estimator,
 ) -> Option<Placement> {
+    let mut cache = PlacementCache::default();
+    muxserve_placement_cached(specs, workloads, cluster, est, &mut cache)
+}
+
+/// [`muxserve_placement`] with a caller-owned [`PlacementCache`], so the
+/// caller can read the hit/miss counters afterwards (`bench-perf`
+/// reports the hit rate). The cache must be fresh for — or previously
+/// used with — these exact specs, workloads, and estimator.
+pub fn muxserve_placement_cached(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+    cache: &mut PlacementCache,
+) -> Option<Placement> {
     let cands = parallel_candidates(specs, workloads, cluster, est);
     // Sort LLMs by computation requirement (scale × popularity), Alg. 1.
     let order = demand_ordered((0..specs.len()).collect(), specs, workloads);
@@ -233,7 +326,7 @@ pub fn muxserve_placement(
             continue;
         }
         if let Some(p) = greedy_place_on_group(
-            &group, &order, specs, workloads, &cands, est,
+            &group, &order, specs, workloads, &cands, est, cache,
         ) {
             if best.as_ref().map_or(true, |b| p.est_total > b.est_total) {
                 best = Some(p);
@@ -315,13 +408,14 @@ pub fn muxserve_placement_warm(
         .unwrap_or(1);
 
     // Re-partition only the dirty units' GPU pool.
+    let mut cache = PlacementCache::default();
     let mut best_dirty: Option<Placement> = None;
     for group in enumerate_partitions(pool, &cluster.mesh_sizes()) {
         if *group.iter().max().unwrap_or(&0) < max_min_tp {
             continue;
         }
         if let Some(p) = greedy_place_on_group(
-            &group, &order, specs, workloads, &cands, est,
+            &group, &order, specs, workloads, &cands, est, &mut cache,
         ) {
             if best_dirty
                 .as_ref()
@@ -365,7 +459,11 @@ pub fn muxserve_placement_warm(
 }
 
 /// Inner loop of Alg. 1: place LLMs (already demand-ordered) greedily on a
-/// fixed mesh group, maximizing the estimated throughput delta.
+/// fixed mesh group, maximizing the estimated throughput delta. Unit
+/// scores flow through the caller's [`PlacementCache`]: identical
+/// (member set, SM config, mesh) units recur constantly across groups,
+/// so the fixpoint runs once per distinct unit instead of once per
+/// evaluation.
 fn greedy_place_on_group(
     group: &[usize],
     order: &[usize],
@@ -373,25 +471,13 @@ fn greedy_place_on_group(
     workloads: &[WorkloadSpec],
     cands: &[Vec<ParallelCandidate>],
     est: &Estimator,
+    cache: &mut PlacementCache,
 ) -> Option<Placement> {
     let mut units: Vec<PlacementUnit> = group
         .iter()
         .map(|g| PlacementUnit { mesh_gpus: *g, members: vec![] })
         .collect();
     let mut unit_f: Vec<f64> = vec![0.0; units.len()];
-
-    let members_of = |unit: &PlacementUnit| -> Vec<UnitMember> {
-        unit.members
-            .iter()
-            .map(|(i, c)| UnitMember {
-                spec: specs[*i].clone(),
-                workload: workloads[*i].clone(),
-                prefill_sm: c.sm,
-                decode_sm: c.sm,
-                tp: unit.mesh_gpus,
-            })
-            .collect()
-    };
 
     for &mi in order {
         let mut best_delta = f64::NEG_INFINITY;
@@ -408,15 +494,17 @@ fn greedy_place_on_group(
             if !est.cost.fits(&mspecs, unit.mesh_gpus, unit.mesh_gpus) {
                 continue;
             }
-            let mut ms = members_of(unit);
-            ms.push(UnitMember {
-                spec: specs[mi].clone(),
-                workload: workloads[mi].clone(),
-                prefill_sm: cand.sm,
-                decode_sm: cand.sm,
-                tp: unit.mesh_gpus,
-            });
-            let delta = est.unit_estimate(&ms, unit.mesh_gpus).total - unit_f[u];
+            let mut trial = unit.members.clone();
+            trial.push((mi, cand));
+            let total = cached_unit_total(
+                cache,
+                est,
+                specs,
+                workloads,
+                unit.mesh_gpus,
+                &trial,
+            );
+            let delta = total - unit_f[u];
             if delta > best_delta {
                 best_delta = delta;
                 best_u = Some((u, cand));
@@ -424,8 +512,15 @@ fn greedy_place_on_group(
         }
         let (u, cand) = best_u?; // group infeasible for this LLM
         units[u].members.push((mi, cand));
-        let ms = members_of(&units[u]);
-        unit_f[u] = est.unit_estimate(&ms, units[u].mesh_gpus).total;
+        // Always a cache hit: the winning trial was just scored.
+        unit_f[u] = cached_unit_total(
+            cache,
+            est,
+            specs,
+            workloads,
+            units[u].mesh_gpus,
+            &units[u].members,
+        );
     }
     Some(Placement { est_total: unit_f.iter().sum(), units })
 }
@@ -774,6 +869,24 @@ mod tests {
         .unwrap();
         let full = muxserve_placement(&specs, &wl, &c, &est).unwrap();
         assert_eq!(shape_of(&warm), shape_of(&full));
+    }
+
+    #[test]
+    fn placement_cache_hits_and_preserves_the_result() {
+        let (specs, wl, est) =
+            setup(&[6.7, 6.7, 13.0, 30.0], &[8.0, 2.0, 1.0, 0.2]);
+        let c = ClusterSpec::new(1, 8);
+        let plain = muxserve_placement(&specs, &wl, &c, &est).unwrap();
+        let mut cache = PlacementCache::default();
+        let cached =
+            muxserve_placement_cached(&specs, &wl, &c, &est, &mut cache)
+                .unwrap();
+        // Units recur across mesh groups — the memo must actually serve.
+        assert!(cache.hits > 0, "no cache hits across mesh groups");
+        assert!(!cache.is_empty());
+        assert!(cache.hit_rate() > 0.0 && cache.hit_rate() < 1.0);
+        assert_eq!(shape_of(&plain), shape_of(&cached));
+        assert!((plain.est_total - cached.est_total).abs() < 1e-12);
     }
 
     #[test]

@@ -39,6 +39,8 @@
 
 use std::collections::VecDeque;
 
+use super::migration::MigrationMode;
+
 /// Which built-in [`ReplanPolicy`] a controller runs. Selecting the
 /// policy through config (instead of constructing trait objects at every
 /// call site) keeps `ReplanConfig` plain data — `Copy`, CLI-parseable,
@@ -133,6 +135,22 @@ pub struct ReplanConfig {
     /// with no per-LLM dirty flag (pure SLO-floor triggers) to the cold
     /// search even when this is on — see [`ReplanDecision::dirty`].
     pub warm_start: bool,
+    /// How the engine executes an applied re-placement: `Blackout`
+    /// preempts and recomputes everything behind one global window
+    /// (legacy, the default until the `ab` harness verdict flips it —
+    /// see ROADMAP), `Staged` executes the priced per-unit
+    /// [`MigrationPlan`](super::migration::MigrationPlan) with per-LLM
+    /// windows and KV-copy where it beats recompute.
+    pub migration_mode: MigrationMode,
+    /// Cross-mesh KV transfer bandwidth (bytes/s) the migration planner
+    /// prices block moves with. Default is a PCIe-class 64 GB/s link —
+    /// conservative for NVLink meshes, honest across nodes.
+    pub link_bandwidth: f64,
+    /// Fixed per-move-op overhead in a staged migration, seconds (one
+    /// LLM's weight reload / pool re-partition on one mesh — NOT the
+    /// whole-cluster `migration_downtime`, which models tearing down
+    /// everything at once).
+    pub op_overhead: f64,
 }
 
 impl Default for ReplanConfig {
@@ -153,6 +171,9 @@ impl Default for ReplanConfig {
             rate_floor: 1.0,
             policy: PolicyKind::Threshold,
             warm_start: false,
+            migration_mode: MigrationMode::Blackout,
+            link_bandwidth: 64e9,
+            op_overhead: 0.25,
         }
     }
 }
@@ -223,9 +244,17 @@ pub trait ReplanPolicy: std::fmt::Debug {
         obs: &ReplanObservation,
     ) -> Option<ReplanDecision>;
 
-    /// Measured cost of an applied migration: migration downtime ×
-    /// preempted in-flight/queued requests.
+    /// Measured cost of an applied migration with no per-LLM breakdown
+    /// (the blackout path: downtime × preempted work, cluster-wide).
     fn note_migration_cost(&mut self, _cost: f64) {}
+
+    /// Priced cost of an applied migration, split per moved LLM (the
+    /// staged planner's `per_llm_cost`). The default folds it into the
+    /// aggregate hook so scalar policies keep working; hysteresis
+    /// overrides it to raise only the moved LLMs' bars.
+    fn note_migration_costs(&mut self, per_llm: &[(usize, f64)]) {
+        self.note_migration_cost(per_llm.iter().map(|(_, c)| c).sum());
+    }
 
     fn box_clone(&self) -> Box<dyn ReplanPolicy>;
 }
@@ -246,31 +275,37 @@ fn rel_drift(o: f64, p: f64, floor: f64) -> f64 {
 /// The asymmetric-threshold decision core shared by every built-in
 /// policy. `rates` drive both the trigger and the new plan — the
 /// threshold policy passes the observed rates, the forecasting policy
-/// its predictions. `bar` multiplies both thresholds (1.0 is the
-/// baseline rule; hysteresis raises it after costly migrations).
+/// its predictions. `bar(i)` multiplies LLM i's thresholds (constant 1.0
+/// is the baseline rule; hysteresis raises each LLM's bar after *its*
+/// costly migrations, so a twitchy-but-cheap LLM is not held back by an
+/// expensive neighbor).
 fn threshold_decision(
     cfg: &ReplanConfig,
     rates: &[f64],
     planned: &[f64],
     window_slo: Option<f64>,
-    bar: f64,
+    bar: &dyn Fn(usize) -> f64,
 ) -> Option<ReplanDecision> {
-    let surge_thr = cfg.surge_threshold * bar;
-    let sag_thr = cfg.drift_threshold * bar;
     let mut surge = 0.0_f64;
     let mut sag = 0.0_f64;
-    for (o, p) in rates.iter().zip(planned) {
+    let mut rate_trigger = false;
+    let mut slo_armed = false;
+    for (i, (o, p)) in rates.iter().zip(planned).enumerate() {
         let rel = rel_drift(*o, *p, cfg.rate_floor);
+        let b = bar(i);
         if o > p {
             surge = surge.max(rel);
+            rate_trigger |= rel > cfg.surge_threshold * b;
         } else {
             sag = sag.max(rel);
+            rate_trigger |= rel > cfg.drift_threshold * b;
         }
+        // SLO-floor override: half the surge bar, per LLM.
+        slo_armed |= rel > 0.5 * cfg.surge_threshold * b;
     }
     let drift = surge.max(sag);
     let slo_bad = window_slo.is_some_and(|s| s < cfg.slo_floor);
-    let rate_trigger = surge > surge_thr || sag > sag_thr;
-    let slo_trigger = slo_bad && drift > 0.5 * surge_thr;
+    let slo_trigger = slo_bad && slo_armed;
     if !rate_trigger && !slo_trigger {
         return None;
     }
@@ -279,12 +314,14 @@ fn threshold_decision(
     let dirty: Vec<bool> = rates
         .iter()
         .zip(planned)
-        .map(|(o, p)| {
+        .enumerate()
+        .map(|(i, (o, p))| {
             let rel = rel_drift(*o, *p, cfg.rate_floor);
+            let b = bar(i);
             if o > p {
-                rel > surge_thr
+                rel > cfg.surge_threshold * b
             } else {
-                rel > sag_thr
+                rel > cfg.drift_threshold * b
             }
         })
         .collect();
@@ -317,7 +354,13 @@ impl ReplanPolicy for ThresholdPolicy {
         cfg: &ReplanConfig,
         obs: &ReplanObservation,
     ) -> Option<ReplanDecision> {
-        threshold_decision(cfg, &obs.observed, &obs.planned, obs.window_slo, 1.0)
+        threshold_decision(
+            cfg,
+            &obs.observed,
+            &obs.planned,
+            obs.window_slo,
+            &|_| 1.0,
+        )
     }
 
     fn box_clone(&self) -> Box<dyn ReplanPolicy> {
@@ -395,7 +438,13 @@ impl ReplanPolicy for ForecastPolicy {
         obs: &ReplanObservation,
     ) -> Option<ReplanDecision> {
         let predicted = self.predicted(obs);
-        threshold_decision(cfg, &predicted, &obs.planned, obs.window_slo, 1.0)
+        threshold_decision(
+            cfg,
+            &predicted,
+            &obs.planned,
+            obs.window_slo,
+            &|_| 1.0,
+        )
     }
 
     fn box_clone(&self) -> Box<dyn ReplanPolicy> {
@@ -403,24 +452,39 @@ impl ReplanPolicy for ForecastPolicy {
     }
 }
 
-/// The threshold rule behind a floating trigger bar: every applied
-/// migration reports its measured cost (downtime × preempted work), the
-/// bar rises with the running mean cost — expensive migrations make the
-/// next trigger harder to reach — and relaxes multiplicatively toward
-/// 1.0 at every check tick, so the caution decays once traffic quiets.
+/// The threshold rule behind floating trigger bars: every applied
+/// migration reports its measured cost, the bars rise with the running
+/// mean cost — expensive migrations make the next trigger harder to
+/// reach — and relax multiplicatively toward 1.0 at every check tick, so
+/// the caution decays once traffic quiets.
+///
+/// The caution is tracked at two granularities. A **global** bar learns
+/// from aggregate costs with no per-LLM breakdown (the blackout path:
+/// downtime × preempted work cluster-wide — a blackout really does hurt
+/// every LLM). **Per-LLM** bars learn from the staged migration
+/// planner's priced per-op costs ([`note_migration_costs`]), so only the
+/// LLMs whose moves were expensive become harder to re-trigger — the
+/// natural granularity once migrations are priced per moved LLM. LLM i's
+/// effective bar is `global × per_llm[i]`, clamped to `max_bar`.
+///
+/// [`note_migration_costs`]: ReplanPolicy::note_migration_costs
 #[derive(Clone, Debug)]
 pub struct HysteresisPolicy {
     /// Migration cost treated as bar-doubling: a mean cost of
-    /// `cost_scale` (downtime-seconds × preempted requests) puts the bar
+    /// `cost_scale` (downtime-seconds × affected requests) puts the bar
     /// at 2.0.
     pub cost_scale: f64,
-    /// Per-tick multiplicative relaxation of the bar toward 1.0.
+    /// Per-tick multiplicative relaxation of every bar toward 1.0.
     pub relax: f64,
-    /// Cap on the bar (thresholds never exceed `max_bar` × base).
+    /// Cap on any LLM's effective bar.
     pub max_bar: f64,
-    bar: f64,
-    mean_cost: f64,
-    migrations: u32,
+    global_bar: f64,
+    global_mean: f64,
+    global_migrations: u32,
+    /// Per-LLM bars (empty ⇒ all 1.0), lazily sized on first feedback.
+    llm_bars: Vec<f64>,
+    llm_mean: Vec<f64>,
+    llm_migrations: Vec<u32>,
 }
 
 impl Default for HysteresisPolicy {
@@ -429,17 +493,38 @@ impl Default for HysteresisPolicy {
             cost_scale: 60.0,
             relax: 0.85,
             max_bar: 2.5,
-            bar: 1.0,
-            mean_cost: 0.0,
-            migrations: 0,
+            global_bar: 1.0,
+            global_mean: 0.0,
+            global_migrations: 0,
+            llm_bars: Vec::new(),
+            llm_mean: Vec::new(),
+            llm_migrations: Vec::new(),
         }
     }
 }
 
 impl HysteresisPolicy {
-    /// Current trigger-bar multiplier (≥ 1).
+    /// LLM `i`'s effective trigger-bar multiplier (≥ 1).
+    pub fn bar_for(&self, i: usize) -> f64 {
+        let per = self.llm_bars.get(i).copied().unwrap_or(1.0);
+        (self.global_bar * per).clamp(1.0, self.max_bar)
+    }
+
+    /// The worst (highest) effective bar across LLMs — the scalar view
+    /// the pre-per-LLM tests and reports read.
     pub fn bar(&self) -> f64 {
-        self.bar
+        self.llm_bars
+            .iter()
+            .map(|b| (self.global_bar * b).clamp(1.0, self.max_bar))
+            .fold(self.global_bar.clamp(1.0, self.max_bar), f64::max)
+    }
+
+    fn ensure_llms(&mut self, n: usize) {
+        if self.llm_bars.len() < n {
+            self.llm_bars.resize(n, 1.0);
+            self.llm_mean.resize(n, 0.0);
+            self.llm_migrations.resize(n, 0);
+        }
     }
 }
 
@@ -449,7 +534,10 @@ impl ReplanPolicy for HysteresisPolicy {
     }
 
     fn observe(&mut self, _cfg: &ReplanConfig, _obs: &ReplanObservation) {
-        self.bar = 1.0 + (self.bar - 1.0) * self.relax;
+        self.global_bar = 1.0 + (self.global_bar - 1.0) * self.relax;
+        for b in self.llm_bars.iter_mut() {
+            *b = 1.0 + (*b - 1.0) * self.relax;
+        }
     }
 
     fn decide(
@@ -462,21 +550,42 @@ impl ReplanPolicy for HysteresisPolicy {
             &obs.observed,
             &obs.planned,
             obs.window_slo,
-            self.bar,
+            &|i| self.bar_for(i),
         )
     }
 
     fn note_migration_cost(&mut self, cost: f64) {
         // Equal-weight EWMA of the measured cost; the first migration
-        // seeds it directly.
-        self.mean_cost = if self.migrations == 0 {
+        // seeds it directly. Aggregate feedback raises the global bar —
+        // a blackout hurts every LLM.
+        self.global_mean = if self.global_migrations == 0 {
             cost
         } else {
-            0.5 * self.mean_cost + 0.5 * cost
+            0.5 * self.global_mean + 0.5 * cost
         };
-        self.migrations += 1;
-        self.bar = (1.0 + self.mean_cost / self.cost_scale)
+        self.global_migrations += 1;
+        self.global_bar = (1.0 + self.global_mean / self.cost_scale)
             .clamp(1.0, self.max_bar);
+    }
+
+    fn note_migration_costs(&mut self, per_llm: &[(usize, f64)]) {
+        // Priced per-LLM feedback raises only the moved LLMs' bars.
+        let n = per_llm
+            .iter()
+            .map(|(i, _)| i + 1)
+            .max()
+            .unwrap_or(0);
+        self.ensure_llms(n);
+        for &(i, cost) in per_llm {
+            self.llm_mean[i] = if self.llm_migrations[i] == 0 {
+                cost
+            } else {
+                0.5 * self.llm_mean[i] + 0.5 * cost
+            };
+            self.llm_migrations[i] += 1;
+            self.llm_bars[i] = (1.0 + self.llm_mean[i] / self.cost_scale)
+                .clamp(1.0, self.max_bar);
+        }
     }
 
     fn box_clone(&self) -> Box<dyn ReplanPolicy> {
@@ -670,6 +779,13 @@ impl ReplanController {
     /// from this; the other built-ins ignore it.
     pub fn note_migration_cost(&mut self, cost: f64) {
         self.policy.note_migration_cost(cost);
+    }
+
+    /// Report a staged migration's priced cost, split per moved LLM
+    /// (the planner's `per_llm_cost`). Hysteresis raises only the moved
+    /// LLMs' bars; scalar policies fold it into the aggregate hook.
+    pub fn note_migration_costs(&mut self, per_llm: &[(usize, f64)]) {
+        self.policy.note_migration_costs(per_llm);
     }
 }
 
@@ -925,6 +1041,37 @@ mod tests {
             hy.decide(&cfg, &obs).is_some(),
             "the relaxed bar fires again"
         );
+    }
+
+    #[test]
+    fn per_llm_hysteresis_bars_are_independent() {
+        let cfg = ReplanConfig::default();
+        let mut hy = HysteresisPolicy::default();
+        // A costly staged move of LLM 1 only.
+        hy.note_migration_costs(&[(1, 90.0)]);
+        assert!(hy.bar_for(1) > 1.4, "bar1={}", hy.bar_for(1));
+        assert!(
+            (hy.bar_for(0) - 1.0).abs() < 1e-12,
+            "LLM 0 never moved: bar0={}",
+            hy.bar_for(0)
+        );
+        // Identical surge on both LLMs (rel 0.4286, over the base 0.4
+        // bar): LLM 0 fires and is marked dirty; LLM 1 is held back by
+        // its raised bar.
+        let obs = ReplanObservation {
+            t: 20.0,
+            observed: vec![3.5, 3.5],
+            planned: vec![2.0, 2.0],
+            window_slo: Some(0.95),
+        };
+        let d = hy.decide(&cfg, &obs).expect("LLM 0 must still fire");
+        assert!(d.dirty[0], "cheap LLM fires: {:?}", d.dirty);
+        assert!(!d.dirty[1], "expensive LLM held back: {:?}", d.dirty);
+        // The scalar view reports the worst bar.
+        assert!((hy.bar() - hy.bar_for(1)).abs() < 1e-12);
+        // Aggregate (blackout) feedback raises everyone, clamped.
+        hy.note_migration_cost(600.0);
+        assert!((hy.bar_for(0) - hy.max_bar).abs() < 1e-9);
     }
 
     #[test]

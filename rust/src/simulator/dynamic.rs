@@ -11,15 +11,35 @@
 //! fires it re-runs the placement optimizer (Alg. 1+2) on the fresh
 //! rates and *migrates* to the new placement.
 //!
-//! Migration is modeled honestly as unit downtime: every in-flight and
-//! queued request is preempted (vLLM-style recompute — it keeps its
-//! original arrival time, so the penalty lands in its measured latency),
-//! the new units start with cold KV caches, and no job may start for
-//! `migration_downtime` seconds. Arrivals during the blackout are
-//! buffered in a side queue and bulk-delivered at resume time (they used
-//! to be re-pushed through the event heap one at a time — the heap-churn
-//! bottleneck ROADMAP's Scale item named). Epoch tags on unit-addressed
-//! events make stale completions from the torn-down placement harmless.
+//! ## Migration execution
+//!
+//! Applied placements are first diffed into a priced
+//! [`MigrationPlan`](crate::coordinator::migration) — a same-shaped
+//! result (even with shuffled unit/member order) diffs to an empty plan
+//! and costs nothing. Non-empty plans execute in one of two modes
+//! ([`ReplanConfig::migration_mode`]):
+//!
+//! * **Blackout** (legacy, default): every in-flight and queued request
+//!   is preempted (vLLM-style recompute — it keeps its original arrival
+//!   time, so the penalty lands in its measured latency), the new units
+//!   start with cold KV caches, and no unit may start work for
+//!   `migration_downtime` seconds.
+//! * **Staged**: the plan's per-LLM move ops run one at a time. Units
+//!   whose shape survives the re-placement are *transplanted* — they
+//!   keep serving, in-flight jobs included, through the whole migration.
+//!   A moved LLM is drained with its KV state intact and re-admitted at
+//!   its destination when its op window closes: KV-copied requests
+//!   resume mid-decode with their blocks re-charged to the destination
+//!   quota (no recompute); recompute-priced moves re-enter admission
+//!   whole. The policy is fed the plan's *priced* cost, per moved LLM —
+//!   not the blackout's `downtime × preempted` cluster-wide guess.
+//!
+//! Units are addressed by stable **uids**: completion/adapt events carry
+//! the uid of the unit that issued them, so events of a torn-down unit
+//! simply stop resolving while a transplanted unit's events keep landing
+//! across the swap. Arrivals for an LLM inside its migration window are
+//! buffered and bulk-delivered by the `Resume` event that closes the
+//! window.
 //!
 //! Everything is deterministic: same stream + same configs ⇒ bit-identical
 //! [`Evaluation`], replans included. (The per-decision wall-clock timing
@@ -28,10 +48,15 @@
 //!
 //! [`ReplanPolicy`]: crate::coordinator::replan::ReplanPolicy
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
-use super::{Event, EventKind, Simulation};
+use super::unit::ResumedRequest;
+use super::{Event, EventKind, Simulation, UnitSim};
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
+use crate::coordinator::migration::{
+    plan_migration, unit_key, LiveLlm, MigrationMode, MigrationPlan,
+    MoveMethod, UnitKey,
+};
 use crate::coordinator::replan::{
     ReplanConfig, ReplanController, ReplanDecision, SloWindow,
 };
@@ -47,8 +72,8 @@ use crate::workload::Request;
 #[derive(Clone, Debug)]
 pub struct ReplanOutcome {
     pub time: f64,
-    /// Whether the optimizer produced a materially different placement
-    /// (same-shaped placements skip the migration and its downtime).
+    /// Whether the decision migrated the placement (an empty migration
+    /// plan — same canonical shape — skips the migration and its cost).
     pub migrated: bool,
     /// Drift value that triggered the check.
     pub drift: f64,
@@ -64,6 +89,13 @@ pub struct ReplanOutcome {
     /// decision latency the `ab` harness aggregates. Host-dependent:
     /// excluded from determinism comparisons.
     pub decision_ms: f64,
+    /// Cost charged for this migration, in service-seconds × affected
+    /// requests: the plan's priced cost under staged execution, the
+    /// `downtime × preempted` product under blackout. 0 when not
+    /// migrated.
+    pub cost: f64,
+    /// Wall (simulated) seconds until every moved LLM was serving again.
+    pub window_s: f64,
 }
 
 /// Result of a dynamic run.
@@ -74,31 +106,41 @@ pub struct DynamicReport {
     /// Number of replans that actually migrated the placement.
     pub migrations: usize,
     pub dropped: usize,
-    /// Events processed by the run loop (arrivals, completions, adapt
-    /// and replan ticks; blackout re-deliveries are bulk-applied from
-    /// the side buffer and no longer count as heap events).
+    /// Events processed by the run loop (arrivals, completions, adapt,
+    /// replan and resume ticks; migration-buffered requests are
+    /// bulk-applied by their `Resume` event, not re-queued one by one).
     pub events: u64,
+    /// Σ per-LLM unavailability windows across all migrations
+    /// (LLM-seconds of lost service): `migration_downtime × n_llms` per
+    /// blackout, the plan's staggered windows per staged migration.
+    pub downtime_s: f64,
+    /// Σ migration cost as charged to the policy (see
+    /// [`ReplanOutcome::cost`]).
+    pub migration_cost: f64,
+    /// Requests that resumed mid-decode from copied KV (staged mode
+    /// only) — the no-recompute receipts.
+    pub kv_resumed: usize,
 }
 
 /// Placement shape up to member order and fine sm jitter: mesh size plus
-/// (llm, sm-rounded-to-5%) per member, canonically sorted. Re-placements
-/// that do not change this are applied as no-ops (no downtime).
-fn placement_signature(p: &Placement) -> Vec<(usize, Vec<(usize, u32)>)> {
-    let mut units: Vec<(usize, Vec<(usize, u32)>)> = p
-        .units
-        .iter()
-        .map(|u| {
-            let mut ms: Vec<(usize, u32)> = u
-                .members
-                .iter()
-                .map(|(i, c)| (*i, (c.sm * 20.0).round() as u32))
-                .collect();
-            ms.sort_unstable();
-            (u.mesh_gpus, ms)
-        })
-        .collect();
+/// (llm, sm-rounded-to-5%) per member, canonically sorted. Shares its
+/// per-unit key with the migration planner's diff
+/// ([`crate::coordinator::migration::unit_key`]), so "same signature"
+/// and "empty plan" can never disagree.
+fn placement_signature(p: &Placement) -> Vec<UnitKey> {
+    let mut units: Vec<UnitKey> = p.units.iter().map(unit_key).collect();
     units.sort();
     units
+}
+
+/// A migration payload awaiting its `Resume` event: the requests drained
+/// from a moved LLM (global ids), delivered when the move window closes.
+#[derive(Debug)]
+struct StagedDelivery {
+    /// Deliver via the KV-preserving resume path (charging transferred
+    /// blocks at the destination) instead of plain re-admission.
+    kv_copy: bool,
+    payload: Vec<ResumedRequest>,
 }
 
 /// Cluster simulation with online re-placement.
@@ -117,13 +159,27 @@ pub struct DynamicSimulation {
     sim: Simulation,
     /// The currently applied placement — the warm-start seed.
     placement: Placement,
-    signature: Vec<(usize, Vec<(usize, u32)>)>,
-    epoch: u64,
-    /// No unit may start work before this time (migration blackout).
-    resume_at: f64,
-    /// Arrivals (and preempted requests) that landed inside a blackout,
-    /// awaiting bulk delivery at `resume_at`.
-    blackout_buf: Vec<Request>,
+    signature: Vec<UnitKey>,
+    /// Stable unit ids, parallel to `sim.units`. Completion/adapt events
+    /// address units by uid: a torn-down unit's uid stops resolving
+    /// (stale events drop), a transplanted unit's uid keeps working.
+    unit_uid: Vec<u64>,
+    uid_index: HashMap<u64, usize>,
+    next_uid: u64,
+    /// Per global LLM: no request admitted before this time (its
+    /// migration window); arrivals inside the window buffer in `held`.
+    llm_resume_at: Vec<f64>,
+    /// Arrivals that landed inside their LLM's migration window, in
+    /// arrival order, awaiting the window-closing `Resume` event.
+    held: Vec<Request>,
+    /// Payload store for in-flight `Resume` events.
+    deliveries: Vec<Option<StagedDelivery>>,
+    /// Resume events pushed but not yet delivered (replans are gated
+    /// while any migration work is still in flight).
+    outstanding: usize,
+    /// No replan check fires before this time (end of the last
+    /// migration's final window).
+    migration_until: f64,
     completed: Vec<RequestRecord>,
     /// Windowed SLO monitor fed from harvested completions at each
     /// replan tick.
@@ -132,6 +188,9 @@ pub struct DynamicSimulation {
     migrations: usize,
     dropped: usize,
     events: u64,
+    downtime_s: f64,
+    migration_cost: f64,
+    kv_resumed: usize,
 }
 
 impl DynamicSimulation {
@@ -159,6 +218,10 @@ impl DynamicSimulation {
         );
         let planned: Vec<f64> =
             planning_workloads.iter().map(|w| w.rate).collect();
+        let n_units = sim.units.len();
+        let unit_uid: Vec<u64> = (0..n_units as u64).collect();
+        let uid_index: HashMap<u64, usize> =
+            unit_uid.iter().enumerate().map(|(u, id)| (*id, u)).collect();
         Some(DynamicSimulation {
             specs: specs.to_vec(),
             cluster: cluster.clone(),
@@ -171,15 +234,23 @@ impl DynamicSimulation {
             signature: placement_signature(&placement),
             placement,
             sim,
-            epoch: 0,
-            resume_at: 0.0,
-            blackout_buf: Vec::new(),
+            unit_uid,
+            uid_index,
+            next_uid: n_units as u64,
+            llm_resume_at: vec![0.0; specs.len()],
+            held: Vec::new(),
+            deliveries: Vec::new(),
+            outstanding: 0,
+            migration_until: 0.0,
             completed: Vec::new(),
             slo: SloWindow::new(rcfg.window),
             replans: Vec::new(),
             migrations: 0,
             dropped: 0,
             events: 0,
+            downtime_s: 0.0,
+            migration_cost: 0.0,
+            kv_resumed: 0,
         })
     }
 
@@ -191,7 +262,7 @@ impl DynamicSimulation {
     /// Replay `requests` (global LLM ids, arrival-sorted) for `duration`
     /// simulated seconds, adapting the placement online when armed.
     /// Consumes the simulation: the accumulators (records, replans,
-    /// epochs) are single-run state, so a second run on the same object
+    /// uids) are single-run state, so a second run on the same object
     /// would double-count — build a fresh one instead.
     pub fn run(
         mut self,
@@ -205,7 +276,6 @@ impl DynamicSimulation {
                 time: r.arrival,
                 seq,
                 unit: usize::MAX,
-                epoch: 0,
                 kind: EventKind::Arrival(r.clone()),
             });
             seq += 1;
@@ -217,7 +287,6 @@ impl DynamicSimulation {
                     time: tick,
                     seq,
                     unit: usize::MAX,
-                    epoch: 0,
                     kind: EventKind::Replan,
                 });
                 seq += 1;
@@ -225,90 +294,49 @@ impl DynamicSimulation {
         }
         self.schedule_adapt_ticks(0.0, duration, &mut heap, &mut seq);
 
-        loop {
-            let Some(ev) = heap.pop() else {
-                // The heap drained mid-blackout (the stream ended while
-                // requests sat buffered): deliver them — their
-                // completions re-seed the heap — and keep going.
-                if !self.blackout_buf.is_empty()
-                    && self.resume_at <= duration
-                {
-                    self.flush_blackout(&mut heap, &mut seq);
-                    continue;
-                }
-                break;
-            };
+        while let Some(ev) = heap.pop() {
             // Negated form so a NaN time (which sorts last) also stops
             // the run instead of being processed and poisoning `now`.
             if !(ev.time <= duration) {
-                if !self.blackout_buf.is_empty()
-                    && self.resume_at <= duration
-                {
-                    // The next event lies past the horizon but the
-                    // blackout ends inside it: deliver the buffered work
-                    // (its completions may still land before `duration`)
-                    // and then reconsider this event in order.
-                    self.flush_blackout(&mut heap, &mut seq);
-                    heap.push(ev);
-                    continue;
-                }
                 break;
-            }
-            // Any event at or past the blackout end means the buffered
-            // arrivals are due: bulk-deliver them (admitted at
-            // `resume_at` — no unit has advanced past that point, since
-            // every earlier event either buffered or was epoch-stale),
-            // then re-queue this event: the delivered work's completions
-            // may precede it and must be processed in time order.
-            if !self.blackout_buf.is_empty() && ev.time >= self.resume_at {
-                self.flush_blackout(&mut heap, &mut seq);
-                heap.push(ev);
-                continue;
             }
             self.events += 1;
             match ev.kind {
                 EventKind::Arrival(r) => {
-                    // Heap arrivals are always first deliveries now that
-                    // blackout re-deliveries bypass the heap (the side
-                    // buffer below), and they feed the drift monitor; a
-                    // disarmed run records nothing (the window is only
-                    // ever evicted from should_replan, so observing
-                    // without Replan ticks would accumulate unboundedly).
+                    // Heap arrivals are always first deliveries (held
+                    // requests re-enter through Resume events, not the
+                    // heap), and they feed the drift monitor; a disarmed
+                    // run records nothing (the window is only ever
+                    // evicted from should_replan, so observing without
+                    // Replan ticks would accumulate unboundedly).
                     debug_assert!(ev.time == r.arrival);
                     if self.adaptive {
                         self.controller.observe_arrival(r.llm, ev.time);
                     }
-                    if ev.time < self.resume_at {
-                        // Mid-blackout: hold in the side buffer for bulk
-                        // delivery instead of cycling through the heap.
-                        self.blackout_buf.push(r);
+                    if ev.time < self.llm_resume_at[r.llm] {
+                        // Inside the LLM's migration window: hold for
+                        // bulk delivery at the window-closing Resume.
+                        self.held.push(r);
                         continue;
                     }
-                    let (u, local) = self.sim.llm_map[r.llm];
-                    if u == usize::MAX {
-                        continue;
-                    }
-                    let mut lr = r;
-                    lr.llm = local;
-                    let unit = &mut self.sim.units[u];
-                    unit.advance_time(ev.time);
-                    unit.on_arrival(ev.time, lr);
-                    self.push_started(u, &mut heap, &mut seq);
+                    self.route_arrival(ev.time, r, &mut heap, &mut seq);
                 }
                 EventKind::JobDone(id) => {
-                    if ev.epoch != self.epoch {
-                        continue; // completion from a migrated-away epoch
-                    }
-                    let unit = &mut self.sim.units[ev.unit];
+                    let Some(&u) = self.uid_index.get(&(ev.unit as u64))
+                    else {
+                        continue; // completion from a torn-down unit
+                    };
+                    let unit = &mut self.sim.units[u];
                     unit.advance_time(ev.time);
                     unit.on_job_done(ev.time, id);
-                    self.push_started(ev.unit, &mut heap, &mut seq);
+                    self.push_started(u, &mut heap, &mut seq);
                 }
                 EventKind::Adapt => {
-                    if ev.epoch != self.epoch {
+                    let Some(&u) = self.uid_index.get(&(ev.unit as u64))
+                    else {
                         continue;
-                    }
-                    let unit = &mut self.sim.units[ev.unit];
+                    };
+                    let unit = &mut self.sim.units[u];
                     unit.advance_time(ev.time);
                     unit.on_adapt();
                     let next = ev.time + unit.cfg.adapt_period;
@@ -317,7 +345,6 @@ impl DynamicSimulation {
                             time: next,
                             seq,
                             unit: ev.unit,
-                            epoch: self.epoch,
                             kind: EventKind::Adapt,
                         });
                         seq += 1;
@@ -332,11 +359,13 @@ impl DynamicSimulation {
                             time: next,
                             seq,
                             unit: usize::MAX,
-                            epoch: 0,
                             kind: EventKind::Replan,
                         });
                         seq += 1;
                     }
+                }
+                EventKind::Resume(idx) => {
+                    self.deliver(ev.time, idx, &mut heap, &mut seq);
                 }
             }
         }
@@ -350,6 +379,9 @@ impl DynamicSimulation {
             migrations: self.migrations,
             dropped,
             events: self.events,
+            downtime_s: self.downtime_s,
+            migration_cost: self.migration_cost,
+            kv_resumed: self.kv_resumed,
         }
     }
 
@@ -359,39 +391,103 @@ impl DynamicSimulation {
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) {
+        let uid = self.unit_uid[unit] as usize;
         for (t_done, id) in self.sim.units[unit].drain_started() {
             heap.push(Event {
                 time: t_done,
                 seq: *seq,
-                unit,
-                epoch: self.epoch,
+                unit: uid,
                 kind: EventKind::JobDone(id),
             });
             *seq += 1;
         }
     }
 
-    /// Bulk-deliver every blackout-buffered arrival at `resume_at`
-    /// (preempted requests first — they are buffered at migration time —
-    /// then later arrivals in pop order).
-    fn flush_blackout(
+    /// Register a migration payload and its window-closing Resume event.
+    fn push_delivery(
         &mut self,
+        time: f64,
+        kv_copy: bool,
+        payload: Vec<ResumedRequest>,
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) {
-        let t = self.resume_at;
-        for r in std::mem::take(&mut self.blackout_buf) {
-            let (u, local) = self.sim.llm_map[r.llm];
+        let idx = self.deliveries.len();
+        self.deliveries.push(Some(StagedDelivery { kv_copy, payload }));
+        self.outstanding += 1;
+        heap.push(Event {
+            time,
+            seq: *seq,
+            unit: usize::MAX,
+            kind: EventKind::Resume(idx),
+        });
+        *seq += 1;
+    }
+
+    /// A move window closed: deliver its payload (preempted requests
+    /// first, preserving KV where the plan copied it), then flush every
+    /// held arrival whose LLM is serving again.
+    fn deliver(
+        &mut self,
+        t: f64,
+        idx: usize,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let Some(d) = self.deliveries.get_mut(idx).and_then(Option::take)
+        else {
+            return;
+        };
+        self.outstanding -= 1;
+        for mut r in d.payload {
+            if !d.kv_copy {
+                // Recompute path: plain re-admission.
+                self.route_arrival(t, r.req, heap, seq);
+                continue;
+            }
+            let (u, local) = self.sim.llm_map[r.req.llm];
             if u == usize::MAX {
                 continue;
             }
-            let mut lr = r;
-            lr.llm = local;
+            r.req.llm = local;
             let unit = &mut self.sim.units[u];
             unit.advance_time(t);
-            unit.on_arrival(t, lr);
+            self.kv_resumed += unit.admit_resumed(t, r) as usize;
             self.push_started(u, heap, seq);
         }
+        // Held arrivals whose window has closed re-enter in arrival
+        // order (`held` is heap-pop ordered).
+        let mut still_held = Vec::new();
+        for r in std::mem::take(&mut self.held) {
+            if self.llm_resume_at[r.llm] > t {
+                still_held.push(r);
+                continue;
+            }
+            self.route_arrival(t, r, heap, seq);
+        }
+        self.held = still_held;
+    }
+
+    /// Route one request to its unit and admit it through the normal
+    /// arrival path — shared by live arrivals, recompute deliveries, and
+    /// the held-buffer flush.
+    fn route_arrival(
+        &mut self,
+        t: f64,
+        r: Request,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let (u, local) = self.sim.llm_map[r.llm];
+        if u == usize::MAX {
+            return;
+        }
+        let mut lr = r;
+        lr.llm = local;
+        let unit = &mut self.sim.units[u];
+        unit.advance_time(t);
+        unit.on_arrival(t, lr);
+        self.push_started(u, heap, seq);
     }
 
     /// Arm the paper's periodic quota adaptation for every (non-empty)
@@ -403,15 +499,29 @@ impl DynamicSimulation {
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) {
+        let mask = vec![true; self.sim.units.len()];
+        self.schedule_adapt_ticks_for(&mask, now, duration, heap, seq);
+    }
+
+    /// Adapt ticks for the units selected by `mask` (a staged migration
+    /// arms only the rebuilt units — transplanted ones keep their
+    /// existing tick chain alive through their uid).
+    fn schedule_adapt_ticks_for(
+        &self,
+        mask: &[bool],
+        now: f64,
+        duration: f64,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
         for (u, unit) in self.sim.units.iter().enumerate() {
-            if unit.adaptive() && unit.n_llms() > 0 {
+            if mask[u] && unit.adaptive() && unit.n_llms() > 0 {
                 let t = now + unit.cfg.adapt_period;
                 if t < duration {
                     heap.push(Event {
                         time: t,
                         seq: *seq,
-                        unit: u,
-                        epoch: self.epoch,
+                        unit: self.unit_uid[u] as usize,
                         kind: EventKind::Adapt,
                     });
                     *seq += 1;
@@ -433,9 +543,27 @@ impl DynamicSimulation {
         self.slo.attainment(t)
     }
 
+    /// Live per-LLM serving state (global ids) — the migration planner's
+    /// pricing input.
+    fn live_state(&self) -> Vec<LiveLlm> {
+        (0..self.sim.n_llms())
+            .map(|gi| {
+                let (u, local) = self.sim.llm_map[gi];
+                if u == usize::MAX {
+                    return LiveLlm::default();
+                }
+                let unit = &self.sim.units[u];
+                LiveLlm {
+                    kv_blocks: unit.quota_used(local),
+                    pending: unit.llm_pending(local),
+                    ctx_tokens: unit.llm_ctx_tokens(local),
+                }
+            })
+            .collect()
+    }
+
     /// The `Replan` tick: refresh the drift monitor, and when the policy
-    /// fires, re-optimize and (if the shape changed) migrate with
-    /// downtime.
+    /// fires, re-optimize and (if the shape changed) migrate.
     fn on_replan(
         &mut self,
         t: f64,
@@ -443,8 +571,8 @@ impl DynamicSimulation {
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) {
-        if t < self.resume_at {
-            return; // mid-blackout: check again next tick
+        if t < self.migration_until || self.outstanding > 0 {
+            return; // a migration is still executing: check next tick
         }
         let window_slo = self.refresh_slo_window(t);
         let Some(decision) = self.controller.should_replan(t, window_slo)
@@ -455,7 +583,8 @@ impl DynamicSimulation {
     }
 
     /// Act on a fired decision: run the placement search (warm or cold),
-    /// and migrate when the shape changed.
+    /// diff the result into a migration plan, and execute it when it is
+    /// not a no-op.
     fn apply_decision(
         &mut self,
         t: f64,
@@ -512,50 +641,45 @@ impl DynamicSimulation {
             return;
         };
         let new_sig = placement_signature(&placement);
-        let migrated = new_sig != self.signature;
-        if !migrated {
+        let mut plan = MigrationPlan::default();
+        let mut migrated = new_sig != self.signature;
+        if migrated {
+            // Diff before committing: the canonical per-unit matching
+            // also catches no-op shuffles (same units, different order)
+            // that a naive comparison would migrate for — an empty plan
+            // means nothing moves, so nothing may be charged.
+            plan = plan_migration(
+                &self.placement,
+                &placement,
+                &self.specs,
+                &self.live_state(),
+                &self.cost,
+                self.controller.config(),
+            );
+            migrated = !plan.is_empty();
+        }
+        let (cost, window_s) = if !migrated {
             // The optimizer kept the shape: the current placement is
             // already right for these rates. Adopt them as the drift
             // baseline (no migration rate-limit) so a sustained shift
             // stops re-triggering, while a still-growing spike can
             // migrate at the very next tick.
             self.controller.note_checked(decision.rates.clone());
+            (0.0, 0.0)
         } else {
             // Applied placements commit the baseline AND start the
             // migration rate-limit window.
             self.controller.note_replanned(t, decision.rates.clone());
-            // Preempt-and-recompute migration: collect unfinished work,
-            // tear down, rebuild, and blackout for the downtime.
-            self.dropped += self.sim.dropped();
-            let pending = self.sim.drain_all_requests();
-            // Feed the measured cost (downtime × preempted work) back to
-            // the policy — hysteresis learns its trigger bar from it.
-            let downtime = self.controller.config().migration_downtime;
-            self.controller
-                .note_migration_cost(downtime * pending.len() as f64);
             self.workloads = new_workloads;
-            self.sim = Simulation::from_placement(
-                &placement,
-                &self.specs,
-                &self.workloads,
-                self.cfg,
-                &self.cost,
-            );
-            self.placement = placement;
-            self.signature = new_sig;
-            self.epoch += 1;
-            self.migrations += 1;
-            self.resume_at = t + downtime;
-            // The preempted work waits in the blackout buffer (it keeps
-            // its original arrival times) and is bulk-delivered at
-            // `resume_at` together with any blackout arrivals — no
-            // per-request heap churn. The buffer is empty here: any
-            // previous blackout was flushed before this Replan event
-            // was processed.
-            debug_assert!(self.blackout_buf.is_empty());
-            self.blackout_buf = pending;
-            self.schedule_adapt_ticks(self.resume_at, duration, heap, seq);
-        }
+            let mode = self.controller.config().migration_mode;
+            match mode {
+                MigrationMode::Blackout => self
+                    .migrate_blackout(t, duration, placement, heap, seq),
+                MigrationMode::Staged => self.migrate_staged(
+                    t, duration, placement, plan, heap, seq,
+                ),
+            }
+        };
         self.replans.push(ReplanOutcome {
             time: t,
             migrated,
@@ -564,7 +688,203 @@ impl DynamicSimulation {
             units: self.sim.units.len(),
             warm: use_warm,
             decision_ms,
+            cost,
+            window_s,
         });
+    }
+
+    /// Legacy whole-cluster migration: preempt everything, rebuild every
+    /// unit, one global window, recompute all KV. Returns (cost, window).
+    fn migrate_blackout(
+        &mut self,
+        t: f64,
+        duration: f64,
+        placement: Placement,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) -> (f64, f64) {
+        // Preempt-and-recompute: collect unfinished work, tear down,
+        // rebuild, and hold every LLM for the downtime.
+        self.completed.extend(self.sim.harvest_records());
+        self.dropped += self.sim.dropped();
+        let pending = self.sim.drain_all_requests();
+        let downtime = self.controller.config().migration_downtime;
+        // Measured cost (downtime × preempted work) — what hysteresis
+        // learned from before migrations were priced.
+        let cost = downtime * pending.len() as f64;
+        self.controller.note_migration_cost(cost);
+        self.sim = Simulation::from_placement(
+            &placement,
+            &self.specs,
+            &self.workloads,
+            self.cfg,
+            &self.cost,
+        );
+        self.signature = placement_signature(&placement);
+        self.placement = placement;
+        self.assign_fresh_uids();
+        self.migrations += 1;
+        let resume = t + downtime;
+        self.migration_until = resume;
+        self.downtime_s += downtime * self.sim.n_llms() as f64;
+        self.migration_cost += cost;
+        for r in self.llm_resume_at.iter_mut() {
+            *r = resume;
+        }
+        // The preempted work keeps its original arrival times and
+        // recomputes from scratch at resume time, together with any
+        // arrivals held during the window.
+        let payload: Vec<ResumedRequest> = pending
+            .into_iter()
+            .map(|req| ResumedRequest {
+                req,
+                generated: 0,
+                first_token: 0.0,
+                blocks: 0,
+            })
+            .collect();
+        self.push_delivery(resume, false, payload, heap, seq);
+        self.schedule_adapt_ticks(resume, duration, heap, seq);
+        (cost, downtime)
+    }
+
+    /// Staged migration: transplant kept units (they keep serving),
+    /// drain each moved LLM with its KV, and re-admit per the plan's
+    /// serialized windows. Returns (cost, window).
+    fn migrate_staged(
+        &mut self,
+        t: f64,
+        duration: f64,
+        placement: Placement,
+        plan: MigrationPlan,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) -> (f64, f64) {
+        self.completed.extend(self.sim.harvest_records());
+        let old_sim = std::mem::replace(&mut self.sim, Simulation::empty());
+        let old_uids = std::mem::take(&mut self.unit_uid);
+        let mut old_units: Vec<Option<UnitSim>> =
+            old_sim.into_units().into_iter().map(Some).collect();
+
+        // Drain every moved LLM out of its (torn-down) old unit with KV
+        // state intact; the payload travels with global ids.
+        let mut payloads: Vec<(f64, bool, Vec<ResumedRequest>)> =
+            Vec::new();
+        for op in &plan.ops {
+            let unit = old_units[op.from_unit]
+                .as_mut()
+                .expect("torn-down unit must still be present");
+            let local = self.placement.units[op.from_unit]
+                .members
+                .iter()
+                .position(|(gi, _)| *gi == op.llm)
+                .expect("moved LLM must be a member of its source unit");
+            let mut drained = unit.drain_llm(local);
+            for r in drained.iter_mut() {
+                r.req.llm = op.llm;
+            }
+            self.llm_resume_at[op.llm] = t + op.resume;
+            payloads.push((
+                t + op.resume,
+                op.method == MoveMethod::KvCopy,
+                drained,
+            ));
+        }
+        // Torn-down units leave the simulation: bank their counters.
+        // Any member the plan could NOT move (an LLM absent from the
+        // new placement — unreachable through the built-in optimizers,
+        // which place every LLM, but `plan_migration` is public API) is
+        // preempted with nowhere to go: count its remaining requests as
+        // dropped instead of losing them silently. The moved LLMs were
+        // already drained above, so this drain returns only strays.
+        let mut kept_mask = vec![false; old_units.len()];
+        for &(old_u, _) in &plan.kept {
+            kept_mask[old_u] = true;
+        }
+        for (i, u) in old_units.iter_mut().enumerate() {
+            if kept_mask[i] {
+                continue;
+            }
+            if let Some(u) = u {
+                self.dropped += u.drain_requests().len();
+                self.dropped += u.dropped();
+            }
+        }
+
+        // Effective placement: kept units carried over VERBATIM (member
+        // order preserved, so the transplanted engines' local llm ids
+        // keep routing), rebuilt units from the new placement.
+        let mut eff_units = placement.units.clone();
+        let mut reuse: Vec<Option<UnitSim>> =
+            eff_units.iter().map(|_| None).collect();
+        let mut new_uids: Vec<u64> = vec![u64::MAX; eff_units.len()];
+        for &(old_u, new_u) in &plan.kept {
+            eff_units[new_u] = self.placement.units[old_u].clone();
+            reuse[new_u] = old_units[old_u].take();
+            new_uids[new_u] = old_uids[old_u];
+        }
+        let fresh_mask: Vec<bool> =
+            new_uids.iter().map(|id| *id == u64::MAX).collect();
+        for id in new_uids.iter_mut() {
+            if *id == u64::MAX {
+                *id = self.next_uid;
+                self.next_uid += 1;
+            }
+        }
+        let eff = Placement {
+            units: eff_units,
+            est_total: placement.est_total,
+        };
+        self.sim = Simulation::from_placement_reusing(
+            &eff,
+            &self.specs,
+            &self.workloads,
+            self.cfg,
+            &self.cost,
+            reuse,
+        );
+        self.unit_uid = new_uids;
+        self.uid_index = self
+            .unit_uid
+            .iter()
+            .enumerate()
+            .map(|(u, id)| (*id, u))
+            .collect();
+        self.signature = placement_signature(&eff);
+        self.placement = eff;
+        self.migrations += 1;
+        self.migration_until = t + plan.total_window();
+        self.downtime_s += plan.downtime_seconds();
+        let cost = plan.policy_cost();
+        self.migration_cost += cost;
+        // Priced, per moved LLM — the honest feedback the hysteresis
+        // bars learn from under staged execution.
+        self.controller.note_migration_costs(&plan.per_llm_cost());
+        for (time, kv, payload) in payloads {
+            self.push_delivery(time, kv, payload, heap, seq);
+        }
+        // Only rebuilt units need a new adapt chain.
+        self.schedule_adapt_ticks_for(
+            &fresh_mask,
+            self.migration_until,
+            duration,
+            heap,
+            seq,
+        );
+        (cost, plan.total_window())
+    }
+
+    /// All-new unit identities (blackout rebuilds everything).
+    fn assign_fresh_uids(&mut self) {
+        let n = self.sim.units.len();
+        let mut uids = Vec::with_capacity(n);
+        for _ in 0..n {
+            uids.push(self.next_uid);
+            self.next_uid += 1;
+        }
+        self.uid_index =
+            uids.iter().enumerate().map(|(u, id)| (*id, u)).collect();
+        self.unit_uid = uids;
     }
 }
 
@@ -663,6 +983,8 @@ mod tests {
             report.replans
         );
         assert!(!report.eval.records.is_empty());
+        assert_eq!(report.downtime_s, 0.0);
+        assert_eq!(report.migration_cost, 0.0);
     }
 
     #[test]
@@ -686,25 +1008,40 @@ mod tests {
     }
 
     #[test]
-    fn dynamic_run_is_deterministic_under_every_policy() {
+    fn dynamic_run_is_deterministic_under_every_policy_and_mode() {
         let (specs, workloads, cluster, requests) = stationary_setup();
         for policy in PolicyKind::all() {
-            let run = || {
-                let rcfg = ReplanConfig { policy, ..Default::default() };
-                let dy = DynamicSimulation::new(
-                    &specs,
-                    &workloads,
-                    &cluster,
-                    EngineConfig::muxserve(),
-                    rcfg,
-                    true,
-                )
-                .unwrap();
-                dy.run(&requests, 60.0)
-            };
-            let (a, b) = (run(), run());
-            assert_eq!(a.eval, b.eval, "policy {}", policy.name());
-            assert_eq!(a.migrations, b.migrations);
+            for migration_mode in MigrationMode::all() {
+                let run = || {
+                    let rcfg = ReplanConfig {
+                        policy,
+                        migration_mode,
+                        ..Default::default()
+                    };
+                    let dy = DynamicSimulation::new(
+                        &specs,
+                        &workloads,
+                        &cluster,
+                        EngineConfig::muxserve(),
+                        rcfg,
+                        true,
+                    )
+                    .unwrap();
+                    dy.run(&requests, 60.0)
+                };
+                let (a, b) = (run(), run());
+                assert_eq!(
+                    a.eval,
+                    b.eval,
+                    "policy {} / {}",
+                    policy.name(),
+                    migration_mode.name()
+                );
+                assert_eq!(a.migrations, b.migrations);
+                assert_eq!(a.downtime_s, b.downtime_s);
+                assert_eq!(a.migration_cost, b.migration_cost);
+                assert_eq!(a.kv_resumed, b.kv_resumed);
+            }
         }
     }
 
@@ -846,6 +1183,67 @@ mod tests {
             done as f64 >= arrived as f64 / 3.0,
             "5s blackouts must not lose the buffered work: {done} of \
              {arrived}"
+        );
+        // Blackout charges every LLM for every window.
+        assert!(
+            report.downtime_s
+                >= 5.0 * specs.len() as f64 * report.migrations as f64
+                    - 1e-9,
+            "downtime accounting: {}",
+            report.downtime_s
+        );
+    }
+
+    #[test]
+    fn staged_migration_keeps_serving_and_copies_kv() {
+        // The staged executor on the flash crowd: kept units keep
+        // serving, moved LLMs resume from copied KV, and the total
+        // downtime is strictly below what blackout charges for the same
+        // number of migrations.
+        let scenario = Scenario::new(ScenarioShape::FlashCrowd);
+        let data = scenario.build();
+        let specs = scenario.model_specs();
+        let cluster = ClusterSpec::new(4, 1);
+        let rcfg = ReplanConfig {
+            migration_mode: MigrationMode::Staged,
+            ..Default::default()
+        };
+        let dy = DynamicSimulation::new(
+            &specs,
+            &data.planning_workloads,
+            &cluster,
+            EngineConfig::muxserve(),
+            rcfg,
+            true,
+        )
+        .unwrap();
+        let report = dy.run(&data.requests, scenario.duration);
+        assert!(
+            report.migrations >= 1,
+            "the flash crowd must migrate: {:?}",
+            report.replans
+        );
+        assert!(
+            report.kv_resumed > 0,
+            "staged flash-crowd migration must resume at least one \
+             request from copied KV"
+        );
+        let blackout_equivalent = ReplanConfig::default()
+            .migration_downtime
+            * specs.len() as f64
+            * report.migrations as f64;
+        assert!(
+            report.downtime_s < blackout_equivalent,
+            "staged downtime {} must undercut the blackout equivalent \
+             {blackout_equivalent}",
+            report.downtime_s
+        );
+        let done = report.eval.records.len();
+        let arrived = data.requests.len();
+        assert!(done + report.dropped <= arrived);
+        assert!(
+            done as f64 >= arrived as f64 / 3.0,
+            "staged migration must not lose work: {done} of {arrived}"
         );
     }
 }

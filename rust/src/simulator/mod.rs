@@ -12,7 +12,7 @@ pub mod dynamic;
 pub mod unit;
 
 pub use dynamic::{DynamicReport, DynamicSimulation, ReplanOutcome};
-pub use unit::{Job, JobPhase, UnitModelCfg, UnitSim};
+pub use unit::{Job, JobPhase, ResumedRequest, UnitModelCfg, UnitSim};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -32,17 +32,20 @@ pub(crate) enum EventKind {
     /// Online re-placement check (used by [`dynamic::DynamicSimulation`];
     /// the static [`Simulation`] never schedules one).
     Replan,
+    /// End of one staged-migration move window: deliver the payload with
+    /// this index ([`dynamic::DynamicSimulation`] only).
+    Resume(usize),
 }
 
 #[derive(Clone, Debug)]
 pub(crate) struct Event {
     pub(crate) time: f64,
     pub(crate) seq: u64,
+    /// Which unit the event addresses. The static [`Simulation`] uses
+    /// the unit's index; the dynamic engine uses its stable *uid*
+    /// ([`dynamic::DynamicSimulation`]), so events of units torn down by
+    /// a migration stop resolving instead of mis-routing.
     pub(crate) unit: usize,
-    /// Placement generation the event belongs to. Unit-addressed events
-    /// from an epoch that has been migrated away are stale and dropped.
-    /// The static simulation runs entirely in epoch 0.
-    pub(crate) epoch: u64,
     pub(crate) kind: EventKind,
 }
 
@@ -94,16 +97,46 @@ impl Simulation {
         cfg: EngineConfig,
         cost: &CostModel,
     ) -> Self {
+        let reuse = placement.units.iter().map(|_| None).collect();
+        Self::from_placement_reusing(
+            placement, specs, workloads, cfg, cost, reuse,
+        )
+    }
+
+    /// Build a simulation from a placement, transplanting live units —
+    /// the staged-migration path: `reuse[u]`, when `Some`, is an existing
+    /// [`UnitSim`] (same membership in the same member order as
+    /// `placement.units[u]`) that keeps its in-flight jobs, KV holdings,
+    /// and usage integrals; `None` constructs a fresh unit. The caller is
+    /// responsible for the member-order agreement — the dynamic engine
+    /// guarantees it by carrying kept units' `PlacementUnit`s over
+    /// verbatim.
+    pub fn from_placement_reusing(
+        placement: &Placement,
+        specs: &[ModelSpec],
+        workloads: &[WorkloadSpec],
+        cfg: EngineConfig,
+        cost: &CostModel,
+        mut reuse: Vec<Option<UnitSim>>,
+    ) -> Self {
+        debug_assert_eq!(reuse.len(), placement.units.len());
         let mut llm_map = vec![(usize::MAX, usize::MAX); specs.len()];
         let mut rev_map = Vec::with_capacity(placement.units.len());
         let mut units = Vec::new();
         for (u, pu) in placement.units.iter().enumerate() {
-            let mut models = Vec::new();
             rev_map.push(
                 pu.members.iter().map(|(gi, _)| *gi).collect::<Vec<_>>(),
             );
-            for (local, (gi, cand)) in pu.members.iter().enumerate() {
+            for (local, (gi, _)) in pu.members.iter().enumerate() {
                 llm_map[*gi] = (u, local);
+            }
+            if let Some(live) = reuse.get_mut(u).and_then(Option::take) {
+                debug_assert_eq!(live.n_llms(), pu.members.len());
+                units.push(live);
+                continue;
+            }
+            let mut models = Vec::new();
+            for (gi, cand) in pu.members.iter() {
                 models.push(UnitModelCfg {
                     spec: specs[*gi].clone(),
                     rate: workloads[*gi].rate,
@@ -118,6 +151,25 @@ impl Simulation {
             units.push(UnitSim::new(models, pu.mesh_gpus, cfg, cost.clone()));
         }
         Simulation { units, llm_map, rev_map, n_llms: specs.len(), events: 0 }
+    }
+
+    /// A unit-less placeholder (used while swapping simulations during a
+    /// migration — never run).
+    pub fn empty() -> Self {
+        Simulation {
+            units: Vec::new(),
+            llm_map: Vec::new(),
+            rev_map: Vec::new(),
+            n_llms: 0,
+            events: 0,
+        }
+    }
+
+    /// Decompose into raw units — the teardown half of a staged
+    /// migration (kept units transplant into the successor simulation,
+    /// the rest are drained and dropped).
+    pub fn into_units(self) -> Vec<UnitSim> {
+        self.units
     }
 
     /// Replay `requests` (global LLM ids, arrival-sorted) for `duration`
@@ -136,7 +188,6 @@ impl Simulation {
                 time: r.arrival,
                 seq,
                 unit: u,
-                epoch: 0,
                 kind: EventKind::Arrival(lr),
             });
             seq += 1;
@@ -151,7 +202,6 @@ impl Simulation {
                         time: t,
                         seq,
                         unit: u,
-                        epoch: 0,
                         kind: EventKind::Adapt,
                     });
                     seq += 1;
@@ -173,14 +223,14 @@ impl Simulation {
                 EventKind::Arrival(r) => unit.on_arrival(ev.time, r),
                 EventKind::JobDone(id) => unit.on_job_done(ev.time, id),
                 EventKind::Adapt => unit.on_adapt(),
-                EventKind::Replan => {} // static run: never scheduled
+                // Static run: never scheduled.
+                EventKind::Replan | EventKind::Resume(_) => {}
             }
             for (t_done, job_id) in unit.drain_started() {
                 heap.push(Event {
                     time: t_done,
                     seq,
                     unit: ev.unit,
-                    epoch: 0,
                     kind: EventKind::JobDone(job_id),
                 });
                 seq += 1;

@@ -99,6 +99,26 @@ struct Active {
     blocks: usize,
 }
 
+/// A request drained out of a unit with its KV progress intact — the
+/// payload of a staged migration's KV-copy. `generated > 0` means the
+/// request was mid-decode and can resume on the destination without
+/// recomputing its prefix (its `blocks` are re-charged there);
+/// `generated == 0` (still waiting, or its prefill job was cancelled by
+/// the drain) means there is nothing to copy and the request re-enters
+/// admission whole.
+#[derive(Clone, Debug)]
+pub struct ResumedRequest {
+    pub req: Request,
+    /// Output tokens already generated (KV prefix length − prompt).
+    pub generated: usize,
+    /// When the first token was produced (preserved so the migration
+    /// penalty never rewrites measured TTFT).
+    pub first_token: f64,
+    /// KV blocks held at drain time — freed at the source, to be
+    /// re-charged at the destination on a successful KV-copy resume.
+    pub blocks: usize,
+}
+
 impl Active {
     fn ctx(&self) -> usize {
         self.req.prompt_len + self.generated
@@ -240,6 +260,94 @@ impl UnitSim {
         self.prefill_inflight = false;
         self.prefill_waiting = false;
         out
+    }
+
+    /// Drain ONE LLM's unfinished requests with their KV state intact
+    /// (waiting + active, LOCAL llm ids, sorted by arrival then id) — the
+    /// per-LLM half of a staged migration. Block holdings are freed at
+    /// this unit and recorded in the payload for the destination to
+    /// re-charge. In-flight jobs touching the LLM are NOT rewound (their
+    /// completions reference ids that no longer resolve), so this is a
+    /// teardown-path call: the unit is discarded after every member LLM
+    /// has been drained.
+    pub fn drain_llm(&mut self, llm: usize) -> Vec<ResumedRequest> {
+        let mut out: Vec<ResumedRequest> = self.waiting[llm]
+            .drain(..)
+            .map(|req| ResumedRequest {
+                req,
+                generated: 0,
+                first_token: 0.0,
+                blocks: 0,
+            })
+            .collect();
+        while !self.active[llm].is_empty() {
+            let idx = self.active[llm].len() - 1;
+            let a = self.remove_active(llm, idx);
+            self.quota.free(llm, a.blocks);
+            // A cancelled prefill has no usable KV prefix: its blocks
+            // were freed above and the request recomputes from scratch.
+            let (generated, first_token, blocks) = if a.generated == 0 {
+                (0, 0.0, 0)
+            } else {
+                (a.generated, a.first_token, a.blocks)
+            };
+            out.push(ResumedRequest {
+                req: a.req,
+                generated,
+                first_token,
+                blocks,
+            });
+        }
+        out.sort_by(|a, b| {
+            a.req
+                .arrival
+                .total_cmp(&b.req.arrival)
+                .then(a.req.id.cmp(&b.req.id))
+        });
+        out
+    }
+
+    /// Re-admit a drained request (LOCAL llm id in `r.req.llm`) after a
+    /// migration. A request with a usable KV prefix whose blocks fit the
+    /// destination quota resumes mid-decode — charged to the quota, put
+    /// straight into the Ready set, no prefill — and the call returns
+    /// `true`. Otherwise (nothing generated yet, or the quota/pool denies
+    /// the transfer) it falls back to recompute: the request re-enters
+    /// the wait queue whole and nothing is charged, so a failed copy can
+    /// never leak quota. Returns whether the KV-copy resume happened.
+    pub fn admit_resumed(&mut self, t: f64, r: ResumedRequest) -> bool {
+        let llm = r.req.llm;
+        if r.generated == 0 || r.blocks == 0 || !self.try_alloc(llm, r.blocks)
+        {
+            self.waiting[llm].push_back(r.req);
+            self.try_schedule(t);
+            return false;
+        }
+        self.insert_active(llm, Active {
+            req: r.req,
+            state: ReqState::Ready,
+            generated: r.generated,
+            first_token: r.first_token,
+            blocks: r.blocks,
+        });
+        self.try_schedule(t);
+        true
+    }
+
+    /// Unfinished requests of one LLM (waiting + active) — the migration
+    /// planner's `pending` input.
+    pub fn llm_pending(&self, llm: usize) -> usize {
+        self.waiting[llm].len() + self.active[llm].len()
+    }
+
+    /// Context tokens cached across one LLM's admitted requests — what a
+    /// recompute-style migration would re-prefill.
+    pub fn llm_ctx_tokens(&self, llm: usize) -> usize {
+        self.active[llm]
+            .iter()
+            .filter(|a| a.generated > 0)
+            .map(|a| a.ctx())
+            .sum()
     }
 
     pub fn dropped(&self) -> usize {
@@ -1082,6 +1190,114 @@ mod tests {
         // Unit is reusable: a fresh arrival schedules normally.
         unit.on_arrival(1.0, req(0, 9, 1.0, 16, 2));
         assert_eq!(unit.drain_started().len(), 1);
+    }
+
+    #[test]
+    fn kv_copied_request_resumes_mid_decode_without_prefill() {
+        // Source unit: prefill + one decode step, then a staged drain.
+        let mk = || {
+            UnitSim::new(
+                vec![cfg_model(6.7, 1.0, 1.0)],
+                1,
+                EngineConfig::muxserve(),
+                CostModel::a100(),
+            )
+        };
+        let mut src = mk();
+        src.on_arrival(0.0, req(0, 1, 0.0, 64, 8));
+        let (t1, id1) = src.drain_started()[0];
+        src.advance_time(t1);
+        src.on_job_done(t1, id1); // prefill done: generated = 1
+        let (t2, id2) = src.drain_started()[0];
+        src.advance_time(t2);
+        src.on_job_done(t2, id2); // one decode step: generated = 2
+        let _ = src.drain_started(); // cancel the next decode job
+        let payload = src.drain_llm(0);
+        assert_eq!(payload.len(), 1);
+        let r = payload[0].clone();
+        assert_eq!(r.generated, 2);
+        assert!(r.blocks > 0, "mid-decode state must carry KV blocks");
+        assert!((r.first_token - t1).abs() < 1e-12);
+        assert_eq!(src.quota_used(0), 0, "source must free the blocks");
+
+        // Destination: the transferred blocks are charged and the very
+        // first job is a DECODE — no recompute of the prefix.
+        let mut dst = mk();
+        dst.advance_time(t2);
+        assert!(dst.admit_resumed(t2, r.clone()), "copy resume must fit");
+        assert!(dst.quota_used(0) >= r.blocks, "destination not charged");
+        let started = dst.drain_started();
+        assert_eq!(started.len(), 1);
+        let job = dst.inflight.values().next().unwrap();
+        assert_eq!(
+            job.phase,
+            JobPhase::Decode,
+            "a KV-copied request must resume decoding, not re-prefill"
+        );
+        // Run to completion: the record keeps the ORIGINAL first-token
+        // time and emits the full output.
+        let mut pending = started;
+        let mut t = t2;
+        while let Some((tn, id)) = pending.pop() {
+            t = t.max(tn);
+            dst.advance_time(t);
+            dst.on_job_done(t, id);
+            pending.extend(dst.drain_started());
+        }
+        let recs = dst.take_records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].output_len, 8);
+        assert!((recs[0].first_token - t1).abs() < 1e-12);
+        assert_eq!(dst.quota_used(0), 0, "blocks leaked after finish");
+    }
+
+    #[test]
+    fn admit_resumed_falls_back_to_recompute_without_leaking_quota() {
+        // A destination too small for the transferred blocks: the copy
+        // must be refused, nothing charged, and the request re-enters
+        // admission whole (served later or dropped as inadmissible —
+        // never stranded holding quota).
+        let mut dst = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig {
+                kv_capacity_frac: 1e-6,
+                ..EngineConfig::muxserve()
+            },
+            CostModel::a100(),
+        );
+        let r = ResumedRequest {
+            req: req(0, 9, 0.0, 64, 8),
+            generated: 3,
+            first_token: 0.5,
+            blocks: dst.total_blocks() + 1,
+        };
+        assert!(!dst.admit_resumed(1.0, r), "oversized copy must fall back");
+        assert_eq!(dst.quota_used(0), 0, "fallback leaked quota");
+        assert_eq!(
+            dst.llm_pending(0) + dst.dropped(),
+            1,
+            "the request must be requeued or dropped, not lost"
+        );
+        // A drained-from-waiting request (no KV) also takes the
+        // recompute path even on a roomy unit.
+        let mut roomy = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig::muxserve(),
+            CostModel::a100(),
+        );
+        let cold = ResumedRequest {
+            req: req(0, 10, 0.0, 64, 8),
+            generated: 0,
+            first_token: 0.0,
+            blocks: 0,
+        };
+        assert!(!roomy.admit_resumed(0.0, cold));
+        // It schedules normally from the wait queue (a prefill job).
+        assert_eq!(roomy.drain_started().len(), 1);
+        let job = roomy.inflight.values().next().unwrap();
+        assert_eq!(job.phase, JobPhase::Prefill);
     }
 
     #[test]

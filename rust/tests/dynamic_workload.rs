@@ -10,7 +10,7 @@
 use muxserve::bench::compare_three_systems;
 use muxserve::bench::drift::{run_scenario, run_trace, scenario_cluster};
 use muxserve::config::{llama_spec, ClusterSpec};
-use muxserve::coordinator::{PolicyKind, ReplanConfig};
+use muxserve::coordinator::{MigrationMode, PolicyKind, ReplanConfig};
 use muxserve::simulator::DynamicReport;
 use muxserve::workload::{
     requests_from_trace, requests_to_trace, synthetic_workload, Scenario,
@@ -118,6 +118,60 @@ fn drift_scenario_replan_beats_static_placement() {
          static {}",
         ad.eval.records.len(),
         st.eval.records.len()
+    );
+}
+
+#[test]
+fn staged_migration_beats_blackout_on_the_flash_crowd() {
+    // The cost-aware migration contract, end to end on the identical
+    // stream: staged execution must migrate when the blackout engine
+    // does, charge strictly less total downtime (kept units never stop,
+    // moved LLMs pay per-op windows instead of a global blackout), hold
+    // at least the blackout's SLO attainment, and demonstrably resume
+    // requests from copied KV instead of recomputing them.
+    let scenario = Scenario::new(ScenarioShape::FlashCrowd);
+    let cluster = scenario_cluster();
+    let run_mode = |mode: MigrationMode| {
+        let rcfg =
+            ReplanConfig { migration_mode: mode, ..Default::default() };
+        run_scenario(&scenario, &cluster, Some(rcfg))
+            .expect("placement exists")
+    };
+    let (blackout, arrived_b) = run_mode(MigrationMode::Blackout);
+    let (staged, arrived_s) = run_mode(MigrationMode::Staged);
+    assert_eq!(arrived_b, arrived_s, "identical streams");
+    assert!(
+        blackout.migrations >= 1 && staged.migrations >= 1,
+        "both executors must migrate on the flash crowd: blackout {:?} \
+         staged {:?}",
+        blackout.replans,
+        staged.replans
+    );
+    assert!(
+        staged.downtime_s < blackout.downtime_s,
+        "staged must charge strictly less downtime: staged {} vs \
+         blackout {}",
+        staged.downtime_s,
+        blackout.downtime_s
+    );
+    let (slo_b, slo_s) = (
+        blackout.eval.slo_attainment(8.0),
+        staged.eval.slo_attainment(8.0),
+    );
+    assert!(
+        slo_s + 1e-9 >= slo_b,
+        "staged must not lose SLO to blackout: staged {slo_s:.4} vs \
+         blackout {slo_b:.4}"
+    );
+    assert!(
+        staged.kv_resumed > 0,
+        "at least one request must resume from copied KV without \
+         recompute"
+    );
+    assert_eq!(
+        blackout.kv_resumed, 0,
+        "blackout recomputes everything — it must never report a KV \
+         resume"
     );
 }
 

@@ -1,10 +1,17 @@
 //! Property tests over the memory layer (quota accounting + concrete
 //! block allocator) under randomized alloc/free/adapt sequences — the
-//! invariants the unified KV cache (§3.3/§3.4) must never break.
+//! invariants the unified KV cache (§3.3/§3.4) must never break — plus
+//! the KV-block conservation law of a staged migration (drain at the
+//! source, re-charge at the destination, no leak on fallback).
 
+use muxserve::config::llama_spec;
+use muxserve::coordinator::EngineConfig;
+use muxserve::costmodel::CostModel;
 use muxserve::memory::{BlockAllocator, QuotaCache, QuotaError};
 use muxserve::prop_assert;
+use muxserve::simulator::{UnitModelCfg, UnitSim};
 use muxserve::util::{proplite, Rng};
+use muxserve::workload::Request;
 
 /// Quota conservation: under quota-enforced allocation and arbitrary
 /// interleavings of alloc / free / adapt, (1) the per-LLM quotas always
@@ -131,6 +138,154 @@ fn prop_pool_only_never_oversubscribes() {
                 q.total_used()
             );
         }
+        Ok(())
+    });
+}
+
+fn prop_unit(n_llms: usize, kv_frac: f64, rng: &mut Rng) -> UnitSim {
+    let models: Vec<UnitModelCfg> = (0..n_llms)
+        .map(|i| UnitModelCfg {
+            spec: llama_spec(&format!("mp-{i}"), 6.7),
+            rate: 0.5 + rng.f64() * 3.0,
+            mean_total_len: 499.0,
+            prefill_sm: 0.5,
+            decode_sm: 0.5,
+            tp: 1,
+            canonical_tp: 1,
+        })
+        .collect();
+    let cfg = EngineConfig {
+        kv_capacity_frac: kv_frac,
+        ..EngineConfig::muxserve()
+    };
+    UnitSim::new(models, 1, cfg, CostModel::a100())
+}
+
+/// KV-block conservation across a staged migration: drive a source unit
+/// into a random mixed state (waiting / prefilling / mid-decode), drain
+/// one LLM with state, and re-admit at a destination. Invariants:
+/// (1) the source frees exactly what it held — no stranded blocks;
+/// (2) every request survives the journey exactly once;
+/// (3) blocks freed at the source == blocks charged at the destination
+///     for every successful KV-copy resume (same model ⇒ same block
+///     geometry), and the destination's quota usage accounts exactly
+///     for the resumed holdings (before any new decode growth);
+/// (4) a fallback-to-recompute (destination too small) charges nothing —
+///     no quota leak — and the request sits in admission instead.
+#[test]
+fn prop_staged_migration_conserves_kv_blocks() {
+    proplite::check(150, |rng: &mut Rng| {
+        let n = 1 + rng.below(3);
+        let mut src = prop_unit(n, 0.2 + rng.f64() * 0.8, rng);
+        // Random event soup to reach a mixed state.
+        let mut pending: Vec<(f64, u64)> = Vec::new();
+        let mut now = 0.0_f64;
+        for id in 0..rng.range(3, 40) as u64 {
+            if !pending.is_empty() && rng.f64() < 0.5 {
+                let i = pending
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let (t, job) = pending.swap_remove(i);
+                now = now.max(t);
+                src.advance_time(now);
+                src.on_job_done(now, job);
+            } else {
+                now += rng.f64() * 0.05;
+                src.advance_time(now);
+                src.on_arrival(
+                    now,
+                    Request {
+                        id,
+                        llm: rng.below(n),
+                        arrival: now,
+                        prompt_len: 16 + rng.below(600),
+                        output_len: 2 + rng.below(48),
+                    },
+                );
+            }
+            pending.extend(src.drain_started());
+        }
+        let llm = rng.below(n);
+        let held_before = src.quota_used(llm);
+        let pending_before = src.llm_pending(llm);
+        let drained = src.drain_llm(llm);
+        // (1) + (2): exact free at the source, nobody lost.
+        prop_assert!(
+            src.quota_used(llm) == 0,
+            "source stranded {} blocks",
+            src.quota_used(llm)
+        );
+        prop_assert!(
+            drained.len() == pending_before,
+            "drained {} of {pending_before} requests",
+            drained.len()
+        );
+        let payload_blocks: usize =
+            drained.iter().map(|r| r.blocks).sum();
+        prop_assert!(
+            payload_blocks <= held_before,
+            "payload {payload_blocks} exceeds source holding \
+             {held_before}"
+        );
+        // Destination: sometimes roomy (copies succeed), sometimes tiny
+        // (fallback-to-recompute). Single-LLM destination so local id 0.
+        let tiny = rng.f64() < 0.4;
+        let mut dst =
+            prop_unit(1, if tiny { 1e-6 } else { 1.0 }, rng);
+        let mut charged = 0usize;
+        let mut resumed = 0usize;
+        let mut recomputed = 0usize;
+        for r in drained {
+            let mut lr = r;
+            lr.req.llm = 0;
+            let blocks = lr.blocks;
+            let used_before = dst.quota_used(0);
+            if dst.admit_resumed(now, lr) {
+                resumed += 1;
+                charged += blocks;
+                // (3) the exact transferred holding is charged (decode
+                // growth may add more later, never less).
+                prop_assert!(
+                    dst.quota_used(0) >= used_before + blocks,
+                    "copy charged less than the transferred blocks"
+                );
+            } else {
+                recomputed += 1;
+            }
+        }
+        // (3): destination usage covers the resumed holdings plus
+        // whatever decode growth scheduling added — never less than
+        // what the copies charged (and nothing at all when every copy
+        // fell back).
+        prop_assert!(
+            dst.quota_used(0) >= charged,
+            "destination lost charged blocks: used {} < charged \
+             {charged}",
+            dst.quota_used(0)
+        );
+        if tiny {
+            // (4): every KV holding is at least one block-chunk (1024
+            // head-wise blocks for this model), far above the tiny
+            // pool — every copy must refuse, and refusals charge
+            // nothing: the no-quota-leak half of the fallback contract.
+            prop_assert!(
+                resumed == 0,
+                "tiny destination accepted {resumed} copies it cannot \
+                 hold"
+            );
+            prop_assert!(
+                dst.quota_used(0) == 0,
+                "fallback leaked {} blocks of quota",
+                dst.quota_used(0)
+            );
+        }
+        prop_assert!(
+            resumed + recomputed == pending_before,
+            "requests lost in transit"
+        );
         Ok(())
     });
 }
