@@ -49,7 +49,7 @@ fn main() {
         let mut a = BlockAllocator::new(4096, 4);
         for owner in 0..4 {
             let ids = a.alloc(owner, 16).unwrap();
-            a.free_blocks(owner, &ids);
+            a.free_blocks(owner, &ids).unwrap();
         }
     });
 

@@ -27,10 +27,11 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use crate::bench::drift::{run_scenario_on, scenario_cluster};
+use crate::bench::drift::{run_scenario_cfg, scenario_cluster};
 use crate::coordinator::migration::MigrationMode;
 use crate::coordinator::replan::PolicyKind;
-use crate::coordinator::ReplanConfig;
+use crate::coordinator::{EngineConfig, ReplanConfig};
+use crate::memory::EvictionKind;
 use crate::util::json::Json;
 use crate::workload::{Scenario, ScenarioShape};
 
@@ -55,6 +56,11 @@ pub struct AbConfig {
     pub migration_modes: Vec<MigrationMode>,
     /// SLO scale for attainment reporting.
     pub slo_scale: f64,
+    /// KV eviction policy for every run in the grid (the cache layer is
+    /// off at [`EvictionKind::None`] — the pre-cache engine).
+    pub eviction: EvictionKind,
+    /// Host-DRAM tier capacity in blocks per unit (0 = no host tier).
+    pub host_tier_blocks: usize,
 }
 
 impl AbConfig {
@@ -70,6 +76,8 @@ impl AbConfig {
             warm_modes: vec![false, true],
             migration_modes: MigrationMode::all().to_vec(),
             slo_scale: 8.0,
+            eviction: EvictionKind::None,
+            host_tier_blocks: 0,
         }
     }
 
@@ -471,6 +479,11 @@ fn staged_deltas(cells: &[AbCell]) -> (Option<f64>, Option<f64>) {
 /// skipped (none of the built-in shapes do on the default cluster).
 pub fn run_ab(cfg: &AbConfig) -> AbReport {
     let cluster = scenario_cluster();
+    let engine = EngineConfig {
+        eviction: cfg.eviction,
+        host_tier_blocks: cfg.host_tier_blocks,
+        ..EngineConfig::muxserve()
+    };
     let mut baselines = Vec::new();
     let mut cells = Vec::new();
     for &shape in &cfg.shapes {
@@ -484,7 +497,7 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
         let data = scenario.build();
         let arrived = data.requests.len();
         if let Some(report) =
-            run_scenario_on(&scenario, &data, &cluster, None)
+            run_scenario_cfg(&scenario, &data, &cluster, engine, None)
         {
             baselines.push(AbBaseline {
                 shape: shape.name(),
@@ -506,10 +519,11 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
                         migration_mode,
                         ..Default::default()
                     };
-                    let Some(report) = run_scenario_on(
+                    let Some(report) = run_scenario_cfg(
                         &scenario,
                         &data,
                         &cluster,
+                        engine,
                         Some(rcfg),
                     ) else {
                         continue;

@@ -1,0 +1,403 @@
+//! `bench-cache`: the KV cache-layer figure — eviction policy × host
+//! tier on shared-prefix workloads, on identical request streams.
+//!
+//! Each scenario shape is materialized ONCE (with the configured
+//! shared-prefix fraction) and replayed through every `eviction ×
+//! host-tier` combination under a static placement, so per-cell
+//! differences in hit rate, skipped prefill seconds, swap traffic, and
+//! SLO attainment are attributable to the cache layer alone. The
+//! `eviction=none` row is the pre-cache engine and serves as the
+//! baseline; host-tier capacity is irrelevant there, so that row runs
+//! once regardless of the host grid.
+//!
+//! All columns are deterministic in the config: two runs produce
+//! byte-identical [`CacheReport::to_json`] / [`CacheReport::to_markdown`]
+//! output (pinned by a test), the same contract the `ab` harness keeps.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::bench::drift::{run_scenario_cfg, scenario_cluster};
+use crate::coordinator::EngineConfig;
+use crate::memory::EvictionKind;
+use crate::util::json::Json;
+use crate::workload::{Scenario, ScenarioShape};
+
+/// Knobs of one `bench-cache` run.
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Simulated seconds per run.
+    pub duration: f64,
+    /// Workload seed (shared by every cell — identical streams).
+    pub seed: u64,
+    /// Scenario shapes to run.
+    pub shapes: Vec<ScenarioShape>,
+    /// Fraction of requests carrying a shared prompt prefix.
+    pub shared_prefix: f64,
+    /// Eviction policies to compare (`none` = the pre-cache engine).
+    pub evictions: Vec<EvictionKind>,
+    /// Host-DRAM tier capacities (blocks per unit) crossed with the
+    /// policies; 0 = evictions fall back to preempt-and-recompute.
+    pub host_tier_blocks: Vec<usize>,
+    /// KV capacity fraction for every run — below 1.0 shrinks the device
+    /// pool so eviction pressure actually materializes.
+    pub kv_frac: f64,
+    /// SLO scale for attainment reporting.
+    pub slo_scale: f64,
+}
+
+impl CacheConfig {
+    /// The full figure: a stationary control and a flash-crowd stressor,
+    /// every eviction policy, with and without a host tier, on a
+    /// deliberately tightened device pool.
+    pub fn full() -> CacheConfig {
+        CacheConfig {
+            duration: 120.0,
+            seed: 2024,
+            shapes: vec![ScenarioShape::Stationary, ScenarioShape::FlashCrowd],
+            shared_prefix: 0.5,
+            evictions: EvictionKind::all().to_vec(),
+            host_tier_blocks: vec![0, 1 << 20],
+            kv_frac: 0.6,
+            slo_scale: 8.0,
+        }
+    }
+
+    /// CI smoke: one stressor shape, shorter runs, same grid otherwise.
+    pub fn smoke() -> CacheConfig {
+        CacheConfig {
+            duration: 60.0,
+            shapes: vec![ScenarioShape::FlashCrowd],
+            ..CacheConfig::full()
+        }
+    }
+}
+
+/// One `eviction × host-tier` run's row in the comparison.
+#[derive(Clone, Debug)]
+pub struct CacheCell {
+    pub shape: &'static str,
+    /// Eviction policy name ("none" = cache layer off).
+    pub eviction: &'static str,
+    /// Host-tier capacity this cell ran with (blocks per unit).
+    pub host_blocks: usize,
+    pub arrived: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    /// SLO attainment at the configured scale (rounded to 1e-4).
+    pub slo: f64,
+    /// p99 request latency, seconds (rounded to 1e-3).
+    pub p99_latency: f64,
+    /// Prefix-cache hit rate over prefix-carrying admissions (1e-4).
+    pub hit_rate: f64,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// Prefill seconds actually spent (rounded to 1e-4).
+    pub prefill_s: f64,
+    /// Prefill seconds avoided by prefix sharing (rounded to 1e-4).
+    pub prefill_skip_s: f64,
+    pub swaps_out: u64,
+    pub swaps_in: u64,
+    /// Evictions that fell back to preempt-and-recompute.
+    pub recompute_preempts: u64,
+    /// High-water mark of host-tier blocks in use.
+    pub host_peak_blocks: usize,
+}
+
+/// Everything one `bench-cache` invocation measured.
+#[derive(Clone, Debug)]
+pub struct CacheReport {
+    pub duration: f64,
+    pub seed: u64,
+    pub shared_prefix: f64,
+    pub kv_frac: f64,
+    pub slo_scale: f64,
+    pub cells: Vec<CacheCell>,
+}
+
+fn round(x: f64, unit: f64) -> f64 {
+    (x / unit).round() * unit
+}
+
+impl CacheReport {
+    /// The comparison as a markdown table, one row per cell. Every
+    /// column is deterministic in the config.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "## bench-cache: eviction × host tier ({}s, seed {}, \
+             shared-prefix {}, kv-frac {}, slo@{})",
+            self.duration,
+            self.seed,
+            self.shared_prefix,
+            self.kv_frac,
+            self.slo_scale
+        );
+        let _ = writeln!(
+            out,
+            "| scenario | eviction | host-blocks | hit-rate | hits/miss \
+             | prefill(s) | skipped(s) | swap-out | swap-in | recompute \
+             | host-peak | slo | p99(s) | done/arrived |"
+        );
+        let _ = writeln!(
+            out,
+            "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+        );
+        for c in &self.cells {
+            let _ = writeln!(
+                out,
+                "| {} | {} | {} | {:.4} | {}/{} | {:.4} | {:.4} | {} | \
+                 {} | {} | {} | {:.4} | {:.3} | {}/{} |",
+                c.shape,
+                c.eviction,
+                c.host_blocks,
+                c.hit_rate,
+                c.prefix_hits,
+                c.prefix_misses,
+                c.prefill_s,
+                c.prefill_skip_s,
+                c.swaps_out,
+                c.swaps_in,
+                c.recompute_preempts,
+                c.host_peak_blocks,
+                c.slo,
+                c.p99_latency,
+                c.completed,
+                c.arrived
+            );
+        }
+        out
+    }
+
+    /// The comparison in the CACHE_N.json schema (byte-reproducible in
+    /// the config — the determinism test compares this).
+    pub fn to_json(&self) -> Json {
+        let mut cfg = BTreeMap::new();
+        cfg.insert("duration_s".to_string(), Json::Num(self.duration));
+        cfg.insert("seed".to_string(), Json::Num(self.seed as f64));
+        cfg.insert(
+            "shared_prefix".to_string(),
+            Json::Num(self.shared_prefix),
+        );
+        cfg.insert("kv_frac".to_string(), Json::Num(self.kv_frac));
+        cfg.insert("slo_scale".to_string(), Json::Num(self.slo_scale));
+
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "shape".to_string(),
+                    Json::Str(c.shape.to_string()),
+                );
+                m.insert(
+                    "eviction".to_string(),
+                    Json::Str(c.eviction.to_string()),
+                );
+                m.insert(
+                    "host_blocks".to_string(),
+                    Json::Num(c.host_blocks as f64),
+                );
+                m.insert(
+                    "arrived".to_string(),
+                    Json::Num(c.arrived as f64),
+                );
+                m.insert(
+                    "completed".to_string(),
+                    Json::Num(c.completed as f64),
+                );
+                m.insert(
+                    "dropped".to_string(),
+                    Json::Num(c.dropped as f64),
+                );
+                m.insert("slo".to_string(), Json::Num(c.slo));
+                m.insert(
+                    "p99_latency_s".to_string(),
+                    Json::Num(c.p99_latency),
+                );
+                m.insert("hit_rate".to_string(), Json::Num(c.hit_rate));
+                m.insert(
+                    "prefix_hits".to_string(),
+                    Json::Num(c.prefix_hits as f64),
+                );
+                m.insert(
+                    "prefix_misses".to_string(),
+                    Json::Num(c.prefix_misses as f64),
+                );
+                m.insert(
+                    "prefill_s".to_string(),
+                    Json::Num(c.prefill_s),
+                );
+                m.insert(
+                    "prefill_skip_s".to_string(),
+                    Json::Num(c.prefill_skip_s),
+                );
+                m.insert(
+                    "swaps_out".to_string(),
+                    Json::Num(c.swaps_out as f64),
+                );
+                m.insert(
+                    "swaps_in".to_string(),
+                    Json::Num(c.swaps_in as f64),
+                );
+                m.insert(
+                    "recompute_preempts".to_string(),
+                    Json::Num(c.recompute_preempts as f64),
+                );
+                m.insert(
+                    "host_peak_blocks".to_string(),
+                    Json::Num(c.host_peak_blocks as f64),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("cache".to_string()));
+        root.insert(
+            "generator".to_string(),
+            Json::Str(
+                "muxserve bench-cache --out CACHE_N.json (every field \
+                 is deterministic in the config)"
+                    .to_string(),
+            ),
+        );
+        root.insert("config".to_string(), Json::Obj(cfg));
+        root.insert("cells".to_string(), Json::Arr(cells));
+        Json::Obj(root)
+    }
+}
+
+/// Run the whole grid. Scenarios that admit no initial placement are
+/// skipped (none of the built-in shapes do on the default cluster).
+pub fn run_bench_cache(cfg: &CacheConfig) -> CacheReport {
+    let cluster = scenario_cluster();
+    let mut cells = Vec::new();
+    for &shape in &cfg.shapes {
+        let scenario = Scenario {
+            duration: cfg.duration,
+            seed: cfg.seed,
+            shared_prefix: cfg.shared_prefix,
+            ..Scenario::new(shape)
+        };
+        // One materialization per shape: every cell below replays the
+        // exact same request stream.
+        let data = scenario.build();
+        let arrived = data.requests.len();
+        for &eviction in &cfg.evictions {
+            // With the cache layer off the host tier is inert — one
+            // baseline row instead of a duplicate per host capacity.
+            let hosts: Vec<usize> =
+                if matches!(eviction, EvictionKind::None) {
+                    vec![0]
+                } else {
+                    cfg.host_tier_blocks.clone()
+                };
+            for host in hosts {
+                let engine = EngineConfig {
+                    eviction,
+                    host_tier_blocks: host,
+                    kv_capacity_frac: cfg.kv_frac,
+                    ..EngineConfig::muxserve()
+                };
+                let Some(report) = run_scenario_cfg(
+                    &scenario,
+                    &data,
+                    &cluster,
+                    engine,
+                    None,
+                ) else {
+                    continue;
+                };
+                let s = &report.cache;
+                cells.push(CacheCell {
+                    shape: shape.name(),
+                    eviction: eviction.name(),
+                    host_blocks: host,
+                    arrived,
+                    completed: report.eval.records.len(),
+                    dropped: report.dropped,
+                    slo: round(
+                        report.eval.slo_attainment(cfg.slo_scale),
+                        1e-4,
+                    ),
+                    p99_latency: round(
+                        report.eval.latency_summary().p99(),
+                        1e-3,
+                    ),
+                    hit_rate: round(s.hit_rate(), 1e-4),
+                    prefix_hits: s.prefix_hits,
+                    prefix_misses: s.prefix_misses,
+                    prefill_s: round(s.prefill_s, 1e-4),
+                    prefill_skip_s: round(s.prefill_skip_s, 1e-4),
+                    swaps_out: s.swaps_out,
+                    swaps_in: s.swaps_in,
+                    recompute_preempts: s.recompute_preempts,
+                    host_peak_blocks: s.host_peak_blocks,
+                });
+            }
+        }
+    }
+    CacheReport {
+        duration: cfg.duration,
+        seed: cfg.seed,
+        shared_prefix: cfg.shared_prefix,
+        kv_frac: cfg.kv_frac,
+        slo_scale: cfg.slo_scale,
+        cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_report_is_deterministic_and_measures_sharing() {
+        // A reduced grid keeps the test fast: the pre-cache baseline
+        // plus one real policy, one host capacity, one stressor shape.
+        let cfg = CacheConfig {
+            duration: 40.0,
+            shapes: vec![ScenarioShape::FlashCrowd],
+            shared_prefix: 0.6,
+            evictions: vec![EvictionKind::None, EvictionKind::Lru],
+            host_tier_blocks: vec![1 << 20],
+            ..CacheConfig::full()
+        };
+        let a = run_bench_cache(&cfg);
+        let b = run_bench_cache(&cfg);
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "same seed must give a byte-identical comparison"
+        );
+        assert_eq!(a.to_markdown(), b.to_markdown());
+        // One baseline row (none ignores the host grid) + one lru row.
+        assert_eq!(a.cells.len(), 2, "cells: {:?}", a.cells);
+
+        let none = &a.cells[0];
+        assert_eq!(none.eviction, "none");
+        assert!(none.hit_rate == 0.0, "cache off tracks no hits");
+        assert!(none.prefill_skip_s == 0.0, "cache off skips nothing");
+        assert!(none.prefill_s > 0.0);
+
+        let lru = &a.cells[1];
+        assert_eq!(lru.eviction, "lru");
+        assert!(lru.prefix_hits > 0, "shared prefixes must hit: {lru:?}");
+        assert!(lru.hit_rate > 0.0);
+        assert!(
+            lru.prefill_skip_s > 0.0,
+            "hits must skip prefill work: {lru:?}"
+        );
+        // Same stream, and hits shave the shared prefix off each
+        // prefill: the per-prefill average must drop vs. the baseline.
+        let avg_none = none.prefill_s / none.completed.max(1) as f64;
+        let avg_lru = lru.prefill_s / lru.completed.max(1) as f64;
+        assert!(
+            avg_lru < avg_none,
+            "sharing must cut mean prefill: {avg_lru} vs {avg_none}"
+        );
+    }
+}

@@ -59,13 +59,26 @@ pub fn run_scenario_on(
     cluster: &ClusterSpec,
     replan: Option<ReplanConfig>,
 ) -> Option<DynamicReport> {
+    run_scenario_cfg(scenario, data, cluster, EngineConfig::muxserve(), replan)
+}
+
+/// Like [`run_scenario_on`], but with an explicit [`EngineConfig`] — the
+/// entry point for runs that ablate engine switches (eviction policy,
+/// host-tier capacity) rather than placement adaptation.
+pub fn run_scenario_cfg(
+    scenario: &Scenario,
+    data: &ScenarioData,
+    cluster: &ClusterSpec,
+    cfg: EngineConfig,
+    replan: Option<ReplanConfig>,
+) -> Option<DynamicReport> {
     let specs = scenario.model_specs();
     let adaptive = replan.is_some();
     let sim = DynamicSimulation::new(
         &specs,
         &data.planning_workloads,
         cluster,
-        EngineConfig::muxserve(),
+        cfg,
         replan.unwrap_or_default(),
         adaptive,
     )?;
@@ -94,6 +107,7 @@ pub fn run_trace(
     requests: &[Request],
     duration: f64,
     cluster: &ClusterSpec,
+    engine: EngineConfig,
     replan: Option<ReplanConfig>,
 ) -> Option<DynamicReport> {
     let n_llms = requests.iter().map(|r| r.llm + 1).max()?;
@@ -116,7 +130,7 @@ pub fn run_trace(
         &specs,
         &workloads,
         cluster,
-        EngineConfig::muxserve(),
+        engine,
         replan.unwrap_or_default(),
         adaptive,
     )?;

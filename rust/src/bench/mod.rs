@@ -1,18 +1,21 @@
 //! Figure/table regeneration harnesses (filled in per DESIGN.md §4),
 //! the drift figure for the dynamic-workload scenarios, the
-//! `bench-perf` event-core performance baseline, and the `ab`
-//! adaptation-policy A/B harness.
+//! `bench-perf` event-core performance baseline, the `ab`
+//! adaptation-policy A/B harness, and the `bench-cache` KV cache-layer
+//! figure.
 
 pub mod ab;
+pub mod cache;
 pub mod drift;
 pub mod experiments;
 pub mod figures;
 pub mod perf;
 
 pub use ab::{run_ab, AbConfig, AbReport, WARM_PARITY_EPS};
+pub use cache::{run_bench_cache, CacheCell, CacheConfig, CacheReport};
 pub use drift::{
-    fig_drift, run_scenario, run_scenario_on, run_trace, scenario_cluster,
-    ScenarioResult,
+    fig_drift, run_scenario, run_scenario_cfg, run_scenario_on, run_trace,
+    scenario_cluster, ScenarioResult,
 };
 pub use experiments::*;
 pub use perf::{run_bench_perf, PerfConfig, PerfReport};

@@ -7,6 +7,9 @@
 use anyhow::Result;
 
 use crate::bench::figures;
+use crate::coordinator::migration::MigrationMode;
+use crate::coordinator::replan::PolicyKind;
+use crate::memory::EvictionKind;
 
 fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
     args.iter()
@@ -51,6 +54,90 @@ fn flag_path<'a>(args: &'a [String], name: &str) -> Result<Option<&'a str>> {
             None => Err(anyhow::anyhow!("{name} requires a file path")),
         },
         None => Ok(None),
+    }
+}
+
+/// Like [`flag_val`], but distinguishes "flag absent" (`None`) from "flag
+/// present" — so each subcommand can apply its own default. Malformed or
+/// bare flags are errors.
+fn flag_opt<T: std::str::FromStr>(
+    args: &[String],
+    name: &str,
+) -> Result<Option<T>> {
+    match args.iter().position(|a| a == name) {
+        Some(i) => match args.get(i + 1) {
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+                anyhow::anyhow!("{name} expects a valid value, got `{v}`")
+            }),
+            None => Err(anyhow::anyhow!("{name} requires a value")),
+        },
+        None => Ok(None),
+    }
+}
+
+/// Flags shared by the simulation-driving subcommands (`scenario`, `ab`,
+/// `bench-cache`, `bench-perf`), parsed once — a new engine knob
+/// registers here and every subcommand picks it up instead of
+/// re-declaring its own copy of the parser. `None` fields mean the flag
+/// was absent and the subcommand's own default applies.
+struct SimArgs {
+    smoke: bool,
+    duration: Option<f64>,
+    seed: Option<u64>,
+    /// Warm-started re-placement (`--warm on|off`, default off).
+    warm: bool,
+    policy: Option<PolicyKind>,
+    migration: Option<MigrationMode>,
+    eviction: Option<EvictionKind>,
+    host_tier_blocks: Option<usize>,
+    shared_prefix: Option<f64>,
+}
+
+impl SimArgs {
+    fn parse(args: &[String]) -> Result<SimArgs> {
+        let warm = match flag_str(args, "--warm", "off") {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => anyhow::bail!("--warm takes on|off, got `{other}`"),
+        };
+        let policy = match flag_path(args, "--policy")? {
+            Some(p) => Some(PolicyKind::parse(p).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown policy `{p}` (expected threshold | forecast \
+                     | hysteresis)"
+                )
+            })?),
+            None => None,
+        };
+        let migration = match flag_path(args, "--migration")? {
+            Some(m) => Some(MigrationMode::parse(m).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown migration mode `{m}` (expected blackout | \
+                     staged)"
+                )
+            })?),
+            None => None,
+        };
+        let eviction = match flag_path(args, "--eviction")? {
+            Some(e) => Some(EvictionKind::parse(e).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown eviction policy `{e}` (expected none | lru \
+                     | slru | gdsf)"
+                )
+            })?),
+            None => None,
+        };
+        Ok(SimArgs {
+            smoke: args.iter().any(|a| a == "--smoke"),
+            duration: flag_opt(args, "--duration")?,
+            seed: flag_opt(args, "--seed")?,
+            warm,
+            policy,
+            migration,
+            eviction,
+            host_tier_blocks: flag_opt(args, "--host-tier-blocks")?,
+            shared_prefix: flag_opt(args, "--shared-prefix")?,
+        })
     }
 }
 
@@ -104,6 +191,9 @@ pub fn main() -> Result<()> {
         "bench-perf" => {
             bench_perf_cmd(&args)?;
         }
+        "bench-cache" => {
+            bench_cache_cmd(&args)?;
+        }
         "bench-all" => {
             figures::fig1();
             figures::fig2();
@@ -144,15 +234,17 @@ pub fn main() -> Result<()> {
 fn bench_perf_cmd(args: &[String]) -> Result<()> {
     use crate::bench::perf::{run_bench_perf, PerfConfig};
 
-    let smoke = args.iter().any(|a| a == "--smoke");
+    let sim = SimArgs::parse(args)?;
     let mut cfg =
-        if smoke { PerfConfig::smoke() } else { PerfConfig::full() };
-    cfg.duration = flag_val(args, "--duration", cfg.duration)?;
+        if sim.smoke { PerfConfig::smoke() } else { PerfConfig::full() };
+    if let Some(d) = sim.duration {
+        cfg.duration = d;
+    }
     let max_wall = flag_val(args, "--max-wall", f64::INFINITY)?;
 
     println!(
         "bench-perf: {} config, duration {:.0}s (running...)",
-        if smoke { "smoke" } else { "paper-scale" },
+        if sim.smoke { "smoke" } else { "paper-scale" },
         cfg.duration
     );
     let report = run_bench_perf(&cfg);
@@ -217,30 +309,27 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
 /// is deterministic in the config).
 fn ab_cmd(args: &[String]) -> Result<()> {
     use crate::bench::ab::{run_ab, AbConfig};
-    use crate::coordinator::migration::MigrationMode;
-    use crate::coordinator::replan::PolicyKind;
 
-    let smoke = args.iter().any(|a| a == "--smoke");
-    let mut cfg = if smoke { AbConfig::smoke() } else { AbConfig::full() };
-    cfg.duration = flag_val(args, "--duration", cfg.duration)?;
-    cfg.seed = flag_val(args, "--seed", cfg.seed)?;
-    if let Some(p) = flag_path(args, "--policy")? {
-        let kind = PolicyKind::parse(p).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown policy `{p}` (expected threshold | forecast | \
-                 hysteresis)"
-            )
-        })?;
-        cfg.policies = vec![kind];
+    let sim = SimArgs::parse(args)?;
+    let mut cfg =
+        if sim.smoke { AbConfig::smoke() } else { AbConfig::full() };
+    if let Some(d) = sim.duration {
+        cfg.duration = d;
     }
-    if let Some(m) = flag_path(args, "--migration")? {
-        let mode = MigrationMode::parse(m).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown migration mode `{m}` (expected blackout | \
-                 staged)"
-            )
-        })?;
-        cfg.migration_modes = vec![mode];
+    if let Some(s) = sim.seed {
+        cfg.seed = s;
+    }
+    if let Some(p) = sim.policy {
+        cfg.policies = vec![p];
+    }
+    if let Some(m) = sim.migration {
+        cfg.migration_modes = vec![m];
+    }
+    if let Some(e) = sim.eviction {
+        cfg.eviction = e;
+    }
+    if let Some(h) = sim.host_tier_blocks {
+        cfg.host_tier_blocks = h;
     }
     let shapes: Vec<&str> =
         cfg.shapes.iter().map(|s| s.name()).collect();
@@ -250,13 +339,15 @@ fn ab_cmd(args: &[String]) -> Result<()> {
         cfg.migration_modes.iter().map(|m| m.name()).collect();
     println!(
         "ab: policies [{}] x scenarios [{}] x warm {{off,on}} x \
-         migration [{}], {:.0}s each, seed {} (identical streams per \
-         scenario; running...)",
+         migration [{}], {:.0}s each, seed {}, eviction {} (host tier \
+         {} blocks; identical streams per scenario; running...)",
         policies.join(", "),
         shapes.join(", "),
         migrations.join(", "),
         cfg.duration,
-        cfg.seed
+        cfg.seed,
+        cfg.eviction.name(),
+        cfg.host_tier_blocks
     );
     let report = run_ab(&cfg);
     print!("{}", report.to_markdown(true));
@@ -270,15 +361,68 @@ fn ab_cmd(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// KV cache-layer figure: eviction policy × host-tier capacity on
+/// shared-prefix streams, on a tightened device pool. `--smoke` shortens
+/// the runs for CI; `--eviction E` restricts the grid to one policy;
+/// `--host-tier-blocks N` pins the host capacity; `--shared-prefix F`
+/// sets the tagged fraction; `--out FILE` writes the CACHE_N.json record
+/// (every field is deterministic in the config).
+fn bench_cache_cmd(args: &[String]) -> Result<()> {
+    use crate::bench::cache::{run_bench_cache, CacheConfig};
+
+    let sim = SimArgs::parse(args)?;
+    let mut cfg =
+        if sim.smoke { CacheConfig::smoke() } else { CacheConfig::full() };
+    if let Some(d) = sim.duration {
+        cfg.duration = d;
+    }
+    if let Some(s) = sim.seed {
+        cfg.seed = s;
+    }
+    if let Some(f) = sim.shared_prefix {
+        cfg.shared_prefix = f;
+    }
+    if let Some(e) = sim.eviction {
+        cfg.evictions = vec![e];
+    }
+    if let Some(h) = sim.host_tier_blocks {
+        cfg.host_tier_blocks = vec![h];
+    }
+    let shapes: Vec<&str> = cfg.shapes.iter().map(|s| s.name()).collect();
+    let evictions: Vec<&str> =
+        cfg.evictions.iter().map(|e| e.name()).collect();
+    println!(
+        "bench-cache: evictions [{}] x host tiers {:?} x scenarios \
+         [{}], shared-prefix {}, kv-frac {}, {:.0}s each, seed {} \
+         (identical streams per scenario; running...)",
+        evictions.join(", "),
+        cfg.host_tier_blocks,
+        shapes.join(", "),
+        cfg.shared_prefix,
+        cfg.kv_frac,
+        cfg.duration,
+        cfg.seed
+    );
+    let report = run_bench_cache(&cfg);
+    print!("{}", report.to_markdown());
+    if let Some(path) = flag_path(args, "--out")? {
+        let mut text = report.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
 /// Dynamic-workload scenario runner: non-stationary arrivals against the
 /// MuxServe engine, with online re-placement on or off.
 fn scenario_cmd(args: &[String]) -> Result<()> {
-    use crate::bench::drift::{run_scenario_on, scenario_cluster};
-    use crate::coordinator::migration::MigrationMode;
-    use crate::coordinator::replan::PolicyKind;
-    use crate::coordinator::ReplanConfig;
+    use crate::bench::drift::{run_scenario_cfg, scenario_cluster};
+    use crate::coordinator::{EngineConfig, ReplanConfig};
     use crate::workload::{Scenario, ScenarioShape};
 
+    let sim = SimArgs::parse(args)?;
     let shape_name = flag_str(args, "--shape", "flash-crowd");
     let shape = ScenarioShape::parse(shape_name).ok_or_else(|| {
         anyhow::anyhow!(
@@ -292,45 +436,32 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         "off" | "false" | "0" => false,
         other => anyhow::bail!("--replan takes on|off, got `{other}`"),
     };
-    // Warm-started re-placement (milliseconds-scale decisions; may keep
-    // a stale shape — see coordinator::placement docs). Off by default.
-    let warm_arg = flag_str(args, "--warm", "off");
-    let warm_start = match warm_arg {
-        "on" | "true" | "1" => true,
-        "off" | "false" | "0" => false,
-        other => anyhow::bail!("--warm takes on|off, got `{other}`"),
-    };
     // Which replan trigger policy drives the controller (see the `ab`
-    // subcommand for the side-by-side comparison).
-    let policy_name = flag_str(args, "--policy", "threshold");
-    let policy = PolicyKind::parse(policy_name).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown policy `{policy_name}` (expected threshold | \
-             forecast | hysteresis)"
-        )
-    })?;
-    // How applied re-placements execute: the legacy whole-cluster
-    // blackout (default — the `ab` harness verdict gates the flip, see
-    // ROADMAP) or the staged, cost-aware MigrationPlan.
-    let migration_name = flag_str(args, "--migration", "blackout");
-    let migration_mode =
-        MigrationMode::parse(migration_name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown migration mode `{migration_name}` (expected \
-                 blackout | staged)"
-            )
-        })?;
+    // subcommand for the side-by-side comparison), and how applied
+    // re-placements execute: the legacy whole-cluster blackout (default —
+    // the `ab` harness verdict gates the flip, see ROADMAP) or the
+    // staged, cost-aware MigrationPlan.
+    let policy = sim.policy.unwrap_or(PolicyKind::Threshold);
+    let migration_mode = sim.migration.unwrap_or(MigrationMode::Blackout);
     let scenario = Scenario {
-        duration: flag_val(args, "--duration", 120.0f64)?,
-        seed: flag_val(args, "--seed", 2024u64)?,
+        duration: sim.duration.unwrap_or(120.0),
+        seed: sim.seed.unwrap_or(2024),
+        shared_prefix: sim.shared_prefix.unwrap_or(0.0),
         max_rate: flag_val(args, "--max-rate", 6.0f64)?,
         alpha: flag_val(args, "--alpha", 1.7f64)?,
         n_llms: flag_val(args, "--n-llms", 6usize)?,
         ..Scenario::new(shape)
     };
+    // KV cache-layer switches (prefix sharing + eviction + host tier);
+    // `none` / 0 reproduces the pre-cache engine.
+    let engine = EngineConfig {
+        eviction: sim.eviction.unwrap_or(EvictionKind::None),
+        host_tier_blocks: sim.host_tier_blocks.unwrap_or(0),
+        ..EngineConfig::muxserve()
+    };
     let cluster = scenario_cluster();
     let replan = adaptive.then(|| ReplanConfig {
-        warm_start,
+        warm_start: sim.warm,
         policy,
         migration_mode,
         ..Default::default()
@@ -370,7 +501,7 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         );
         let n = requests.len();
         let report = crate::bench::drift::run_trace(
-            &requests, duration, &cluster, replan,
+            &requests, duration, &cluster, engine, replan,
         )
         .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
         (report, n)
@@ -399,8 +530,9 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
             println!("trace written to {path}");
         }
         let arrived = data.requests.len();
-        let report = run_scenario_on(&scenario, &data, &cluster, replan)
-            .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
+        let report =
+            run_scenario_cfg(&scenario, &data, &cluster, engine, replan)
+                .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
         (report, arrived)
     };
 
@@ -416,13 +548,32 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         eval.latency_summary().p99(),
         report.dropped
     );
+    if !matches!(engine.eviction, EvictionKind::None) {
+        let c = &report.cache;
+        println!(
+            "kv-cache ({}, host tier {} blocks): hit-rate {:.3} ({} \
+             hits / {} misses), prefill {:.2}s (skipped {:.2}s), swaps \
+             out/in {}/{}, recompute preempts {}, host peak {} blocks",
+            engine.eviction.name(),
+            engine.host_tier_blocks,
+            c.hit_rate(),
+            c.prefix_hits,
+            c.prefix_misses,
+            c.prefill_s,
+            c.prefill_skip_s,
+            c.swaps_out,
+            c.swaps_in,
+            c.recompute_preempts,
+            c.host_peak_blocks
+        );
+    }
     if adaptive {
         println!(
-            "re-placements: {} checks fired, {} migrations \
-             ({migration_name}): {:.2} LLM-s downtime, cost {:.1}, {} \
-             KV-copy resumes",
+            "re-placements: {} checks fired, {} migrations ({}): {:.2} \
+             LLM-s downtime, cost {:.1}, {} KV-copy resumes",
             report.replans.len(),
             report.migrations,
+            migration_mode.name(),
             report.downtime_s,
             report.migration_cost,
             report.kv_resumed
@@ -550,6 +701,9 @@ fn print_help() {
          [--policy P]\n  \
          \x20        [--migration blackout|staged] [--duration S] \
          [--seed N]\n  \
+         \x20        [--eviction none|lru|slru|gdsf] [--host-tier-blocks \
+         N]\n  \
+         \x20        [--shared-prefix F]\n  \
          \x20                            dynamic workload (stationary | \
          diurnal | bursty |\n  \
          \x20                            flash-crowd | drift) with online \
@@ -562,13 +716,24 @@ fn print_help() {
          \x20                            preempt-and-recompute, staged = \
          per-unit priced\n  \
          \x20                            MigrationPlan with KV copy),\n  \
+         \x20                            --eviction turns the KV cache \
+         layer on (prefix\n  \
+         \x20                            sharing + eviction; none = \
+         pre-cache engine),\n  \
+         \x20                            --host-tier-blocks N spills \
+         evicted contexts to\n  \
+         \x20                            host DRAM instead of \
+         recomputing,\n  \
+         \x20                            --shared-prefix F tags fraction \
+         F of requests\n  \
+         \x20                            with shared prompt prefixes,\n  \
          \x20                            --export-trace FILE freezes the \
          stream,\n  \
          \x20                            --replay-trace FILE re-runs a \
          frozen stream\n  \
          ab [--smoke] [--policy P] [--migration M] [--out FILE] \
          [--duration S]\n  \
-         \x20   [--seed N]\n  \
+         \x20   [--seed N] [--eviction E] [--host-tier-blocks N]\n  \
          \x20                            adaptation-policy A/B harness: \
          every replan\n  \
          \x20                            policy x scenario x warm x \
@@ -577,6 +742,15 @@ fn print_help() {
          warm-start parity\n  \
          \x20                            and staged-vs-blackout \
          verdicts\n  \
+         bench-cache [--smoke] [--eviction E] [--host-tier-blocks N] \
+         [--out FILE]\n  \
+         \x20           [--shared-prefix F] [--duration S] [--seed N]\n  \
+         \x20                            KV cache-layer figure: eviction \
+         policy x host\n  \
+         \x20                            tier on shared-prefix streams \
+         (hit rate, skipped\n  \
+         \x20                            prefill, swap traffic) vs the \
+         pre-cache engine\n  \
          place [--alpha A]           run the placement optimizer (Alg. 1)\n  \
          serve [--rate-a R]          real PJRT serving demo (needs `make \
          artifacts`)\n  \

@@ -5,6 +5,8 @@
 //! executables); both consume these shared policy knobs so ablations and
 //! baselines use the exact same code paths.
 
+use crate::memory::EvictionKind;
+
 /// Intra-unit scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
@@ -39,6 +41,13 @@ pub struct EngineConfig {
     /// deployments with larger activation/fragmentation reserves; 1.0 =
     /// the full analytic capacity).
     pub kv_capacity_frac: f64,
+    /// KV-cache management policy. `EvictionKind::None` disables cache
+    /// management entirely — no prefix sharing, no eviction, no host
+    /// tier — reproducing the pre-cache engine bit-for-bit.
+    pub eviction: EvictionKind,
+    /// Host-DRAM tier capacity in blocks per unit (0 = no host tier;
+    /// evictions then requeue the context for recompute).
+    pub host_tier_blocks: usize,
 }
 
 impl EngineConfig {
@@ -52,6 +61,8 @@ impl EngineConfig {
             max_prefill_tokens: 2048,
             max_decode_batch: 256,
             kv_capacity_frac: 1.0,
+            eviction: EvictionKind::None,
+            host_tier_blocks: 0,
         }
     }
 

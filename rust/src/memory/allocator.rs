@@ -4,12 +4,26 @@
 //! tables; this allocator hands out actual pool slots. It is the rust-side
 //! twin of the paper's memory-manager process (implemented there in C++
 //! over CUDA IPC; here the pool lives in host literals fed to PJRT).
+//!
+//! Blocks are **refcounted** so shared prompt prefixes can be referenced
+//! by many requests of the same owner: [`BlockAllocator::retain`] adds a
+//! reference, [`BlockAllocator::free_blocks`] drops one, and a block
+//! returns to the free list exactly once — when its last reference drops.
+//! Copy-on-write is the caller's contract: shared blocks are never
+//! written past their prefix; divergent suffixes allocate fresh blocks.
 
-/// Free-list allocator over `n_blocks` pool slots with per-owner tracking.
+use super::KvError;
+
+/// Free-list allocator over `n_blocks` pool slots with per-owner tracking
+/// and per-block refcounts.
 #[derive(Clone, Debug)]
 pub struct BlockAllocator {
     free: Vec<u32>,
     owner: Vec<Option<u32>>,
+    /// References outstanding per block; 0 ⇔ the block is on the free list.
+    refcount: Vec<u32>,
+    /// Physical blocks held per owner (a block counts once however many
+    /// references it carries).
     allocated_per_owner: Vec<usize>,
 }
 
@@ -19,6 +33,7 @@ impl BlockAllocator {
             // LIFO free list: recently-freed (cache-warm) blocks reused first.
             free: (0..n_blocks as u32).rev().collect(),
             owner: vec![None; n_blocks],
+            refcount: vec![0; n_blocks],
             allocated_per_owner: vec![0; n_owners],
         }
     }
@@ -35,36 +50,101 @@ impl BlockAllocator {
         self.allocated_per_owner[owner]
     }
 
-    /// Allocate `n` blocks for `owner`; returns their pool ids or None if
-    /// the pool cannot satisfy the request (all-or-nothing).
-    pub fn alloc(&mut self, owner: usize, n: usize) -> Option<Vec<u32>> {
+    /// Outstanding references on a block (0 = free).
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refcount[block as usize]
+    }
+
+    /// Allocate `n` blocks for `owner` with one reference each; returns
+    /// their pool ids, or `KvError::PoolExhausted` if the pool cannot
+    /// satisfy the request (all-or-nothing — a failed call mutates
+    /// nothing).
+    pub fn alloc(
+        &mut self,
+        owner: usize,
+        n: usize,
+    ) -> Result<Vec<u32>, KvError> {
         if self.free.len() < n {
-            return None;
+            return Err(KvError::PoolExhausted);
         }
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             let b = self.free.pop().unwrap();
             debug_assert!(self.owner[b as usize].is_none());
+            debug_assert_eq!(self.refcount[b as usize], 0);
             self.owner[b as usize] = Some(owner as u32);
+            self.refcount[b as usize] = 1;
             out.push(b);
         }
         self.allocated_per_owner[owner] += n;
-        Some(out)
+        Ok(out)
     }
 
-    /// Return blocks to the pool. Panics on double-free or foreign blocks —
-    /// those are correctness bugs upstream.
-    pub fn free_blocks(&mut self, owner: usize, blocks: &[u32]) {
+    /// Add one reference to each of `blocks` (prefix sharing: a new
+    /// request pointing its block table at an existing prefix). Every
+    /// block must be live and owned by `owner` — KV sharing never crosses
+    /// LLMs. All-or-nothing: on `KvError::NotOwned` no refcount changes.
+    pub fn retain(
+        &mut self,
+        owner: usize,
+        blocks: &[u32],
+    ) -> Result<(), KvError> {
         for &b in blocks {
-            assert_eq!(
-                self.owner[b as usize],
-                Some(owner as u32),
-                "block {b} not owned by {owner}"
-            );
-            self.owner[b as usize] = None;
-            self.free.push(b);
+            let bi = b as usize;
+            if bi >= self.owner.len()
+                || self.owner[bi] != Some(owner as u32)
+            {
+                return Err(KvError::NotOwned);
+            }
         }
-        self.allocated_per_owner[owner] -= blocks.len();
+        for &b in blocks {
+            self.refcount[b as usize] += 1;
+        }
+        Ok(())
+    }
+
+    /// Drop one reference from each of `blocks`; a block returns to the
+    /// pool when its last reference drops. A double free (or a foreign
+    /// block, or more drops in one batch than a block has references) is
+    /// `KvError::NotOwned` at this public boundary — validated up front,
+    /// so a failed call mutates nothing.
+    pub fn free_blocks(
+        &mut self,
+        owner: usize,
+        blocks: &[u32],
+    ) -> Result<(), KvError> {
+        // Validate the whole batch (counting duplicates within it) before
+        // touching any state.
+        let mut sorted: Vec<u32> = blocks.to_vec();
+        sorted.sort_unstable();
+        let mut i = 0;
+        while i < sorted.len() {
+            let b = sorted[i] as usize;
+            let mut j = i + 1;
+            while j < sorted.len() && sorted[j] as usize == b {
+                j += 1;
+            }
+            let drops = (j - i) as u32;
+            if b >= self.owner.len()
+                || self.owner[b] != Some(owner as u32)
+                || self.refcount[b] < drops
+            {
+                return Err(KvError::NotOwned);
+            }
+            i = j;
+        }
+        let mut released = 0usize;
+        for &b in blocks {
+            let bi = b as usize;
+            self.refcount[bi] -= 1;
+            if self.refcount[bi] == 0 {
+                self.owner[bi] = None;
+                self.free.push(b);
+                released += 1;
+            }
+        }
+        self.allocated_per_owner[owner] -= released;
+        Ok(())
     }
 }
 
@@ -82,7 +162,7 @@ mod tests {
         assert_eq!(a.used_by(0), 5);
         // No overlap between owners.
         assert!(b0.iter().all(|x| !b1.contains(x)));
-        a.free_blocks(0, &b0);
+        a.free_blocks(0, &b0).unwrap();
         assert_eq!(a.n_free(), 11);
         assert_eq!(a.used_by(0), 0);
     }
@@ -90,67 +170,146 @@ mod tests {
     #[test]
     fn all_or_nothing() {
         let mut a = BlockAllocator::new(4, 1);
-        assert!(a.alloc(0, 5).is_none());
+        assert_eq!(a.alloc(0, 5), Err(KvError::PoolExhausted));
         assert_eq!(a.n_free(), 4);
-        assert!(a.alloc(0, 4).is_some());
-        assert!(a.alloc(0, 1).is_none());
+        assert!(a.alloc(0, 4).is_ok());
+        assert_eq!(a.alloc(0, 1), Err(KvError::PoolExhausted));
     }
 
     #[test]
-    #[should_panic(expected = "not owned")]
-    fn double_free_panics() {
+    fn double_free_is_an_error_not_a_panic() {
         let mut a = BlockAllocator::new(4, 1);
         let b = a.alloc(0, 2).unwrap();
-        a.free_blocks(0, &b);
-        a.free_blocks(0, &b);
+        a.free_blocks(0, &b).unwrap();
+        assert_eq!(a.free_blocks(0, &b), Err(KvError::NotOwned));
+        // The failed call corrupted nothing.
+        assert_eq!(a.n_free(), 4);
+        assert_eq!(a.used_by(0), 0);
     }
 
-    /// Property: any interleaving of allocs/frees conserves blocks, never
-    /// double-allocates, and restores full capacity once all users free.
+    #[test]
+    fn foreign_free_rejected_without_mutation() {
+        let mut a = BlockAllocator::new(8, 2);
+        let b0 = a.alloc(0, 3).unwrap();
+        assert_eq!(a.free_blocks(1, &b0), Err(KvError::NotOwned));
+        assert_eq!(a.used_by(0), 3);
+        assert_eq!(a.n_free(), 5);
+        // A batch mixing valid and invalid blocks must also mutate nothing.
+        let mut mixed = b0.clone();
+        mixed.push(99); // out of range
+        assert_eq!(a.free_blocks(0, &mixed), Err(KvError::NotOwned));
+        assert_eq!(a.used_by(0), 3);
+    }
+
+    #[test]
+    fn shared_blocks_freed_exactly_once() {
+        let mut a = BlockAllocator::new(8, 1);
+        let prefix = a.alloc(0, 4).unwrap();
+        // Two more requests reference the same prefix.
+        a.retain(0, &prefix).unwrap();
+        a.retain(0, &prefix).unwrap();
+        assert_eq!(a.refcount(prefix[0]), 3);
+        assert_eq!(a.used_by(0), 4, "shared blocks count physically once");
+        // First two releases keep the blocks live...
+        a.free_blocks(0, &prefix).unwrap();
+        a.free_blocks(0, &prefix).unwrap();
+        assert_eq!(a.n_free(), 4);
+        assert_eq!(a.used_by(0), 4);
+        // ...the last reference returns them to the pool.
+        a.free_blocks(0, &prefix).unwrap();
+        assert_eq!(a.n_free(), 8);
+        assert_eq!(a.used_by(0), 0);
+        // And one drop beyond the refcount is an error, not a panic.
+        assert_eq!(a.free_blocks(0, &prefix), Err(KvError::NotOwned));
+    }
+
+    #[test]
+    fn retain_rejects_foreign_and_free_blocks() {
+        let mut a = BlockAllocator::new(8, 2);
+        let b0 = a.alloc(0, 2).unwrap();
+        assert_eq!(a.retain(1, &b0), Err(KvError::NotOwned));
+        a.free_blocks(0, &b0).unwrap();
+        assert_eq!(a.retain(0, &b0), Err(KvError::NotOwned));
+    }
+
+    /// Property: any interleaving of allocs/retains/frees conserves
+    /// blocks, never double-allocates, and restores full capacity once
+    /// every reference is dropped.
     #[test]
     fn prop_alloc_free_conservation() {
         proplite::check(200, |rng: &mut Rng| {
             let n_blocks = rng.range(1, 64) as usize;
             let n_owners = rng.range(1, 4) as usize;
             let mut a = BlockAllocator::new(n_blocks, n_owners);
+            // Outstanding references: (owner, blocks). A retain pushes a
+            // second entry for the same ids, so every entry is exactly one
+            // pending free_blocks call.
             let mut held: Vec<(usize, Vec<u32>)> = Vec::new();
             for _ in 0..rng.range(1, 50) {
-                if rng.f64() < 0.6 || held.is_empty() {
+                let roll = rng.f64();
+                if roll < 0.5 || held.is_empty() {
                     let owner = rng.below(n_owners);
                     let want = rng.range(1, 8) as usize;
-                    if let Some(blocks) = a.alloc(owner, want) {
+                    if let Ok(blocks) = a.alloc(owner, want) {
                         crate::prop_assert!(
                             blocks.len() == want,
                             "short allocation"
                         );
                         held.push((owner, blocks));
                     }
+                } else if roll < 0.7 {
+                    // Share an existing holding (prefix-style retain).
+                    let i = rng.below(held.len());
+                    let (owner, blocks) = held[i].clone();
+                    crate::prop_assert!(
+                        a.retain(owner, &blocks).is_ok(),
+                        "retain of live blocks failed"
+                    );
+                    held.push((owner, blocks));
                 } else {
                     let i = rng.below(held.len());
                     let (owner, blocks) = held.swap_remove(i);
-                    a.free_blocks(owner, &blocks);
+                    crate::prop_assert!(
+                        a.free_blocks(owner, &blocks).is_ok(),
+                        "free of held blocks failed"
+                    );
                 }
-                // Invariant: held + free == total, no overlap.
-                let held_count: usize =
-                    held.iter().map(|(_, b)| b.len()).sum();
-                crate::prop_assert!(
-                    held_count + a.n_free() == n_blocks,
-                    "leak: held={held_count} free={}",
-                    a.n_free()
-                );
-                let mut all: Vec<u32> = held
+                // Invariant: distinct held blocks + free == total.
+                let mut distinct: Vec<u32> = held
                     .iter()
                     .flat_map(|(_, b)| b.iter().copied())
                     .collect();
-                all.sort();
-                let before = all.len();
-                all.dedup();
-                crate::prop_assert!(all.len() == before, "double allocation");
+                distinct.sort();
+                distinct.dedup();
+                crate::prop_assert!(
+                    distinct.len() + a.n_free() == n_blocks,
+                    "leak: held={} free={}",
+                    distinct.len(),
+                    a.n_free()
+                );
+                // Refcounts mirror the outstanding references exactly.
+                for &b in &distinct {
+                    let refs = held
+                        .iter()
+                        .filter(|(_, bl)| bl.contains(&b))
+                        .count() as u32;
+                    crate::prop_assert!(
+                        a.refcount(b) == refs,
+                        "block {b}: refcount {} != {refs} holders",
+                        a.refcount(b)
+                    );
+                }
             }
             for (owner, blocks) in held.drain(..) {
-                a.free_blocks(owner, &blocks);
+                crate::prop_assert!(
+                    a.free_blocks(owner, &blocks).is_ok(),
+                    "final free failed"
+                );
             }
-            crate::prop_assert!(a.n_free() == n_blocks, "capacity not restored");
+            crate::prop_assert!(
+                a.n_free() == n_blocks,
+                "capacity not restored"
+            );
             Ok(())
         });
     }

@@ -1,0 +1,260 @@
+//! Pluggable eviction for the device block pool.
+//!
+//! When the pool is under pressure the engine asks a policy which cold
+//! decode context to push down the hierarchy (host tier) or recompute
+//! later. Policies rank [`EvictCandidate`]s — snapshots of a context's
+//! size, recency, frequency, and recompute cost — and are deterministic:
+//! ties always break on the lowest request id, so simulations replay
+//! bit-identically.
+//!
+//! Built-ins:
+//!
+//! * [`Lru`] — evict the least-recently-used context.
+//! * [`Slru`] — segmented LRU: contexts touched at most once sit in a
+//!   probationary segment and are evicted before any multiply-touched
+//!   (protected) context; LRU within each segment.
+//! * [`Gdsf`] — Greedy-Dual-Size-Frequency: priority is
+//!   `L + freq × recompute_cost / size`, so big contexts that are cheap
+//!   to rebuild go first and small expensive ones are protected. The
+//!   recompute cost is the same prefill pricing the migration planner
+//!   uses for its KV-copy-vs-recompute decision.
+
+/// Which eviction policy an engine runs (`None` disables cache
+/// management entirely — no prefix sharing, no host tier — reproducing
+/// the pre-cache engine exactly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionKind {
+    None,
+    Lru,
+    Slru,
+    Gdsf,
+}
+
+impl EvictionKind {
+    pub fn parse(s: &str) -> Option<EvictionKind> {
+        match s {
+            "none" => Some(EvictionKind::None),
+            "lru" => Some(EvictionKind::Lru),
+            "slru" => Some(EvictionKind::Slru),
+            "gdsf" => Some(EvictionKind::Gdsf),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionKind::None => "none",
+            EvictionKind::Lru => "lru",
+            EvictionKind::Slru => "slru",
+            EvictionKind::Gdsf => "gdsf",
+        }
+    }
+
+    /// Every kind, `none` first (CLI/help and bench grids iterate this).
+    pub fn all() -> [EvictionKind; 4] {
+        [
+            EvictionKind::None,
+            EvictionKind::Lru,
+            EvictionKind::Slru,
+            EvictionKind::Gdsf,
+        ]
+    }
+
+    /// The actual policies (everything but `none`).
+    pub fn policies() -> [EvictionKind; 3] {
+        [EvictionKind::Lru, EvictionKind::Slru, EvictionKind::Gdsf]
+    }
+}
+
+/// Snapshot of one evictable decode context, as the engine sees it at the
+/// moment pressure forces a victim choice.
+#[derive(Clone, Copy, Debug)]
+pub struct EvictCandidate {
+    /// Request id (deterministic tie-break key).
+    pub id: u64,
+    /// Device blocks the context would release (private blocks only —
+    /// shared prefix blocks stay resident for their other referents).
+    pub blocks: usize,
+    /// Simulation time of the context's last scheduled job.
+    pub last_use: f64,
+    /// How many times the context has been scheduled (admission counts
+    /// as the first touch).
+    pub freq: u32,
+    /// Seconds to rebuild the context's KV state by re-running prefill —
+    /// the same pricing `coordinator/migration.rs` uses.
+    pub recompute_s: f64,
+}
+
+/// Victim choice under memory pressure. `pick` is handed a non-empty
+/// candidate slice and returns the index of the context to evict.
+/// Implementations must be deterministic (tie-break on `id`).
+pub trait EvictionPolicy {
+    fn kind(&self) -> EvictionKind;
+    fn pick(&mut self, candidates: &[EvictCandidate]) -> usize;
+}
+
+/// Least-recently-used.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lru;
+
+impl EvictionPolicy for Lru {
+    fn kind(&self) -> EvictionKind {
+        EvictionKind::Lru
+    }
+
+    fn pick(&mut self, candidates: &[EvictCandidate]) -> usize {
+        min_index(candidates, |c| (c.last_use, c.id))
+    }
+}
+
+/// Segmented LRU: probationary (freq <= 1) before protected.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Slru;
+
+impl EvictionPolicy for Slru {
+    fn kind(&self) -> EvictionKind {
+        EvictionKind::Slru
+    }
+
+    fn pick(&mut self, candidates: &[EvictCandidate]) -> usize {
+        // Segment key first: probationary (0) sorts before protected (1),
+        // then LRU within the segment.
+        min_index(candidates, |c| {
+            let segment = u32::from(c.freq > 1);
+            ((segment, c.last_use), c.id)
+        })
+    }
+}
+
+/// Greedy-Dual-Size-Frequency with the classic aging term `l`: every
+/// eviction raises the floor to the victim's priority, so long-idle
+/// contexts eventually lose protection no matter their cost.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Gdsf {
+    l: f64,
+}
+
+impl Gdsf {
+    fn priority(&self, c: &EvictCandidate) -> f64 {
+        self.l + c.freq as f64 * c.recompute_s / c.blocks.max(1) as f64
+    }
+}
+
+impl EvictionPolicy for Gdsf {
+    fn kind(&self) -> EvictionKind {
+        EvictionKind::Gdsf
+    }
+
+    fn pick(&mut self, candidates: &[EvictCandidate]) -> usize {
+        let i = min_index(candidates, |c| (self.priority(c), c.id));
+        self.l = self.priority(&candidates[i]);
+        i
+    }
+}
+
+/// Build a boxed policy for `kind`; `None` for [`EvictionKind::None`].
+pub fn build_policy(
+    kind: EvictionKind,
+) -> Option<Box<dyn EvictionPolicy>> {
+    match kind {
+        EvictionKind::None => None,
+        EvictionKind::Lru => Some(Box::new(Lru)),
+        EvictionKind::Slru => Some(Box::new(Slru)),
+        EvictionKind::Gdsf => Some(Box::<Gdsf>::default()),
+    }
+}
+
+/// Index of the minimum by key. Keys never contain NaN (times and
+/// prices are finite), so `PartialOrd` is total here; callers embed
+/// `id` in the key so ties break deterministically.
+fn min_index<K: PartialOrd + Copy>(
+    candidates: &[EvictCandidate],
+    key: impl Fn(&EvictCandidate) -> K,
+) -> usize {
+    debug_assert!(!candidates.is_empty());
+    let mut best = 0;
+    let mut best_key = key(&candidates[0]);
+    for (i, c) in candidates.iter().enumerate().skip(1) {
+        let k = key(c);
+        if k < best_key {
+            best = i;
+            best_key = k;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(
+        id: u64,
+        blocks: usize,
+        last_use: f64,
+        freq: u32,
+        recompute_s: f64,
+    ) -> EvictCandidate {
+        EvictCandidate { id, blocks, last_use, freq, recompute_s }
+    }
+
+    #[test]
+    fn kinds_parse_round_trip() {
+        for k in EvictionKind::all() {
+            assert_eq!(EvictionKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EvictionKind::parse("fifo"), None);
+        assert_eq!(EvictionKind::policies().len(), 3);
+        assert!(build_policy(EvictionKind::None).is_none());
+        for k in EvictionKind::policies() {
+            assert_eq!(build_policy(k).unwrap().kind(), k);
+        }
+    }
+
+    #[test]
+    fn lru_picks_oldest_with_id_tie_break() {
+        let mut p = Lru;
+        let cs = [
+            cand(7, 10, 5.0, 3, 1.0),
+            cand(2, 10, 1.0, 3, 1.0),
+            cand(9, 10, 1.0, 3, 1.0),
+        ];
+        // Oldest last_use wins; between the two at t=1.0 the lower id.
+        assert_eq!(p.pick(&cs), 1);
+    }
+
+    #[test]
+    fn slru_evicts_probationary_before_protected() {
+        let mut p = Slru;
+        let cs = [
+            // Protected (freq > 1) but much older...
+            cand(1, 10, 0.0, 5, 1.0),
+            // ...still outlives this fresher one-touch context.
+            cand(2, 10, 9.0, 1, 1.0),
+        ];
+        assert_eq!(p.pick(&cs), 1);
+        // With only protected contexts it degrades to LRU.
+        let protected = [
+            cand(1, 10, 4.0, 2, 1.0),
+            cand(2, 10, 3.0, 2, 1.0),
+        ];
+        assert_eq!(p.pick(&protected), 1);
+    }
+
+    #[test]
+    fn gdsf_prefers_big_cheap_contexts_and_ages() {
+        let mut p = Gdsf::default();
+        let cs = [
+            // Small and expensive to recompute: protected.
+            cand(1, 4, 0.0, 1, 8.0),
+            // Huge and cheap: priority 1 * 0.1 / 100, evicted first.
+            cand(2, 100, 0.0, 1, 0.1),
+        ];
+        assert_eq!(p.pick(&cs), 1);
+        // The floor `l` rose to the victim's priority.
+        assert!(p.l > 0.0);
+        let floor = p.l;
+        assert_eq!(p.pick(&cs), 1);
+        assert!(p.l >= floor);
+    }
+}

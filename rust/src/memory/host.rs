@@ -1,0 +1,91 @@
+//! Host-DRAM tier: a capacity-bounded parking lot for swapped-out decode
+//! contexts. Pure block accounting — the swap traffic itself is priced by
+//! the engine over the same link model staged migration uses, and swap
+//! counters live in the engine's cache stats.
+
+use super::KvError;
+
+/// Capacity-bounded host-side block accounting. `capacity == 0` means no
+/// host tier is configured (evictions fall back to recompute).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HostTier {
+    capacity: usize,
+    used: usize,
+    peak: usize,
+}
+
+impl HostTier {
+    pub fn new(capacity: usize) -> Self {
+        HostTier { capacity, used: 0, peak: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// High-water mark of host blocks in use.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Charge a swapped-out context's blocks; `KvError::HostExhausted`
+    /// leaves the tier unchanged.
+    pub fn charge(&mut self, blocks: usize) -> Result<(), KvError> {
+        if self.used + blocks > self.capacity {
+            return Err(KvError::HostExhausted);
+        }
+        self.used += blocks;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release blocks on swap-in (or when a parked context is dropped).
+    pub fn release(&mut self, blocks: usize) {
+        debug_assert!(
+            self.used >= blocks,
+            "host release {blocks} > used {}",
+            self.used
+        );
+        self.used = self.used.saturating_sub(blocks);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_release_round_trip() {
+        let mut h = HostTier::new(100);
+        assert!(h.enabled());
+        h.charge(60).unwrap();
+        h.charge(40).unwrap();
+        assert_eq!(h.free(), 0);
+        h.release(60);
+        assert_eq!(h.used(), 40);
+        assert_eq!(h.peak(), 100);
+    }
+
+    #[test]
+    fn denial_leaves_tier_unchanged() {
+        let mut h = HostTier::new(10);
+        h.charge(8).unwrap();
+        assert_eq!(h.charge(3), Err(KvError::HostExhausted));
+        assert_eq!(h.used(), 8);
+        assert_eq!(h.peak(), 8);
+        let disabled = HostTier::new(0);
+        assert!(!disabled.enabled());
+    }
+}

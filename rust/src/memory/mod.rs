@@ -1,26 +1,88 @@
 //! Unified KV cache manager (§3.4) — the memory half of MuxServe's
-//! resource manager.
+//! resource manager, grown into a two-tier managed cache.
 //!
 //! GPU memory in a unit is split into three partitions: (1) a unified KV
 //! cache of small **head-wise blocks** (each block holds K+V of ONE
 //! attention head for `block_size` tokens — possible because head size is
 //! uniform across the LLM family), (2) a single replica of each LLM's
 //! weights shared by its prefill and decode jobs, (3) an activation
-//! reserve. This module manages partition (1):
+//! reserve. This module manages partition (1) as a real cache hierarchy:
 //!
-//! * [`QuotaCache`] — counting view used by the scheduler/simulator:
-//!   per-LLM token-block quotas (the fairness device of §3.3) with
-//!   periodic adaptation that moves blocks from low- to high-utilization
-//!   LLMs.
-//! * [`BlockAllocator`] — concrete block-id allocator used by the real
-//!   PJRT serving path, handing out slots in the shared pools that the
-//!   compiled graphs index via block tables.
+//! **Device pool → host tier.** The device pool is the HBM-resident block
+//! pool every job reads and writes; the optional [`HostTier`] is a
+//! capacity-bounded host-DRAM parking lot for *cold decode contexts*,
+//! reached over the same link model staged migration prices its KV copies
+//! with. Swapping a context out frees device blocks without discarding KV
+//! state; swapping it back in is a self-migration through the engine's
+//! resume path.
+//!
+//! **Responsibility split** (who answers "may this block exist?"):
+//!
+//! * [`QuotaCache`] — *fairness*: counting view used by the scheduler /
+//!   simulator, enforcing per-LLM token-block quotas (§3.3) over the
+//!   shared device pool, with periodic adaptation that moves quota from
+//!   low- to high-utilization LLMs. Shared (prefix) blocks are charged to
+//!   their LLM exactly once, no matter how many requests reference them.
+//! * [`BlockAllocator`] — *identity and lifetime*: concrete block-id
+//!   allocator used by the real PJRT serving path, handing out slots in
+//!   the shared pools that compiled graphs index via block tables. Blocks
+//!   are refcounted so common prompt prefixes can be referenced by many
+//!   requests and are returned to the pool exactly once, when the last
+//!   reference drops (copy-on-write: divergent suffixes allocate fresh
+//!   blocks instead of touching shared ones).
+//! * [`EvictionPolicy`] — *victim choice*: pluggable ranking of which
+//!   cold context to push down the hierarchy when the device pool is
+//!   under pressure ([`eviction`] ships LRU, SLRU, and GDSF built-ins;
+//!   GDSF scores size × recompute cost with the same pricing the
+//!   migration planner uses).
+//!
+//! Every fallible operation across these surfaces returns
+//! `Result<_, KvError>` — allocation, quota charge, host-tier charge, and
+//! block release share one error type, and a double free is an error at
+//! the public boundary rather than a panic.
 
 mod allocator;
+pub mod eviction;
+mod host;
 mod quota;
 
 pub use allocator::BlockAllocator;
-pub use quota::{QuotaCache, QuotaError};
+pub use eviction::{
+    build_policy, EvictCandidate, EvictionKind, EvictionPolicy,
+};
+pub use host::HostTier;
+pub use quota::QuotaCache;
+
+/// One error type for every fallible KV-cache operation: allocator, quota,
+/// eviction, and host-tier (swap) paths all speak it, so callers handle
+/// memory pressure uniformly instead of matching per-layer error shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvError {
+    /// The LLM's per-LLM token-block quota would be exceeded.
+    QuotaExceeded,
+    /// The shared device pool has no free blocks.
+    PoolExhausted,
+    /// The host-DRAM tier has no room for the swapped-out context.
+    HostExhausted,
+    /// A block was released that the caller does not hold (double free or
+    /// foreign free) — surfaced as an error at the public boundary; the
+    /// failed call mutates nothing.
+    NotOwned,
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            KvError::QuotaExceeded => "per-LLM block quota exceeded",
+            KvError::PoolExhausted => "device block pool exhausted",
+            KvError::HostExhausted => "host-tier capacity exhausted",
+            KvError::NotOwned => "block not owned by caller",
+        };
+        f.write_str(s)
+    }
+}
+
+impl std::error::Error for KvError {}
 
 /// Bytes of one head-wise block: K+V, fp16, `block_size` tokens, one head.
 pub fn block_bytes(block_size: usize, head_dim: usize) -> f64 {
@@ -35,5 +97,20 @@ mod tests {
     fn block_bytes_for_paper_heads() {
         // head_dim 128 (LLaMA/GPT-3), 16-token blocks: 2*2*16*128 = 8 KiB.
         assert_eq!(block_bytes(16, 128), 8192.0);
+    }
+
+    #[test]
+    fn kv_error_displays_distinctly() {
+        let all = [
+            KvError::QuotaExceeded,
+            KvError::PoolExhausted,
+            KvError::HostExhausted,
+            KvError::NotOwned,
+        ];
+        let mut msgs: Vec<String> =
+            all.iter().map(|e| e.to_string()).collect();
+        msgs.sort();
+        msgs.dedup();
+        assert_eq!(msgs.len(), all.len());
     }
 }

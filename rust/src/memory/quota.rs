@@ -2,14 +2,7 @@
 //! normalized by request rate; ADBS assigns each LLM a quota and adapts it
 //! periodically by transferring blocks from low- to high-utilization LLMs.
 
-/// Error cases surfaced to the scheduler.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum QuotaError {
-    /// The LLM's quota would be exceeded.
-    QuotaExceeded,
-    /// The pool itself has no free blocks.
-    PoolExhausted,
-}
+use super::KvError;
 
 /// Counting model of the unified KV cache: per-LLM quota and usage over a
 /// shared pool of `total_blocks` head-wise blocks.
@@ -112,18 +105,18 @@ impl QuotaCache {
     }
 
     /// Can `n` blocks be allocated for `llm` right now?
-    pub fn can_alloc(&self, llm: usize, n: usize) -> Result<(), QuotaError> {
+    pub fn can_alloc(&self, llm: usize, n: usize) -> Result<(), KvError> {
         if self.used[llm] + n > self.quota[llm] {
-            return Err(QuotaError::QuotaExceeded);
+            return Err(KvError::QuotaExceeded);
         }
         if self.total_used() + n > self.total_blocks {
-            return Err(QuotaError::PoolExhausted);
+            return Err(KvError::PoolExhausted);
         }
         Ok(())
     }
 
     /// Allocate, recording denial pressure for the adaptor on failure.
-    pub fn alloc(&mut self, llm: usize, n: usize) -> Result<(), QuotaError> {
+    pub fn alloc(&mut self, llm: usize, n: usize) -> Result<(), KvError> {
         match self.can_alloc(llm, n) {
             Ok(()) => {
                 self.used[llm] += n;
@@ -139,10 +132,10 @@ impl QuotaCache {
 
     /// Allocate checking only the shared pool, ignoring the per-LLM quota
     /// (the Round-Robin baseline of Fig. 9: first-come-first-served cache).
-    pub fn alloc_pool_only(&mut self, llm: usize, n: usize) -> Result<(), QuotaError> {
+    pub fn alloc_pool_only(&mut self, llm: usize, n: usize) -> Result<(), KvError> {
         if self.total_used() + n > self.total_blocks {
             self.denied[llm] += n;
-            return Err(QuotaError::PoolExhausted);
+            return Err(KvError::PoolExhausted);
         }
         self.used[llm] += n;
         self.peak[llm] = self.peak[llm].max(self.used[llm]);
@@ -253,7 +246,7 @@ mod tests {
         let mut q = QuotaCache::new(100, &[1.0, 1.0]);
         assert_eq!(q.quota(0), 50);
         assert!(q.alloc(0, 50).is_ok());
-        assert_eq!(q.alloc(0, 1), Err(QuotaError::QuotaExceeded));
+        assert_eq!(q.alloc(0, 1), Err(KvError::QuotaExceeded));
         q.free(0, 10);
         assert!(q.alloc(0, 10).is_ok());
     }
@@ -263,7 +256,7 @@ mod tests {
         let mut q = QuotaCache::new(100, &[1.0, 1.0]);
         // LLM 0 idle; LLM 1 fills its quota and gets denied.
         assert!(q.alloc(1, 50).is_ok());
-        assert_eq!(q.alloc(1, 30), Err(QuotaError::QuotaExceeded));
+        assert_eq!(q.alloc(1, 30), Err(KvError::QuotaExceeded));
         q.adapt();
         assert!(
             q.quota(1) > 60,
@@ -297,6 +290,6 @@ mod tests {
     fn pool_exhaustion_detected() {
         let mut q = QuotaCache::new(10, &[1.0]);
         assert!(q.alloc(0, 10).is_ok());
-        assert_eq!(q.alloc(0, 1), Err(QuotaError::QuotaExceeded));
+        assert_eq!(q.alloc(0, 1), Err(KvError::QuotaExceeded));
     }
 }

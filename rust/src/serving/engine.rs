@@ -177,7 +177,15 @@ impl ServingEngine {
                 let max_out =
                     (entry.max_ctx - prompt_len).min(48).max(1) as i64;
                 let output_len = rng.range(1, max_out) as usize;
-                all.push(Request { id, llm: m, arrival: t, prompt_len, output_len });
+                all.push(Request {
+                    id,
+                    llm: m,
+                    arrival: t,
+                    prompt_len,
+                    output_len,
+                    prefix_group: 0,
+                    prefix_len: 0,
+                });
                 id += 1;
             }
         }
@@ -196,6 +204,8 @@ impl ServingEngine {
                 arrival: 0.0,
                 prompt_len: 16,
                 output_len: 2,
+                prefix_group: 0,
+                prefix_len: 0,
             };
             let t0 = std::time::Instant::now();
             self.run_prefill_job(m, vec![req])?;
@@ -386,7 +396,7 @@ impl ServingEngine {
         } else if self.quota.alloc_pool_only(m, need).is_err() {
             return None;
         }
-        let Some(ids) = self.alloc.alloc(m, need) else {
+        let Ok(ids) = self.alloc.alloc(m, need) else {
             self.quota.free(m, need);
             return None;
         };
@@ -425,7 +435,7 @@ impl ServingEngine {
         if !ok {
             return false;
         }
-        let Some(ids) = self.alloc.alloc(m, need) else {
+        let Ok(ids) = self.alloc.alloc(m, need) else {
             self.quota.free(m, need);
             return false;
         };
@@ -446,7 +456,11 @@ impl ServingEngine {
     }
 
     fn free_request(&mut self, m: usize, a: &RealActive) {
-        self.alloc.free_blocks(m, &a.held);
+        // A request's `held` list is exactly what was allocated for it, so
+        // a NotOwned here is an engine bug, not a recoverable condition.
+        self.alloc
+            .free_blocks(m, &a.held)
+            .expect("engine frees only blocks it owns");
         self.quota.free(m, a.held.len());
     }
 
@@ -651,6 +665,8 @@ impl ServingEngine {
             arrival: 0.0,
             prompt_len: prompt.len(),
             output_len: n_tokens,
+            prefix_group: 0,
+            prefix_len: 0,
         };
         // Run via the normal job path, then recover the sequence.
         let entry = self.models[m].clone();
@@ -695,8 +711,10 @@ impl ServingEngine {
                 self.quota
                     .alloc_pool_only(m, delta)
                     .map_err(|_| anyhow!("pool exhausted"))?;
-                let ids =
-                    self.alloc.alloc(m, delta).ok_or_else(|| anyhow!("pool"))?;
+                let ids = self
+                    .alloc
+                    .alloc(m, delta)
+                    .map_err(|e| anyhow!("pool: {e}"))?;
                 let mut it = ids.iter();
                 for li in 0..l {
                     for hi in 0..h {

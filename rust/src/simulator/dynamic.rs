@@ -50,7 +50,7 @@
 
 use std::collections::{BinaryHeap, HashMap};
 
-use super::unit::ResumedRequest;
+use super::unit::{CacheStats, ResumedRequest};
 use super::{Event, EventKind, Simulation, UnitSim};
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
 use crate::coordinator::migration::{
@@ -120,6 +120,10 @@ pub struct DynamicReport {
     /// Requests that resumed mid-decode from copied KV (staged mode
     /// only) — the no-recompute receipts.
     pub kv_resumed: usize,
+    /// KV cache-layer counters (prefix sharing, eviction, host tier),
+    /// merged across every unit that ever served — torn-down units bank
+    /// their counters at migration time.
+    pub cache: CacheStats,
 }
 
 /// Placement shape up to member order and fine sm jitter: mesh size plus
@@ -191,6 +195,9 @@ pub struct DynamicSimulation {
     downtime_s: f64,
     migration_cost: f64,
     kv_resumed: usize,
+    /// Cache-layer counters banked from torn-down units (the live sim's
+    /// are merged in at report time).
+    cache_banked: CacheStats,
 }
 
 impl DynamicSimulation {
@@ -251,6 +258,7 @@ impl DynamicSimulation {
             downtime_s: 0.0,
             migration_cost: 0.0,
             kv_resumed: 0,
+            cache_banked: CacheStats::default(),
         })
     }
 
@@ -373,6 +381,8 @@ impl DynamicSimulation {
         self.completed.extend(self.sim.harvest_records());
         let n_llms = self.sim.n_llms();
         let dropped = self.dropped + self.sim.dropped();
+        let mut cache = self.cache_banked;
+        cache.merge(&self.sim.cache_stats());
         DynamicReport {
             eval: Evaluation::new(n_llms, duration, self.completed),
             replans: self.replans,
@@ -382,6 +392,7 @@ impl DynamicSimulation {
             downtime_s: self.downtime_s,
             migration_cost: self.migration_cost,
             kv_resumed: self.kv_resumed,
+            cache,
         }
     }
 
@@ -707,6 +718,8 @@ impl DynamicSimulation {
         // rebuild, and hold every LLM for the downtime.
         self.completed.extend(self.sim.harvest_records());
         self.dropped += self.sim.dropped();
+        // Every unit is torn down: bank the cache counters now.
+        self.cache_banked.merge(&self.sim.cache_stats());
         let pending = self.sim.drain_all_requests();
         let downtime = self.controller.config().migration_downtime;
         // Measured cost (downtime × preempted work) — what hysteresis
@@ -803,11 +816,12 @@ impl DynamicSimulation {
         }
         for (i, u) in old_units.iter_mut().enumerate() {
             if kept_mask[i] {
-                continue;
+                continue; // transplanted units keep their own counters
             }
             if let Some(u) = u {
                 self.dropped += u.drain_requests().len();
                 self.dropped += u.dropped();
+                self.cache_banked.merge(&u.cache_stats());
             }
         }
 

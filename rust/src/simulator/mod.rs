@@ -12,7 +12,9 @@ pub mod dynamic;
 pub mod unit;
 
 pub use dynamic::{DynamicReport, DynamicSimulation, ReplanOutcome};
-pub use unit::{Job, JobPhase, ResumedRequest, UnitModelCfg, UnitSim};
+pub use unit::{
+    CacheStats, Job, JobPhase, ResumedRequest, UnitModelCfg, UnitSim,
+};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -256,6 +258,16 @@ impl Simulation {
 
     pub fn dropped(&self) -> usize {
         self.units.iter().map(|u| u.dropped()).sum()
+    }
+
+    /// Cluster-wide KV cache-layer counters (prefix sharing, eviction,
+    /// host tier), merged across units.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut out = CacheStats::default();
+        for u in &self.units {
+            out.merge(&u.cache_stats());
+        }
+        out
     }
 
     /// Number of (global) LLMs this simulation serves.

@@ -26,13 +26,35 @@
 //! Every state transition goes through `set_state` / `insert_active` /
 //! `remove_active`, which keep both structures in lock-step with the
 //! active lists; `index_inconsistency` (test-only) audits the invariant.
+//!
+//! ## KV cache layer (optional)
+//!
+//! When [`EngineConfig::eviction`] names a policy, three features stack
+//! on the base block manager (with `EvictionKind::None` every one of
+//! them is inert and the engine is bit-identical to the pre-cache code):
+//!
+//! * **Prefix sharing** — requests carrying the same nonzero
+//!   `prefix_group` reference one refcounted, whole-block prefix entry
+//!   per LLM instead of re-allocating (and re-prefilling) the shared
+//!   prompt head. Entries outlive their referents: a dead entry
+//!   (refs == 0) is resident cache, reclaimed first under pressure.
+//! * **Pluggable eviction** — under block pressure the configured
+//!   [`EvictionPolicy`] picks a Ready context to push down the
+//!   hierarchy instead of the hard-coded youngest-first preempt.
+//! * **Host-DRAM tier** — evicted contexts park in a [`HostTier`] of
+//!   `EngineConfig::host_tier_blocks` blocks, priced over the same
+//!   device↔host link model staged migration uses, and swap back in
+//!   through the resume path when the pool has headroom again.
 
-use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
-use crate::coordinator::{EngineConfig, Policy};
+use crate::coordinator::{EngineConfig, Policy, ReplanConfig};
 use crate::costmodel::CostModel;
 use crate::config::ModelSpec;
-use crate::memory::{block_bytes, QuotaCache};
+use crate::memory::{
+    block_bytes, build_policy, EvictCandidate, EvictionPolicy, HostTier,
+    KvError, QuotaCache,
+};
 use crate::metrics::RequestRecord;
 use crate::smpartition::SmPool;
 use crate::workload::Request;
@@ -96,7 +118,17 @@ struct Active {
     state: ReqState,
     generated: usize,
     first_token: f64,
+    /// PRIVATE device blocks charged to this request. Blocks of a shared
+    /// prompt prefix are charged once to their [`PrefixEntry`] instead.
     blocks: usize,
+    /// Device blocks referenced through the LLM's prefix index (0 when
+    /// the prompt is unique). Total context coverage is
+    /// `blocks + shared_blocks`.
+    shared_blocks: usize,
+    /// Last time a job touched this context (eviction recency signal).
+    last_use: f64,
+    /// Jobs that included this context (eviction frequency signal).
+    touches: u32,
 }
 
 /// A request drained out of a unit with its KV progress intact — the
@@ -122,6 +154,93 @@ pub struct ResumedRequest {
 impl Active {
     fn ctx(&self) -> usize {
         self.req.prompt_len + self.generated
+    }
+}
+
+/// One shared prompt prefix resident in the device pool. Its blocks are
+/// charged to the LLM's quota exactly once, at creation, and stay
+/// resident after the last referent finishes (that persistence IS the
+/// cache) until reclaimed under pressure or drained.
+#[derive(Clone, Copy, Debug)]
+struct PrefixEntry {
+    /// Device blocks holding the shared prefix.
+    blocks: usize,
+    /// Prompt tokens covered (prefix length rounded down to whole
+    /// blocks — the sub-block remainder is private, which is what makes
+    /// divergence copy-on-write for free).
+    tokens: usize,
+    /// Live referents (admitted or host-parked requests).
+    refs: usize,
+    last_use: f64,
+    freq: u32,
+}
+
+/// Outcome of a prefix-index lookup at admission time.
+#[derive(Clone, Copy, Debug)]
+enum PrefixUse {
+    /// A resident entry covers `tokens` prompt tokens in `blocks`
+    /// shared blocks — reference it and skip that much prefill.
+    Hit { blocks: usize, tokens: usize },
+    /// First sighting of the group: create an entry over `tokens`
+    /// tokens in `blocks` blocks, charged with this admission.
+    Create { blocks: usize, tokens: usize },
+    /// No usable share; the prompt is handled like any unique prompt.
+    Unique,
+}
+
+/// A decode context parked in the host-DRAM tier. Its private blocks
+/// live off-device (accounted by [`HostTier`]); its shared prefix
+/// reference stays alive so the prefix cannot be reclaimed from under
+/// it.
+#[derive(Clone, Debug)]
+struct SwappedCtx {
+    r: ResumedRequest,
+    shared_blocks: usize,
+}
+
+/// Counters for the KV-cache layer (prefix sharing, eviction, host
+/// tier). All zero when cache management is off.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Admissions that referenced a resident shared prefix.
+    pub prefix_hits: u64,
+    /// Admissions that created a new prefix entry.
+    pub prefix_misses: u64,
+    /// Prefill seconds actually spent (post-skip).
+    pub prefill_s: f64,
+    /// Prefill seconds avoided by prefix sharing.
+    pub prefill_skip_s: f64,
+    /// Contexts pushed to the host tier.
+    pub swaps_out: u64,
+    /// Contexts restored from the host tier mid-decode.
+    pub swaps_in: u64,
+    /// Evictions that fell back to preempt-and-recompute (no host room).
+    pub recompute_preempts: u64,
+    /// High-water mark of host-tier blocks in use.
+    pub host_peak_blocks: usize,
+}
+
+impl CacheStats {
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.prefill_s += other.prefill_s;
+        self.prefill_skip_s += other.prefill_skip_s;
+        self.swaps_out += other.swaps_out;
+        self.swaps_in += other.swaps_in;
+        self.recompute_preempts += other.recompute_preempts;
+        self.host_peak_blocks =
+            self.host_peak_blocks.max(other.host_peak_blocks);
+    }
+
+    /// Fraction of prefix-carrying admissions that hit a resident entry.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.prefix_hits + self.prefix_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / n as f64
+        }
     }
 }
 
@@ -153,6 +272,24 @@ pub struct UnitSim {
     /// ∫ SM-fraction-in-use dt — GPU utilization (Figure 1's y-axis).
     sm_integral: f64,
     dropped: usize,
+    /// Per-LLM resident shared prefixes, keyed by `Request::prefix_group`.
+    prefix_index: Vec<BTreeMap<u64, PrefixEntry>>,
+    /// Victim-choice policy; `None` disables cache management entirely
+    /// (no prefix sharing, no host tier) — the pre-cache engine.
+    eviction: Option<Box<dyn EvictionPolicy>>,
+    host: HostTier,
+    /// Host-parked contexts, FIFO (swap-in restores oldest first).
+    swapped: VecDeque<SwappedCtx>,
+    cache: CacheStats,
+    /// Swap traffic seconds not yet absorbed into a job: each swap adds
+    /// its KV-copy time here and the next launched job carries it, so
+    /// link occupancy delays work without extra event plumbing.
+    pending_link_s: f64,
+    /// Device↔host link bandwidth, bytes/s — the same link model staged
+    /// migration prices KV copies with ([`ReplanConfig`] default; units
+    /// are built from `EngineConfig`, which does not carry replan
+    /// settings, so swaps always price at the default link).
+    link_bandwidth: f64,
 }
 
 impl UnitSim {
@@ -210,6 +347,13 @@ impl UnitSim {
             usage_integral: vec![0.0; n],
             sm_integral: 0.0,
             dropped: 0,
+            prefix_index: vec![BTreeMap::new(); n],
+            eviction: build_policy(cfg.eviction),
+            host: HostTier::new(cfg.host_tier_blocks),
+            swapped: VecDeque::new(),
+            cache: CacheStats::default(),
+            pending_link_s: 0.0,
+            link_bandwidth: ReplanConfig::default().link_bandwidth,
             models,
         }
     }
@@ -249,6 +393,19 @@ impl UnitSim {
             }
             self.ready_ids[llm].clear();
         }
+        // Dissolve the cache layer: prefix entries release their one
+        // quota charge, host-parked contexts requeue whole.
+        for llm in 0..self.prefix_index.len() {
+            let entries = std::mem::take(&mut self.prefix_index[llm]);
+            for e in entries.into_values() {
+                self.quota.free(llm, e.blocks);
+            }
+        }
+        while let Some(c) = self.swapped.pop_front() {
+            self.host.release(c.r.blocks);
+            out.push(c.r.req);
+        }
+        self.pending_link_s = 0.0;
         self.slot_index.clear();
         // Cancel in-flight jobs; reset the SM pool wholesale (summing the
         // individual releases in HashMap order would be nondeterministic
@@ -286,6 +443,10 @@ impl UnitSim {
             self.quota.free(llm, a.blocks);
             // A cancelled prefill has no usable KV prefix: its blocks
             // were freed above and the request recomputes from scratch.
+            // A shared-prefix referent's payload carries only its
+            // PRIVATE blocks — migration dissolves sharing, and the
+            // destination re-allocates the gap on the first decode step
+            // (`ensure_blocks` self-corrects from the context length).
             let (generated, first_token, blocks) = if a.generated == 0 {
                 (0, 0.0, 0)
             } else {
@@ -297,6 +458,24 @@ impl UnitSim {
                 first_token,
                 blocks,
             });
+        }
+        // Host-parked contexts of this LLM migrate whole, same
+        // private-blocks-only payload as above.
+        let mut rest = VecDeque::new();
+        while let Some(c) = self.swapped.pop_front() {
+            if c.r.req.llm == llm {
+                self.host.release(c.r.blocks);
+                out.push(c.r);
+            } else {
+                rest.push_back(c);
+            }
+        }
+        self.swapped = rest;
+        // Dissolve the LLM's prefix cache: each entry's blocks were
+        // charged to the quota exactly once, at creation.
+        let entries = std::mem::take(&mut self.prefix_index[llm]);
+        for e in entries.into_values() {
+            self.quota.free(llm, e.blocks);
         }
         out.sort_by(|a, b| {
             a.req
@@ -316,11 +495,29 @@ impl UnitSim {
     /// the wait queue whole and nothing is charged, so a failed copy can
     /// never leak quota. Returns whether the KV-copy resume happened.
     pub fn admit_resumed(&mut self, t: f64, r: ResumedRequest) -> bool {
+        let ok = self.resume_into_ready(t, r, 0);
+        self.try_schedule(t);
+        ok
+    }
+
+    /// Shared core of [`Self::admit_resumed`] and host-tier swap-in: a
+    /// self-migration IS a migration, so both paths charge and resume
+    /// identically. `shared_blocks` is nonzero only on swap-in, where
+    /// the context kept its prefix reference while parked. Does NOT call
+    /// `try_schedule` (callers do).
+    fn resume_into_ready(
+        &mut self,
+        t: f64,
+        r: ResumedRequest,
+        shared_blocks: usize,
+    ) -> bool {
         let llm = r.req.llm;
         if r.generated == 0 || r.blocks == 0 || !self.try_alloc(llm, r.blocks)
         {
+            if shared_blocks > 0 {
+                self.deref_prefix(llm, r.req.prefix_group);
+            }
             self.waiting[llm].push_back(r.req);
-            self.try_schedule(t);
             return false;
         }
         self.insert_active(llm, Active {
@@ -329,8 +526,10 @@ impl UnitSim {
             generated: r.generated,
             first_token: r.first_token,
             blocks: r.blocks,
+            shared_blocks,
+            last_use: t,
+            touches: 1,
         });
-        self.try_schedule(t);
         true
     }
 
@@ -364,6 +563,23 @@ impl UnitSim {
 
     pub fn total_blocks(&self) -> usize {
         self.quota.total_blocks()
+    }
+
+    /// Cache-layer counters (prefix sharing, eviction, host tier).
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut s = self.cache;
+        s.host_peak_blocks = s.host_peak_blocks.max(self.host.peak());
+        s
+    }
+
+    /// Host-tier blocks currently holding parked contexts.
+    pub fn host_blocks_used(&self) -> usize {
+        self.host.used()
+    }
+
+    /// Device blocks held by resident shared-prefix entries of `llm`.
+    pub fn prefix_blocks(&self, llm: usize) -> usize {
+        self.prefix_index[llm].values().map(|e| e.blocks).sum()
     }
 
     pub fn avg_block_usage(&self, llm: usize) -> f64 {
@@ -560,6 +776,12 @@ impl UnitSim {
     fn finish_request(&mut self, t: f64, llm: usize, idx: usize) {
         let a = self.remove_active(llm, idx);
         self.quota.free(llm, a.blocks);
+        if a.shared_blocks > 0 {
+            // The entry stays resident (that persistence is the cache);
+            // it just loses this referent and becomes reclaimable once
+            // refs hit zero.
+            self.deref_prefix(llm, a.req.prefix_group);
+        }
         let m = &self.models[llm];
         let ideal = self.cost.ideal_request_latency(
             &m.spec,
@@ -603,9 +825,11 @@ impl UnitSim {
         }
     }
 
-    /// Grow a request's block holding to cover `tokens` context tokens.
+    /// Grow a request's PRIVATE block holding so that, together with its
+    /// shared prefix blocks, it covers `tokens` context tokens.
     fn ensure_blocks(&mut self, llm: usize, idx: usize, tokens: usize) -> bool {
-        let need = self.blocks_for(llm, tokens);
+        let shared = self.active[llm][idx].shared_blocks;
+        let need = self.blocks_for(llm, tokens).saturating_sub(shared);
         let have = self.active[llm][idx].blocks;
         if need <= have {
             return true;
@@ -627,8 +851,207 @@ impl UnitSim {
         let idx = self.slot_index[&vid].1;
         let a = self.remove_active(llm, idx);
         self.quota.free(llm, a.blocks);
+        if a.shared_blocks > 0 {
+            self.deref_prefix(llm, a.req.prefix_group);
+        }
         self.waiting[llm].push_front(a.req);
         true
+    }
+
+    // -- the cache layer: prefix sharing, eviction, host tier ----------------
+
+    fn cache_enabled(&self) -> bool {
+        self.eviction.is_some()
+    }
+
+    /// How an admission of (`group`, `prefix_len`) relates to the LLM's
+    /// prefix index. Pure lookup — committing the decision (refcounts,
+    /// entry creation, stats) happens after the blocks are secured.
+    fn peek_prefix(
+        &self,
+        llm: usize,
+        group: u64,
+        prefix_len: usize,
+        prompt_len: usize,
+    ) -> PrefixUse {
+        if !self.cache_enabled() || group == 0 {
+            return PrefixUse::Unique;
+        }
+        // Whole blocks only: the sub-block remainder stays private, so
+        // divergence past the template never writes a shared block.
+        let rounded =
+            (prefix_len.min(prompt_len) / BLOCK_TOKENS) * BLOCK_TOKENS;
+        if rounded == 0 {
+            return PrefixUse::Unique;
+        }
+        match self.prefix_index[llm].get(&group) {
+            Some(e) if e.tokens <= rounded => {
+                PrefixUse::Hit { blocks: e.blocks, tokens: e.tokens }
+            }
+            // An entry longer than this request's share: reference
+            // nothing rather than a partial entry (keeps entries
+            // immutable; the short request pays full prefill).
+            Some(_) => PrefixUse::Unique,
+            None => PrefixUse::Create {
+                blocks: self.blocks_for(llm, rounded),
+                tokens: rounded,
+            },
+        }
+    }
+
+    /// Drop one reference from a prefix entry (the entry itself stays
+    /// resident — that persistence is the cache).
+    fn deref_prefix(&mut self, llm: usize, group: u64) {
+        if group == 0 {
+            return;
+        }
+        if let Some(e) = self.prefix_index[llm].get_mut(&group) {
+            e.refs = e.refs.saturating_sub(1);
+        }
+    }
+
+    /// Seconds to move `blocks` over the device↔host link — the same
+    /// pricing staged migration uses for a KV copy.
+    fn swap_seconds(&self, llm: usize, blocks: usize) -> f64 {
+        let head_dim = self.models[llm].spec.head_dim;
+        blocks as f64 * block_bytes(BLOCK_TOKENS, head_dim)
+            / self.link_bandwidth.max(1.0)
+    }
+
+    /// Free device blocks under pressure: first drop a dead prefix entry
+    /// (refs == 0 — pure cache, cheapest to lose), then push the
+    /// eviction policy's victim among Ready contexts down the hierarchy.
+    /// `pool_wide` widens the scope beyond `llm` when the shared pool
+    /// (not the LLM's own quota) is the binding constraint. Returns
+    /// whether any device blocks were released.
+    fn reclaim(&mut self, llm: usize, pool_wide: bool, skip: Option<u64>) -> bool {
+        if !self.cache_enabled() {
+            return false;
+        }
+        let scope: Vec<usize> = if pool_wide {
+            (0..self.models.len()).collect()
+        } else {
+            vec![llm]
+        };
+        // 1. Dead prefix entries, least-recently-used first.
+        let mut dead: Option<(usize, u64, f64)> = None;
+        for &l in &scope {
+            for (&g, e) in &self.prefix_index[l] {
+                if e.refs > 0 {
+                    continue;
+                }
+                let better = match dead {
+                    None => true,
+                    Some((dl, dg, du)) => match e.last_use.total_cmp(&du) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Equal => (l, g) < (dl, dg),
+                        std::cmp::Ordering::Greater => false,
+                    },
+                };
+                if better {
+                    dead = Some((l, g, e.last_use));
+                }
+            }
+        }
+        if let Some((l, g, _)) = dead {
+            let e = self.prefix_index[l].remove(&g).unwrap();
+            self.quota.free(l, e.blocks);
+            return true;
+        }
+        // 2. Policy-picked victim among Ready contexts.
+        let mut cands: Vec<EvictCandidate> = Vec::new();
+        for &l in &scope {
+            for &id in &self.ready_ids[l] {
+                if Some(id) == skip {
+                    continue;
+                }
+                let slot = self.slot_index[&id].1;
+                let a = &self.active[l][slot];
+                if a.blocks == 0 {
+                    continue;
+                }
+                let m = &self.models[l];
+                let ctx = a.ctx() as f64;
+                cands.push(EvictCandidate {
+                    id,
+                    blocks: a.blocks,
+                    last_use: a.last_use,
+                    freq: a.touches,
+                    // Recompute price: re-prefill the whole context at
+                    // full SM (the migration planner's pricing).
+                    recompute_s: self
+                        .cost
+                        .prefill_latency(&m.spec, ctx, ctx, 1.0, m.tp),
+                });
+            }
+        }
+        if cands.is_empty() {
+            return false;
+        }
+        let Some(pol) = self.eviction.as_mut() else {
+            return false;
+        };
+        let vid = cands[pol.pick(&cands)].id;
+        self.swap_out(vid);
+        true
+    }
+
+    /// Push a Ready context down the hierarchy: into the host tier when
+    /// it has room (priced like a staged-migration KV copy), otherwise
+    /// preempt-to-recompute.
+    fn swap_out(&mut self, vid: u64) {
+        let (llm, idx) = self.slot_index[&vid];
+        let a = self.remove_active(llm, idx);
+        self.quota.free(llm, a.blocks);
+        if self.host.charge(a.blocks).is_ok() {
+            self.pending_link_s += self.swap_seconds(llm, a.blocks);
+            self.cache.swaps_out += 1;
+            self.swapped.push_back(SwappedCtx {
+                r: ResumedRequest {
+                    req: a.req,
+                    generated: a.generated,
+                    first_token: a.first_token,
+                    blocks: a.blocks,
+                },
+                shared_blocks: a.shared_blocks,
+            });
+        } else {
+            if a.shared_blocks > 0 {
+                self.deref_prefix(llm, a.req.prefix_group);
+            }
+            self.cache.recompute_preempts += 1;
+            self.waiting[llm].push_front(a.req);
+        }
+    }
+
+    /// Restore host-parked contexts (oldest first) while the device pool
+    /// has admission-watermark headroom for them — swap-in is literally
+    /// a self-migration through the resume path.
+    fn try_swap_in(&mut self, t: f64) {
+        let mut guard = 0;
+        while guard < 64 {
+            guard += 1;
+            let Some(front) = self.swapped.front() else {
+                break;
+            };
+            let llm = front.r.req.llm;
+            let need = front.r.blocks;
+            let headroom = (self.quota.total_blocks() as f64
+                * ADMIT_WATERMARK) as usize;
+            if self.quota.free_in_pool() < need + headroom {
+                break;
+            }
+            if self.enforce_quota() && self.quota.can_alloc(llm, need).is_err()
+            {
+                break;
+            }
+            let c = self.swapped.pop_front().unwrap();
+            self.host.release(c.r.blocks);
+            self.pending_link_s += self.swap_seconds(llm, c.r.blocks);
+            if self.resume_into_ready(t, c.r, c.shared_blocks) {
+                self.cache.swaps_in += 1;
+            }
+        }
     }
 
     /// Latest-arriving Ready request of `llm` (excluding `skip`), walking
@@ -652,6 +1075,7 @@ impl UnitSim {
     // -- scheduling ----------------------------------------------------------
 
     fn try_schedule(&mut self, t: f64) {
+        self.try_swap_in(t);
         loop {
             let progress = match self.cfg.policy {
                 Policy::Adbs | Policy::RoundRobin => self.schedule_adbs(t),
@@ -712,37 +1136,107 @@ impl UnitSim {
         }
         // Admit a batch of prompts under the token budget + block quota.
         let mut admitted: Vec<Active> = Vec::new();
+        // Tokens actually prefilled (prefix hits skip their shared part)
+        // vs. what a share-less engine would prefill.
         let mut tokens = 0usize;
+        let mut tokens_full = 0usize;
         let mut denied = false;
-        while let Some(front) = self.waiting[llm].front() {
+        let headroom =
+            (self.quota.total_blocks() as f64 * ADMIT_WATERMARK) as usize;
+        loop {
+            let Some(front) = self.waiting[llm].front() else {
+                break;
+            };
+            let (prompt_len, group, prefix_len) =
+                (front.prompt_len, front.prefix_group, front.prefix_len);
+            let share = self.peek_prefix(llm, group, prefix_len, prompt_len);
+            let charged_tokens = match share {
+                PrefixUse::Hit { tokens: pt, .. } => {
+                    (prompt_len - pt).max(1)
+                }
+                _ => prompt_len,
+            };
             if !admitted.is_empty()
-                && tokens + front.prompt_len > self.cfg.max_prefill_tokens
+                && tokens + charged_tokens > self.cfg.max_prefill_tokens
             {
                 break;
             }
             // +1: the first generated token's KV lands with the prompt.
-            let need = self.blocks_for(llm, front.prompt_len + 1);
+            let total = self.blocks_for(llm, prompt_len + 1);
+            // `need` = blocks to newly charge; `shared` = blocks this
+            // request references through the prefix index. A created
+            // entry is charged together with its first referent's
+            // private tail and outlives it as resident cache.
+            let (need, shared) = match share {
+                PrefixUse::Hit { blocks, .. } => {
+                    (total.saturating_sub(blocks), blocks)
+                }
+                PrefixUse::Create { blocks, .. } => (total, blocks),
+                PrefixUse::Unique => (total, 0),
+            };
             // Watermark: keep headroom for running decodes to grow.
-            let headroom = (self.quota.total_blocks() as f64
-                * ADMIT_WATERMARK) as usize;
-            if self.quota.free_in_pool() < need + headroom {
+            // Under pressure, reclaim cache state (dead prefixes, then
+            // policy-picked swap-outs) before giving up.
+            let mut secured = false;
+            for _ in 0..=8 {
+                if self.quota.free_in_pool() < need + headroom {
+                    if self.reclaim(llm, true, None) {
+                        continue;
+                    }
+                    break;
+                }
+                if self.try_alloc(llm, need) {
+                    secured = true;
+                    break;
+                }
+                let pool_wide = !self.enforce_quota()
+                    || matches!(
+                        self.quota.can_alloc(llm, need),
+                        Err(KvError::PoolExhausted)
+                    );
+                if !self.reclaim(llm, pool_wide, None) {
+                    break;
+                }
+            }
+            if !secured {
                 denied = true;
                 break;
             }
-            if self.try_alloc(llm, need) {
-                let req = self.waiting[llm].pop_front().unwrap();
-                tokens += req.prompt_len;
-                admitted.push(Active {
-                    req,
-                    state: ReqState::Prefilling,
-                    generated: 0,
-                    first_token: 0.0,
-                    blocks: need,
-                });
-            } else {
-                denied = true;
-                break;
+            let req = self.waiting[llm].pop_front().unwrap();
+            match share {
+                PrefixUse::Hit { .. } => {
+                    let e = self.prefix_index[llm]
+                        .get_mut(&group)
+                        .expect("hit entry vanished");
+                    e.refs += 1;
+                    e.freq += 1;
+                    e.last_use = t;
+                    self.cache.prefix_hits += 1;
+                }
+                PrefixUse::Create { blocks, tokens: pt } => {
+                    self.prefix_index[llm].insert(group, PrefixEntry {
+                        blocks,
+                        tokens: pt,
+                        refs: 1,
+                        last_use: t,
+                        freq: 1,
+                    });
+                    self.cache.prefix_misses += 1;
+                }
+                PrefixUse::Unique => {}
             }
+            tokens += charged_tokens;
+            tokens_full += prompt_len;
+            admitted.push(Active {
+                req,
+                state: ReqState::Prefilling,
+                generated: 0,
+                first_token: 0.0,
+                blocks: total.saturating_sub(shared),
+                shared_blocks: shared,
+                last_use: t,
+                touches: 1,
+            });
         }
         if admitted.is_empty() {
             return if denied {
@@ -771,21 +1265,41 @@ impl UnitSim {
             self.sm.try_reserve(1.0)
         };
         let Some(grant) = grant else {
-            // Roll the admission back; prefill waits for SMs.
+            // Roll the admission back; prefill waits for SMs. (A rolled-
+            // back Create leaves its entry resident with refs == 0 —
+            // reclaimable cache, re-referenced when the request
+            // re-admits.)
             for a in admitted.drain(..).rev() {
                 self.quota.free(llm, a.blocks);
+                if a.shared_blocks > 0 {
+                    self.deref_prefix(llm, a.req.prefix_group);
+                }
                 self.waiting[llm].push_front(a.req);
             }
             return StartOutcome::DeniedSm;
         };
         let avg_prompt = tokens as f64 / admitted.len() as f64;
+        let interference = self.cost.interference(self.sm.active_jobs());
         let dur = self.cost.prefill_latency(
             &m.spec,
             tokens as f64,
             avg_prompt,
             grant,
             m.tp,
-        ) * self.cost.interference(self.sm.active_jobs());
+        ) * interference;
+        if tokens_full > tokens {
+            // Prefill seconds the shared prefixes saved, priced at the
+            // same grant and interference the real job runs under.
+            let dur_full = self.cost.prefill_latency(
+                &m.spec,
+                tokens_full as f64,
+                tokens_full as f64 / admitted.len() as f64,
+                grant,
+                m.tp,
+            ) * interference;
+            self.cache.prefill_skip_s += (dur_full - dur).max(0.0);
+        }
+        self.cache.prefill_s += dur;
         let req_ids: Vec<u64> = admitted.iter().map(|a| a.req.id).collect();
         for a in admitted {
             self.insert_active(llm, a);
@@ -845,21 +1359,47 @@ impl UnitSim {
             let next_ctx = self.active[llm][idx].ctx() + 1;
             let mut ok = self.ensure_blocks(llm, idx, next_ctx);
             while !ok {
-                // Free memory by preempting the youngest Ready request
-                // (batched ones are already Decoding and thus immune).
-                match self.youngest_ready(llm, Some(id)) {
-                    Some(vid) => {
-                        let vidx = self.slot_index[&vid].1;
-                        let a = self.remove_active(llm, vidx);
-                        self.quota.free(llm, a.blocks);
-                        self.waiting[llm].push_front(a.req);
-                        idx = self.slot_index[&id].1;
-                        ok = self.ensure_blocks(llm, idx, next_ctx);
+                // Free memory: with the cache layer on, reclaim (dead
+                // prefixes, then the policy's victim — swapped to host
+                // or recomputed); otherwise the legacy youngest-Ready
+                // preempt. Batched requests are already Decoding and
+                // thus immune either way.
+                let progressed = if self.cache_enabled() {
+                    let a = &self.active[llm][idx];
+                    let delta = self
+                        .blocks_for(llm, next_ctx)
+                        .saturating_sub(a.shared_blocks)
+                        .saturating_sub(a.blocks);
+                    let pool_wide = !self.enforce_quota()
+                        || matches!(
+                            self.quota.can_alloc(llm, delta),
+                            Err(KvError::PoolExhausted)
+                        );
+                    self.reclaim(llm, pool_wide, Some(id))
+                } else {
+                    match self.youngest_ready(llm, Some(id)) {
+                        Some(vid) => {
+                            let vidx = self.slot_index[&vid].1;
+                            let a = self.remove_active(llm, vidx);
+                            self.quota.free(llm, a.blocks);
+                            self.waiting[llm].push_front(a.req);
+                            true
+                        }
+                        None => false,
                     }
-                    None => break,
+                };
+                if !progressed {
+                    break;
                 }
+                idx = self.slot_index[&id].1;
+                ok = self.ensure_blocks(llm, idx, next_ctx);
             }
             if ok {
+                {
+                    let a = &mut self.active[llm][idx];
+                    a.last_use = t;
+                    a.touches += 1;
+                }
                 self.set_state(llm, idx, ReqState::Decoding);
                 ctx_sum += self.active[llm][idx].ctx();
                 batch.push(id);
@@ -957,26 +1497,54 @@ impl UnitSim {
                 !self.ready_ids[i].is_empty() && self.preempt_youngest(i)
             });
             if !preempted {
-                // Drop the first waiting request that cannot ever fit.
-                let mut dropped_any = false;
-                for i in 0..self.models.len() {
-                    if let Some(front) = self.waiting[i].front() {
-                        let need = self.blocks_for(i, front.prompt_len + 1);
-                        let limit = if self.enforce_quota() {
-                            self.quota.quota(i)
-                        } else {
-                            self.quota.total_blocks()
-                        };
-                        if need > limit {
-                            self.waiting[i].pop_front();
-                            self.dropped += 1;
-                            dropped_any = true;
-                            break;
+                // Next resort: give up on a swapped-out context — requeue
+                // it for recompute so its host blocks and prefix ref are
+                // released and the waiting line can make progress.
+                if let Some(c) = self.swapped.pop_front() {
+                    self.host.release(c.r.blocks);
+                    if c.shared_blocks > 0 {
+                        self.deref_prefix(c.r.req.llm, c.r.req.prefix_group);
+                    }
+                    self.cache.recompute_preempts += 1;
+                    self.waiting[c.r.req.llm].push_front(c.r.req);
+                    // Fall through to the scheduling attempt below.
+                } else {
+                    // Drop the first waiting request that cannot ever
+                    // fit (accounting for any prefix blocks it would
+                    // share rather than allocate).
+                    let mut dropped_any = false;
+                    for i in 0..self.models.len() {
+                        if let Some(front) = self.waiting[i].front() {
+                            let (prompt_len, group, prefix_len) = (
+                                front.prompt_len,
+                                front.prefix_group,
+                                front.prefix_len,
+                            );
+                            let shared = match self
+                                .peek_prefix(i, group, prefix_len, prompt_len)
+                            {
+                                PrefixUse::Hit { blocks, .. } => blocks,
+                                _ => 0,
+                            };
+                            let need = self
+                                .blocks_for(i, prompt_len + 1)
+                                .saturating_sub(shared);
+                            let limit = if self.enforce_quota() {
+                                self.quota.quota(i)
+                            } else {
+                                self.quota.total_blocks()
+                            };
+                            if need > limit {
+                                self.waiting[i].pop_front();
+                                self.dropped += 1;
+                                dropped_any = true;
+                                break;
+                            }
                         }
                     }
-                }
-                if !dropped_any {
-                    break; // genuinely stuck (should not happen)
+                    if !dropped_any {
+                        break; // genuinely stuck (should not happen)
+                    }
                 }
             }
             let progressed = match self.cfg.policy {
@@ -1003,9 +1571,13 @@ impl UnitSim {
     fn has_work(&self) -> bool {
         self.waiting.iter().any(|q| !q.is_empty())
             || self.active.iter().any(|v| !v.is_empty())
+            || !self.swapped.is_empty()
     }
 
     fn launch(&mut self, t: f64, dur: f64, job: Job) {
+        // Any host-link transfers (swap in/out) since the last launch
+        // delay this job: the PCIe copy and the kernel share the unit.
+        let dur = dur + std::mem::take(&mut self.pending_link_s);
         let id = self.next_job_id;
         self.next_job_id += 1;
         self.inflight.insert(id, job);
@@ -1042,7 +1614,15 @@ mod tests {
     }
 
     fn req(llm: usize, id: u64, arrival: f64, p: usize, o: usize) -> Request {
-        Request { id, llm, arrival, prompt_len: p, output_len: o }
+        Request {
+            id,
+            llm,
+            arrival,
+            prompt_len: p,
+            output_len: o,
+            prefix_group: 0,
+            prefix_len: 0,
+        }
     }
 
     // NOTE: the full event loop is exercised through simulator::Simulation
@@ -1298,6 +1878,152 @@ mod tests {
         assert_eq!(roomy.drain_started().len(), 1);
         let job = roomy.inflight.values().next().unwrap();
         assert_eq!(job.phase, JobPhase::Prefill);
+    }
+
+    #[test]
+    fn prefix_hit_skips_shared_prefill_and_entry_outlives_requests() {
+        use crate::memory::EvictionKind;
+        let mut unit = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig {
+                eviction: EvictionKind::Lru,
+                ..EngineConfig::muxserve()
+            },
+            CostModel::a100(),
+        );
+        // Two requests sharing a 64-token template head.
+        let mut pending: Vec<(f64, u64)> = Vec::new();
+        for (i, id) in [1u64, 2].iter().enumerate() {
+            let mut r = req(0, *id, i as f64 * 1e-3, 96, 2);
+            r.prefix_group = 7;
+            r.prefix_len = 64;
+            unit.advance_time(r.arrival);
+            unit.on_arrival(r.arrival, r);
+            pending.extend(unit.drain_started());
+        }
+        let mut guard = 0;
+        while !pending.is_empty() && guard < 10_000 {
+            guard += 1;
+            pending.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let (t, id) = pending.pop().unwrap();
+            unit.advance_time(t);
+            unit.on_job_done(t, id);
+            pending.extend(unit.drain_started());
+        }
+        assert_eq!(unit.take_records().len(), 2);
+        let s = unit.cache_stats();
+        assert_eq!(s.prefix_misses, 1, "first request creates the entry");
+        assert_eq!(s.prefix_hits, 1, "second request must hit it");
+        assert!(s.prefill_skip_s > 0.0, "hit must skip shared prefill");
+        assert!(s.prefill_s > 0.0);
+        assert!(s.hit_rate() > 0.0);
+        // Both requests finished, yet the entry stays resident: the only
+        // device blocks still held are the shared prefix.
+        let entry = unit.prefix_blocks(0);
+        assert!(entry > 0, "entry must outlive its referents");
+        assert_eq!(unit.quota_used(0), entry, "private blocks must be freed");
+        // A full drain dissolves the cache too.
+        assert!(unit.drain_requests().is_empty());
+        assert_eq!(unit.prefix_blocks(0), 0);
+        assert_eq!(unit.quota_used(0), 0, "blocks leaked");
+    }
+
+    #[test]
+    fn dead_prefix_entries_are_reclaimed_under_pressure() {
+        use crate::memory::EvictionKind;
+        // Probe the full pool size, then shrink to ~11264 blocks so one
+        // big prompt forces a reclaim of the dead entry.
+        let full = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig::muxserve(),
+            CostModel::a100(),
+        )
+        .total_blocks();
+        let mut unit = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig {
+                eviction: EvictionKind::Lru,
+                kv_capacity_frac: 11_264.5 / full as f64,
+                ..EngineConfig::muxserve()
+            },
+            CostModel::a100(),
+        );
+        let pool = unit.total_blocks();
+        assert!(
+            (11_200..=11_330).contains(&pool),
+            "pool sizing drifted: {pool}"
+        );
+        // One single-output shared-prefix request: after it finishes the
+        // entry is resident with refs == 0.
+        let mut a = req(0, 1, 0.0, 64, 1);
+        a.prefix_group = 9;
+        a.prefix_len = 64;
+        unit.on_arrival(0.0, a);
+        let (t1, id1) = unit.drain_started()[0];
+        unit.advance_time(t1);
+        unit.on_job_done(t1, id1);
+        assert_eq!(unit.take_records().len(), 1);
+        let entry = unit.prefix_blocks(0);
+        assert!(entry > 0);
+        assert_eq!(unit.quota_used(0), entry);
+        // A unique prompt too big to fit alongside the dead entry: the
+        // admission path must reclaim the entry, then admit.
+        unit.on_arrival(t1 + 0.01, req(0, 2, t1 + 0.01, 112, 4));
+        assert_eq!(unit.drain_started().len(), 1, "must admit after reclaim");
+        assert_eq!(unit.prefix_blocks(0), 0, "dead entry must be dropped");
+        assert!(unit.quota_used(0) > 0);
+    }
+
+    #[test]
+    fn host_tier_swap_round_trip_restores_context() {
+        use crate::memory::EvictionKind;
+        let mut unit = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig {
+                eviction: EvictionKind::Lru,
+                host_tier_blocks: 100_000,
+                ..EngineConfig::muxserve()
+            },
+            CostModel::a100(),
+        );
+        // Park a mid-decode context through the resume path, push it
+        // down to the host tier, then pull it back.
+        let blocks = unit.blocks_for(0, 70);
+        let ok = unit.admit_resumed(0.5, ResumedRequest {
+            req: req(0, 1, 0.0, 64, 32),
+            generated: 3,
+            first_token: 0.2,
+            blocks,
+        });
+        assert!(ok, "resume must fit a roomy unit");
+        let _ = unit.drain_started();
+        assert_eq!(unit.quota_used(0), blocks);
+        unit.swap_out(1);
+        assert_eq!(unit.cache_stats().swaps_out, 1);
+        assert_eq!(unit.quota_used(0), 0, "device blocks must be released");
+        assert_eq!(unit.host_blocks_used(), blocks);
+        assert!(unit.cache_stats().host_peak_blocks >= blocks);
+        assert!(unit.pending_link_s > 0.0, "swap must cost link time");
+        unit.try_swap_in(1.0);
+        assert_eq!(unit.cache_stats().swaps_in, 1);
+        assert_eq!(unit.host_blocks_used(), 0, "host side must drain");
+        assert_eq!(unit.quota_used(0), blocks, "context back on device");
+        // The accrued link seconds delay the next launched job.
+        let link = unit.pending_link_s;
+        assert!(link > 0.0);
+        unit.launch(1.0, 0.0, Job {
+            llm: 0,
+            phase: JobPhase::Decode,
+            req_ids: vec![1],
+            sm_grant: 0.1,
+        });
+        let (t_done, _) = *unit.started.last().unwrap();
+        assert!((t_done - (1.0 + link)).abs() < 1e-12);
+        assert_eq!(unit.pending_link_s, 0.0);
     }
 
     #[test]

@@ -245,7 +245,15 @@ pub fn generate_requests(
         let accept = process.rate(t) / peak;
         if rng.f64() < accept {
             let (prompt_len, output_len) = sample_lengths(lengths, rng);
-            out.push(Request { id, llm, arrival: t, prompt_len, output_len });
+            out.push(Request {
+                id,
+                llm,
+                arrival: t,
+                prompt_len,
+                output_len,
+                prefix_group: 0,
+                prefix_len: 0,
+            });
             id += 1;
         }
     }

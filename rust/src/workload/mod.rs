@@ -32,6 +32,13 @@ pub struct Request {
     pub arrival: f64,
     pub prompt_len: usize,
     pub output_len: usize,
+    /// Shared-prompt family: requests to the same LLM carrying the same
+    /// nonzero group id start with identical `prefix_len` prompt tokens
+    /// (system prompts, few-shot templates). 0 = unique prompt.
+    pub prefix_group: u64,
+    /// Length of the shared prefix in tokens (`<= prompt_len`; 0 when
+    /// `prefix_group` is 0).
+    pub prefix_len: usize,
 }
 
 impl Request {
@@ -70,7 +77,15 @@ pub fn poisson_requests(
     let mut id = (llm as u64) << 40;
     while t < duration {
         let (prompt_len, output_len) = sample_lengths(spec, rng);
-        out.push(Request { id, llm, arrival: t, prompt_len, output_len });
+        out.push(Request {
+            id,
+            llm,
+            arrival: t,
+            prompt_len,
+            output_len,
+            prefix_group: 0,
+            prefix_len: 0,
+        });
         id += 1;
         t += rng.exponential(spec.rate);
     }

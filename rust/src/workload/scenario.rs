@@ -92,6 +92,11 @@ pub struct Scenario {
     /// Base rate of the most popular LLM (req/s).
     pub max_rate: f64,
     pub seed: u64,
+    /// Fraction of requests carrying a shared prompt prefix (system
+    /// prompts / few-shot templates reused across users of one LLM).
+    /// 0.0 = every prompt unique; at > 0 each tagged request joins one
+    /// of a few per-LLM template families (see [`Scenario::build`]).
+    pub shared_prefix: f64,
 }
 
 impl Scenario {
@@ -105,6 +110,7 @@ impl Scenario {
             alpha: 1.7,
             max_rate: 6.0,
             seed: 2024,
+            shared_prefix: 0.0,
         }
     }
 
@@ -228,10 +234,35 @@ impl Scenario {
                 )
             })
             .collect();
+        let mut requests = merge_streams(streams);
+        self.assign_shared_prefixes(&mut requests);
         ScenarioData {
             planning_workloads: workloads,
             mean_rates: self.mean_rates(),
-            requests: merge_streams(streams),
+            requests,
+        }
+    }
+
+    /// Tag a `shared_prefix` fraction of the (arrival-sorted, hence
+    /// deterministic) stream with per-LLM template families: three
+    /// templates per LLM with fixed lengths, mimicking a service whose
+    /// users share a handful of system prompts. Deterministic in `seed`.
+    fn assign_shared_prefixes(&self, requests: &mut [Request]) {
+        if self.shared_prefix <= 0.0 {
+            return;
+        }
+        // Template lengths in tokens; requests shorter than the template
+        // share only their full prompt (prefix_len is clamped).
+        const TEMPLATES: [usize; 3] = [96, 128, 160];
+        let mut rng = Rng::new(self.seed ^ 0x00C0_FFEE);
+        for r in requests.iter_mut() {
+            if rng.f64() >= self.shared_prefix {
+                continue;
+            }
+            let t = rng.below(TEMPLATES.len());
+            // Group ids are unique per (llm, template) and nonzero.
+            r.prefix_group = (((r.llm as u64) + 1) << 8) | (t as u64 + 1);
+            r.prefix_len = TEMPLATES[t].min(r.prompt_len);
         }
     }
 }
@@ -320,6 +351,33 @@ mod tests {
         let end = s.duration * 0.95;
         assert!(procs[0].rate(end) < procs[s.n_llms - 1].rate(end));
         assert!(procs[0].rate(0.0) > procs[s.n_llms - 1].rate(0.0));
+    }
+
+    #[test]
+    fn shared_prefix_axis_is_deterministic_and_honors_fraction() {
+        let s = Scenario {
+            shared_prefix: 0.6,
+            ..Scenario::new(ScenarioShape::Stationary)
+        };
+        let a = s.build();
+        let b = s.build();
+        assert_eq!(a.requests, b.requests);
+        let tagged =
+            a.requests.iter().filter(|r| r.prefix_group != 0).count();
+        let frac = tagged as f64 / a.requests.len() as f64;
+        assert!((frac - 0.6).abs() < 0.1, "tagged fraction {frac}");
+        for r in &a.requests {
+            if r.prefix_group == 0 {
+                assert_eq!(r.prefix_len, 0);
+            } else {
+                assert!(r.prefix_len > 0 && r.prefix_len <= r.prompt_len);
+                // Group ids never collide across LLMs.
+                assert_eq!((r.prefix_group >> 8) as usize, r.llm + 1);
+            }
+        }
+        // Off by default: the control stream carries no prefixes.
+        let plain = Scenario::new(ScenarioShape::Stationary).build();
+        assert!(plain.requests.iter().all(|r| r.prefix_group == 0));
     }
 
     #[test]

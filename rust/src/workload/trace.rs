@@ -86,6 +86,8 @@ pub fn chatlmsys_like_trace(spec: &TraceSpec) -> (Vec<WorkloadSpec>, Vec<Request
                         arrival: t,
                         prompt_len,
                         output_len,
+                        prefix_group: 0,
+                        prefix_len: 0,
                     });
                     id += 1;
                 }
@@ -103,24 +105,35 @@ pub fn chatlmsys_like_trace(spec: &TraceSpec) -> (Vec<WorkloadSpec>, Vec<Request
 // Every generator in this crate produces plain `Request` streams, so a
 // one-line-per-request text format is enough to freeze a workload and
 // replay it bit-identically later (or feed it to an external system).
-// Format: a `# muxserve-trace v1` header, then `id,llm,arrival,prompt,
-// output` rows with full-precision arrivals.
+// Format: a `# muxserve-trace v2` header, then `id,llm,arrival,prompt,
+// output,prefix_group,prefix_len` rows with full-precision arrivals.
+// v1 files (5 fields, no prefix columns) still parse: the prefix fields
+// default to 0.
 
 /// Serialize a request stream to the portable trace format.
 pub fn requests_to_trace(requests: &[Request]) -> String {
-    let mut out = String::from("# muxserve-trace v1\n");
-    out.push_str("# id,llm,arrival_s,prompt_len,output_len\n");
+    let mut out = String::from("# muxserve-trace v2\n");
+    out.push_str(
+        "# id,llm,arrival_s,prompt_len,output_len,prefix_group,prefix_len\n",
+    );
     for r in requests {
         out.push_str(&format!(
-            "{},{},{:.17e},{},{}\n",
-            r.id, r.llm, r.arrival, r.prompt_len, r.output_len
+            "{},{},{:.17e},{},{},{},{}\n",
+            r.id,
+            r.llm,
+            r.arrival,
+            r.prompt_len,
+            r.output_len,
+            r.prefix_group,
+            r.prefix_len
         ));
     }
     out
 }
 
-/// Parse a trace produced by [`requests_to_trace`]. Returns requests in
-/// file order (generators emit arrival-sorted streams).
+/// Parse a trace produced by [`requests_to_trace`] (v2, or v1 without the
+/// prefix columns). Returns requests in file order (generators emit
+/// arrival-sorted streams).
 pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -129,9 +142,9 @@ pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
             continue;
         }
         let fields: Vec<&str> = line.split(',').collect();
-        if fields.len() != 5 {
+        if fields.len() != 5 && fields.len() != 7 {
             return Err(format!(
-                "trace line {}: expected 5 fields, got {}",
+                "trace line {}: expected 5 or 7 fields, got {}",
                 lineno + 1,
                 fields.len()
             ));
@@ -139,12 +152,22 @@ pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
         let bad = |what: &str| {
             format!("trace line {}: bad {what}: {line}", lineno + 1)
         };
+        let (prefix_group, prefix_len) = if fields.len() == 7 {
+            (
+                fields[5].parse().map_err(|_| bad("prefix_group"))?,
+                fields[6].parse().map_err(|_| bad("prefix_len"))?,
+            )
+        } else {
+            (0, 0)
+        };
         out.push(Request {
             id: fields[0].parse().map_err(|_| bad("id"))?,
             llm: fields[1].parse().map_err(|_| bad("llm"))?,
             arrival: fields[2].parse().map_err(|_| bad("arrival"))?,
             prompt_len: fields[3].parse().map_err(|_| bad("prompt_len"))?,
             output_len: fields[4].parse().map_err(|_| bad("output_len"))?,
+            prefix_group,
+            prefix_len,
         });
     }
     Ok(out)
@@ -216,18 +239,32 @@ mod tests {
 
     #[test]
     fn trace_export_round_trips_exactly() {
-        let (_, reqs) =
+        let (_, mut reqs) =
             chatlmsys_like_trace(&TraceSpec { duration: 60.0, ..Default::default() });
         assert!(!reqs.is_empty());
+        // Exercise the prefix columns too.
+        reqs[0].prefix_group = 0x0107;
+        reqs[0].prefix_len = 96.min(reqs[0].prompt_len);
         let text = requests_to_trace(&reqs);
         let back = requests_from_trace(&text).unwrap();
         assert_eq!(reqs, back, "replay must be bit-identical");
     }
 
     #[test]
+    fn v1_traces_still_parse_with_zero_prefix() {
+        let v1 = "# muxserve-trace v1\n7,2,1.5e0,100,20\n";
+        let reqs = requests_from_trace(v1).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].prefix_group, 0);
+        assert_eq!(reqs[0].prefix_len, 0);
+        assert_eq!(reqs[0].prompt_len, 100);
+    }
+
+    #[test]
     fn trace_parser_rejects_malformed_rows() {
         assert!(requests_from_trace("1,2,3").is_err());
         assert!(requests_from_trace("a,0,1.0,4,4").is_err());
+        assert!(requests_from_trace("1,0,1.0,4,4,x,0").is_err());
         // Comments and blank lines are fine.
         assert_eq!(requests_from_trace("# hi\n\n").unwrap().len(), 0);
     }

@@ -10,7 +10,9 @@
 use muxserve::bench::compare_three_systems;
 use muxserve::bench::drift::{run_scenario, run_trace, scenario_cluster};
 use muxserve::config::{llama_spec, ClusterSpec};
-use muxserve::coordinator::{MigrationMode, PolicyKind, ReplanConfig};
+use muxserve::coordinator::{
+    EngineConfig, MigrationMode, PolicyKind, ReplanConfig,
+};
 use muxserve::simulator::DynamicReport;
 use muxserve::workload::{
     requests_from_trace, requests_to_trace, synthetic_workload, Scenario,
@@ -189,6 +191,7 @@ fn exported_trace_replays_through_the_engine() {
         &replayed,
         scenario.duration,
         &scenario_cluster(),
+        EngineConfig::muxserve(),
         None,
     )
     .expect("placement for replayed trace");

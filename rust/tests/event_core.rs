@@ -82,6 +82,8 @@ fn prop_slot_index_mirrors_active_lists() {
                         arrival: now,
                         prompt_len,
                         output_len,
+                        prefix_group: 0,
+                        prefix_len: 0,
                     },
                 );
                 next_id += 1;

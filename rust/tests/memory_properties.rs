@@ -7,7 +7,7 @@
 use muxserve::config::llama_spec;
 use muxserve::coordinator::EngineConfig;
 use muxserve::costmodel::CostModel;
-use muxserve::memory::{BlockAllocator, QuotaCache, QuotaError};
+use muxserve::memory::{BlockAllocator, EvictionKind, KvError, QuotaCache};
 use muxserve::prop_assert;
 use muxserve::simulator::{UnitModelCfg, UnitSim};
 use muxserve::util::{proplite, Rng};
@@ -35,8 +35,12 @@ fn prop_quota_conservation_under_adapt() {
                     let want = rng.range(1, 64) as usize;
                     match q.alloc(llm, want) {
                         Ok(()) => held.push((llm, want)),
-                        Err(QuotaError::QuotaExceeded)
-                        | Err(QuotaError::PoolExhausted) => {}
+                        Err(
+                            KvError::QuotaExceeded | KvError::PoolExhausted,
+                        ) => {}
+                        Err(e) => {
+                            return Err(format!("unexpected error: {e}"))
+                        }
                     }
                 }
                 2 => {
@@ -203,6 +207,8 @@ fn prop_staged_migration_conserves_kv_blocks() {
                         arrival: now,
                         prompt_len: 16 + rng.below(600),
                         output_len: 2 + rng.below(48),
+                        prefix_group: 0,
+                        prefix_len: 0,
                     },
                 );
             }
@@ -306,7 +312,7 @@ fn prop_allocator_block_table_consistency() {
                 let owner = rng.below(n_owners);
                 let want = rng.range(1, 16) as usize;
                 match a.alloc(owner, want) {
-                    Some(blocks) => {
+                    Ok(blocks) => {
                         prop_assert!(
                             blocks.len() == want,
                             "short allocation"
@@ -319,10 +325,10 @@ fn prop_allocator_block_table_consistency() {
                         );
                         held.push((owner, blocks));
                     }
-                    None => {
+                    Err(e) => {
                         prop_assert!(
                             a.n_free() < want,
-                            "refused although {} free >= {want}",
+                            "refused ({e}) although {} free >= {want}",
                             a.n_free()
                         );
                     }
@@ -330,7 +336,8 @@ fn prop_allocator_block_table_consistency() {
             } else {
                 let i = rng.below(held.len());
                 let (owner, blocks) = held.swap_remove(i);
-                a.free_blocks(owner, &blocks);
+                a.free_blocks(owner, &blocks)
+                    .map_err(|e| format!("legal free refused: {e}"))?;
             }
             // (1)+(4): uniqueness and conservation.
             let mut all: Vec<u32> = held
@@ -361,7 +368,8 @@ fn prop_allocator_block_table_consistency() {
             }
         }
         for (owner, blocks) in held.drain(..) {
-            a.free_blocks(owner, &blocks);
+            a.free_blocks(owner, &blocks)
+                .map_err(|e| format!("legal free refused: {e}"))?;
         }
         prop_assert!(a.n_free() == n_blocks, "capacity not restored");
         Ok(())
@@ -387,7 +395,7 @@ fn prop_quota_and_allocator_stay_in_lock_step() {
                     // Quota admitted ⇒ the pool MUST have the ids.
                     let ids = a.alloc(llm, want);
                     prop_assert!(
-                        ids.is_some(),
+                        ids.is_ok(),
                         "quota admitted {want} but allocator refused"
                     );
                     held.push((llm, ids.unwrap()));
@@ -396,7 +404,8 @@ fn prop_quota_and_allocator_stay_in_lock_step() {
                 let i = rng.below(held.len());
                 let (llm, blocks) = held.swap_remove(i);
                 q.free(llm, blocks.len());
-                a.free_blocks(llm, &blocks);
+                a.free_blocks(llm, &blocks)
+                    .map_err(|e| format!("legal free refused: {e}"))?;
             }
             prop_assert!(
                 q.total_used() == total - a.n_free(),
@@ -415,4 +424,271 @@ fn prop_quota_and_allocator_stay_in_lock_step() {
         }
         Ok(())
     });
+}
+
+/// A double free (or a foreign free) is a reported [`KvError::NotOwned`]
+/// at the public boundary, never a panic — and the failed call mutates
+/// nothing.
+#[test]
+fn prop_double_free_is_an_error_and_mutates_nothing() {
+    proplite::check(100, |rng: &mut Rng| {
+        let n_blocks = rng.range(8, 256) as usize;
+        let mut a = BlockAllocator::new(n_blocks, 2);
+        let blocks = a
+            .alloc(0, rng.range(1, 8) as usize)
+            .map_err(|e| format!("empty pool refused alloc: {e}"))?;
+        // Foreign free: owner 1 does not hold these blocks.
+        let foreign = a.free_blocks(1, &blocks);
+        prop_assert!(
+            foreign == Err(KvError::NotOwned),
+            "foreign free must report NotOwned, got {foreign:?}"
+        );
+        prop_assert!(
+            a.used_by(0) == blocks.len() && a.used_by(1) == 0,
+            "failed foreign free mutated ownership"
+        );
+        a.free_blocks(0, &blocks)
+            .map_err(|e| format!("legal free refused: {e}"))?;
+        let free_before = a.n_free();
+        let double = a.free_blocks(0, &blocks);
+        prop_assert!(
+            double == Err(KvError::NotOwned),
+            "double free must report NotOwned, got {double:?}"
+        );
+        prop_assert!(
+            a.n_free() == free_before,
+            "failed double free mutated the pool"
+        );
+        Ok(())
+    });
+}
+
+fn cache_unit(
+    n_llms: usize,
+    kv_frac: f64,
+    eviction: EvictionKind,
+    host_tier_blocks: usize,
+    rng: &mut Rng,
+) -> UnitSim {
+    let models: Vec<UnitModelCfg> = (0..n_llms)
+        .map(|i| UnitModelCfg {
+            spec: llama_spec(&format!("mc-{i}"), 6.7),
+            rate: 0.5 + rng.f64() * 3.0,
+            mean_total_len: 499.0,
+            prefill_sm: 0.5,
+            decode_sm: 0.5,
+            tp: 1,
+            canonical_tp: 1,
+        })
+        .collect();
+    let cfg = EngineConfig {
+        kv_capacity_frac: kv_frac,
+        eviction,
+        host_tier_blocks,
+        ..EngineConfig::muxserve()
+    };
+    UnitSim::new(models, 1, cfg, CostModel::a100())
+}
+
+/// Block conservation with the cache layer on: under prefix sharing,
+/// eviction pressure, and host-tier swaps — for every eviction policy —
+/// the engine must never oversubscribe the host tier, never restore a
+/// context it did not spill, always charge a prefix entry against its
+/// LLM's quota, and strand nothing at teardown.
+#[test]
+fn prop_cache_soup_conserves_blocks_under_all_policies() {
+    proplite::check(40, |rng: &mut Rng| {
+        for eviction in EvictionKind::policies() {
+            let n = 1 + rng.below(3);
+            let host_cap =
+                if rng.f64() < 0.5 { 0 } else { 1usize << 20 };
+            // Tiny pool so reclaim (dead entries, then policy victims)
+            // fires constantly instead of almost never.
+            let mut unit = cache_unit(
+                n,
+                0.05 + rng.f64() * 0.25,
+                eviction,
+                host_cap,
+                rng,
+            );
+            let mut pending: Vec<(f64, u64)> = Vec::new();
+            let mut now = 0.0_f64;
+            let mut next_id = 1u64;
+            for step in 0..rng.range(20, 120) {
+                if pending.is_empty() || rng.f64() < 0.5 {
+                    now += rng.f64() * 0.05;
+                    let llm = rng.below(n);
+                    // Half the stream joins one of a few per-LLM
+                    // prompt-prefix templates; the rest is unique.
+                    let (group, plen) = if rng.f64() < 0.5 {
+                        let t = rng.below(3);
+                        (
+                            ((llm as u64 + 1) << 8) | (t as u64 + 1),
+                            32 * (t + 1),
+                        )
+                    } else {
+                        (0, 0)
+                    };
+                    unit.advance_time(now);
+                    unit.on_arrival(
+                        now,
+                        Request {
+                            id: next_id,
+                            llm,
+                            arrival: now,
+                            prompt_len: plen + 16 + rng.below(400),
+                            output_len: 1 + rng.below(32),
+                            prefix_group: group,
+                            prefix_len: plen,
+                        },
+                    );
+                    next_id += 1;
+                } else {
+                    let i = pending
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    let (t, job) = pending.swap_remove(i);
+                    now = now.max(t);
+                    unit.advance_time(now);
+                    unit.on_job_done(now, job);
+                }
+                pending.extend(unit.drain_started());
+                let s = unit.cache_stats();
+                prop_assert!(
+                    unit.host_blocks_used() <= host_cap,
+                    "host tier oversubscribed: {} > {host_cap}",
+                    unit.host_blocks_used()
+                );
+                prop_assert!(
+                    s.swaps_in <= s.swaps_out,
+                    "restored more contexts than were spilled"
+                );
+                for llm in 0..n {
+                    prop_assert!(
+                        unit.quota_used(llm) >= unit.prefix_blocks(llm),
+                        "llm {llm}: prefix entries ({}) exceed the quota \
+                         charge ({})",
+                        unit.prefix_blocks(llm),
+                        unit.quota_used(llm)
+                    );
+                }
+                if let Some(msg) = unit.index_inconsistency() {
+                    return Err(format!(
+                        "step {step} ({}): {msg}",
+                        eviction.name()
+                    ));
+                }
+            }
+            // Wind down every completion, then tear down: nothing may
+            // stay charged — not private blocks, not prefix entries, not
+            // host-tier residents.
+            while !pending.is_empty() {
+                let i = pending
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let (t, job) = pending.swap_remove(i);
+                now = now.max(t);
+                unit.advance_time(now);
+                unit.on_job_done(now, job);
+                pending.extend(unit.drain_started());
+            }
+            let _ = unit.drain_requests();
+            for llm in 0..n {
+                prop_assert!(
+                    unit.quota_used(llm) == 0,
+                    "llm {llm} stranded {} blocks under {}",
+                    unit.quota_used(llm),
+                    eviction.name()
+                );
+                prop_assert!(
+                    unit.prefix_blocks(llm) == 0,
+                    "prefix entries survived teardown under {}",
+                    eviction.name()
+                );
+            }
+            prop_assert!(
+                unit.host_blocks_used() == 0,
+                "host tier not emptied at teardown"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end pin for the cache layer: on a shared-prefix scenario the
+/// cache-enabled engine must (1) replay bit-identically run to run, and
+/// (2) beat the `--eviction none` baseline on mean prefill seconds per
+/// completed request (hits shave the shared prefix off each prefill).
+#[test]
+fn shared_prefix_scenario_cache_beats_baseline_and_replays_identically() {
+    use muxserve::bench::{run_scenario_cfg, scenario_cluster};
+    use muxserve::workload::{Scenario, ScenarioShape};
+
+    let scenario = Scenario {
+        duration: 40.0,
+        seed: 7,
+        shared_prefix: 0.6,
+        ..Scenario::new(ScenarioShape::Stationary)
+    };
+    let data = scenario.build();
+    let cluster = scenario_cluster();
+    let base = EngineConfig {
+        kv_capacity_frac: 0.6,
+        ..EngineConfig::muxserve()
+    };
+    let off = run_scenario_cfg(&scenario, &data, &cluster, base, None)
+        .expect("placement (cache off)");
+    let cached = EngineConfig {
+        eviction: EvictionKind::Lru,
+        host_tier_blocks: 1 << 20,
+        ..base
+    };
+    let on1 = run_scenario_cfg(&scenario, &data, &cluster, cached, None)
+        .expect("placement (cache on)");
+    let on2 = run_scenario_cfg(&scenario, &data, &cluster, cached, None)
+        .expect("placement (cache on, replay)");
+
+    // (1) bit-identical replay: same completions, same float outputs to
+    // the last bit, same cache counters.
+    assert_eq!(on1.eval.records.len(), on2.eval.records.len());
+    assert_eq!(
+        on1.eval.slo_attainment(8.0).to_bits(),
+        on2.eval.slo_attainment(8.0).to_bits()
+    );
+    assert_eq!(
+        on1.eval.latency_summary().p99().to_bits(),
+        on2.eval.latency_summary().p99().to_bits()
+    );
+    assert_eq!(on1.cache.prefix_hits, on2.cache.prefix_hits);
+    assert_eq!(on1.cache.prefix_misses, on2.cache.prefix_misses);
+    assert_eq!(
+        on1.cache.prefill_s.to_bits(),
+        on2.cache.prefill_s.to_bits()
+    );
+    assert_eq!(
+        on1.cache.prefill_skip_s.to_bits(),
+        on2.cache.prefill_skip_s.to_bits()
+    );
+    assert_eq!(on1.cache.swaps_out, on2.cache.swaps_out);
+    assert_eq!(on1.cache.swaps_in, on2.cache.swaps_in);
+
+    // (2) the sharing win: hits happen, skip work, and cut the mean
+    // prefill cost per completed request vs. the pre-cache engine.
+    assert!(on1.cache.prefix_hits > 0, "no prefix hits: {:?}", on1.cache);
+    assert!(on1.cache.prefill_skip_s > 0.0);
+    assert!(off.cache.prefix_hits == 0, "cache off must track nothing");
+    let avg_on =
+        on1.cache.prefill_s / on1.eval.records.len().max(1) as f64;
+    let avg_off =
+        off.cache.prefill_s / off.eval.records.len().max(1) as f64;
+    assert!(
+        avg_on < avg_off,
+        "sharing must cut mean prefill: {avg_on} vs {avg_off}"
+    );
 }
