@@ -33,7 +33,7 @@ use crate::coordinator::replan::PolicyKind;
 use crate::coordinator::{EngineConfig, ReplanConfig};
 use crate::memory::EvictionKind;
 use crate::util::json::Json;
-use crate::workload::{Scenario, ScenarioShape};
+use crate::workload::{Scenario, ScenarioShape, SloClass};
 
 /// Warm-start counts as SLO-parity when the worst warm−cold attainment
 /// delta across all policy × scenario cells is no lower than this.
@@ -50,6 +50,10 @@ pub struct AbConfig {
     pub policies: Vec<PolicyKind>,
     /// Scenario shapes to run.
     pub shapes: Vec<ScenarioShape>,
+    /// Overload shapes for the tier section: each runs once tier-blind
+    /// (FCFS admission, no shedding) and once tier-aware + shedding, on
+    /// identical streams, scored on tier-weighted goodput.
+    pub overload_shapes: Vec<ScenarioShape>,
     /// Warm-start modes crossed with the policies.
     pub warm_modes: Vec<bool>,
     /// Migration executors crossed with everything else.
@@ -73,6 +77,7 @@ impl AbConfig {
             seed: 2024,
             policies: PolicyKind::all().to_vec(),
             shapes: ScenarioShape::dynamic().to_vec(),
+            overload_shapes: ScenarioShape::overload().to_vec(),
             warm_modes: vec![false, true],
             migration_modes: MigrationMode::all().to_vec(),
             slo_scale: 8.0,
@@ -100,8 +105,13 @@ pub struct AbCell {
     pub dropped: usize,
     /// SLO attainment at the configured scale (rounded to 1e-4).
     pub slo: f64,
-    /// p99 request latency, seconds (rounded to 1e-3).
-    pub p99_latency: f64,
+    /// Tier-weighted goodput at the configured scale, req-weight/s
+    /// (rounded to 1e-4).
+    pub goodput: f64,
+    /// p99 request latency, seconds (rounded to 1e-3). `None` when the
+    /// run completed nothing — an explicitly empty cell, never a NaN
+    /// that would poison every verdict comparison downstream.
+    pub p99_latency: Option<f64>,
     pub replans: usize,
     pub migrations: usize,
     /// Σ per-LLM migration unavailability, LLM-seconds (rounded 1e-4).
@@ -124,7 +134,36 @@ pub struct AbBaseline {
     pub arrived: usize,
     pub completed: usize,
     pub slo: f64,
-    pub p99_latency: f64,
+    /// Tier-weighted goodput at the configured scale (rounded 1e-4).
+    pub goodput: f64,
+    /// `None` when the static run completed nothing (see
+    /// [`AbCell::p99_latency`]).
+    pub p99_latency: Option<f64>,
+}
+
+/// One run in the tiered-overload section: an overload scenario served
+/// either tier-blind (`mode == "fcfs"`: arrival order, no admission
+/// control) or tier-aware (`mode == "tiered"`: slack-per-weight
+/// scheduling + load shedding), on the identical request stream.
+#[derive(Clone, Debug)]
+pub struct AbTierCell {
+    pub shape: &'static str,
+    /// "fcfs" | "tiered".
+    pub mode: &'static str,
+    pub arrived: usize,
+    pub completed: usize,
+    /// Requests shed at admission, by tier (interactive, standard,
+    /// batch).
+    pub shed: [u64; 3],
+    /// Tier-weighted goodput at the configured scale (rounded 1e-4).
+    pub goodput: f64,
+    /// SLO attainment over completions (rounded 1e-4).
+    pub slo: f64,
+    /// Per-tier goodput (interactive, standard, batch; rounded 1e-4).
+    pub tier_goodput: [f64; 3],
+    /// Per-tier p99 latency, seconds; `None` where the tier completed
+    /// nothing (rounded 1e-3).
+    pub tier_p99: [Option<f64>; 3],
 }
 
 /// Everything one `ab` invocation measured.
@@ -135,6 +174,8 @@ pub struct AbReport {
     pub slo_scale: f64,
     pub baselines: Vec<AbBaseline>,
     pub cells: Vec<AbCell>,
+    /// The tiered-overload section (empty when no overload shapes ran).
+    pub tier_cells: Vec<AbTierCell>,
     /// Minimum warm−cold SLO delta over all (policy, shape, migration)
     /// triples that ran in both modes (None when the grid held no such
     /// pair).
@@ -147,10 +188,24 @@ pub struct AbReport {
     /// Minimum staged−blackout SLO delta over the same pairs (staged
     /// must not buy its downtime win with attainment).
     pub staged_slo_delta_min: Option<f64>,
+    /// Minimum tiered−fcfs goodput delta over the overload shapes:
+    /// positive everywhere means tier-aware scheduling + shedding
+    /// strictly beats tier-blind FCFS on tier-weighted goodput — the
+    /// gate for defaulting the tier engine on under overload.
+    pub shed_goodput_delta_min: Option<f64>,
 }
 
 fn round(x: f64, unit: f64) -> f64 {
     (x / unit).round() * unit
+}
+
+/// Markdown cell for a possibly-empty measurement: "-" instead of a
+/// misleading number (or a NaN) when nothing was measured.
+fn fmt_opt(x: Option<f64>, decimals: usize) -> String {
+    match x {
+        Some(v) => format!("{v:.decimals$}"),
+        None => "-".to_string(),
+    }
 }
 
 impl AbReport {
@@ -179,23 +234,25 @@ impl AbReport {
         };
         let _ = writeln!(
             out,
-            "| scenario | policy | warm | migration | slo | p99(s) | \
-             migr | replans | downtime(s) | cost | kv-res | \
+            "| scenario | policy | warm | migration | slo | goodput | \
+             p99(s) | migr | replans | downtime(s) | cost | kv-res | \
              done/arrived |{timing_hdr}"
         );
         let timing_sep = if include_timing { "---|---|" } else { "" };
         let _ = writeln!(
             out,
-            "|---|---|---|---|---|---|---|---|---|---|---|---|{timing_sep}"
+            "|---|---|---|---|---|---|---|---|---|---|---|---|---|\
+             {timing_sep}"
         );
         for b in &self.baselines {
             let _ = writeln!(
                 out,
-                "| {} | static | - | - | {:.4} | {:.3} | 0 | 0 | 0 | 0 \
-                 | 0 | {}/{} |{}",
+                "| {} | static | - | - | {:.4} | {:.4} | {} | 0 | 0 | 0 \
+                 | 0 | 0 | {}/{} |{}",
                 b.shape,
                 b.slo,
-                b.p99_latency,
+                b.goodput,
+                fmt_opt(b.p99_latency, 3),
                 b.completed,
                 b.arrived,
                 if include_timing { " - | - |" } else { "" }
@@ -212,14 +269,15 @@ impl AbReport {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {} | {:.4} | {:.3} | {} | {} | {:.4} \
-                 | {:.4} | {} | {}/{} |{}",
+                "| {} | {} | {} | {} | {:.4} | {:.4} | {} | {} | {} | \
+                 {:.4} | {:.4} | {} | {}/{} |{}",
                 c.shape,
                 c.policy,
                 if c.warm { "on" } else { "off" },
                 c.migration,
                 c.slo,
-                c.p99_latency,
+                c.goodput,
+                fmt_opt(c.p99_latency, 3),
                 c.migrations,
                 c.replans,
                 c.downtime_s,
@@ -274,6 +332,67 @@ impl AbReport {
                 );
             }
         }
+        if !self.tier_cells.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n### tiered overload: fcfs vs tier-aware + shedding \
+                 (identical streams)"
+            );
+            let _ = writeln!(
+                out,
+                "| scenario | mode | goodput | slo | shed(i/s/b) | \
+                 g-int | g-std | g-bat | p99-int | p99-std | p99-bat | \
+                 done/arrived |"
+            );
+            let _ = writeln!(
+                out,
+                "|---|---|---|---|---|---|---|---|---|---|---|---|"
+            );
+            for c in &self.tier_cells {
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {:.4} | {:.4} | {}/{}/{} | {:.4} | \
+                     {:.4} | {:.4} | {} | {} | {} | {}/{} |",
+                    c.shape,
+                    c.mode,
+                    c.goodput,
+                    c.slo,
+                    c.shed[0],
+                    c.shed[1],
+                    c.shed[2],
+                    c.tier_goodput[0],
+                    c.tier_goodput[1],
+                    c.tier_goodput[2],
+                    fmt_opt(c.tier_p99[0], 3),
+                    fmt_opt(c.tier_p99[1], 3),
+                    fmt_opt(c.tier_p99[2], 3),
+                    c.completed,
+                    c.arrived,
+                );
+            }
+            match self.shed_goodput_delta_min {
+                Some(d) => {
+                    let _ = writeln!(
+                        out,
+                        "\ntier-aware shedding: min tiered-fcfs goodput \
+                         delta {d:.4} => {}",
+                        if d > 0.0 {
+                            "TIERED WINS — tier engine pays for itself \
+                             under overload"
+                        } else {
+                            "NO WIN — keep the tier engine opt-in"
+                        }
+                    );
+                }
+                None => {
+                    let _ = writeln!(
+                        out,
+                        "\ntier-aware shedding: not measured (no \
+                         fcfs/tiered pair ran)"
+                    );
+                }
+            }
+        }
         out
     }
 
@@ -304,9 +423,13 @@ impl AbReport {
                     Json::Num(b.completed as f64),
                 );
                 m.insert("slo".to_string(), Json::Num(b.slo));
+                m.insert("goodput".to_string(), Json::Num(b.goodput));
                 m.insert(
                     "p99_latency_s".to_string(),
-                    Json::Num(b.p99_latency),
+                    match b.p99_latency {
+                        Some(p) => Json::Num(p),
+                        None => Json::Null,
+                    },
                 );
                 Json::Obj(m)
             })
@@ -343,9 +466,13 @@ impl AbReport {
                     Json::Num(c.dropped as f64),
                 );
                 m.insert("slo".to_string(), Json::Num(c.slo));
+                m.insert("goodput".to_string(), Json::Num(c.goodput));
                 m.insert(
                     "p99_latency_s".to_string(),
-                    Json::Num(c.p99_latency),
+                    match c.p99_latency {
+                        Some(p) => Json::Num(p),
+                        None => Json::Null,
+                    },
                 );
                 m.insert(
                     "replans".to_string(),
@@ -381,6 +508,51 @@ impl AbReport {
             })
             .collect();
 
+        let tier_cells: Vec<Json> = self
+            .tier_cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "shape".to_string(),
+                    Json::Str(c.shape.to_string()),
+                );
+                m.insert(
+                    "mode".to_string(),
+                    Json::Str(c.mode.to_string()),
+                );
+                m.insert(
+                    "arrived".to_string(),
+                    Json::Num(c.arrived as f64),
+                );
+                m.insert(
+                    "completed".to_string(),
+                    Json::Num(c.completed as f64),
+                );
+                m.insert("slo".to_string(), Json::Num(c.slo));
+                m.insert("goodput".to_string(), Json::Num(c.goodput));
+                for (i, tier) in SloClass::all().into_iter().enumerate()
+                {
+                    m.insert(
+                        format!("shed_{}", tier.name()),
+                        Json::Num(c.shed[i] as f64),
+                    );
+                    m.insert(
+                        format!("goodput_{}", tier.name()),
+                        Json::Num(c.tier_goodput[i]),
+                    );
+                    m.insert(
+                        format!("p99_{}_s", tier.name()),
+                        match c.tier_p99[i] {
+                            Some(p) => Json::Num(p),
+                            None => Json::Null,
+                        },
+                    );
+                }
+                Json::Obj(m)
+            })
+            .collect();
+
         let mut root = BTreeMap::new();
         root.insert("bench".to_string(), Json::Str("ab".to_string()));
         root.insert(
@@ -395,6 +567,7 @@ impl AbReport {
         root.insert("config".to_string(), Json::Obj(cfg));
         root.insert("baselines".to_string(), Json::Arr(baselines));
         root.insert("cells".to_string(), Json::Arr(cells));
+        root.insert("tier_cells".to_string(), Json::Arr(tier_cells));
         root.insert(
             "warm_delta_min".to_string(),
             match self.warm_delta_min {
@@ -427,17 +600,28 @@ impl AbReport {
                 None => Json::Null,
             },
         );
+        root.insert(
+            "shed_goodput_delta_min".to_string(),
+            match self.shed_goodput_delta_min {
+                Some(d) => Json::Num(d),
+                None => Json::Null,
+            },
+        );
         Json::Obj(root)
     }
 }
 
 /// Minimum warm−cold SLO delta over matched (shape, policy, migration)
-/// pairs.
+/// pairs. Pairs where either side completed nothing are skipped: an
+/// empty cell's attainment is vacuous (0 over 0 requests), and pairing
+/// it would manufacture a ±1.0 "delta" out of no evidence at all —
+/// enough to flip the parity verdict on its own.
 fn warm_delta_min(cells: &[AbCell]) -> Option<f64> {
     let mut min: Option<f64> = None;
-    for w in cells.iter().filter(|c| c.warm) {
+    for w in cells.iter().filter(|c| c.warm && c.completed > 0) {
         let cold = cells.iter().find(|c| {
             !c.warm
+                && c.completed > 0
                 && c.shape == w.shape
                 && c.policy == w.policy
                 && c.migration == w.migration
@@ -454,13 +638,18 @@ fn warm_delta_min(cells: &[AbCell]) -> Option<f64> {
 }
 
 /// Staged−blackout deltas over matched (shape, policy, warm) pairs:
-/// (max downtime delta, min SLO delta).
+/// (max downtime delta, min SLO delta). Empty cells are skipped for the
+/// same reason as in [`warm_delta_min`].
 fn staged_deltas(cells: &[AbCell]) -> (Option<f64>, Option<f64>) {
     let mut dt_max: Option<f64> = None;
     let mut slo_min: Option<f64> = None;
-    for s in cells.iter().filter(|c| c.migration == "staged") {
+    for s in cells
+        .iter()
+        .filter(|c| c.migration == "staged" && c.completed > 0)
+    {
         let b = cells.iter().find(|c| {
             c.migration == "blackout"
+                && c.completed > 0
                 && c.shape == s.shape
                 && c.policy == s.policy
                 && c.warm == s.warm
@@ -473,6 +662,24 @@ fn staged_deltas(cells: &[AbCell]) -> (Option<f64>, Option<f64>) {
         }
     }
     (dt_max, slo_min)
+}
+
+/// Minimum tiered−fcfs goodput delta over matched overload shapes.
+fn shed_goodput_delta_min(cells: &[AbTierCell]) -> Option<f64> {
+    let mut min: Option<f64> = None;
+    for t in cells.iter().filter(|c| c.mode == "tiered") {
+        let base = cells
+            .iter()
+            .find(|c| c.mode == "fcfs" && c.shape == t.shape);
+        if let Some(base) = base {
+            let d = t.goodput - base.goodput;
+            min = Some(match min {
+                Some(m) => m.min(d),
+                None => d,
+            });
+        }
+    }
+    min
 }
 
 /// Run the whole grid. Scenarios that admit no initial placement are
@@ -504,10 +711,12 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
                 arrived,
                 completed: report.eval.records.len(),
                 slo: round(report.eval.slo_attainment(cfg.slo_scale), 1e-4),
-                p99_latency: round(
-                    report.eval.latency_summary().p99(),
-                    1e-3,
-                ),
+                goodput: round(report.eval.goodput(cfg.slo_scale), 1e-4),
+                p99_latency: report
+                    .eval
+                    .latency_summary()
+                    .try_p99()
+                    .map(|p| round(p, 1e-3)),
             });
         }
         for &policy in &cfg.policies {
@@ -556,10 +765,15 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
                             report.eval.slo_attainment(cfg.slo_scale),
                             1e-4,
                         ),
-                        p99_latency: round(
-                            report.eval.latency_summary().p99(),
-                            1e-3,
+                        goodput: round(
+                            report.eval.goodput(cfg.slo_scale),
+                            1e-4,
                         ),
+                        p99_latency: report
+                            .eval
+                            .latency_summary()
+                            .try_p99()
+                            .map(|p| round(p, 1e-3)),
                         replans: fired,
                         migrations: report.migrations,
                         downtime_s: round(report.downtime_s, 1e-4),
@@ -575,17 +789,63 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
             }
         }
     }
+    // The tiered-overload section: static runs (no replanning) so the
+    // delta is attributable to the tier engine alone, tier-blind FCFS
+    // admission vs slack-ordered scheduling + load shedding.
+    let mut tier_cells = Vec::new();
+    for &shape in &cfg.overload_shapes {
+        let scenario = Scenario {
+            duration: cfg.duration,
+            seed: cfg.seed,
+            ..Scenario::new(shape)
+        };
+        let data = scenario.build();
+        let arrived = data.requests.len();
+        for (mode, tier_aware, shed) in
+            [("fcfs", false, false), ("tiered", true, true)]
+        {
+            let eng = EngineConfig { tier_aware, shed, ..engine };
+            let Some(report) =
+                run_scenario_cfg(&scenario, &data, &cluster, eng, None)
+            else {
+                continue;
+            };
+            let eval = &report.eval;
+            let mut tier_goodput = [0.0; 3];
+            let mut tier_p99 = [None; 3];
+            for (i, tier) in SloClass::all().into_iter().enumerate() {
+                tier_goodput[i] =
+                    round(eval.tier_goodput(cfg.slo_scale, tier), 1e-4);
+                tier_p99[i] =
+                    eval.tier_p99_latency(tier).map(|p| round(p, 1e-3));
+            }
+            tier_cells.push(AbTierCell {
+                shape: shape.name(),
+                mode,
+                arrived,
+                completed: eval.records.len(),
+                shed: report.shed,
+                goodput: round(eval.goodput(cfg.slo_scale), 1e-4),
+                slo: round(eval.slo_attainment(cfg.slo_scale), 1e-4),
+                tier_goodput,
+                tier_p99,
+            });
+        }
+    }
     let warm_delta = warm_delta_min(&cells);
     let (staged_dt, staged_slo) = staged_deltas(&cells);
+    let shed_delta = shed_goodput_delta_min(&tier_cells);
     AbReport {
         duration: cfg.duration,
         seed: cfg.seed,
         slo_scale: cfg.slo_scale,
         baselines,
         cells,
+        tier_cells,
         warm_delta_min: warm_delta,
         staged_downtime_delta_max: staged_dt,
         staged_slo_delta_min: staged_slo,
+        shed_goodput_delta_min: shed_delta,
     }
 }
 
@@ -601,6 +861,7 @@ mod tests {
         let cfg = AbConfig {
             duration: 40.0,
             shapes: vec![ScenarioShape::FlashCrowd, ScenarioShape::Drift],
+            overload_shapes: vec![ScenarioShape::Overcommit],
             policies: vec![PolicyKind::Threshold, PolicyKind::Forecast],
             warm_modes: vec![false, true],
             migration_modes: MigrationMode::all().to_vec(),
@@ -618,11 +879,14 @@ mod tests {
         // a baseline row per shape.
         assert_eq!(a.cells.len(), 2 * 2 * 2 * 2, "cells: {:?}", a.cells);
         assert_eq!(a.baselines.len(), 2);
+        // The tier section ran its overload shape in both modes.
+        assert_eq!(a.tier_cells.len(), 2, "tier: {:?}", a.tier_cells);
         // The verdicts are measured, whichever way they land.
         assert!(a.warm_delta_min.is_some());
         assert!(a.warm_parity().is_some());
         assert!(a.staged_downtime_delta_max.is_some());
         assert!(a.staged_slo_delta_min.is_some());
+        assert!(a.shed_goodput_delta_min.is_some());
     }
 
     fn mk_cell(
@@ -642,7 +906,8 @@ mod tests {
             completed: 90,
             dropped: 0,
             slo,
-            p99_latency: 1.0,
+            goodput: 1.0,
+            p99_latency: Some(1.0),
             replans: 1,
             migrations: 1,
             downtime_s,
@@ -692,5 +957,82 @@ mod tests {
         // Unpaired staged cells contribute nothing.
         let (dt2, slo2) = staged_deltas(&cells[1..2]);
         assert!(dt2.is_none() && slo2.is_none());
+    }
+
+    #[test]
+    fn empty_cells_never_poison_the_verdicts() {
+        // A run that completes nothing has no attainment to speak of:
+        // its slo reads 0.0 and its p99 is None. Before these cells
+        // were skipped, pairing one manufactured a -0.90 "delta" out
+        // of zero evidence and flipped the parity verdict.
+        let mut empty_warm =
+            mk_cell("drift", "threshold", true, "blackout", 0.0, 6.0);
+        empty_warm.completed = 0;
+        empty_warm.p99_latency = None;
+        let cells = vec![
+            mk_cell("drift", "threshold", false, "blackout", 0.90, 6.0),
+            empty_warm.clone(),
+            mk_cell("flash-crowd", "forecast", false, "blackout", 0.80, 6.0),
+            mk_cell("flash-crowd", "forecast", true, "blackout", 0.79, 6.0),
+        ];
+        // Only the flash-crowd pair counts: delta -0.01, not -0.90.
+        let d = warm_delta_min(&cells).expect("one live pair");
+        assert!((d - (-0.01)).abs() < 1e-12, "d={d}");
+
+        // Same guard on the staged/blackout pairing.
+        let mut empty_staged =
+            mk_cell("drift", "threshold", false, "staged", 0.0, 0.5);
+        empty_staged.completed = 0;
+        let cells = vec![
+            mk_cell("drift", "threshold", false, "blackout", 0.90, 6.0),
+            empty_staged,
+        ];
+        let (dt, slo) = staged_deltas(&cells);
+        assert!(dt.is_none() && slo.is_none());
+
+        // And empty cells render as "-", not "NaN", in markdown.
+        let report = AbReport {
+            duration: 1.0,
+            seed: 1,
+            slo_scale: 8.0,
+            baselines: vec![],
+            cells: vec![empty_warm],
+            tier_cells: vec![],
+            warm_delta_min: None,
+            staged_downtime_delta_max: None,
+            staged_slo_delta_min: None,
+            shed_goodput_delta_min: None,
+        };
+        let md = report.to_markdown(false);
+        assert!(!md.contains("NaN"), "markdown leaked a NaN:\n{md}");
+        let js = report.to_json(false).to_string();
+        assert!(!js.contains("NaN"), "json leaked a NaN:\n{js}");
+        assert!(js.contains("\"p99_latency_s\":null"), "{js}");
+    }
+
+    #[test]
+    fn shed_goodput_delta_matches_hand_computation() {
+        let mk = |shape, mode, goodput| AbTierCell {
+            shape,
+            mode,
+            arrived: 100,
+            completed: 80,
+            shed: [0, 0, 20],
+            goodput,
+            slo: 0.9,
+            tier_goodput: [goodput / 2.0, goodput / 4.0, goodput / 4.0],
+            tier_p99: [Some(1.0), Some(2.0), None],
+        };
+        let cells = vec![
+            mk("overcommit", "fcfs", 2.0),
+            mk("overcommit", "tiered", 3.0),
+            mk("flash-overload", "fcfs", 1.0),
+            mk("flash-overload", "tiered", 1.2),
+        ];
+        let d = shed_goodput_delta_min(&cells).expect("two pairs");
+        // min(3.0-2.0, 1.2-1.0) = 0.2.
+        assert!((d - 0.2).abs() < 1e-12, "d={d}");
+        // An unpaired tiered cell contributes nothing.
+        assert!(shed_goodput_delta_min(&cells[1..2]).is_none());
     }
 }

@@ -412,6 +412,7 @@ pub fn fig9_scenario(
             mean_prompt_len: o / 2.0,
             mean_output_len: *o,
             len_sigma: 0.6,
+            tier_weight: 1.0,
         })
         .collect();
     let requests = {

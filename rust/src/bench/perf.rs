@@ -299,12 +299,12 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
     // supplies the BENCH migration-cost summary.
     let migration = {
         let scenario = Scenario {
-            shape: ScenarioShape::FlashCrowd,
             n_llms: n,
             duration: cfg.duration,
             alpha,
             max_rate,
             seed: 2024,
+            ..Scenario::new(ScenarioShape::FlashCrowd)
         };
         let data = scenario.build();
         // Same analytic zoo as the stationary section (NOT the scenario's

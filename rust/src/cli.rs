@@ -7,9 +7,11 @@
 use anyhow::Result;
 
 use crate::bench::figures;
+use crate::coordinator::estimator::Objective;
 use crate::coordinator::migration::MigrationMode;
 use crate::coordinator::replan::PolicyKind;
 use crate::memory::EvictionKind;
+use crate::workload::TierMix;
 
 fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
     args.iter()
@@ -57,6 +59,19 @@ fn flag_path<'a>(args: &'a [String], name: &str) -> Result<Option<&'a str>> {
     }
 }
 
+/// On/off switch that distinguishes "flag absent" (`None`) from an
+/// explicit setting; anything else is an error.
+fn flag_switch(args: &[String], name: &str) -> Result<Option<bool>> {
+    match flag_path(args, name)? {
+        Some("on" | "true" | "1") => Ok(Some(true)),
+        Some("off" | "false" | "0") => Ok(Some(false)),
+        Some(other) => {
+            Err(anyhow::anyhow!("{name} takes on|off, got `{other}`"))
+        }
+        None => Ok(None),
+    }
+}
+
 /// Like [`flag_val`], but distinguishes "flag absent" (`None`) from "flag
 /// present" — so each subcommand can apply its own default. Malformed or
 /// bare flags are errors.
@@ -91,6 +106,14 @@ struct SimArgs {
     eviction: Option<EvictionKind>,
     host_tier_blocks: Option<usize>,
     shared_prefix: Option<f64>,
+    /// SLO tier blend of the generated stream (`--tier-mix`).
+    tier_mix: Option<TierMix>,
+    /// What placement maximizes when a replan fires (`--objective`).
+    objective: Option<Objective>,
+    /// Slack-per-cost tier scheduling inside each unit (`--tier-aware`).
+    tier_aware: Option<bool>,
+    /// Admission control / load shedding under overload (`--shed`).
+    shed: Option<bool>,
 }
 
 impl SimArgs {
@@ -127,6 +150,24 @@ impl SimArgs {
             })?),
             None => None,
         };
+        let tier_mix = match flag_path(args, "--tier-mix")? {
+            Some(m) => Some(TierMix::parse(m).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown tier mix `{m}` (expected all-standard | \
+                     mixed | batch-heavy)"
+                )
+            })?),
+            None => None,
+        };
+        let objective = match flag_path(args, "--objective")? {
+            Some(o) => Some(Objective::parse(o).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown objective `{o}` (expected throughput | \
+                     goodput)"
+                )
+            })?),
+            None => None,
+        };
         Ok(SimArgs {
             smoke: args.iter().any(|a| a == "--smoke"),
             duration: flag_opt(args, "--duration")?,
@@ -137,6 +178,10 @@ impl SimArgs {
             eviction,
             host_tier_blocks: flag_opt(args, "--host-tier-blocks")?,
             shared_prefix: flag_opt(args, "--shared-prefix")?,
+            tier_mix,
+            objective,
+            tier_aware: flag_switch(args, "--tier-aware")?,
+            shed: flag_switch(args, "--shed")?,
         })
     }
 }
@@ -337,17 +382,21 @@ fn ab_cmd(args: &[String]) -> Result<()> {
         cfg.policies.iter().map(|p| p.name()).collect();
     let migrations: Vec<&str> =
         cfg.migration_modes.iter().map(|m| m.name()).collect();
+    let overloads: Vec<&str> =
+        cfg.overload_shapes.iter().map(|s| s.name()).collect();
     println!(
         "ab: policies [{}] x scenarios [{}] x warm {{off,on}} x \
          migration [{}], {:.0}s each, seed {}, eviction {} (host tier \
-         {} blocks; identical streams per scenario; running...)",
+         {} blocks; identical streams per scenario; running...)\n\
+         ab: tier section — fcfs vs tiered shedding on [{}]",
         policies.join(", "),
         shapes.join(", "),
         migrations.join(", "),
         cfg.duration,
         cfg.seed,
         cfg.eviction.name(),
-        cfg.host_tier_blocks
+        cfg.host_tier_blocks,
+        overloads.join(", ")
     );
     let report = run_ab(&cfg);
     print!("{}", report.to_markdown(true));
@@ -420,14 +469,15 @@ fn bench_cache_cmd(args: &[String]) -> Result<()> {
 fn scenario_cmd(args: &[String]) -> Result<()> {
     use crate::bench::drift::{run_scenario_cfg, scenario_cluster};
     use crate::coordinator::{EngineConfig, ReplanConfig};
-    use crate::workload::{Scenario, ScenarioShape};
+    use crate::workload::{Scenario, ScenarioShape, SloClass};
 
     let sim = SimArgs::parse(args)?;
     let shape_name = flag_str(args, "--shape", "flash-crowd");
     let shape = ScenarioShape::parse(shape_name).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown shape `{shape_name}` (expected stationary | diurnal \
-             | bursty | flash-crowd | drift)"
+             | bursty | flash-crowd | drift | overcommit | \
+             flash-overload | tiered-diurnal)"
         )
     })?;
     let replan_arg = flag_str(args, "--replan", "on");
@@ -443,7 +493,7 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
     // staged, cost-aware MigrationPlan.
     let policy = sim.policy.unwrap_or(PolicyKind::Threshold);
     let migration_mode = sim.migration.unwrap_or(MigrationMode::Blackout);
-    let scenario = Scenario {
+    let mut scenario = Scenario {
         duration: sim.duration.unwrap_or(120.0),
         seed: sim.seed.unwrap_or(2024),
         shared_prefix: sim.shared_prefix.unwrap_or(0.0),
@@ -452,11 +502,20 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         n_llms: flag_val(args, "--n-llms", 6usize)?,
         ..Scenario::new(shape)
     };
+    // The shape picks its natural tier blend (overload shapes default
+    // to the mixed blend); --tier-mix overrides it.
+    if let Some(m) = sim.tier_mix {
+        scenario.tier_mix = m;
+    }
     // KV cache-layer switches (prefix sharing + eviction + host tier);
-    // `none` / 0 reproduces the pre-cache engine.
+    // `none` / 0 reproduces the pre-cache engine. Tier switches default
+    // off: the tier-blind FCFS engine stays the baseline until the `ab`
+    // goodput verdict gates the flip (see ROADMAP).
     let engine = EngineConfig {
         eviction: sim.eviction.unwrap_or(EvictionKind::None),
         host_tier_blocks: sim.host_tier_blocks.unwrap_or(0),
+        tier_aware: sim.tier_aware.unwrap_or(false),
+        shed: sim.shed.unwrap_or(false),
         ..EngineConfig::muxserve()
     };
     let cluster = scenario_cluster();
@@ -464,6 +523,7 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         warm_start: sim.warm,
         policy,
         migration_mode,
+        objective: sim.objective.unwrap_or(Objective::Throughput),
         ..Default::default()
     });
 
@@ -538,16 +598,40 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
 
     let eval = &report.eval;
     println!(
-        "\ncompleted {}/{} requests  tpt={:.2} req/s  slo@8={:.3}  \
-         p50={:.2}s p99={:.2}s  dropped={}",
+        "\ncompleted {}/{} requests  tpt={:.2} req/s  goodput@8={:.2}  \
+         slo@8={:.3}  p50={:.2}s p99={:.2}s  dropped={}",
         eval.records.len(),
         arrived,
         eval.total_throughput(),
+        eval.goodput(8.0),
         eval.slo_attainment(8.0),
         eval.latency_summary().p50(),
         eval.latency_summary().p99(),
         report.dropped
     );
+    if engine.shed || engine.tier_aware {
+        let shed: Vec<String> = SloClass::all()
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| format!("{} {}", t.name(), report.shed[i]))
+            .collect();
+        let tiers: Vec<String> = SloClass::all()
+            .into_iter()
+            .map(|t| {
+                format!(
+                    "{} done {} goodput {:.2}",
+                    t.name(),
+                    eval.tier_completed(t),
+                    eval.tier_goodput(8.0, t)
+                )
+            })
+            .collect();
+        println!(
+            "tiers: {}  shed: {}",
+            tiers.join(", "),
+            shed.join(" / ")
+        );
+    }
     if !matches!(engine.eviction, EvictionKind::None) {
         let c = &report.cache;
         println!(
@@ -703,11 +787,17 @@ fn print_help() {
          [--seed N]\n  \
          \x20        [--eviction none|lru|slru|gdsf] [--host-tier-blocks \
          N]\n  \
-         \x20        [--shared-prefix F]\n  \
+         \x20        [--shared-prefix F] [--tier-mix all-standard|mixed|\
+         batch-heavy]\n  \
+         \x20        [--objective throughput|goodput] [--tier-aware \
+         on|off] [--shed on|off]\n  \
          \x20                            dynamic workload (stationary | \
          diurnal | bursty |\n  \
-         \x20                            flash-crowd | drift) with online \
-         re-placement;\n  \
+         \x20                            flash-crowd | drift | overcommit \
+         |\n  \
+         \x20                            flash-overload | tiered-diurnal) \
+         with online\n  \
+         \x20                            re-placement;\n  \
          \x20                            --policy picks the replan \
          trigger (threshold |\n  \
          \x20                            forecast | hysteresis),\n  \
@@ -727,6 +817,24 @@ fn print_help() {
          \x20                            --shared-prefix F tags fraction \
          F of requests\n  \
          \x20                            with shared prompt prefixes,\n  \
+         \x20                            --tier-mix sets the SLO tier \
+         blend of the\n  \
+         \x20                            stream (interactive / standard \
+         / batch),\n  \
+         \x20                            --objective goodput makes \
+         replans maximize\n  \
+         \x20                            tier-weighted SLO-met goodput \
+         instead of raw\n  \
+         \x20                            throughput,\n  \
+         \x20                            --tier-aware on schedules by \
+         slack-per-cost\n  \
+         \x20                            within each unit,\n  \
+         \x20                            --shed on drops the least \
+         important backlog\n  \
+         \x20                            under overload (batch first, \
+         never a higher\n  \
+         \x20                            tier while a lower one holds \
+         capacity),\n  \
          \x20                            --export-trace FILE freezes the \
          stream,\n  \
          \x20                            --replay-trace FILE re-runs a \
@@ -739,9 +847,11 @@ fn print_help() {
          \x20                            policy x scenario x warm x \
          migration mode on\n  \
          \x20                            identical streams, with the \
-         warm-start parity\n  \
-         \x20                            and staged-vs-blackout \
-         verdicts\n  \
+         warm-start parity,\n  \
+         \x20                            staged-vs-blackout, and \
+         tiered-overload goodput\n  \
+         \x20                            verdicts (per-tier goodput / \
+         shed / p99 columns)\n  \
          bench-cache [--smoke] [--eviction E] [--host-tier-blocks N] \
          [--out FILE]\n  \
          \x20           [--shared-prefix F] [--duration S] [--seed N]\n  \

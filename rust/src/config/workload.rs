@@ -10,6 +10,10 @@ pub struct WorkloadSpec {
     pub mean_output_len: f64,
     /// Log-normal shape parameter for both length marginals.
     pub len_sigma: f64,
+    /// Mean goodput weight of this LLM's requests (the tier blend's
+    /// expected [`SloClass::weight`](crate::workload::SloClass::weight)).
+    /// 1.0 = untiered. Only the goodput objective reads it.
+    pub tier_weight: f64,
 }
 
 impl WorkloadSpec {
@@ -19,6 +23,7 @@ impl WorkloadSpec {
             mean_prompt_len: 161.0,
             mean_output_len: 338.0,
             len_sigma: 0.8,
+            tier_weight: 1.0,
         }
     }
 

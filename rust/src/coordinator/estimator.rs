@@ -16,6 +16,39 @@
 use crate::config::{ModelSpec, WorkloadSpec};
 use crate::costmodel::CostModel;
 
+/// What the placement/replan optimizer maximizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Raw aggregate request throughput (Eq. 1, the paper's objective).
+    Throughput,
+    /// Tier-weighted SLO-attained throughput: each member's throughput is
+    /// scaled by its workload's mean tier weight and discounted by how
+    /// saturated the member is (a member serving only half its offered
+    /// rate is missing deadlines, so its weighted contribution halves).
+    Goodput,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "throughput" => Some(Objective::Throughput),
+            "goodput" => Some(Objective::Goodput),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Throughput => "throughput",
+            Objective::Goodput => "goodput",
+        }
+    }
+
+    pub fn all() -> [Objective; 2] {
+        [Objective::Throughput, Objective::Goodput]
+    }
+}
+
 /// One LLM colocated in a unit, with its resource configuration.
 #[derive(Clone, Debug)]
 pub struct UnitMember {
@@ -36,7 +69,10 @@ pub struct UnitEstimate {
     pub tpt: Vec<f64>,
     /// Per-member stable batch size.
     pub batch: Vec<f64>,
-    /// Sum of member throughputs — F(b, W_b) of Eq. 1.
+    /// Objective value of the unit. Under [`Objective::Throughput`] this
+    /// is the sum of member throughputs — F(b, W_b) of Eq. 1. Under
+    /// [`Objective::Goodput`] each member contributes its throughput ×
+    /// tier weight × saturation discount instead.
     pub total: f64,
 }
 
@@ -49,15 +85,41 @@ pub struct Estimator {
     /// serving engine's `EngineConfig::kv_capacity_frac` so the optimizer
     /// plans for the memory it will actually have).
     pub kv_frac: f64,
+    /// What a unit's `total` scores (and hence what placement/replan
+    /// maximize). Defaults to raw throughput, the paper's objective.
+    pub objective: Objective,
 }
 
 impl Estimator {
     pub fn new(cost: CostModel) -> Self {
-        Estimator { cost, max_batch: 256.0, kv_frac: 1.0 }
+        Self::with_kv_frac(cost, 1.0)
     }
 
     pub fn with_kv_frac(cost: CostModel, kv_frac: f64) -> Self {
-        Estimator { cost, max_batch: 256.0, kv_frac }
+        Estimator {
+            cost,
+            max_batch: 256.0,
+            kv_frac,
+            objective: Objective::Throughput,
+        }
+    }
+
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// A member's contribution to the unit objective: raw throughput, or
+    /// (goodput) throughput weighted by the workload's mean tier weight
+    /// and discounted by the served fraction of the offered rate.
+    fn member_score(&self, mem: &UnitMember, tpt: f64) -> f64 {
+        match self.objective {
+            Objective::Throughput => tpt,
+            Objective::Goodput => {
+                let served = (tpt / mem.workload.rate.max(1e-12)).min(1.0);
+                tpt * mem.workload.tier_weight * served
+            }
+        }
     }
 
     /// Cycle time for member `m` given everyone's batch sizes (Eq. 3
@@ -215,7 +277,11 @@ impl Estimator {
         }
         let tpt: Vec<f64> =
             (0..n).map(|m| self.member_tpt(members, &batches, m)).collect();
-        let total = tpt.iter().sum();
+        let total = members
+            .iter()
+            .zip(&tpt)
+            .map(|(mem, t)| self.member_score(mem, *t))
+            .sum();
         UnitEstimate { tpt, batch: batches, total }
     }
 
@@ -346,5 +412,46 @@ mod tests {
     fn empty_unit_is_zero() {
         let est = Estimator::new(CostModel::a100());
         assert_eq!(est.unit_estimate(&[], 1).total, 0.0);
+    }
+
+    #[test]
+    fn goodput_objective_discounts_saturation_and_scales_with_weight() {
+        let tput = Estimator::new(CostModel::a100());
+        let good = Estimator::new(CostModel::a100())
+            .with_objective(Objective::Goodput);
+        assert_eq!(tput.objective, Objective::Throughput);
+
+        // Unsaturated member with tier_weight 1.0: both objectives agree.
+        let light = member(6.7, 0.5, 1.0, 1);
+        let t = tput.unit_estimate(std::slice::from_ref(&light), 1).total;
+        let g = good.unit_estimate(std::slice::from_ref(&light), 1).total;
+        assert!((t - g).abs() < 1e-9, "t={t} g={g}");
+
+        // Saturated member: goodput discounts by the served fraction.
+        let heavy = member(6.7, 1000.0, 1.0, 1);
+        let t = tput.unit_estimate(std::slice::from_ref(&heavy), 1).total;
+        let g = good.unit_estimate(std::slice::from_ref(&heavy), 1).total;
+        assert!(g < t * 0.5, "saturated goodput {g} not < half of {t}");
+
+        // Tier weight scales the goodput score linearly.
+        let mut weighted = light.clone();
+        weighted.workload.tier_weight = 2.5;
+        let gw =
+            good.unit_estimate(std::slice::from_ref(&weighted), 1).total;
+        let g = good.unit_estimate(std::slice::from_ref(&light), 1).total;
+        assert!((gw - 2.5 * g).abs() < 1e-9, "gw={gw} g={g}");
+        // ...but throughput ignores it.
+        let tw =
+            tput.unit_estimate(std::slice::from_ref(&weighted), 1).total;
+        let t = tput.unit_estimate(std::slice::from_ref(&light), 1).total;
+        assert!((tw - t).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_parse_round_trips() {
+        for o in Objective::all() {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert_eq!(Objective::parse("latency"), None);
     }
 }

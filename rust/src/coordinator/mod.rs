@@ -11,7 +11,7 @@ pub mod placement;
 pub mod replan;
 pub mod scheduler;
 
-pub use estimator::{Estimator, UnitMember};
+pub use estimator::{Estimator, Objective, UnitMember};
 pub use migration::{
     plan_migration, LiveLlm, MigrationMode, MigrationPlan, MoveMethod,
     MoveOp,

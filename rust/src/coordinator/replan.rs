@@ -39,6 +39,7 @@
 
 use std::collections::VecDeque;
 
+use super::estimator::Objective;
 use super::migration::MigrationMode;
 
 /// Which built-in [`ReplanPolicy`] a controller runs. Selecting the
@@ -151,6 +152,10 @@ pub struct ReplanConfig {
     /// whole-cluster `migration_downtime`, which models tearing down
     /// everything at once).
     pub op_overhead: f64,
+    /// What the placement optimizer maximizes when a replan fires: raw
+    /// throughput (the paper's Eq. 1, default) or tier-weighted goodput
+    /// (see [`Objective::Goodput`]).
+    pub objective: Objective,
 }
 
 impl Default for ReplanConfig {
@@ -174,6 +179,7 @@ impl Default for ReplanConfig {
             migration_mode: MigrationMode::Blackout,
             link_bandwidth: 64e9,
             op_overhead: 0.25,
+            objective: Objective::Throughput,
         }
     }
 }

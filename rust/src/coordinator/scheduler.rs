@@ -48,6 +48,16 @@ pub struct EngineConfig {
     /// Host-DRAM tier capacity in blocks per unit (0 = no host tier;
     /// evictions then requeue the context for recompute).
     pub host_tier_blocks: usize,
+    /// Tier-aware scheduling: order admission and batching candidates
+    /// by deadline slack per shed cost (urgent, valuable work first)
+    /// instead of pure arrival order. Off reproduces the pre-tier
+    /// scheduler exactly.
+    pub tier_aware: bool,
+    /// Admission control / load shedding: an overloaded unit drops the
+    /// least-important tier present (batch first, interactive last)
+    /// instead of queueing everything into a deadline massacre. Off =
+    /// never shed on arrival (the pre-tier behavior).
+    pub shed: bool,
 }
 
 impl EngineConfig {
@@ -63,6 +73,8 @@ impl EngineConfig {
             kv_capacity_frac: 1.0,
             eviction: EvictionKind::None,
             host_tier_blocks: 0,
+            tier_aware: false,
+            shed: false,
         }
     }
 

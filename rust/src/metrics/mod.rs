@@ -1,7 +1,10 @@
 //! Serving metrics (§4.1): rate-weighted aggregate throughput, SLO
-//! attainment, and P99 latency / TTFT / TPOT (Appendix A.1).
+//! attainment, P99 latency / TTFT / TPOT (Appendix A.1), and — beyond
+//! the paper — per-tier goodput (tier-weighted SLO-attained throughput)
+//! for multi-SLO workloads.
 
 use crate::util::Summary;
+use crate::workload::SloClass;
 
 /// Completion record for one request, emitted by every serving system
 /// (simulated or real) in identical form so comparisons are apples-to-apples.
@@ -19,6 +22,9 @@ pub struct RequestRecord {
     pub output_len: usize,
     /// Contention-free reference latency used for the SLO definition.
     pub ideal_latency: f64,
+    /// SLO tier the request was submitted under; scales its latency
+    /// target ([`SloClass::latency_mult`]) and its goodput weight.
+    pub tier: SloClass,
 }
 
 impl RequestRecord {
@@ -39,8 +45,15 @@ impl RequestRecord {
         (self.finish - self.first_token) / (self.output_len - 1) as f64
     }
 
+    /// The request's latency target at harness scale `scale`: the tier
+    /// multiplier rides on top, so `Standard` keeps the exact pre-tier
+    /// definition while interactive tightens it and batch loosens it.
+    pub fn slo_target(&self, scale: f64) -> f64 {
+        scale * self.ideal_latency * self.tier.latency_mult()
+    }
+
     pub fn meets_slo(&self, scale: f64) -> bool {
-        self.latency() <= scale * self.ideal_latency
+        self.latency() <= self.slo_target(scale)
     }
 }
 
@@ -90,6 +103,65 @@ impl Evaluation {
             / self.records.len() as f64
     }
 
+    /// Tier-weighted goodput: Σ weight over SLO-met completions, per
+    /// second. An untiered (all-standard) run is `2.0 ×` its SLO-met
+    /// throughput; under overload this is the objective load shedding
+    /// maximizes (finish the valuable work, drop the cheap work).
+    pub fn goodput(&self, scale: f64) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.meets_slo(scale))
+            .map(|r| r.tier.weight())
+            .sum::<f64>()
+            / self.duration
+    }
+
+    /// Completions belonging to one tier.
+    pub fn tier_completed(&self, tier: SloClass) -> usize {
+        self.records.iter().filter(|r| r.tier == tier).count()
+    }
+
+    /// Tier-weighted goodput restricted to one tier.
+    pub fn tier_goodput(&self, scale: f64, tier: SloClass) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.tier == tier && r.meets_slo(scale))
+            .map(|r| r.tier.weight())
+            .sum::<f64>()
+            / self.duration
+    }
+
+    /// SLO attainment within one tier; `None` when the tier finished
+    /// nothing (explicitly empty, never NaN).
+    pub fn tier_slo_attainment(
+        &self,
+        scale: f64,
+        tier: SloClass,
+    ) -> Option<f64> {
+        let n = self.tier_completed(tier);
+        if n == 0 {
+            return None;
+        }
+        let met = self
+            .records
+            .iter()
+            .filter(|r| r.tier == tier && r.meets_slo(scale))
+            .count();
+        Some(met as f64 / n as f64)
+    }
+
+    /// P99 latency within one tier; `None` when the tier is empty.
+    pub fn tier_p99_latency(&self, tier: SloClass) -> Option<f64> {
+        let mut s = Summary::new();
+        s.extend(
+            self.records
+                .iter()
+                .filter(|r| r.tier == tier)
+                .map(|r| r.latency()),
+        );
+        s.try_p99()
+    }
+
     pub fn latency_summary(&self) -> Summary {
         let mut s = Summary::new();
         s.extend(self.records.iter().map(|r| r.latency()));
@@ -129,6 +201,7 @@ mod tests {
             prompt_len: 10,
             output_len: out,
             ideal_latency: ideal,
+            tier: SloClass::Standard,
         }
     }
 
@@ -173,6 +246,55 @@ mod tests {
         // Weighted: (1.0*0.9 + 0.2*0.1) * 2 = 1.84 with rates 9:1.
         let agg = ev.aggregate_throughput(&[9.0, 1.0]);
         assert!((agg - 1.84).abs() < 1e-12, "agg={agg}");
+    }
+
+    #[test]
+    fn tier_scales_the_slo_target() {
+        // Latency 2.5 vs ideal 1.0: meets 3x as standard, misses as
+        // interactive (target halves), meets easily as batch.
+        let mut r = rec(0, 1.0, 1.5, 3.5, 5, 1.0);
+        assert!(r.meets_slo(3.0));
+        r.tier = SloClass::Interactive;
+        assert!(!r.meets_slo(3.0));
+        assert!((r.slo_target(3.0) - 1.5).abs() < 1e-12);
+        r.tier = SloClass::Batch;
+        assert!(r.meets_slo(3.0));
+    }
+
+    #[test]
+    fn goodput_weighs_met_requests_by_tier() {
+        let mut fast_int = rec(0, 0.0, 0.5, 1.0, 2, 1.0); // latency 1.0
+        fast_int.tier = SloClass::Interactive; // meets 4x (target 2.0)
+        let mut slow_batch = rec(0, 0.0, 4.0, 30.0, 2, 1.0); // latency 30
+        slow_batch.tier = SloClass::Batch; // misses 4x (target 16.0)
+        let mut met_batch = rec(0, 0.0, 1.0, 10.0, 2, 1.0); // latency 10
+        met_batch.tier = SloClass::Batch; // meets 4x
+        let std_met = rec(0, 0.0, 0.5, 1.0, 2, 1.0);
+        let ev = Evaluation::new(
+            1,
+            10.0,
+            vec![fast_int, slow_batch, met_batch, std_met],
+        );
+        // Met: interactive (4.0) + batch (1.0) + standard (2.0) = 7.0
+        // weight over 10 s.
+        assert!((ev.goodput(4.0) - 0.7).abs() < 1e-12);
+        assert!(
+            (ev.tier_goodput(4.0, SloClass::Interactive) - 0.4).abs()
+                < 1e-12
+        );
+        assert!((ev.tier_goodput(4.0, SloClass::Batch) - 0.1).abs() < 1e-12);
+        assert_eq!(ev.tier_completed(SloClass::Batch), 2);
+        assert_eq!(
+            ev.tier_slo_attainment(4.0, SloClass::Batch),
+            Some(0.5)
+        );
+        assert_eq!(ev.tier_slo_attainment(4.0, SloClass::Interactive), Some(1.0));
+        assert!(ev.tier_p99_latency(SloClass::Batch).unwrap() >= 10.0);
+        // Empty tier: explicitly None, never NaN.
+        let none = Evaluation::new(1, 10.0, vec![]);
+        assert_eq!(none.tier_slo_attainment(4.0, SloClass::Standard), None);
+        assert_eq!(none.tier_p99_latency(SloClass::Standard), None);
+        assert_eq!(none.goodput(4.0), 0.0);
     }
 
     #[test]

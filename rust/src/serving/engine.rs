@@ -21,7 +21,7 @@ use crate::metrics::{Evaluation, RequestRecord};
 use crate::runtime::executor::{argmax_rows, HostTensor, PjrtRuntime};
 use crate::runtime::manifest::ModelEntry;
 use crate::util::Rng;
-use crate::workload::Request;
+use crate::workload::{Request, SloClass};
 
 /// Serving-run configuration.
 #[derive(Clone, Debug)]
@@ -185,6 +185,7 @@ impl ServingEngine {
                     output_len,
                     prefix_group: 0,
                     prefix_len: 0,
+                    tier: SloClass::Standard,
                 });
                 id += 1;
             }
@@ -206,6 +207,7 @@ impl ServingEngine {
                 output_len: 2,
                 prefix_group: 0,
                 prefix_len: 0,
+                tier: SloClass::Standard,
             };
             let t0 = std::time::Instant::now();
             self.run_prefill_job(m, vec![req])?;
@@ -648,6 +650,7 @@ impl ServingEngine {
             prompt_len: a.req.prompt_len,
             output_len: a.req.output_len,
             ideal_latency: ideal,
+            tier: a.req.tier,
         });
     }
 
@@ -667,6 +670,7 @@ impl ServingEngine {
             output_len: n_tokens,
             prefix_group: 0,
             prefix_len: 0,
+            tier: SloClass::Standard,
         };
         // Run via the normal job path, then recover the sequence.
         let entry = self.models[m].clone();

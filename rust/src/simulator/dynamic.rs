@@ -124,6 +124,9 @@ pub struct DynamicReport {
     /// merged across every unit that ever served — torn-down units bank
     /// their counters at migration time.
     pub cache: CacheStats,
+    /// Requests shed by admission control, by `SloClass::code()`, merged
+    /// across every unit that ever served (banked like `cache`).
+    pub shed: [u64; 3],
 }
 
 /// Placement shape up to member order and fine sm jitter: mesh size plus
@@ -198,6 +201,8 @@ pub struct DynamicSimulation {
     /// Cache-layer counters banked from torn-down units (the live sim's
     /// are merged in at report time).
     cache_banked: CacheStats,
+    /// Shed counters banked from torn-down units, like `cache_banked`.
+    shed_banked: [u64; 3],
 }
 
 impl DynamicSimulation {
@@ -213,7 +218,8 @@ impl DynamicSimulation {
     ) -> Option<DynamicSimulation> {
         let cost = CostModel::new(cluster.gpu.clone());
         let est =
-            Estimator::with_kv_frac(cost.clone(), cfg.kv_capacity_frac);
+            Estimator::with_kv_frac(cost.clone(), cfg.kv_capacity_frac)
+                .with_objective(rcfg.objective);
         let placement =
             muxserve_placement(specs, planning_workloads, cluster, &est)?;
         let sim = Simulation::from_placement(
@@ -259,6 +265,7 @@ impl DynamicSimulation {
             migration_cost: 0.0,
             kv_resumed: 0,
             cache_banked: CacheStats::default(),
+            shed_banked: [0; 3],
         })
     }
 
@@ -383,6 +390,10 @@ impl DynamicSimulation {
         let dropped = self.dropped + self.sim.dropped();
         let mut cache = self.cache_banked;
         cache.merge(&self.sim.cache_stats());
+        let mut shed = self.shed_banked;
+        for (s, v) in shed.iter_mut().zip(self.sim.shed_by_tier()) {
+            *s += v;
+        }
         DynamicReport {
             eval: Evaluation::new(n_llms, duration, self.completed),
             replans: self.replans,
@@ -393,6 +404,7 @@ impl DynamicSimulation {
             migration_cost: self.migration_cost,
             kv_resumed: self.kv_resumed,
             cache,
+            shed,
         }
     }
 
@@ -718,8 +730,13 @@ impl DynamicSimulation {
         // rebuild, and hold every LLM for the downtime.
         self.completed.extend(self.sim.harvest_records());
         self.dropped += self.sim.dropped();
-        // Every unit is torn down: bank the cache counters now.
+        // Every unit is torn down: bank the cache + shed counters now.
         self.cache_banked.merge(&self.sim.cache_stats());
+        for (s, v) in
+            self.shed_banked.iter_mut().zip(self.sim.shed_by_tier())
+        {
+            *s += v;
+        }
         let pending = self.sim.drain_all_requests();
         let downtime = self.controller.config().migration_downtime;
         // Measured cost (downtime × preempted work) — what hysteresis
@@ -822,6 +839,11 @@ impl DynamicSimulation {
                 self.dropped += u.drain_requests().len();
                 self.dropped += u.dropped();
                 self.cache_banked.merge(&u.cache_stats());
+                for (s, v) in
+                    self.shed_banked.iter_mut().zip(u.shed_by_tier())
+                {
+                    *s += v;
+                }
             }
         }
 

@@ -260,6 +260,19 @@ impl Simulation {
         self.units.iter().map(|u| u.dropped()).sum()
     }
 
+    /// Cluster-wide shed counts by tier (`SloClass::code()`-indexed),
+    /// summed across units.
+    pub fn shed_by_tier(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for u in &self.units {
+            let s = u.shed_by_tier();
+            for (o, v) in out.iter_mut().zip(s) {
+                *o += v;
+            }
+        }
+        out
+    }
+
     /// Cluster-wide KV cache-layer counters (prefix sharing, eviction,
     /// host tier), merged across units.
     pub fn cache_stats(&self) -> CacheStats {

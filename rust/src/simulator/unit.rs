@@ -57,7 +57,7 @@ use crate::memory::{
 };
 use crate::metrics::RequestRecord;
 use crate::smpartition::SmPool;
-use crate::workload::Request;
+use crate::workload::{Request, SloClass};
 
 /// KV block granularity in tokens (per head, per layer) — §3.4.
 pub const BLOCK_TOKENS: usize = 16;
@@ -71,6 +71,13 @@ const DECODE_SM_TARGET: f64 = crate::costmodel::BW_SATURATION_FRAC * 1.1;
 /// Fraction of the block pool kept free at prefill admission so running
 /// decodes can grow without preemption thrash (vLLM-style watermark).
 const ADMIT_WATERMARK: f64 = 0.05;
+/// SLO scale the tier-aware scheduler assumes when turning a request's
+/// ideal latency into a deadline (matches `ReplanConfig::slo_scale` /
+/// the harnesses' default attainment scale).
+const TIER_SLO_SCALE: f64 = 8.0;
+/// Backlog (in KV blocks, relative to the device pool) past which an
+/// arrival triggers load shedding when [`EngineConfig::shed`] is on.
+const SHED_FACTOR: f64 = 1.25;
 
 /// Per-LLM configuration inside a unit.
 #[derive(Clone, Debug)]
@@ -218,6 +225,10 @@ pub struct CacheStats {
     pub recompute_preempts: u64,
     /// High-water mark of host-tier blocks in use.
     pub host_peak_blocks: usize,
+    /// Device↔host link seconds spent on swap traffic, accounted when
+    /// the debt is absorbed into a job — or banked at drain time, so
+    /// link time charged just before a replan is never lost.
+    pub swap_link_s: f64,
 }
 
 impl CacheStats {
@@ -231,6 +242,7 @@ impl CacheStats {
         self.recompute_preempts += other.recompute_preempts;
         self.host_peak_blocks =
             self.host_peak_blocks.max(other.host_peak_blocks);
+        self.swap_link_s += other.swap_link_s;
     }
 
     /// Fraction of prefix-carrying admissions that hit a resident entry.
@@ -272,6 +284,8 @@ pub struct UnitSim {
     /// ∫ SM-fraction-in-use dt — GPU utilization (Figure 1's y-axis).
     sm_integral: f64,
     dropped: usize,
+    /// Requests shed by admission control, indexed by `SloClass::code()`.
+    shed: [u64; 3],
     /// Per-LLM resident shared prefixes, keyed by `Request::prefix_group`.
     prefix_index: Vec<BTreeMap<u64, PrefixEntry>>,
     /// Victim-choice policy; `None` disables cache management entirely
@@ -347,6 +361,7 @@ impl UnitSim {
             usage_integral: vec![0.0; n],
             sm_integral: 0.0,
             dropped: 0,
+            shed: [0; 3],
             prefix_index: vec![BTreeMap::new(); n],
             eviction: build_policy(cfg.eviction),
             host: HostTier::new(cfg.host_tier_blocks),
@@ -405,7 +420,10 @@ impl UnitSim {
             self.host.release(c.r.blocks);
             out.push(c.r.req);
         }
-        self.pending_link_s = 0.0;
+        // Link debt not yet absorbed into a job is banked, not erased:
+        // the PCIe copies happened, and the migration accounting reads
+        // `cache_stats()` right after this drain.
+        self.cache.swap_link_s += std::mem::take(&mut self.pending_link_s);
         self.slot_index.clear();
         // Cancel in-flight jobs; reset the SM pool wholesale (summing the
         // individual releases in HashMap order would be nondeterministic
@@ -551,6 +569,33 @@ impl UnitSim {
 
     pub fn dropped(&self) -> usize {
         self.dropped
+    }
+
+    /// Requests shed by admission control, indexed by `SloClass::code()`.
+    pub fn shed_by_tier(&self) -> [u64; 3] {
+        self.shed
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    /// Waiting + admitted requests per tier, indexed by
+    /// `SloClass::code()` — the occupancy snapshot shedding decisions
+    /// are judged against.
+    pub fn backlog_tier_counts(&self) -> [usize; 3] {
+        let mut n = [0usize; 3];
+        for q in &self.waiting {
+            for r in q {
+                n[r.tier.code() as usize] += 1;
+            }
+        }
+        for list in &self.active {
+            for a in list {
+                n[a.req.tier.code() as usize] += 1;
+            }
+        }
+        n
     }
 
     pub fn n_llms(&self) -> usize {
@@ -705,8 +750,129 @@ impl UnitSim {
     // -- events -------------------------------------------------------------
 
     pub fn on_arrival(&mut self, t: f64, req: Request) {
+        if self.cfg.shed && !self.admit_under_overload(&req) {
+            return;
+        }
         self.waiting[req.llm].push_back(req);
         self.try_schedule(t);
+    }
+
+    /// Admission control: when the backlog (waiting + admitted, priced
+    /// in eventual KV blocks) would exceed `SHED_FACTOR ×` the device
+    /// pool, shed the least-important tier present until the unit is
+    /// back under the line. A request is never displaced by an equal or
+    /// lower tier — when the incoming request itself belongs to the
+    /// cheapest tier present, IT is the marginal work and is dropped
+    /// instead. Returns whether the incoming request survives.
+    fn admit_under_overload(&mut self, req: &Request) -> bool {
+        let threshold =
+            (self.quota.total_blocks() as f64 * SHED_FACTOR) as usize;
+        let incoming =
+            self.blocks_for(req.llm, req.prompt_len + req.output_len);
+        let mut guard = 0;
+        while self.backlog_blocks() + incoming > threshold && guard < 4096 {
+            guard += 1;
+            let present = self.backlog_tier_counts();
+            let victim = SloClass::all()
+                .into_iter()
+                .filter(|c| present[c.code() as usize] > 0)
+                .min_by_key(|c| c.importance());
+            match victim {
+                Some(v) if v.importance() < req.tier.importance() => {
+                    if !self.shed_one(v) {
+                        break;
+                    }
+                }
+                _ => {
+                    self.shed[req.tier.code() as usize] += 1;
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Backlog demand in KV blocks: every waiting and admitted request
+    /// priced at its eventual footprint (prompt + full output).
+    fn backlog_blocks(&self) -> usize {
+        let mut total = 0usize;
+        for (llm, q) in self.waiting.iter().enumerate() {
+            for r in q {
+                total += self.blocks_for(llm, r.prompt_len + r.output_len);
+            }
+        }
+        for (llm, list) in self.active.iter().enumerate() {
+            for a in list {
+                total +=
+                    self.blocks_for(llm, a.req.prompt_len + a.req.output_len);
+            }
+        }
+        total
+    }
+
+    /// Shed one request of `tier`: the latest-arriving waiting request
+    /// first (it has received no service), else the youngest admitted
+    /// context (freeing its blocks — a stale in-flight completion for
+    /// it is ignored by `on_job_done`'s id filter). Returns whether a
+    /// victim was found.
+    fn shed_one(&mut self, tier: SloClass) -> bool {
+        // (arrival, id, llm, queue position) of the waiting victim.
+        let mut wait: Option<(f64, u64, usize, usize)> = None;
+        for (llm, q) in self.waiting.iter().enumerate() {
+            for (pos, r) in q.iter().enumerate() {
+                if r.tier != tier {
+                    continue;
+                }
+                let better = match wait {
+                    None => true,
+                    Some((ba, bid, _, _)) => {
+                        match r.arrival.total_cmp(&ba) {
+                            std::cmp::Ordering::Greater => true,
+                            std::cmp::Ordering::Equal => r.id > bid,
+                            std::cmp::Ordering::Less => false,
+                        }
+                    }
+                };
+                if better {
+                    wait = Some((r.arrival, r.id, llm, pos));
+                }
+            }
+        }
+        if let Some((_, _, llm, pos)) = wait {
+            self.waiting[llm].remove(pos);
+            self.shed[tier.code() as usize] += 1;
+            return true;
+        }
+        let mut adm: Option<(f64, u64)> = None;
+        for list in &self.active {
+            for a in list {
+                if a.req.tier != tier {
+                    continue;
+                }
+                let better = match adm {
+                    None => true,
+                    Some((ba, bid)) => match a.req.arrival.total_cmp(&ba) {
+                        std::cmp::Ordering::Greater => true,
+                        std::cmp::Ordering::Equal => a.req.id > bid,
+                        std::cmp::Ordering::Less => false,
+                    },
+                };
+                if better {
+                    adm = Some((a.req.arrival, a.req.id));
+                }
+            }
+        }
+        let Some((_, vid)) = adm else {
+            return false;
+        };
+        let (llm, idx) = self.slot_index[&vid];
+        let a = self.remove_active(llm, idx);
+        self.quota.free(llm, a.blocks);
+        if a.shared_blocks > 0 {
+            self.deref_prefix(llm, a.req.prefix_group);
+        }
+        self.shed[tier.code() as usize] += 1;
+        true
     }
 
     pub fn on_adapt(&mut self) {
@@ -798,6 +964,7 @@ impl UnitSim {
             prompt_len: a.req.prompt_len,
             output_len: a.req.output_len,
             ideal_latency: ideal,
+            tier: a.req.tier,
         });
     }
 
@@ -1074,6 +1241,41 @@ impl UnitSim {
 
     // -- scheduling ----------------------------------------------------------
 
+    /// Deadline slack per unit of value — the tier-aware scheduler's
+    /// ordering key (smaller = more urgent and more valuable). The
+    /// deadline is the request's contention-free latency scaled by
+    /// `TIER_SLO_SCALE` and its tier's latency multiplier; dividing by
+    /// the tier weight serves a high-value request ahead of a batch
+    /// request with the same slack.
+    fn slack_key(&self, req: &Request, t: f64) -> f64 {
+        let m = &self.models[req.llm];
+        let ideal = self.cost.ideal_request_latency(
+            &m.spec,
+            req.prompt_len as f64,
+            req.output_len as f64,
+            m.canonical_tp,
+        );
+        (req.arrival + req.tier.latency_mult() * TIER_SLO_SCALE * ideal - t)
+            / req.tier.weight()
+    }
+
+    /// Reorder one LLM's wait queue by slack-per-value (ties broken by
+    /// arrival then id, so an all-standard workload keeps FCFS order).
+    fn sort_waiting_by_slack(&mut self, llm: usize, t: f64) {
+        if self.waiting[llm].len() < 2 {
+            return;
+        }
+        let q = std::mem::take(&mut self.waiting[llm]);
+        let mut keyed: Vec<(f64, Request)> =
+            q.into_iter().map(|r| (self.slack_key(&r, t), r)).collect();
+        keyed.sort_by(|a, b| {
+            a.0.total_cmp(&b.0)
+                .then(a.1.arrival.total_cmp(&b.1.arrival))
+                .then(a.1.id.cmp(&b.1.id))
+        });
+        self.waiting[llm] = keyed.into_iter().map(|(_, r)| r).collect();
+    }
+
     fn try_schedule(&mut self, t: f64) {
         self.try_swap_in(t);
         loop {
@@ -1133,6 +1335,10 @@ impl UnitSim {
         // Serialized engines (temporal baseline) need the GPUs idle.
         if !self.cfg.sm_partition && self.sm.active_jobs() > 0 {
             return StartOutcome::DeniedSm;
+        }
+        // Tier-aware admission: most urgent-and-valuable prompts first.
+        if self.cfg.tier_aware {
+            self.sort_waiting_by_slack(llm, t);
         }
         // Admit a batch of prompts under the token budget + block quota.
         let mut admitted: Vec<Active> = Vec::new();
@@ -1347,7 +1553,26 @@ impl UnitSim {
         // both staleness checks are O(1) lookups.
         let mut batch: Vec<u64> = Vec::new();
         let mut ctx_sum = 0usize;
-        let order: Vec<u64> = self.ready_ids[llm].iter().copied().collect();
+        let mut order: Vec<u64> = self.ready_ids[llm].iter().copied().collect();
+        if self.cfg.tier_aware && order.len() > 1 {
+            // Batch assembly (and thus the preemption shadow of the
+            // block-pressure path below) walks urgent-and-valuable
+            // contexts first instead of oldest-id-first.
+            let mut keyed: Vec<(f64, f64, u64)> = order
+                .iter()
+                .map(|&id| {
+                    let slot = self.slot_index[&id].1;
+                    let r = &self.active[llm][slot].req;
+                    (self.slack_key(r, t), r.arrival, id)
+                })
+                .collect();
+            keyed.sort_by(|a, b| {
+                a.0.total_cmp(&b.0)
+                    .then(a.1.total_cmp(&b.1))
+                    .then(a.2.cmp(&b.2))
+            });
+            order = keyed.into_iter().map(|(_, _, id)| id).collect();
+        }
         for id in order {
             if batch.len() >= self.cfg.max_decode_batch {
                 break;
@@ -1448,19 +1673,33 @@ impl UnitSim {
     /// owning the globally oldest unfinished request, one job at a time.
     fn schedule_fcfs(&mut self, t: f64) -> bool {
         let n = self.models.len();
-        // (key, llm, is_prefill)
+        // (key, llm, is_prefill) — key is arrival (pure FCFS) or, with
+        // tier awareness on, slack-per-value.
         let mut cands: Vec<(f64, usize, bool)> = Vec::new();
         for i in 0..n {
+            if self.cfg.tier_aware {
+                self.sort_waiting_by_slack(i, t);
+            }
             if let Some(w) = self.waiting[i].front() {
                 if !self.prefill_inflight {
-                    cands.push((w.arrival, i, true));
+                    let key = if self.cfg.tier_aware {
+                        self.slack_key(w, t)
+                    } else {
+                        w.arrival
+                    };
+                    cands.push((key, i, true));
                 }
             }
             if !self.decode_inflight[i] {
                 if let Some(a) = self.ready_ids[i]
                     .iter()
                     .map(|id| {
-                        self.active[i][self.slot_index[id].1].req.arrival
+                        let r = &self.active[i][self.slot_index[id].1].req;
+                        if self.cfg.tier_aware {
+                            self.slack_key(r, t)
+                        } else {
+                            r.arrival
+                        }
                     })
                     .min_by(|a, b| a.total_cmp(b))
                 {
@@ -1577,7 +1816,9 @@ impl UnitSim {
     fn launch(&mut self, t: f64, dur: f64, job: Job) {
         // Any host-link transfers (swap in/out) since the last launch
         // delay this job: the PCIe copy and the kernel share the unit.
-        let dur = dur + std::mem::take(&mut self.pending_link_s);
+        let link = std::mem::take(&mut self.pending_link_s);
+        self.cache.swap_link_s += link;
+        let dur = dur + link;
         let id = self.next_job_id;
         self.next_job_id += 1;
         self.inflight.insert(id, job);
@@ -1622,6 +1863,7 @@ mod tests {
             output_len: o,
             prefix_group: 0,
             prefix_len: 0,
+            tier: SloClass::Standard,
         }
     }
 
@@ -2024,6 +2266,137 @@ mod tests {
         let (t_done, _) = *unit.started.last().unwrap();
         assert!((t_done - (1.0 + link)).abs() < 1e-12);
         assert_eq!(unit.pending_link_s, 0.0);
+    }
+
+    #[test]
+    fn drain_banks_pending_swap_link_time() {
+        use crate::memory::EvictionKind;
+        // Regression: a drain used to zero `pending_link_s`, losing the
+        // seconds of PCIe traffic the swap already spent — the migration
+        // accounting that reads `cache_stats()` right after the drain
+        // under-reported link occupancy.
+        let mut unit = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig {
+                eviction: EvictionKind::Lru,
+                host_tier_blocks: 100_000,
+                ..EngineConfig::muxserve()
+            },
+            CostModel::a100(),
+        );
+        let blocks = unit.blocks_for(0, 70);
+        let ok = unit.admit_resumed(0.5, ResumedRequest {
+            req: req(0, 1, 0.0, 64, 32),
+            generated: 3,
+            first_token: 0.2,
+            blocks,
+        });
+        assert!(ok);
+        let _ = unit.drain_started();
+        unit.swap_out(1);
+        let debt = unit.pending_link_s;
+        assert!(debt > 0.0, "swap must accrue link debt");
+        let before = unit.cache_stats().swap_link_s;
+        let _ = unit.drain_requests();
+        assert_eq!(unit.pending_link_s, 0.0);
+        assert!(
+            (unit.cache_stats().swap_link_s - before - debt).abs() < 1e-15,
+            "drain must bank unabsorbed link debt, not erase it"
+        );
+    }
+
+    #[test]
+    fn tier_aware_decode_prefers_urgent_high_value_work() {
+        // Two Ready contexts: an old batch request (id 1) and a newer
+        // interactive one (id 2). Oldest-id-first picks the batch
+        // request; the slack-per-value key must flip that.
+        for (aware, want_first) in [(false, 1u64), (true, 2u64)] {
+            let mut unit = UnitSim::new(
+                vec![cfg_model(6.7, 1.0, 1.0)],
+                1,
+                EngineConfig {
+                    tier_aware: aware,
+                    max_decode_batch: 1,
+                    ..EngineConfig::muxserve()
+                },
+                CostModel::a100(),
+            );
+            let blocks = unit.blocks_for(0, 70);
+            let mut r1 = req(0, 1, 0.0, 64, 32);
+            r1.tier = SloClass::Batch;
+            let mut r2 = req(0, 2, 0.01, 64, 32);
+            r2.tier = SloClass::Interactive;
+            for (r, ft) in [(r1, 0.05), (r2, 0.06)] {
+                let ok = unit.resume_into_ready(0.1, ResumedRequest {
+                    req: r,
+                    generated: 3,
+                    first_token: ft,
+                    blocks,
+                }, 0);
+                assert!(ok);
+            }
+            unit.try_schedule(0.1);
+            let job = unit.inflight.values().next().unwrap();
+            assert_eq!(job.phase, JobPhase::Decode);
+            assert_eq!(
+                job.req_ids,
+                vec![want_first],
+                "tier_aware={aware} must decode request {want_first} first"
+            );
+        }
+    }
+
+    #[test]
+    fn overload_sheds_the_batch_tier_first() {
+        let mut unit = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig { shed: true, ..EngineConfig::muxserve() },
+            CostModel::a100(),
+        );
+        let pool = unit.total_blocks();
+        let per = unit.blocks_for(0, 1024 + 64);
+        // Push well past the shed line with batch work. Arrivals beyond
+        // the line are themselves the cheapest tier present, so they are
+        // dropped rather than displacing admitted equals.
+        let n_fill = (pool as f64 * SHED_FACTOR / per as f64).ceil() as u64 + 4;
+        for i in 0..n_fill {
+            let mut r = req(0, i, i as f64 * 1e-4, 1024, 64);
+            r.tier = SloClass::Batch;
+            unit.on_arrival(r.arrival, r);
+        }
+        assert!(unit.shed_total() > 0, "overcommit must shed");
+        assert_eq!(
+            unit.shed_by_tier()[SloClass::Interactive.code() as usize],
+            0
+        );
+        let batch_shed = unit.shed_by_tier()[SloClass::Batch.code() as usize];
+        assert!(batch_shed > 0);
+        // An interactive arrival during overload must displace batch
+        // work, never be shed itself.
+        let mut vip = req(0, 10_000, 1.0, 1024, 64);
+        vip.tier = SloClass::Interactive;
+        unit.advance_time(1.0);
+        unit.on_arrival(1.0, vip);
+        assert!(
+            unit.shed_by_tier()[SloClass::Batch.code() as usize] > batch_shed,
+            "batch work must make way for the interactive arrival"
+        );
+        assert_eq!(
+            unit.shed_by_tier()[SloClass::Interactive.code() as usize],
+            0,
+            "the interactive request must be admitted, not shed"
+        );
+        assert_eq!(
+            unit.backlog_tier_counts()[SloClass::Interactive.code() as usize],
+            1
+        );
+        assert!(
+            unit.index_inconsistency().is_none(),
+            "{:?}",
+            unit.index_inconsistency()
+        );
     }
 
     #[test]

@@ -57,6 +57,34 @@ impl Summary {
         self.percentile(99.0)
     }
 
+    /// `mean` with an explicit empty case instead of NaN. Verdict-style
+    /// comparisons must use these: NaN compares false both ways, so a
+    /// NaN mean silently falls through `<`/`>=` gates.
+    pub fn try_mean(&self) -> Option<f64> {
+        if self.xs.is_empty() {
+            None
+        } else {
+            Some(self.mean())
+        }
+    }
+
+    /// `percentile` with an explicit empty case instead of NaN.
+    pub fn try_percentile(&self, p: f64) -> Option<f64> {
+        if self.xs.is_empty() {
+            None
+        } else {
+            Some(self.percentile(p))
+        }
+    }
+
+    pub fn try_p50(&self) -> Option<f64> {
+        self.try_percentile(50.0)
+    }
+
+    pub fn try_p99(&self) -> Option<f64> {
+        self.try_percentile(99.0)
+    }
+
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
@@ -91,5 +119,17 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.p99().is_nan());
+    }
+
+    #[test]
+    fn try_accessors_make_empty_explicit() {
+        let empty = Summary::new();
+        assert_eq!(empty.try_mean(), None);
+        assert_eq!(empty.try_p50(), None);
+        assert_eq!(empty.try_p99(), None);
+        let mut s = Summary::new();
+        s.add(2.0);
+        assert_eq!(s.try_mean(), Some(2.0));
+        assert_eq!(s.try_p99(), Some(2.0));
     }
 }

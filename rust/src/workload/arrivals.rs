@@ -253,6 +253,7 @@ pub fn generate_requests(
                 output_len,
                 prefix_group: 0,
                 prefix_len: 0,
+                tier: crate::workload::SloClass::Standard,
             });
             id += 1;
         }

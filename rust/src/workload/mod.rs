@@ -13,7 +13,7 @@ pub use arrivals::{
     MarkovModulated, RateDrift,
 };
 pub use powerlaw::{cumulative_rate_distribution, power_law_rates};
-pub use scenario::{Scenario, ScenarioData, ScenarioShape};
+pub use scenario::{Scenario, ScenarioData, ScenarioShape, TierMix};
 pub use trace::{
     chatlmsys_like_trace, daily_rate_curve, read_trace_file,
     requests_from_trace, requests_to_trace, write_trace_file, TraceSpec,
@@ -21,6 +21,98 @@ pub use trace::{
 
 use crate::config::WorkloadSpec;
 use crate::util::Rng;
+
+/// Per-request SLO class (tier). Production traffic is not uniform:
+/// interactive chat needs answers in seconds, batch summarization can
+/// wait minutes, and background jobs only care about eventual
+/// completion. Each tier scales the per-request latency target
+/// ([`SloClass::latency_mult`]) and carries a shed cost
+/// ([`SloClass::weight`]) used by tier-weighted goodput and by the
+/// load-shedding admission controller (higher weight = shed last).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SloClass {
+    /// Chat-like traffic: tight deadline, highest shed cost.
+    Interactive,
+    /// The pre-tier behavior: baseline deadline and weight.
+    #[default]
+    Standard,
+    /// Background / offline work: loose deadline, shed first.
+    Batch,
+}
+
+impl SloClass {
+    /// Multiplier on the per-request ideal-latency SLO target.
+    /// `Standard` is 1.0 so untiered workloads keep their exact
+    /// pre-tier SLO semantics.
+    pub fn latency_mult(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 0.5,
+            SloClass::Standard => 1.0,
+            SloClass::Batch => 4.0,
+        }
+    }
+
+    /// Goodput weight / shed cost: what finishing (or dropping) one
+    /// request of this tier is worth relative to the others.
+    pub fn weight(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 4.0,
+            SloClass::Standard => 2.0,
+            SloClass::Batch => 1.0,
+        }
+    }
+
+    /// Importance rank for the shedding order: larger = more
+    /// important, shed later. (Strictly ordered; ties impossible.)
+    pub fn importance(&self) -> u8 {
+        match self {
+            SloClass::Interactive => 2,
+            SloClass::Standard => 1,
+            SloClass::Batch => 0,
+        }
+    }
+
+    /// Stable numeric code used by the v3 trace format.
+    pub fn code(&self) -> u8 {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    /// Inverse of [`SloClass::code`].
+    pub fn from_code(code: u8) -> Option<SloClass> {
+        match code {
+            0 => Some(SloClass::Interactive),
+            1 => Some(SloClass::Standard),
+            2 => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// All tiers, most important first (matches `code()` order).
+    pub fn all() -> [SloClass; 3] {
+        [SloClass::Interactive, SloClass::Standard, SloClass::Batch]
+    }
+}
 
 /// One inference request as seen by every serving system in this repo.
 #[derive(Clone, Debug, PartialEq)]
@@ -39,6 +131,9 @@ pub struct Request {
     /// Length of the shared prefix in tokens (`<= prompt_len`; 0 when
     /// `prefix_group` is 0).
     pub prefix_len: usize,
+    /// SLO tier of this request ([`SloClass::Standard`] when the
+    /// workload is untiered).
+    pub tier: SloClass,
 }
 
 impl Request {
@@ -85,6 +180,7 @@ pub fn poisson_requests(
             output_len,
             prefix_group: 0,
             prefix_len: 0,
+            tier: SloClass::Standard,
         });
         id += 1;
         t += rng.exponential(spec.rate);

@@ -22,7 +22,9 @@ use super::arrivals::{
     ArrivalProcess, ConstantRate, Diurnal, FlashCrowd, MarkovModulated,
     RateDrift,
 };
-use super::{generate_requests, merge_streams, power_law_rates, Request};
+use super::{
+    generate_requests, merge_streams, power_law_rates, Request, SloClass,
+};
 use crate::config::{llama_spec, ModelSpec, WorkloadSpec};
 use crate::util::Rng;
 
@@ -34,6 +36,16 @@ pub enum ScenarioShape {
     Bursty,
     FlashCrowd,
     Drift,
+    /// Sustained 2× overcommit: every LLM holds twice its base rate for
+    /// the whole run. No placement can serve it all — the game is what
+    /// gets shed.
+    Overcommit,
+    /// A flash crowd that exceeds *aggregate* capacity: every LLM
+    /// spikes simultaneously mid-run, not just the cold one.
+    FlashOverload,
+    /// Mixed interactive+batch diurnal: amplified day-scale waves whose
+    /// peaks overload the cluster; defaults to a mixed tier population.
+    TieredDiurnal,
 }
 
 impl ScenarioShape {
@@ -44,6 +56,13 @@ impl ScenarioShape {
             "bursty" | "burst" => Some(ScenarioShape::Bursty),
             "flash-crowd" | "flashcrowd" => Some(ScenarioShape::FlashCrowd),
             "drift" => Some(ScenarioShape::Drift),
+            "overcommit" => Some(ScenarioShape::Overcommit),
+            "flash-overload" | "flashoverload" => {
+                Some(ScenarioShape::FlashOverload)
+            }
+            "tiered-diurnal" | "tiereddiurnal" => {
+                Some(ScenarioShape::TieredDiurnal)
+            }
             _ => None,
         }
     }
@@ -55,16 +74,22 @@ impl ScenarioShape {
             ScenarioShape::Bursty => "bursty",
             ScenarioShape::FlashCrowd => "flash-crowd",
             ScenarioShape::Drift => "drift",
+            ScenarioShape::Overcommit => "overcommit",
+            ScenarioShape::FlashOverload => "flash-overload",
+            ScenarioShape::TieredDiurnal => "tiered-diurnal",
         }
     }
 
-    pub fn all() -> [ScenarioShape; 5] {
+    pub fn all() -> [ScenarioShape; 8] {
         [
             ScenarioShape::Stationary,
             ScenarioShape::Diurnal,
             ScenarioShape::Bursty,
             ScenarioShape::FlashCrowd,
             ScenarioShape::Drift,
+            ScenarioShape::Overcommit,
+            ScenarioShape::FlashOverload,
+            ScenarioShape::TieredDiurnal,
         ]
     }
 
@@ -78,6 +103,79 @@ impl ScenarioShape {
             ScenarioShape::Bursty,
             ScenarioShape::Drift,
         ]
+    }
+
+    /// The three overload shapes where demand exceeds capacity and
+    /// tier-aware scheduling + shedding is the whole game.
+    pub fn overload() -> [ScenarioShape; 3] {
+        [
+            ScenarioShape::Overcommit,
+            ScenarioShape::FlashOverload,
+            ScenarioShape::TieredDiurnal,
+        ]
+    }
+}
+
+/// How request SLO tiers are assigned across a scenario's stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TierMix {
+    /// Every request is `SloClass::Standard` — the untiered pre-tier
+    /// behavior, bit-identical streams (consumes no RNG).
+    #[default]
+    AllStandard,
+    /// Production-like blend: ~30% interactive, ~50% standard,
+    /// ~20% batch.
+    Mixed,
+    /// Offline-heavy blend: ~15% interactive, ~25% standard,
+    /// ~60% batch.
+    BatchHeavy,
+}
+
+impl TierMix {
+    pub fn parse(s: &str) -> Option<TierMix> {
+        match s {
+            "all-standard" | "standard" | "none" => Some(TierMix::AllStandard),
+            "mixed" => Some(TierMix::Mixed),
+            "batch-heavy" | "batchheavy" => Some(TierMix::BatchHeavy),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TierMix::AllStandard => "all-standard",
+            TierMix::Mixed => "mixed",
+            TierMix::BatchHeavy => "batch-heavy",
+        }
+    }
+
+    pub fn all() -> [TierMix; 3] {
+        [TierMix::AllStandard, TierMix::Mixed, TierMix::BatchHeavy]
+    }
+
+    /// Cumulative draw thresholds `(interactive, interactive+standard)`
+    /// for a uniform [0,1) sample; `None` when no draw happens.
+    fn thresholds(&self) -> Option<(f64, f64)> {
+        match self {
+            TierMix::AllStandard => None,
+            TierMix::Mixed => Some((0.30, 0.80)),
+            TierMix::BatchHeavy => Some((0.15, 0.40)),
+        }
+    }
+
+    /// Expected [`SloClass::weight`] of one draw from this blend — the
+    /// LLM-level mean goodput weight the placement estimator sees (its
+    /// `WorkloadSpec::tier_weight`). Untiered streams keep the neutral
+    /// 1.0 so the goodput and throughput objectives coincide there.
+    pub fn expected_weight(&self) -> f64 {
+        match self.thresholds() {
+            None => 1.0,
+            Some((p_int, p_std)) => {
+                SloClass::Interactive.weight() * p_int
+                    + SloClass::Standard.weight() * (p_std - p_int)
+                    + SloClass::Batch.weight() * (1.0 - p_std)
+            }
+        }
     }
 }
 
@@ -97,12 +195,21 @@ pub struct Scenario {
     /// 0.0 = every prompt unique; at > 0 each tagged request joins one
     /// of a few per-LLM template families (see [`Scenario::build`]).
     pub shared_prefix: f64,
+    /// How SLO tiers are distributed over the stream (see [`TierMix`]).
+    pub tier_mix: TierMix,
 }
 
 impl Scenario {
     /// Defaults sized for a small single-GPU-mesh cluster (4×1 GPUs):
-    /// six mixed 7B/13B LLMs, two minutes, skewed popularity.
+    /// six mixed 7B/13B LLMs, two minutes, skewed popularity. The three
+    /// overload shapes default to a mixed tier population (tiering is
+    /// their whole point); everything else stays all-standard.
     pub fn new(shape: ScenarioShape) -> Scenario {
+        let tier_mix = if ScenarioShape::overload().contains(&shape) {
+            TierMix::Mixed
+        } else {
+            TierMix::AllStandard
+        };
         Scenario {
             shape,
             n_llms: 6,
@@ -111,6 +218,7 @@ impl Scenario {
             max_rate: 6.0,
             seed: 2024,
             shared_prefix: 0.0,
+            tier_mix,
         }
     }
 
@@ -194,6 +302,46 @@ impl Scenario {
                     }) as Box<dyn ArrivalProcess>
                 })
                 .collect(),
+            // Sustained 2× overcommit: the planner sees the true rates
+            // and still cannot serve them — degradation policy decides
+            // everything.
+            ScenarioShape::Overcommit => base
+                .iter()
+                .map(|r| {
+                    Box::new(ConstantRate { rate: *r * 2.0 })
+                        as Box<dyn ArrivalProcess>
+                })
+                .collect(),
+            // Every LLM spikes at once to twice the hottest base rate:
+            // aggregate demand during the hold window dwarfs what any
+            // placement of this cluster can serve.
+            ScenarioShape::FlashOverload => base
+                .iter()
+                .map(|r| {
+                    Box::new(FlashCrowd {
+                        base: *r,
+                        spike: self.max_rate * 2.0,
+                        start: 0.35 * d,
+                        ramp: 0.05 * d,
+                        hold: 0.30 * d,
+                    }) as Box<dyn ArrivalProcess>
+                })
+                .collect(),
+            // Amplified staggered waves at 1.5× base: peaks overload
+            // the cluster, troughs leave slack for the batch tier.
+            ScenarioShape::TieredDiurnal => base
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    Box::new(Diurnal {
+                        base: *r * 1.5,
+                        depth: 0.9,
+                        period: d / 2.0,
+                        phase: i as f64 * 2.0 * std::f64::consts::PI
+                            / n as f64,
+                    }) as Box<dyn ArrivalProcess>
+                })
+                .collect(),
         }
     }
 
@@ -216,8 +364,17 @@ impl Scenario {
     /// Materialize the scenario: planning workloads + the arrival stream.
     pub fn build(&self) -> ScenarioData {
         let planning = self.planning_rates();
-        let workloads: Vec<WorkloadSpec> =
-            planning.iter().map(|r| WorkloadSpec::sharegpt(*r)).collect();
+        // The blend's mean tier weight rides on every planning workload,
+        // so a goodput-objective replan values each LLM's throughput at
+        // what its requests are actually worth.
+        let tier_weight = self.tier_mix.expected_weight();
+        let workloads: Vec<WorkloadSpec> = planning
+            .iter()
+            .map(|r| WorkloadSpec {
+                tier_weight,
+                ..WorkloadSpec::sharegpt(*r)
+            })
+            .collect();
         let procs = self.processes();
         let mut rng = Rng::new(self.seed);
         let streams: Vec<Vec<Request>> = procs
@@ -236,6 +393,7 @@ impl Scenario {
             .collect();
         let mut requests = merge_streams(streams);
         self.assign_shared_prefixes(&mut requests);
+        self.assign_tiers(&mut requests);
         ScenarioData {
             planning_workloads: workloads,
             mean_rates: self.mean_rates(),
@@ -265,6 +423,27 @@ impl Scenario {
             r.prefix_len = TEMPLATES[t].min(r.prompt_len);
         }
     }
+
+    /// Draw each request's SLO tier from the scenario's [`TierMix`].
+    /// `AllStandard` consumes no RNG, so untiered scenarios keep their
+    /// exact pre-tier streams bit-identically. Deterministic in `seed`
+    /// (own RNG stream — independent of the prefix assignment).
+    fn assign_tiers(&self, requests: &mut [Request]) {
+        let Some((p_int, p_std)) = self.tier_mix.thresholds() else {
+            return;
+        };
+        let mut rng = Rng::new(self.seed ^ 0x0051_0C1A_55ED);
+        for r in requests.iter_mut() {
+            let u = rng.f64();
+            r.tier = if u < p_int {
+                SloClass::Interactive
+            } else if u < p_std {
+                SloClass::Standard
+            } else {
+                SloClass::Batch
+            };
+        }
+    }
 }
 
 /// A materialized scenario.
@@ -289,10 +468,37 @@ mod tests {
             assert_eq!(ScenarioShape::parse(s.name()), Some(s));
         }
         assert_eq!(ScenarioShape::parse("nope"), None);
-        // The dynamic suite is exactly `all` minus the stationary
-        // control group.
-        assert_eq!(ScenarioShape::dynamic().len() + 1, ScenarioShape::all().len());
+        // `all` = dynamic suite + overload suite + stationary control.
+        assert_eq!(
+            ScenarioShape::dynamic().len() + ScenarioShape::overload().len() + 1,
+            ScenarioShape::all().len()
+        );
         assert!(!ScenarioShape::dynamic().contains(&ScenarioShape::Stationary));
+        for s in ScenarioShape::overload() {
+            assert!(!ScenarioShape::dynamic().contains(&s));
+        }
+        for m in TierMix::all() {
+            assert_eq!(TierMix::parse(m.name()), Some(m));
+        }
+        assert_eq!(TierMix::parse("nope"), None);
+    }
+
+    #[test]
+    fn tier_mix_expected_weight_rides_on_planning_workloads() {
+        assert_eq!(TierMix::AllStandard.expected_weight(), 1.0);
+        let mixed = TierMix::Mixed.expected_weight();
+        let hand = SloClass::Interactive.weight() * 0.30
+            + SloClass::Standard.weight() * 0.50
+            + SloClass::Batch.weight() * 0.20;
+        assert!((mixed - hand).abs() < 1e-12);
+        // Offline-heavy blends are worth less per request.
+        assert!(TierMix::BatchHeavy.expected_weight() < mixed);
+        // And the blend's weight reaches the placement estimator's view.
+        let data = Scenario::new(ScenarioShape::Overcommit).build();
+        assert!(data
+            .planning_workloads
+            .iter()
+            .all(|w| (w.tier_weight - mixed).abs() < 1e-12));
     }
 
     #[test]
@@ -378,6 +584,67 @@ mod tests {
         // Off by default: the control stream carries no prefixes.
         let plain = Scenario::new(ScenarioShape::Stationary).build();
         assert!(plain.requests.iter().all(|r| r.prefix_group == 0));
+    }
+
+    #[test]
+    fn tier_mix_is_deterministic_and_roughly_matches_blend() {
+        let s = Scenario {
+            tier_mix: TierMix::Mixed,
+            ..Scenario::new(ScenarioShape::Stationary)
+        };
+        let a = s.build();
+        let b = s.build();
+        assert_eq!(a.requests, b.requests);
+        let n = a.requests.len() as f64;
+        assert!(n > 100.0, "stream too small to measure a blend");
+        let frac = |t: SloClass| {
+            a.requests.iter().filter(|r| r.tier == t).count() as f64 / n
+        };
+        assert!((frac(SloClass::Interactive) - 0.30).abs() < 0.08);
+        assert!((frac(SloClass::Standard) - 0.50).abs() < 0.08);
+        assert!((frac(SloClass::Batch) - 0.20).abs() < 0.08);
+        // AllStandard consumes no RNG: streams stay bit-identical to
+        // the pre-tier generator modulo the tier field itself.
+        let plain = Scenario::new(ScenarioShape::Stationary).build();
+        assert!(plain.requests.iter().all(|r| r.tier == SloClass::Standard));
+        assert_eq!(plain.requests.len(), a.requests.len());
+        for (p, q) in plain.requests.iter().zip(&a.requests) {
+            assert_eq!(p.id, q.id);
+            assert_eq!(p.arrival, q.arrival);
+            assert_eq!(p.prompt_len, q.prompt_len);
+        }
+    }
+
+    #[test]
+    fn overload_shapes_exceed_the_base_demand() {
+        let over = Scenario::new(ScenarioShape::Overcommit);
+        assert_eq!(over.tier_mix, TierMix::Mixed);
+        let base: f64 =
+            power_law_rates(over.n_llms, over.alpha, over.max_rate)
+                .iter()
+                .sum();
+        let total: f64 = over.mean_rates().iter().sum();
+        assert!((total - 2.0 * base).abs() < 1e-9, "sustained 2x: {total}");
+        // Flash overload: mid-spike aggregate demand dwarfs the base.
+        let flash = Scenario::new(ScenarioShape::FlashOverload);
+        let mid = 0.5 * flash.duration;
+        let at_mid: f64 =
+            flash.processes().iter().map(|p| p.rate(mid)).sum();
+        assert!(
+            at_mid > 3.0 * base,
+            "aggregate spike {at_mid} vs base {base}"
+        );
+        // Tiered diurnal peaks above base demand too.
+        let td = Scenario::new(ScenarioShape::TieredDiurnal);
+        let peak: f64 = (0..120)
+            .map(|i| {
+                td.processes()
+                    .iter()
+                    .map(|p| p.rate(i as f64))
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max);
+        assert!(peak > 1.5 * base, "diurnal peak {peak} vs base {base}");
     }
 
     #[test]

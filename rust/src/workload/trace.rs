@@ -8,7 +8,7 @@
 //! top-20 % ≈ 50 %), diurnal modulation per LLM with randomized phase, and
 //! Poisson arrivals within each time bucket (non-homogeneous thinning).
 
-use super::{merge_streams, sample_lengths, Request};
+use super::{merge_streams, sample_lengths, Request, SloClass};
 use crate::config::WorkloadSpec;
 use crate::util::Rng;
 
@@ -88,6 +88,7 @@ pub fn chatlmsys_like_trace(spec: &TraceSpec) -> (Vec<WorkloadSpec>, Vec<Request
                         output_len,
                         prefix_group: 0,
                         prefix_len: 0,
+                        tier: SloClass::Standard,
                     });
                     id += 1;
                 }
@@ -105,35 +106,39 @@ pub fn chatlmsys_like_trace(spec: &TraceSpec) -> (Vec<WorkloadSpec>, Vec<Request
 // Every generator in this crate produces plain `Request` streams, so a
 // one-line-per-request text format is enough to freeze a workload and
 // replay it bit-identically later (or feed it to an external system).
-// Format: a `# muxserve-trace v2` header, then `id,llm,arrival,prompt,
-// output,prefix_group,prefix_len` rows with full-precision arrivals.
-// v1 files (5 fields, no prefix columns) still parse: the prefix fields
-// default to 0.
+// Format: a `# muxserve-trace v3` header, then `id,llm,arrival,prompt,
+// output,prefix_group,prefix_len,tier` rows with full-precision
+// arrivals; `tier` is the numeric `SloClass` code (0 interactive,
+// 1 standard, 2 batch). v2 files (7 fields, no tier column) and v1
+// files (5 fields, no prefix columns either) still parse: missing
+// fields default to 0 / standard.
 
 /// Serialize a request stream to the portable trace format.
 pub fn requests_to_trace(requests: &[Request]) -> String {
-    let mut out = String::from("# muxserve-trace v2\n");
+    let mut out = String::from("# muxserve-trace v3\n");
     out.push_str(
-        "# id,llm,arrival_s,prompt_len,output_len,prefix_group,prefix_len\n",
+        "# id,llm,arrival_s,prompt_len,output_len,prefix_group,prefix_len,\
+         tier\n",
     );
     for r in requests {
         out.push_str(&format!(
-            "{},{},{:.17e},{},{},{},{}\n",
+            "{},{},{:.17e},{},{},{},{},{}\n",
             r.id,
             r.llm,
             r.arrival,
             r.prompt_len,
             r.output_len,
             r.prefix_group,
-            r.prefix_len
+            r.prefix_len,
+            r.tier.code()
         ));
     }
     out
 }
 
-/// Parse a trace produced by [`requests_to_trace`] (v2, or v1 without the
-/// prefix columns). Returns requests in file order (generators emit
-/// arrival-sorted streams).
+/// Parse a trace produced by [`requests_to_trace`] (v3, or v2/v1
+/// without the tier / prefix columns). Returns requests in file order
+/// (generators emit arrival-sorted streams).
 pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -142,9 +147,9 @@ pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
             continue;
         }
         let fields: Vec<&str> = line.split(',').collect();
-        if fields.len() != 5 && fields.len() != 7 {
+        if fields.len() != 5 && fields.len() != 7 && fields.len() != 8 {
             return Err(format!(
-                "trace line {}: expected 5 or 7 fields, got {}",
+                "trace line {}: expected 5, 7, or 8 fields, got {}",
                 lineno + 1,
                 fields.len()
             ));
@@ -152,13 +157,19 @@ pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
         let bad = |what: &str| {
             format!("trace line {}: bad {what}: {line}", lineno + 1)
         };
-        let (prefix_group, prefix_len) = if fields.len() == 7 {
+        let (prefix_group, prefix_len) = if fields.len() >= 7 {
             (
                 fields[5].parse().map_err(|_| bad("prefix_group"))?,
                 fields[6].parse().map_err(|_| bad("prefix_len"))?,
             )
         } else {
             (0, 0)
+        };
+        let tier = if fields.len() == 8 {
+            let code: u8 = fields[7].parse().map_err(|_| bad("tier"))?;
+            SloClass::from_code(code).ok_or_else(|| bad("tier"))?
+        } else {
+            SloClass::Standard
         };
         out.push(Request {
             id: fields[0].parse().map_err(|_| bad("id"))?,
@@ -168,6 +179,7 @@ pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
             output_len: fields[4].parse().map_err(|_| bad("output_len"))?,
             prefix_group,
             prefix_len,
+            tier,
         });
     }
     Ok(out)
@@ -242,12 +254,35 @@ mod tests {
         let (_, mut reqs) =
             chatlmsys_like_trace(&TraceSpec { duration: 60.0, ..Default::default() });
         assert!(!reqs.is_empty());
-        // Exercise the prefix columns too.
+        // Exercise the prefix and tier columns too.
         reqs[0].prefix_group = 0x0107;
         reqs[0].prefix_len = 96.min(reqs[0].prompt_len);
+        reqs[0].tier = SloClass::Interactive;
+        if reqs.len() > 1 {
+            reqs[1].tier = SloClass::Batch;
+        }
         let text = requests_to_trace(&reqs);
         let back = requests_from_trace(&text).unwrap();
         assert_eq!(reqs, back, "replay must be bit-identical");
+    }
+
+    #[test]
+    fn v2_traces_still_parse_with_standard_tier() {
+        let v2 = "# muxserve-trace v2\n7,2,1.5e0,100,20,9,64\n";
+        let reqs = requests_from_trace(v2).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].prefix_group, 9);
+        assert_eq!(reqs[0].prefix_len, 64);
+        assert_eq!(reqs[0].tier, SloClass::Standard);
+    }
+
+    #[test]
+    fn v3_tier_column_round_trips_and_rejects_bad_codes() {
+        let v3 = "# muxserve-trace v3\n7,2,1.5e0,100,20,0,0,2\n";
+        let reqs = requests_from_trace(v3).unwrap();
+        assert_eq!(reqs[0].tier, SloClass::Batch);
+        assert!(requests_from_trace("7,2,1.5e0,100,20,0,0,5").is_err());
+        assert!(requests_from_trace("7,2,1.5e0,100,20,0,0,x").is_err());
     }
 
     #[test]

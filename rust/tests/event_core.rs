@@ -19,7 +19,7 @@ use muxserve::costmodel::CostModel;
 use muxserve::prop_assert;
 use muxserve::simulator::{UnitModelCfg, UnitSim};
 use muxserve::util::{proplite, Rng};
-use muxserve::workload::{Request, Scenario, ScenarioShape};
+use muxserve::workload::{Request, Scenario, ScenarioShape, SloClass};
 
 fn unit_model(params_b: f64, rate: f64, sm: f64) -> UnitModelCfg {
     UnitModelCfg {
@@ -84,6 +84,8 @@ fn prop_slot_index_mirrors_active_lists() {
                         output_len,
                         prefix_group: 0,
                         prefix_len: 0,
+                        tier: SloClass::from_code((next_id % 3) as u8)
+                            .unwrap(),
                     },
                 );
                 next_id += 1;

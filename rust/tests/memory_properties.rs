@@ -11,7 +11,7 @@ use muxserve::memory::{BlockAllocator, EvictionKind, KvError, QuotaCache};
 use muxserve::prop_assert;
 use muxserve::simulator::{UnitModelCfg, UnitSim};
 use muxserve::util::{proplite, Rng};
-use muxserve::workload::Request;
+use muxserve::workload::{Request, SloClass};
 
 /// Quota conservation: under quota-enforced allocation and arbitrary
 /// interleavings of alloc / free / adapt, (1) the per-LLM quotas always
@@ -209,6 +209,7 @@ fn prop_staged_migration_conserves_kv_blocks() {
                         output_len: 2 + rng.below(48),
                         prefix_group: 0,
                         prefix_len: 0,
+                        tier: SloClass::Standard,
                     },
                 );
             }
@@ -540,6 +541,7 @@ fn prop_cache_soup_conserves_blocks_under_all_policies() {
                             output_len: 1 + rng.below(32),
                             prefix_group: group,
                             prefix_len: plen,
+                            tier: SloClass::Standard,
                         },
                     );
                     next_id += 1;
@@ -616,6 +618,126 @@ fn prop_cache_soup_conserves_blocks_under_all_policies() {
                 unit.host_blocks_used() == 0,
                 "host tier not emptied at teardown"
             );
+        }
+        Ok(())
+    });
+}
+
+/// Single-LLM drain (the staged-migration teardown path) with the cache
+/// layer LIVE: refcounted prefix entries, eviction pressure, and
+/// host-parked contexts. `drain_llm` must dissolve the LLM's prefix
+/// index (each entry's blocks were charged to the quota exactly once,
+/// at creation — the refcounts on departing referents must not make it
+/// skip or double-free them), release the LLM's host-tier residents,
+/// and leave zero quota charged — while every OTHER LLM's holdings and
+/// index stay intact. This is the conservation law the whole-unit
+/// teardown test above cannot see: there, every index dies at once, so
+/// a drain that strands one LLM's shared entries would go unnoticed.
+#[test]
+fn prop_drain_llm_with_live_prefix_entries_strands_nothing() {
+    proplite::check(40, |rng: &mut Rng| {
+        for eviction in EvictionKind::policies() {
+            let n = 2 + rng.below(2);
+            let host_cap =
+                if rng.f64() < 0.5 { 0 } else { 1usize << 20 };
+            let mut unit = cache_unit(
+                n,
+                0.05 + rng.f64() * 0.25,
+                eviction,
+                host_cap,
+                rng,
+            );
+            let mut pending: Vec<(f64, u64)> = Vec::new();
+            let mut now = 0.0_f64;
+            let mut next_id = 1u64;
+            for _ in 0..rng.range(20, 100) {
+                if pending.is_empty() || rng.f64() < 0.5 {
+                    now += rng.f64() * 0.05;
+                    let llm = rng.below(n);
+                    // Dense prefix templates so shared entries (with
+                    // live refcounts) exist at drain time.
+                    let (group, plen) = if rng.f64() < 0.7 {
+                        let t = rng.below(3);
+                        (
+                            ((llm as u64 + 1) << 8) | (t as u64 + 1),
+                            32 * (t + 1),
+                        )
+                    } else {
+                        (0, 0)
+                    };
+                    unit.advance_time(now);
+                    unit.on_arrival(
+                        now,
+                        Request {
+                            id: next_id,
+                            llm,
+                            arrival: now,
+                            prompt_len: plen + 16 + rng.below(400),
+                            output_len: 1 + rng.below(32),
+                            prefix_group: group,
+                            prefix_len: plen,
+                            tier: SloClass::Standard,
+                        },
+                    );
+                    next_id += 1;
+                } else {
+                    let i = pending
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    let (t, job) = pending.swap_remove(i);
+                    now = now.max(t);
+                    unit.advance_time(now);
+                    unit.on_job_done(now, job);
+                }
+                pending.extend(unit.drain_started());
+            }
+            let llm = rng.below(n);
+            let pending_before = unit.llm_pending(llm);
+            let others_quota: Vec<usize> =
+                (0..n).map(|i| unit.quota_used(i)).collect();
+            let others_prefix: Vec<usize> =
+                (0..n).map(|i| unit.prefix_blocks(i)).collect();
+            let drained = unit.drain_llm(llm);
+            prop_assert!(
+                unit.quota_used(llm) == 0,
+                "{}: drain_llm stranded {} quota blocks",
+                eviction.name(),
+                unit.quota_used(llm)
+            );
+            prop_assert!(
+                unit.prefix_blocks(llm) == 0,
+                "{}: drain_llm stranded {} prefix blocks",
+                eviction.name(),
+                unit.prefix_blocks(llm)
+            );
+            // Everyone made it out (host-parked contexts ride along on
+            // top of the waiting + active count).
+            prop_assert!(
+                drained.len() >= pending_before,
+                "{}: drained {} of {pending_before} requests",
+                eviction.name(),
+                drained.len()
+            );
+            // Other LLMs untouched.
+            for i in (0..n).filter(|&i| i != llm) {
+                prop_assert!(
+                    unit.quota_used(i) == others_quota[i],
+                    "drain of llm {llm} changed llm {i}'s quota"
+                );
+                prop_assert!(
+                    unit.prefix_blocks(i) == others_prefix[i],
+                    "drain of llm {llm} changed llm {i}'s prefix index"
+                );
+            }
+            if let Some(msg) = unit.index_inconsistency() {
+                return Err(format!(
+                    "after drain_llm ({}): {msg}",
+                    eviction.name()
+                ));
+            }
         }
         Ok(())
     });

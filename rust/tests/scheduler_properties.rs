@@ -24,6 +24,7 @@ fn random_run(rng: &mut Rng) -> Result<(), String> {
             mean_prompt_len: 32.0 + rng.f64() * 256.0,
             mean_output_len: 16.0 + rng.f64() * 400.0,
             len_sigma: 0.6,
+            tier_weight: 1.0,
         })
         .collect();
     let mesh = [1usize, 2, 4][rng.below(3)];

