@@ -16,22 +16,28 @@
 //! Everything except the wall-clock latency columns is deterministic:
 //! two runs with the same config produce byte-identical
 //! `to_json(false)` / `to_markdown(false)` output (pinned by a test),
-//! which is what makes the table trustworthy evidence for the two
+//! which is what makes the table trustworthy evidence for the
 //! default-flip contracts: the minimum warm−cold SLO delta and parity
-//! verdict against [`WARM_PARITY_EPS`], and the worst staged−blackout
+//! verdict against [`WARM_PARITY_EPS`], the worst staged−blackout
 //! downtime delta (negative everywhere ⇒ staged strictly cheaper) that
-//! gates the `migration_mode` default.
+//! gates the `migration_mode` default, and — when fault axes are
+//! requested — the minimum recover−ignore SLO delta over the chaos
+//! cells (positive everywhere ⇒ failure-aware recovery pays for
+//! itself) that gates the `fault_recovery` default.
 //!
 //! [`ReplanOutcome::decision_ms`]: crate::simulator::ReplanOutcome
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use crate::bench::drift::{run_scenario_cfg, scenario_cluster};
+use crate::bench::drift::{
+    run_scenario_cfg, run_scenario_faults, scenario_cluster,
+};
 use crate::coordinator::migration::MigrationMode;
 use crate::coordinator::replan::PolicyKind;
 use crate::coordinator::{EngineConfig, ReplanConfig};
 use crate::memory::EvictionKind;
+use crate::simulator::FaultsAxis;
 use crate::util::json::Json;
 use crate::workload::{Scenario, ScenarioShape, SloClass};
 
@@ -65,6 +71,12 @@ pub struct AbConfig {
     pub eviction: EvictionKind,
     /// Host-DRAM tier capacity in blocks per unit (0 = no host tier).
     pub host_tier_blocks: usize,
+    /// Chaos schedules for the fault section: each axis runs every
+    /// scenario shape twice — faults ignored vs failure-aware recovery
+    /// — on identical streams and identical fault schedules.
+    /// [`FaultsAxis::None`] entries are skipped (nothing to inject).
+    /// Empty (the default) skips the section entirely.
+    pub faults: Vec<FaultsAxis>,
 }
 
 impl AbConfig {
@@ -83,6 +95,7 @@ impl AbConfig {
             slo_scale: 8.0,
             eviction: EvictionKind::None,
             host_tier_blocks: 0,
+            faults: Vec::new(),
         }
     }
 
@@ -166,6 +179,39 @@ pub struct AbTierCell {
     pub tier_p99: [Option<f64>; 3],
 }
 
+/// One run in the chaos section: a scenario served under a seeded
+/// fault schedule, either ignoring the faults (`mode == "ignore"`: the
+/// dead unit's work is lost and its LLMs stay dark) or with
+/// failure-aware recovery (`mode == "recover"`: emergency replan over
+/// the survivors, host-tier resume, KV-copy retries). Scored on SLO
+/// attainment over ARRIVED requests, so lost requests count against
+/// the run — a completions-only ratio would reward losing them.
+#[derive(Clone, Debug)]
+pub struct AbFaultCell {
+    pub shape: &'static str,
+    /// Fault axis ("single-unit" | "rolling" | ...).
+    pub faults: &'static str,
+    /// "ignore" | "recover".
+    pub mode: &'static str,
+    pub arrived: usize,
+    pub completed: usize,
+    /// Requests lost to faults (device KV destroyed, no recovery path).
+    pub lost: usize,
+    /// Meets-SLO completions / arrived, at the configured scale
+    /// (rounded 1e-4).
+    pub slo: f64,
+    /// Requests that resumed from surviving host-tier KV (no re-prefill).
+    pub kv_recovered: usize,
+    /// Prefill tokens re-run because device KV died with the unit.
+    pub tokens_recomputed: u64,
+    /// Mean time to restore service over failure episodes, seconds
+    /// (rounded 1e-4); `None` when no unit failed.
+    pub mttr_s: Option<f64>,
+    /// Worst per-LLM availability (1 − downtime/duration; rounded
+    /// 1e-4); `None` when the run tracked no LLMs.
+    pub availability_min: Option<f64>,
+}
+
 /// Everything one `ab` invocation measured.
 #[derive(Clone, Debug)]
 pub struct AbReport {
@@ -193,6 +239,13 @@ pub struct AbReport {
     /// strictly beats tier-blind FCFS on tier-weighted goodput — the
     /// gate for defaulting the tier engine on under overload.
     pub shed_goodput_delta_min: Option<f64>,
+    /// The chaos section (empty when no fault axes ran).
+    pub fault_cells: Vec<AbFaultCell>,
+    /// Minimum recover−ignore SLO delta over matched (shape, axis)
+    /// fault pairs: positive everywhere means failure-aware recovery
+    /// strictly beats ignoring the fault on every chaos cell — the
+    /// `fault_recovery` default-flip gate.
+    pub recovery_slo_delta_min: Option<f64>,
 }
 
 fn round(x: f64, unit: f64) -> f64 {
@@ -393,6 +446,63 @@ impl AbReport {
                 }
             }
         }
+        if !self.fault_cells.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n### chaos: seeded faults, ignore vs failure-aware \
+                 recovery (identical streams + schedules)"
+            );
+            let _ = writeln!(
+                out,
+                "| scenario | faults | mode | slo@arrived | lost | \
+                 kv-rec | tok-recomp | mttr(s) | min-avail | \
+                 done/arrived |"
+            );
+            let _ = writeln!(
+                out,
+                "|---|---|---|---|---|---|---|---|---|---|"
+            );
+            for c in &self.fault_cells {
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {} | {:.4} | {} | {} | {} | {} | {} | \
+                     {}/{} |",
+                    c.shape,
+                    c.faults,
+                    c.mode,
+                    c.slo,
+                    c.lost,
+                    c.kv_recovered,
+                    c.tokens_recomputed,
+                    fmt_opt(c.mttr_s, 3),
+                    fmt_opt(c.availability_min, 4),
+                    c.completed,
+                    c.arrived,
+                );
+            }
+            match self.recovery_slo_delta_min {
+                Some(d) => {
+                    let _ = writeln!(
+                        out,
+                        "\nfault recovery: min recover-ignore slo delta \
+                         {d:.4} => {}",
+                        if d > 0.0 {
+                            "RECOVERY WINS — fault_recovery is safe to \
+                             default on"
+                        } else {
+                            "NO WIN — keep fault_recovery opt-in"
+                        }
+                    );
+                }
+                None => {
+                    let _ = writeln!(
+                        out,
+                        "\nfault recovery: not measured (no \
+                         ignore/recover pair ran)"
+                    );
+                }
+            }
+        }
         out
     }
 
@@ -553,6 +663,59 @@ impl AbReport {
             })
             .collect();
 
+        let fault_cells: Vec<Json> = self
+            .fault_cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "shape".to_string(),
+                    Json::Str(c.shape.to_string()),
+                );
+                m.insert(
+                    "faults".to_string(),
+                    Json::Str(c.faults.to_string()),
+                );
+                m.insert(
+                    "mode".to_string(),
+                    Json::Str(c.mode.to_string()),
+                );
+                m.insert(
+                    "arrived".to_string(),
+                    Json::Num(c.arrived as f64),
+                );
+                m.insert(
+                    "completed".to_string(),
+                    Json::Num(c.completed as f64),
+                );
+                m.insert("lost".to_string(), Json::Num(c.lost as f64));
+                m.insert("slo".to_string(), Json::Num(c.slo));
+                m.insert(
+                    "kv_recovered".to_string(),
+                    Json::Num(c.kv_recovered as f64),
+                );
+                m.insert(
+                    "tokens_recomputed".to_string(),
+                    Json::Num(c.tokens_recomputed as f64),
+                );
+                m.insert(
+                    "mttr_s".to_string(),
+                    match c.mttr_s {
+                        Some(m) => Json::Num(m),
+                        None => Json::Null,
+                    },
+                );
+                m.insert(
+                    "availability_min".to_string(),
+                    match c.availability_min {
+                        Some(a) => Json::Num(a),
+                        None => Json::Null,
+                    },
+                );
+                Json::Obj(m)
+            })
+            .collect();
+
         let mut root = BTreeMap::new();
         root.insert("bench".to_string(), Json::Str("ab".to_string()));
         root.insert(
@@ -603,6 +766,14 @@ impl AbReport {
         root.insert(
             "shed_goodput_delta_min".to_string(),
             match self.shed_goodput_delta_min {
+                Some(d) => Json::Num(d),
+                None => Json::Null,
+            },
+        );
+        root.insert("fault_cells".to_string(), Json::Arr(fault_cells));
+        root.insert(
+            "recovery_slo_delta_min".to_string(),
+            match self.recovery_slo_delta_min {
                 Some(d) => Json::Num(d),
                 None => Json::Null,
             },
@@ -673,6 +844,30 @@ fn shed_goodput_delta_min(cells: &[AbTierCell]) -> Option<f64> {
             .find(|c| c.mode == "fcfs" && c.shape == t.shape);
         if let Some(base) = base {
             let d = t.goodput - base.goodput;
+            min = Some(match min {
+                Some(m) => m.min(d),
+                None => d,
+            });
+        }
+    }
+    min
+}
+
+/// Minimum recover−ignore SLO delta over matched (shape, faults)
+/// chaos pairs. Unlike [`warm_delta_min`], empty cells are NOT
+/// skipped: fault cells score over arrivals, so a run that completed
+/// nothing is genuine evidence (everything was lost), not a vacuous
+/// ratio.
+fn recovery_slo_delta_min(cells: &[AbFaultCell]) -> Option<f64> {
+    let mut min: Option<f64> = None;
+    for r in cells.iter().filter(|c| c.mode == "recover") {
+        let base = cells.iter().find(|c| {
+            c.mode == "ignore"
+                && c.shape == r.shape
+                && c.faults == r.faults
+        });
+        if let Some(base) = base {
+            let d = r.slo - base.slo;
             min = Some(match min {
                 Some(m) => m.min(d),
                 None => d,
@@ -832,9 +1027,76 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
             });
         }
     }
+    // The chaos section: each (shape, fault axis) pair runs the same
+    // stream under the same seeded fault schedule twice, differing in
+    // nothing but `fault_recovery`. The replan check period sits past
+    // the horizon so no periodic replan fires — the emergency path is
+    // the only thing the recover arm adds.
+    let mut fault_cells = Vec::new();
+    for &shape in &cfg.shapes {
+        let scenario = Scenario {
+            duration: cfg.duration,
+            seed: cfg.seed,
+            ..Scenario::new(shape)
+        };
+        let data = scenario.build();
+        let arrived = data.requests.len();
+        for &axis in &cfg.faults {
+            if axis == FaultsAxis::None {
+                continue;
+            }
+            for (mode, recover) in [("ignore", false), ("recover", true)]
+            {
+                let rcfg = ReplanConfig {
+                    check_period: cfg.duration + 1.0,
+                    migration_mode: MigrationMode::Staged,
+                    fault_recovery: recover,
+                    ..Default::default()
+                };
+                let Some(report) = run_scenario_faults(
+                    &scenario,
+                    &data,
+                    &cluster,
+                    engine,
+                    Some(rcfg),
+                    axis,
+                ) else {
+                    continue;
+                };
+                let completed = report.eval.records.len();
+                let slo = if arrived > 0 {
+                    report.eval.slo_attainment(cfg.slo_scale)
+                        * completed as f64
+                        / arrived as f64
+                } else {
+                    0.0
+                };
+                let f = &report.fault;
+                fault_cells.push(AbFaultCell {
+                    shape: shape.name(),
+                    faults: axis.name(),
+                    mode,
+                    arrived,
+                    completed,
+                    lost: f.lost_requests,
+                    slo: round(slo, 1e-4),
+                    kv_recovered: f.kv_recovered,
+                    tokens_recomputed: f.tokens_recomputed,
+                    mttr_s: f.mttr_s.map(|m| round(m, 1e-4)),
+                    availability_min: f
+                        .availability
+                        .iter()
+                        .copied()
+                        .reduce(f64::min)
+                        .map(|a| round(a, 1e-4)),
+                });
+            }
+        }
+    }
     let warm_delta = warm_delta_min(&cells);
     let (staged_dt, staged_slo) = staged_deltas(&cells);
     let shed_delta = shed_goodput_delta_min(&tier_cells);
+    let recovery_delta = recovery_slo_delta_min(&fault_cells);
     AbReport {
         duration: cfg.duration,
         seed: cfg.seed,
@@ -846,6 +1108,8 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
         staged_downtime_delta_max: staged_dt,
         staged_slo_delta_min: staged_slo,
         shed_goodput_delta_min: shed_delta,
+        fault_cells,
+        recovery_slo_delta_min: recovery_delta,
     }
 }
 
@@ -865,6 +1129,7 @@ mod tests {
             policies: vec![PolicyKind::Threshold, PolicyKind::Forecast],
             warm_modes: vec![false, true],
             migration_modes: MigrationMode::all().to_vec(),
+            faults: vec![FaultsAxis::None, FaultsAxis::SingleUnit],
             ..AbConfig::smoke()
         };
         let a = run_ab(&cfg);
@@ -881,12 +1146,16 @@ mod tests {
         assert_eq!(a.baselines.len(), 2);
         // The tier section ran its overload shape in both modes.
         assert_eq!(a.tier_cells.len(), 2, "tier: {:?}", a.tier_cells);
+        // The chaos section ran each shape under the one real axis in
+        // both arms; the None axis injected nothing and added no cells.
+        assert_eq!(a.fault_cells.len(), 4, "fault: {:?}", a.fault_cells);
         // The verdicts are measured, whichever way they land.
         assert!(a.warm_delta_min.is_some());
         assert!(a.warm_parity().is_some());
         assert!(a.staged_downtime_delta_max.is_some());
         assert!(a.staged_slo_delta_min.is_some());
         assert!(a.shed_goodput_delta_min.is_some());
+        assert!(a.recovery_slo_delta_min.is_some());
     }
 
     fn mk_cell(
@@ -1002,12 +1271,51 @@ mod tests {
             staged_downtime_delta_max: None,
             staged_slo_delta_min: None,
             shed_goodput_delta_min: None,
+            fault_cells: vec![],
+            recovery_slo_delta_min: None,
         };
         let md = report.to_markdown(false);
         assert!(!md.contains("NaN"), "markdown leaked a NaN:\n{md}");
         let js = report.to_json(false).to_string();
         assert!(!js.contains("NaN"), "json leaked a NaN:\n{js}");
         assert!(js.contains("\"p99_latency_s\":null"), "{js}");
+    }
+
+    #[test]
+    fn recovery_slo_delta_matches_hand_computation() {
+        let mk = |shape, faults, mode, slo| AbFaultCell {
+            shape,
+            faults,
+            mode,
+            arrived: 100,
+            completed: 80,
+            lost: 20,
+            slo,
+            kv_recovered: 3,
+            tokens_recomputed: 640,
+            mttr_s: Some(4.0),
+            availability_min: Some(0.9),
+        };
+        let cells = vec![
+            mk("drift", "single-unit", "ignore", 0.50),
+            mk("drift", "single-unit", "recover", 0.80),
+            mk("drift", "rolling", "ignore", 0.40),
+            mk("drift", "rolling", "recover", 0.45),
+        ];
+        // min(0.80-0.50, 0.45-0.40) = 0.05.
+        let d = recovery_slo_delta_min(&cells).expect("two pairs");
+        assert!((d - 0.05).abs() < 1e-12, "d={d}");
+        // An unpaired recover cell contributes nothing.
+        assert!(recovery_slo_delta_min(&cells[1..2]).is_none());
+        // Unlike the warm/staged verdicts, an empty cell still pairs:
+        // completing nothing under faults is evidence, not a vacuous
+        // ratio.
+        let mut dead = mk("drift", "single-unit", "ignore", 0.0);
+        dead.completed = 0;
+        let cells =
+            vec![dead, mk("drift", "single-unit", "recover", 0.7)];
+        let d = recovery_slo_delta_min(&cells).expect("pair");
+        assert!((d - 0.7).abs() < 1e-12, "d={d}");
     }
 
     #[test]

@@ -5,7 +5,9 @@
 use crate::config::{ClusterSpec, WorkloadSpec};
 use crate::coordinator::{EngineConfig, ReplanConfig};
 use crate::metrics::Evaluation;
-use crate::simulator::{DynamicReport, DynamicSimulation};
+use crate::simulator::{
+    DynamicReport, DynamicSimulation, FaultPlan, FaultsAxis,
+};
 use crate::workload::{Request, Scenario, ScenarioData, ScenarioShape};
 
 /// Outcome of one scenario run (static or adaptive).
@@ -72,9 +74,30 @@ pub fn run_scenario_cfg(
     cfg: EngineConfig,
     replan: Option<ReplanConfig>,
 ) -> Option<DynamicReport> {
+    run_scenario_faults(
+        scenario,
+        data,
+        cluster,
+        cfg,
+        replan,
+        FaultsAxis::None,
+    )
+}
+
+/// Like [`run_scenario_cfg`], with a chaos schedule injected: the
+/// `faults` axis is materialized with the scenario's own seed, so one
+/// (scenario, axis) pair names a fully reproducible fault run.
+pub fn run_scenario_faults(
+    scenario: &Scenario,
+    data: &ScenarioData,
+    cluster: &ClusterSpec,
+    cfg: EngineConfig,
+    replan: Option<ReplanConfig>,
+    faults: FaultsAxis,
+) -> Option<DynamicReport> {
     let specs = scenario.model_specs();
     let adaptive = replan.is_some();
-    let sim = DynamicSimulation::new(
+    let mut sim = DynamicSimulation::new(
         &specs,
         &data.planning_workloads,
         cluster,
@@ -82,6 +105,9 @@ pub fn run_scenario_cfg(
         replan.unwrap_or_default(),
         adaptive,
     )?;
+    if let Some(plan) = faults.plan(scenario.seed, scenario.duration) {
+        sim = sim.with_faults(&plan);
+    }
     Some(sim.run(&data.requests, scenario.duration))
 }
 
@@ -110,6 +136,27 @@ pub fn run_trace(
     engine: EngineConfig,
     replan: Option<ReplanConfig>,
 ) -> Option<DynamicReport> {
+    run_trace_faults(
+        requests,
+        duration,
+        cluster,
+        engine,
+        replan,
+        &FaultPlan::default(),
+    )
+}
+
+/// Like [`run_trace`], replaying an explicit fault schedule alongside
+/// the requests — the v4-trace path, where the chaos schedule was
+/// frozen into the file next to the workload it hit.
+pub fn run_trace_faults(
+    requests: &[Request],
+    duration: f64,
+    cluster: &ClusterSpec,
+    engine: EngineConfig,
+    replan: Option<ReplanConfig>,
+    faults: &FaultPlan,
+) -> Option<DynamicReport> {
     let n_llms = requests.iter().map(|r| r.llm + 1).max()?;
     let window = (0.30 * duration).max(1e-9);
     let mut counts = vec![0usize; n_llms];
@@ -133,7 +180,8 @@ pub fn run_trace(
         engine,
         replan.unwrap_or_default(),
         adaptive,
-    )?;
+    )?
+    .with_faults(faults);
     Some(sim.run(requests, duration))
 }
 

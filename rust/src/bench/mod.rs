@@ -14,8 +14,9 @@ pub mod perf;
 pub use ab::{run_ab, AbConfig, AbReport, WARM_PARITY_EPS};
 pub use cache::{run_bench_cache, CacheCell, CacheConfig, CacheReport};
 pub use drift::{
-    fig_drift, run_scenario, run_scenario_cfg, run_scenario_on, run_trace,
-    scenario_cluster, ScenarioResult,
+    fig_drift, run_scenario, run_scenario_cfg, run_scenario_faults,
+    run_scenario_on, run_trace, run_trace_faults, scenario_cluster,
+    ScenarioResult,
 };
 pub use experiments::*;
 pub use perf::{run_bench_perf, PerfConfig, PerfReport};

@@ -4,6 +4,10 @@
 //! whole evaluation; `scenario` drives the dynamic-workload engine with
 //! online re-placement on or off; `serve` drives the real PJRT path.
 
+// This module parses hostile input (argv, trace files): every failure
+// must surface as a typed error, never a panic.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use anyhow::Result;
 
 use crate::bench::figures;
@@ -11,6 +15,7 @@ use crate::coordinator::estimator::Objective;
 use crate::coordinator::migration::MigrationMode;
 use crate::coordinator::replan::PolicyKind;
 use crate::memory::EvictionKind;
+use crate::simulator::FaultsAxis;
 use crate::workload::TierMix;
 
 fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
@@ -114,6 +119,10 @@ struct SimArgs {
     tier_aware: Option<bool>,
     /// Admission control / load shedding under overload (`--shed`).
     shed: Option<bool>,
+    /// Seeded chaos schedule injected into the run (`--faults`).
+    faults: Option<FaultsAxis>,
+    /// Emergency replan on unit failure (`--fault-recovery`).
+    fault_recovery: Option<bool>,
 }
 
 impl SimArgs {
@@ -168,6 +177,15 @@ impl SimArgs {
             })?),
             None => None,
         };
+        let faults = match flag_path(args, "--faults")? {
+            Some(f) => Some(FaultsAxis::parse(f).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown fault axis `{f}` (expected none | \
+                     single-unit | rolling | flaky-link | straggler)"
+                )
+            })?),
+            None => None,
+        };
         Ok(SimArgs {
             smoke: args.iter().any(|a| a == "--smoke"),
             duration: flag_opt(args, "--duration")?,
@@ -182,6 +200,8 @@ impl SimArgs {
             objective,
             tier_aware: flag_switch(args, "--tier-aware")?,
             shed: flag_switch(args, "--shed")?,
+            faults,
+            fault_recovery: flag_switch(args, "--fault-recovery")?,
         })
     }
 }
@@ -349,9 +369,13 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
 /// Adaptation-policy A/B harness: every replan policy × the dynamic
 /// scenario suite on identical request streams, with the warm-start
 /// parity verdict. `--smoke` shortens the runs for CI; `--policy P`
-/// restricts the grid to one policy; `--out FILE` writes the AB_N.json
-/// record (decision-latency fields are host-dependent, everything else
-/// is deterministic in the config).
+/// restricts the grid to one policy; `--faults F` adds the chaos
+/// section (ignore vs failure-aware recovery under seeded fault
+/// schedules); `--out FILE` writes the AB_N.json record
+/// (decision-latency fields are host-dependent, everything else is
+/// deterministic in the config); `--strip-timing` drops those
+/// host-dependent fields so two same-config runs emit byte-identical
+/// output (what the CI determinism check diffs).
 fn ab_cmd(args: &[String]) -> Result<()> {
     use crate::bench::ab::{run_ab, AbConfig};
 
@@ -376,6 +400,9 @@ fn ab_cmd(args: &[String]) -> Result<()> {
     if let Some(h) = sim.host_tier_blocks {
         cfg.host_tier_blocks = h;
     }
+    if let Some(f) = sim.faults {
+        cfg.faults = vec![f];
+    }
     let shapes: Vec<&str> =
         cfg.shapes.iter().map(|s| s.name()).collect();
     let policies: Vec<&str> =
@@ -398,10 +425,20 @@ fn ab_cmd(args: &[String]) -> Result<()> {
         cfg.host_tier_blocks,
         overloads.join(", ")
     );
+    if !cfg.faults.is_empty() {
+        let faults: Vec<&str> =
+            cfg.faults.iter().map(|f| f.name()).collect();
+        println!(
+            "ab: chaos section — ignore vs failure-aware recovery \
+             under [{}]",
+            faults.join(", ")
+        );
+    }
+    let timing = !args.iter().any(|a| a == "--strip-timing");
     let report = run_ab(&cfg);
-    print!("{}", report.to_markdown(true));
+    print!("{}", report.to_markdown(timing));
     if let Some(path) = flag_path(args, "--out")? {
-        let mut text = report.to_json(true).to_string();
+        let mut text = report.to_json(timing).to_string();
         text.push('\n');
         std::fs::write(path, text)
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
@@ -467,8 +504,13 @@ fn bench_cache_cmd(args: &[String]) -> Result<()> {
 /// Dynamic-workload scenario runner: non-stationary arrivals against the
 /// MuxServe engine, with online re-placement on or off.
 fn scenario_cmd(args: &[String]) -> Result<()> {
-    use crate::bench::drift::{run_scenario_cfg, scenario_cluster};
+    use crate::bench::drift::{
+        run_scenario_faults, run_trace_faults, scenario_cluster,
+    };
     use crate::coordinator::{EngineConfig, ReplanConfig};
+    use crate::simulator::{
+        trace_with_faults, trace_with_faults_from_str,
+    };
     use crate::workload::{Scenario, ScenarioShape, SloClass};
 
     let sim = SimArgs::parse(args)?;
@@ -524,14 +566,20 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         policy,
         migration_mode,
         objective: sim.objective.unwrap_or(Objective::Throughput),
+        fault_recovery: sim.fault_recovery.unwrap_or(false),
         ..Default::default()
     });
+    let fault_axis = sim.faults.unwrap_or(FaultsAxis::None);
 
     let (report, arrived) = if let Some(path) = flag_path(args, "--replay-trace")? {
-        // Replay path: a frozen trace supplies the stream; planning
-        // rates are estimated from its initial window, as a
-        // history-based static optimizer would.
-        let requests = crate::workload::read_trace_file(path)?;
+        // Replay path: a frozen trace supplies the stream (and, for v4
+        // traces, the chaos schedule that hit it); planning rates are
+        // estimated from its initial window, as a history-based static
+        // optimizer would.
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let (requests, trace_faults) = trace_with_faults_from_str(&text)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
         anyhow::ensure!(!requests.is_empty(), "trace `{path}` is empty");
         let trace_end = requests
             .iter()
@@ -552,16 +600,23 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         } else {
             (trace_end + 5.0).ceil()
         };
+        // The trace's embedded schedule replays by default; an explicit
+        // --faults regenerates one from the axis over this horizon.
+        let fault_plan = match sim.faults {
+            Some(axis) => axis.plan(scenario.seed, duration).unwrap_or_default(),
+            None => trace_faults,
+        };
         println!(
             "replaying {} requests from {path} for {duration:.0}s on {} \
-             GPUs, re-placement {}",
+             GPUs, re-placement {}, {} fault events",
             requests.len(),
             cluster.total_gpus(),
-            if adaptive { "ON" } else { "OFF" }
+            if adaptive { "ON" } else { "OFF" },
+            fault_plan.events.len()
         );
         let n = requests.len();
-        let report = crate::bench::drift::run_trace(
-            &requests, duration, &cluster, engine, replan,
+        let report = run_trace_faults(
+            &requests, duration, &cluster, engine, replan, &fault_plan,
         )
         .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
         (report, n)
@@ -582,17 +637,33 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         }
 
         // Materialize the workload once; the run and the optional trace
-        // export share the exact same stream.
+        // export share the exact same stream. The fault plan is seeded
+        // by the scenario seed, so the run and the export agree.
         let data = scenario.build();
-        // Optionally freeze the workload for later --replay-trace runs.
+        let fault_plan = fault_axis
+            .plan(scenario.seed, scenario.duration)
+            .unwrap_or_default();
+        if !fault_plan.events.is_empty() {
+            println!(
+                "faults `{}`: {} events scheduled",
+                fault_axis.name(),
+                fault_plan.events.len()
+            );
+        }
+        // Optionally freeze the workload (plus its chaos schedule —
+        // with no faults this writes a plain v3 trace) for later
+        // --replay-trace runs.
         if let Some(path) = flag_path(args, "--export-trace")? {
-            crate::workload::write_trace_file(path, &data.requests)?;
+            let text = trace_with_faults(&data.requests, &fault_plan);
+            std::fs::write(path, text)
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
             println!("trace written to {path}");
         }
         let arrived = data.requests.len();
-        let report =
-            run_scenario_cfg(&scenario, &data, &cluster, engine, replan)
-                .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
+        let report = run_scenario_faults(
+            &scenario, &data, &cluster, engine, replan, fault_axis,
+        )
+        .ok_or_else(|| anyhow::anyhow!("no feasible placement"))?;
         (report, arrived)
     };
 
@@ -649,6 +720,35 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
             c.swaps_in,
             c.recompute_preempts,
             c.host_peak_blocks
+        );
+    }
+    let f = &report.fault;
+    if f.injected > 0 {
+        let opt_s = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.2}s"),
+            None => "-".to_string(),
+        };
+        println!(
+            "faults: {} injected ({} unit failures, {} repairs)  lost \
+             {}  recovered {} ({} via host KV)  {} tokens recomputed  \
+             copy retries/fallbacks {}/{}",
+            f.injected,
+            f.unit_failures,
+            f.repairs,
+            f.lost_requests,
+            f.recovered_requests,
+            f.kv_recovered,
+            f.tokens_recomputed,
+            f.copy_retries,
+            f.copy_fallbacks
+        );
+        let avail: Vec<String> =
+            f.availability.iter().map(|a| format!("{a:.3}")).collect();
+        println!(
+            "        mttr {}  slo-reattain {}  availability [{}]",
+            opt_s(f.mttr_s),
+            opt_s(f.slo_reattain_s),
+            avail.join(", ")
         );
     }
     if adaptive {
@@ -791,6 +891,9 @@ fn print_help() {
          batch-heavy]\n  \
          \x20        [--objective throughput|goodput] [--tier-aware \
          on|off] [--shed on|off]\n  \
+         \x20        [--faults none|single-unit|rolling|flaky-link|\
+         straggler]\n  \
+         \x20        [--fault-recovery on|off]\n  \
          \x20                            dynamic workload (stationary | \
          diurnal | bursty |\n  \
          \x20                            flash-crowd | drift | overcommit \
@@ -835,23 +938,36 @@ fn print_help() {
          never a higher\n  \
          \x20                            tier while a lower one holds \
          capacity),\n  \
+         \x20                            --faults injects a seeded chaos \
+         schedule (unit\n  \
+         \x20                            failures, link degradation, \
+         stragglers),\n  \
+         \x20                            --fault-recovery on fires an \
+         emergency replan\n  \
+         \x20                            over the survivors when a unit \
+         dies,\n  \
          \x20                            --export-trace FILE freezes the \
-         stream,\n  \
+         stream (v4 when\n  \
+         \x20                            faults are on),\n  \
          \x20                            --replay-trace FILE re-runs a \
          frozen stream\n  \
+         \x20                            (with its recorded faults)\n  \
          ab [--smoke] [--policy P] [--migration M] [--out FILE] \
          [--duration S]\n  \
-         \x20   [--seed N] [--eviction E] [--host-tier-blocks N]\n  \
+         \x20   [--seed N] [--eviction E] [--host-tier-blocks N] \
+         [--faults F]\n  \
+         \x20   [--strip-timing]\n  \
          \x20                            adaptation-policy A/B harness: \
          every replan\n  \
          \x20                            policy x scenario x warm x \
          migration mode on\n  \
          \x20                            identical streams, with the \
          warm-start parity,\n  \
-         \x20                            staged-vs-blackout, and \
-         tiered-overload goodput\n  \
-         \x20                            verdicts (per-tier goodput / \
-         shed / p99 columns)\n  \
+         \x20                            staged-vs-blackout, \
+         tiered-overload goodput,\n  \
+         \x20                            and (with --faults) \
+         recovery-vs-ignore chaos\n  \
+         \x20                            verdicts\n  \
          bench-cache [--smoke] [--eviction E] [--host-tier-blocks N] \
          [--out FILE]\n  \
          \x20           [--shared-prefix F] [--duration S] [--seed N]\n  \

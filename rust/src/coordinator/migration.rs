@@ -217,6 +217,31 @@ pub fn plan_migration(
     cost: &CostModel,
     cfg: &ReplanConfig,
 ) -> MigrationPlan {
+    plan_migration_dead(
+        old,
+        new,
+        specs,
+        live,
+        cost,
+        cfg,
+        &vec![false; old.units.len()],
+    )
+}
+
+/// [`plan_migration`] over a partially-failed source: `dead[i]` marks
+/// old units whose hardware is gone. A dead unit is never "kept" (its
+/// shape may survive in the new placement, but on different GPUs with
+/// none of its state), and its members are priced as forced recompute —
+/// a dead source has no KV to copy.
+pub fn plan_migration_dead(
+    old: &Placement,
+    new: &Placement,
+    specs: &[ModelSpec],
+    live: &[LiveLlm],
+    cost: &CostModel,
+    cfg: &ReplanConfig,
+    dead: &[bool],
+) -> MigrationPlan {
     // Match identical units between the placements (canonical keys, so
     // order shuffles match). Duplicate keys cannot collide on LLM ids —
     // an LLM is placed exactly once — but handle them anyway.
@@ -227,6 +252,10 @@ pub fn plan_migration(
     let mut kept: Vec<(usize, usize)> = Vec::new();
     let mut torn_down: Vec<usize> = Vec::new();
     for (i, u) in old.units.iter().enumerate() {
+        if dead.get(i).copied().unwrap_or(false) {
+            torn_down.push(i);
+            continue;
+        }
         let twin = by_key
             .get_mut(&unit_key(u))
             .and_then(|v| if v.is_empty() { None } else { Some(v.remove(0)) });
@@ -272,11 +301,13 @@ pub fn plan_migration(
                     new.units[to].mesh_gpus,
                 )
             };
-            let method = if st.kv_blocks > 0 && copy_s <= recompute_s {
-                MoveMethod::KvCopy
-            } else {
-                MoveMethod::Recompute
-            };
+            let src_dead = dead.get(i).copied().unwrap_or(false);
+            let method =
+                if !src_dead && st.kv_blocks > 0 && copy_s <= recompute_s {
+                    MoveMethod::KvCopy
+                } else {
+                    MoveMethod::Recompute
+                };
             // The op's window: weight reload plus — only on the copy
             // path — the transfer itself. Recompute happens *after*
             // resume as ordinary prefill work, so it lengthens measured
@@ -456,6 +487,48 @@ mod tests {
                 _ => unreachable!(),
             }
         }
+    }
+
+    #[test]
+    fn dead_source_is_never_kept_and_forces_recompute() {
+        let (specs, wl, est, cost) = setup(&[4.0, 2.0, 1.0, 0.5]);
+        let cluster = ClusterSpec::new(1, 4);
+        let p = muxserve_placement(&specs, &wl, &cluster, &est).unwrap();
+        if p.units.is_empty() {
+            return;
+        }
+        // Identical placements: without the dead mask this diffs to an
+        // empty plan. Killing old unit 0 must evict it from the kept
+        // set and move its members — priced as recompute even though a
+        // same-shape twin exists and copy would be trivially cheap.
+        let mut dead = vec![false; p.units.len()];
+        dead[0] = true;
+        let live = flat_live(specs.len(), 5000, 8);
+        let cfg = ReplanConfig::default();
+        let plan = plan_migration_dead(
+            &p, &p, &specs, &live, &cost, &cfg, &dead,
+        );
+        assert!(
+            plan.kept.iter().all(|&(i, _)| i != 0),
+            "dead unit kept: {:?}",
+            plan.kept
+        );
+        let dead_llms: Vec<usize> =
+            p.units[0].members.iter().map(|&(llm, _)| llm).collect();
+        assert_eq!(plan.ops.len(), dead_llms.len());
+        for op in &plan.ops {
+            assert!(dead_llms.contains(&op.llm));
+            assert_eq!(
+                op.method,
+                MoveMethod::Recompute,
+                "dead source must recompute (llm {})",
+                op.llm
+            );
+        }
+        // The all-false mask is exactly plan_migration: empty diff.
+        let base =
+            plan_migration(&p, &p, &specs, &live, &cost, &cfg);
+        assert!(base.is_empty());
     }
 
     #[test]

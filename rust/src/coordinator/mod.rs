@@ -13,12 +13,13 @@ pub mod scheduler;
 
 pub use estimator::{Estimator, Objective, UnitMember};
 pub use migration::{
-    plan_migration, LiveLlm, MigrationMode, MigrationPlan, MoveMethod,
-    MoveOp,
+    plan_migration, plan_migration_dead, LiveLlm, MigrationMode,
+    MigrationPlan, MoveMethod, MoveOp,
 };
 pub use placement::{
     enumerate_mesh_groups, enumerate_partitions, memory_greedy_placement,
-    muxserve_placement, muxserve_placement_cached, muxserve_placement_warm,
+    muxserve_placement, muxserve_placement_cached,
+    muxserve_placement_capped, muxserve_placement_warm,
     parallel_candidates, spatial_placement, Placement, PlacementCache,
     PlacementUnit, ParallelCandidate,
 };

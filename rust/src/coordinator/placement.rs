@@ -336,6 +336,48 @@ pub fn muxserve_placement_cached(
     best
 }
 
+/// Alg. 1 over a *degraded* cluster: the search only spends `gpu_cap`
+/// GPUs (≤ the cluster total), leaving the rest — failed hardware —
+/// unplaced. The emergency fault replan uses this to re-place every LLM
+/// over the surviving GPU set; `gpu_cap == total_gpus()` degenerates to
+/// the full search. Returns `None` when the surviving set cannot hold
+/// every LLM (the caller falls back to degraded serving without the
+/// dead unit's LLMs).
+pub fn muxserve_placement_capped(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+    gpu_cap: usize,
+) -> Option<Placement> {
+    if gpu_cap == 0 {
+        return None;
+    }
+    let mut cache = PlacementCache::default();
+    let cands = parallel_candidates(specs, workloads, cluster, est);
+    let order = demand_ordered((0..specs.len()).collect(), specs, workloads);
+    let max_min_tp = specs
+        .iter()
+        .map(|s| s.min_tp(cluster.gpu.mem_bytes, 0.3))
+        .max()
+        .unwrap_or(1);
+    let total = gpu_cap.min(cluster.total_gpus());
+    let mut best: Option<Placement> = None;
+    for group in enumerate_partitions(total, &cluster.mesh_sizes()) {
+        if *group.iter().max().unwrap_or(&0) < max_min_tp {
+            continue;
+        }
+        if let Some(p) = greedy_place_on_group(
+            &group, &order, specs, workloads, &cands, est, &mut cache,
+        ) {
+            if best.as_ref().map_or(true, |b| p.est_total > b.est_total) {
+                best = Some(p);
+            }
+        }
+    }
+    best
+}
+
 /// Incremental Alg. 1, warm-started from `prev` — see the module docs for
 /// the staleness/fallback contract. `dirty[i]` marks LLMs whose observed
 /// rate crossed the replan thresholds (see

@@ -156,6 +156,15 @@ pub struct ReplanConfig {
     /// throughput (the paper's Eq. 1, default) or tier-weighted goodput
     /// (see [`Objective::Goodput`]).
     pub objective: Objective,
+    /// React to injected unit failures with an *emergency replan* over
+    /// the surviving GPU set (and again at repair), re-routing victims
+    /// through recompute / host-tier resume — see
+    /// [`crate::simulator::faults`]. Off by default: the no-reaction
+    /// coordinator is the honest chaos baseline, and the default flips
+    /// only when a committed `AB_N.json` shows
+    /// `recovery_slo_delta_min > 0` on every fault cell (the same
+    /// mechanized-gate pattern as warm-start / staged — see ROADMAP).
+    pub fault_recovery: bool,
 }
 
 impl Default for ReplanConfig {
@@ -180,6 +189,7 @@ impl Default for ReplanConfig {
             link_bandwidth: 64e9,
             op_overhead: 0.25,
             objective: Objective::Throughput,
+            fault_recovery: false,
         }
     }
 }

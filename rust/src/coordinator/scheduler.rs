@@ -58,6 +58,11 @@ pub struct EngineConfig {
     /// instead of queueing everything into a deadline massacre. Off =
     /// never shed on arrival (the pre-tier behavior).
     pub shed: bool,
+    /// Validation mode: cross-check every unit's redundant scheduler
+    /// indices (`UnitSim::index_inconsistency`) at each quota-adapt
+    /// tick and fault event, panicking on the first divergence. Costs
+    /// a full index walk per check; off in production presets.
+    pub validate: bool,
 }
 
 impl EngineConfig {
@@ -75,6 +80,7 @@ impl EngineConfig {
             host_tier_blocks: 0,
             tier_aware: false,
             shed: false,
+            validate: false,
         }
     }
 

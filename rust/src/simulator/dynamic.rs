@@ -50,23 +50,34 @@
 
 use std::collections::{BinaryHeap, HashMap};
 
-use super::unit::{CacheStats, ResumedRequest};
+use super::faults::{FaultKind, FaultPlan, FaultStats};
+use super::unit::{CacheStats, CrashSalvage, ResumedRequest};
 use super::{Event, EventKind, Simulation, UnitSim};
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
 use crate::coordinator::migration::{
-    plan_migration, unit_key, LiveLlm, MigrationMode, MigrationPlan,
-    MoveMethod, UnitKey,
+    plan_migration, plan_migration_dead, unit_key, LiveLlm, MigrationMode,
+    MigrationPlan, MoveMethod, UnitKey,
 };
 use crate::coordinator::replan::{
     ReplanConfig, ReplanController, ReplanDecision, SloWindow,
 };
 use crate::coordinator::{
-    muxserve_placement, muxserve_placement_warm, EngineConfig, Placement,
+    muxserve_placement, muxserve_placement_capped, muxserve_placement_warm,
+    EngineConfig, Placement,
 };
 use crate::coordinator::estimator::Estimator;
 use crate::costmodel::CostModel;
 use crate::metrics::{Evaluation, RequestRecord};
 use crate::workload::Request;
+
+/// KV-copy deliveries give up after this many fault-injected failures
+/// and fall back to recompute delivery.
+const MAX_COPY_ATTEMPTS: u32 = 3;
+/// Exponential backoff base for a failed KV copy, seconds
+/// (0.25, 0.5, 1.0, ... capped below).
+const COPY_RETRY_BASE_S: f64 = 0.25;
+/// Backoff ceiling for failed KV copies, seconds.
+const COPY_RETRY_CAP_S: f64 = 2.0;
 
 /// One re-placement decision, for reporting and assertions.
 #[derive(Clone, Debug)]
@@ -127,6 +138,24 @@ pub struct DynamicReport {
     /// Requests shed by admission control, by `SloClass::code()`, merged
     /// across every unit that ever served (banked like `cache`).
     pub shed: [u64; 3],
+    /// Fault-injection section: zeroed (and `availability` all-1.0)
+    /// when the run had no fault plan.
+    pub fault: FaultStats,
+    /// Per global LLM: arrivals that entered the engine.
+    pub admitted: Vec<u64>,
+    /// Per global LLM: requests permanently lost — no serving unit at
+    /// routing time, or destroyed with a failed unit and never
+    /// recovered.
+    pub lost: Vec<u64>,
+    /// Per global LLM: requests still in the system at the horizon
+    /// (queued, decoding, host-parked, held, or in an undelivered
+    /// migration payload). Closes the accounting identity
+    /// `completed + shed + dropped + lost + in_flight == admitted`.
+    pub in_flight: Vec<u64>,
+    /// Per global LLM: sheds (same events as `shed`, other axis).
+    pub shed_llm: Vec<u64>,
+    /// Per global LLM: starvation drops plus stranded migration strays.
+    pub dropped_llm: Vec<u64>,
 }
 
 /// Placement shape up to member order and fine sm jitter: mesh size plus
@@ -148,6 +177,38 @@ struct StagedDelivery {
     /// blocks at the destination) instead of plain re-admission.
     kv_copy: bool,
     payload: Vec<ResumedRequest>,
+    /// Fault-injected copy failures consumed by this delivery so far
+    /// (KV copies retry with backoff before falling back to recompute).
+    attempts: u32,
+    /// This payload re-enters service after a unit failure: count it
+    /// into the fault-recovery receipts, and land KV survivors in the
+    /// destination's host tier (their KV is self-contained — they
+    /// resume through the ordinary swap-in path with no re-prefill).
+    recovered: bool,
+}
+
+/// Scheduled consequence of an injected fault, indexed by
+/// `EventKind::Fault` events.
+#[derive(Clone, Copy, Debug)]
+enum FaultAction {
+    /// A `FaultPlan` entry fires.
+    Inject(FaultKind),
+    /// A failed unit's GPUs rejoin the pool.
+    Repair { gpus: usize },
+    /// A link-degradation window ends (remove this factor).
+    LinkRestore { factor: f64 },
+    /// A straggler window ends: restore the unit addressed by this
+    /// stable uid (a no-op if it was torn down meanwhile).
+    StragglerEnd { uid: u64 },
+}
+
+/// One unit failure, for MTTR: service counts as restored when every
+/// LLM the failure took down is serving again.
+#[derive(Clone, Debug)]
+struct FailureEpisode {
+    fail: f64,
+    restored: Option<f64>,
+    llms: Vec<usize>,
 }
 
 /// Cluster simulation with online re-placement.
@@ -203,6 +264,34 @@ pub struct DynamicSimulation {
     cache_banked: CacheStats,
     /// Shed counters banked from torn-down units, like `cache_banked`.
     shed_banked: [u64; 3],
+    /// Per-LLM shed counters banked from torn-down units.
+    shed_llm_banked: Vec<u64>,
+    /// Per-LLM drop counters banked from torn-down units.
+    dropped_llm_banked: Vec<u64>,
+    /// Fault schedule to inject (empty = the pre-fault engine,
+    /// bit-identically).
+    fault_plan: FaultPlan,
+    /// Action table addressed by `EventKind::Fault(idx)`.
+    fault_actions: Vec<FaultAction>,
+    fstats: FaultStats,
+    /// GPUs currently dead (failed units' meshes awaiting repair).
+    dead_gpus: usize,
+    fail_log: Vec<FailureEpisode>,
+    /// Per global LLM: when its service went down (None = serving).
+    llm_down_at: Vec<Option<f64>>,
+    /// Per global LLM: accumulated unavailable seconds.
+    llm_down_s: Vec<f64>,
+    /// Active link-degradation factors; their product scales every
+    /// unit's swap link and the migration planner's copy pricing.
+    link_degrades: Vec<f64>,
+    /// KV-copy deliveries to fail before succeeding (consumed FIFO by
+    /// the next KV-copy Resume events).
+    copy_fail_budget: u32,
+    first_fault_at: Option<f64>,
+    /// Per global LLM: arrivals that entered the engine.
+    admitted: Vec<u64>,
+    /// Per global LLM: permanently lost requests.
+    lost: Vec<u64>,
 }
 
 impl DynamicSimulation {
@@ -266,7 +355,29 @@ impl DynamicSimulation {
             kv_resumed: 0,
             cache_banked: CacheStats::default(),
             shed_banked: [0; 3],
+            shed_llm_banked: vec![0; specs.len()],
+            dropped_llm_banked: vec![0; specs.len()],
+            fault_plan: FaultPlan::default(),
+            fault_actions: Vec::new(),
+            fstats: FaultStats::default(),
+            dead_gpus: 0,
+            fail_log: Vec::new(),
+            llm_down_at: vec![None; specs.len()],
+            llm_down_s: vec![0.0; specs.len()],
+            link_degrades: Vec::new(),
+            copy_fail_budget: 0,
+            first_fault_at: None,
+            admitted: vec![0; specs.len()],
+            lost: vec![0; specs.len()],
         })
+    }
+
+    /// Arm a deterministic fault schedule for the coming [`Self::run`].
+    /// An empty plan leaves the engine bit-identical to a build without
+    /// fault injection.
+    pub fn with_faults(mut self, plan: &FaultPlan) -> Self {
+        self.fault_plan = plan.clone();
+        self
     }
 
     /// Units of the currently active placement.
@@ -307,6 +418,21 @@ impl DynamicSimulation {
                 seq += 1;
             }
         }
+        let fault_plan = std::mem::take(&mut self.fault_plan);
+        for fe in &fault_plan.events {
+            if !(fe.time < duration) {
+                continue;
+            }
+            let idx = self.fault_actions.len();
+            self.fault_actions.push(FaultAction::Inject(fe.kind));
+            heap.push(Event {
+                time: fe.time,
+                seq,
+                unit: usize::MAX,
+                kind: EventKind::Fault(idx),
+            });
+            seq += 1;
+        }
         self.schedule_adapt_ticks(0.0, duration, &mut heap, &mut seq);
 
         while let Some(ev) = heap.pop() {
@@ -325,6 +451,7 @@ impl DynamicSimulation {
                     // evicted from should_replan, so observing without
                     // Replan ticks would accumulate unboundedly).
                     debug_assert!(ev.time == r.arrival);
+                    self.admitted[r.llm] += 1;
                     if self.adaptive {
                         self.controller.observe_arrival(r.llm, ev.time);
                     }
@@ -354,6 +481,10 @@ impl DynamicSimulation {
                     let unit = &mut self.sim.units[u];
                     unit.advance_time(ev.time);
                     unit.on_adapt();
+                    if self.cfg.validate {
+                        self.validate_units(ev.time, "adapt");
+                    }
+                    let unit = &mut self.sim.units[u];
                     let next = ev.time + unit.cfg.adapt_period;
                     if next < duration {
                         heap.push(Event {
@@ -382,11 +513,17 @@ impl DynamicSimulation {
                 EventKind::Resume(idx) => {
                     self.deliver(ev.time, idx, &mut heap, &mut seq);
                 }
+                EventKind::Fault(idx) => {
+                    self.on_fault(ev.time, duration, idx, &mut heap, &mut seq);
+                    if self.cfg.validate {
+                        self.validate_units(ev.time, "fault");
+                    }
+                }
             }
         }
 
         self.completed.extend(self.sim.harvest_records());
-        let n_llms = self.sim.n_llms();
+        let n_llms = self.specs.len();
         let dropped = self.dropped + self.sim.dropped();
         let mut cache = self.cache_banked;
         cache.merge(&self.sim.cache_stats());
@@ -394,6 +531,32 @@ impl DynamicSimulation {
         for (s, v) in shed.iter_mut().zip(self.sim.shed_by_tier()) {
             *s += v;
         }
+        let mut shed_llm = self.shed_llm_banked.clone();
+        for (s, v) in shed_llm.iter_mut().zip(self.sim.shed_by_llm(n_llms))
+        {
+            *s += v;
+        }
+        let mut dropped_llm = self.dropped_llm_banked.clone();
+        for (s, v) in
+            dropped_llm.iter_mut().zip(self.sim.dropped_by_llm(n_llms))
+        {
+            *s += v;
+        }
+        // Whatever is still in the system at the horizon: queued or
+        // admitted work, held arrivals, undelivered migration payloads.
+        let mut in_flight = vec![0u64; n_llms];
+        for r in self.sim.drain_all_requests() {
+            in_flight[r.llm] += 1;
+        }
+        for r in &self.held {
+            in_flight[r.llm] += 1;
+        }
+        for d in self.deliveries.iter().flatten() {
+            for rr in &d.payload {
+                in_flight[rr.req.llm] += 1;
+            }
+        }
+        self.finish_fault_stats(duration, n_llms);
         DynamicReport {
             eval: Evaluation::new(n_llms, duration, self.completed),
             replans: self.replans,
@@ -405,6 +568,82 @@ impl DynamicSimulation {
             kv_resumed: self.kv_resumed,
             cache,
             shed,
+            fault: self.fstats,
+            admitted: self.admitted,
+            lost: self.lost,
+            in_flight,
+            shed_llm,
+            dropped_llm,
+        }
+    }
+
+    /// Close the availability windows, derive MTTR and the
+    /// SLO-reattainment delay, and stamp the per-LLM availability
+    /// vector — the report's fault section.
+    fn finish_fault_stats(&mut self, duration: f64, n_llms: usize) {
+        for gi in 0..n_llms {
+            if let Some(start) = self.llm_down_at[gi].take() {
+                self.llm_down_s[gi] += duration - start;
+            }
+        }
+        self.fstats.availability = if duration > 0.0 {
+            self.llm_down_s
+                .iter()
+                .map(|d| (1.0 - d / duration).clamp(0.0, 1.0))
+                .collect()
+        } else {
+            vec![1.0; n_llms]
+        };
+        if !self.fail_log.is_empty() {
+            let sum: f64 = self
+                .fail_log
+                .iter()
+                .map(|e| e.restored.unwrap_or(duration) - e.fail)
+                .sum();
+            self.fstats.mttr_s = Some(sum / self.fail_log.len() as f64);
+        }
+        // SLO re-attainment: earliest completion time after the first
+        // fault at which the windowed attainment is back at the replan
+        // controller's floor. Post-hoc over the completed records so
+        // it works for non-adaptive runs too (no Replan ticks).
+        let Some(f0) = self.first_fault_at else {
+            return;
+        };
+        let rcfg = self.controller.config();
+        let (scale, win, floor) =
+            (rcfg.slo_scale, rcfg.window, rcfg.slo_floor);
+        let mut pts: Vec<(f64, bool)> = self
+            .completed
+            .iter()
+            .map(|r| (r.finish, r.meets_slo(scale)))
+            .collect();
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let (mut lo, mut ok, mut n) = (0usize, 0usize, 0usize);
+        for &(finish, meets) in &pts {
+            ok += meets as usize;
+            n += 1;
+            while pts[lo].0 <= finish - win {
+                ok -= pts[lo].1 as usize;
+                n -= 1;
+                lo += 1;
+            }
+            if finish >= f0 && ok as f64 >= floor * n as f64 {
+                self.fstats.slo_reattain_s = Some(finish - f0);
+                return;
+            }
+        }
+    }
+
+    /// Validation mode: cross-check every unit's redundant scheduler
+    /// indices, panicking with context on the first divergence.
+    fn validate_units(&self, t: f64, what: &str) {
+        for (u, unit) in self.sim.units.iter().enumerate() {
+            if let Some(msg) = unit.index_inconsistency() {
+                panic!(
+                    "validate[{what}] t={t:.3}: unit {u} (uid {}): {msg}",
+                    self.unit_uid[u]
+                );
+            }
         }
     }
 
@@ -431,12 +670,18 @@ impl DynamicSimulation {
         &mut self,
         time: f64,
         kv_copy: bool,
+        recovered: bool,
         payload: Vec<ResumedRequest>,
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) {
         let idx = self.deliveries.len();
-        self.deliveries.push(Some(StagedDelivery { kv_copy, payload }));
+        self.deliveries.push(Some(StagedDelivery {
+            kv_copy,
+            payload,
+            attempts: 0,
+            recovered,
+        }));
         self.outstanding += 1;
         heap.push(Event {
             time,
@@ -457,6 +702,35 @@ impl DynamicSimulation {
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) {
+        // A fault-injected copy failure hits the next KV-copy window:
+        // retry with capped exponential backoff while the budget and
+        // attempt cap allow, then fall back to recompute delivery.
+        if self.copy_fail_budget > 0 {
+            if let Some(d) =
+                self.deliveries.get_mut(idx).and_then(|o| o.as_mut())
+            {
+                if d.kv_copy && !d.payload.is_empty() {
+                    self.copy_fail_budget -= 1;
+                    d.attempts += 1;
+                    if d.attempts < MAX_COPY_ATTEMPTS {
+                        self.fstats.copy_retries += 1;
+                        let delay = (COPY_RETRY_BASE_S
+                            * 2f64.powi(d.attempts as i32 - 1))
+                        .min(COPY_RETRY_CAP_S);
+                        heap.push(Event {
+                            time: t + delay,
+                            seq: *seq,
+                            unit: usize::MAX,
+                            kind: EventKind::Resume(idx),
+                        });
+                        *seq += 1;
+                        return;
+                    }
+                    d.kv_copy = false;
+                    self.fstats.copy_fallbacks += 1;
+                }
+            }
+        }
         let Some(d) = self.deliveries.get_mut(idx).and_then(Option::take)
         else {
             return;
@@ -465,17 +739,43 @@ impl DynamicSimulation {
         for mut r in d.payload {
             if !d.kv_copy {
                 // Recompute path: plain re-admission.
-                self.route_arrival(t, r.req, heap, seq);
+                let routed = self.route_arrival(t, r.req, heap, seq);
+                if d.recovered && routed {
+                    self.fstats.recovered_requests += 1;
+                }
                 continue;
             }
             let (u, local) = self.sim.llm_map[r.req.llm];
             if u == usize::MAX {
+                // Nowhere to deliver (the LLM fell out of the capped
+                // recovery placement): permanently lost.
+                self.lost[r.req.llm] += 1;
+                self.fstats.lost_requests += 1;
                 continue;
             }
             r.req.llm = local;
             let unit = &mut self.sim.units[u];
             unit.advance_time(t);
-            self.kv_resumed += unit.admit_resumed(t, r) as usize;
+            if d.recovered {
+                self.fstats.recovered_requests += 1;
+                // A crash survivor's KV is self-contained: land it in
+                // the destination's host tier and let the ordinary
+                // swap-in path resume it with no re-prefill. No host
+                // tier (or no room): try the direct KV resume instead.
+                match unit.park_resumed(r) {
+                    Ok(()) => {
+                        self.fstats.kv_recovered += 1;
+                        unit.poke(t);
+                    }
+                    Err(r) => {
+                        let ok = unit.admit_resumed(t, r);
+                        self.kv_resumed += ok as usize;
+                        self.fstats.kv_recovered += ok as usize;
+                    }
+                }
+            } else {
+                self.kv_resumed += unit.admit_resumed(t, r) as usize;
+            }
             self.push_started(u, heap, seq);
         }
         // Held arrivals whose window has closed re-enter in arrival
@@ -489,21 +789,28 @@ impl DynamicSimulation {
             self.route_arrival(t, r, heap, seq);
         }
         self.held = still_held;
+        self.note_llm_service(t);
     }
 
     /// Route one request to its unit and admit it through the normal
     /// arrival path — shared by live arrivals, recompute deliveries, and
-    /// the held-buffer flush.
+    /// the held-buffer flush. Returns whether a serving unit existed;
+    /// `false` means the request is permanently lost (counted).
     fn route_arrival(
         &mut self,
         t: f64,
         r: Request,
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
-    ) {
+    ) -> bool {
         let (u, local) = self.sim.llm_map[r.llm];
         if u == usize::MAX {
-            return;
+            // Degraded mode: the LLM has no serving unit (its unit died
+            // and either nobody reacted or the capped re-placement had
+            // no room for it).
+            self.lost[r.llm] += 1;
+            self.fstats.lost_requests += 1;
+            return false;
         }
         let mut lr = r;
         lr.llm = local;
@@ -511,6 +818,426 @@ impl DynamicSimulation {
         unit.advance_time(t);
         unit.on_arrival(t, lr);
         self.push_started(u, heap, seq);
+        true
+    }
+
+    /// Close the availability window of every LLM that is serving again
+    /// (mapped, outside any migration window), and mark failure
+    /// episodes restored once all their LLMs are back.
+    fn note_llm_service(&mut self, t: f64) {
+        for gi in 0..self.llm_down_at.len() {
+            if self.sim.llm_map[gi].0 != usize::MAX
+                && self.llm_resume_at[gi] <= t
+            {
+                if let Some(start) = self.llm_down_at[gi].take() {
+                    self.llm_down_s[gi] += t - start;
+                }
+            }
+        }
+        for e in self.fail_log.iter_mut() {
+            if e.restored.is_none()
+                && e.llms.iter().all(|&gi| self.llm_down_at[gi].is_none())
+            {
+                e.restored = Some(t);
+            }
+        }
+    }
+
+    /// Product of the active link-degradation factors.
+    fn link_product(&self) -> f64 {
+        self.link_degrades.iter().product()
+    }
+
+    /// Re-apply the current link degradation to every unit (needed
+    /// after every simulation rebuild — fresh units start healthy).
+    fn apply_link_factor(&mut self) {
+        let f = self.link_product();
+        for u in self.sim.units.iter_mut() {
+            u.set_link_factor(f);
+        }
+    }
+
+    /// The replan config with KV-copy pricing scaled to the currently
+    /// degraded link (a no-op multiply by exactly 1.0 when healthy).
+    fn degraded_replan_config(&self) -> ReplanConfig {
+        let mut cfg = *self.controller.config();
+        cfg.link_bandwidth *= self.link_product();
+        cfg
+    }
+
+    /// `EventKind::Fault` dispatch: inject a scheduled fault, or execute
+    /// a fault follow-up (repair, link restore, straggler end).
+    fn on_fault(
+        &mut self,
+        t: f64,
+        duration: f64,
+        idx: usize,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        match self.fault_actions[idx] {
+            FaultAction::Inject(kind) => {
+                self.fstats.injected += 1;
+                if self.first_fault_at.is_none() {
+                    self.first_fault_at = Some(t);
+                }
+                self.inject(t, duration, kind, heap, seq);
+            }
+            FaultAction::Repair { gpus } => {
+                self.dead_gpus = self.dead_gpus.saturating_sub(gpus);
+                self.fstats.repairs += 1;
+                if self.controller.config().fault_recovery {
+                    self.replan_after_repair(t, duration, heap, seq);
+                }
+            }
+            FaultAction::LinkRestore { factor } => {
+                // Bit-exact match: the factor was stored verbatim at
+                // degrade time, so exactly one entry matches.
+                if let Some(pos) = self
+                    .link_degrades
+                    .iter()
+                    .position(|f| f.to_bits() == factor.to_bits())
+                {
+                    self.link_degrades.remove(pos);
+                }
+                self.apply_link_factor();
+            }
+            FaultAction::StragglerEnd { uid } => {
+                // A rebuilt unit already lost the slowdown with its uid.
+                if let Some(&u) = self.uid_index.get(&uid) {
+                    self.sim.units[u].set_slowdown(1.0);
+                }
+            }
+        }
+    }
+
+    /// Apply one scheduled fault at fire time.
+    fn inject(
+        &mut self,
+        t: f64,
+        duration: f64,
+        kind: FaultKind,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        match kind {
+            FaultKind::UnitFailure { unit, repair_after } => {
+                if self.sim.units.len() <= 1 {
+                    return; // never kill the last serving unit
+                }
+                let victim = unit % self.sim.units.len();
+                self.fail_unit(
+                    t,
+                    duration,
+                    victim,
+                    repair_after,
+                    heap,
+                    seq,
+                );
+            }
+            FaultKind::LinkDegrade { factor, duration: d } => {
+                let factor = factor.clamp(1e-3, 1.0);
+                self.link_degrades.push(factor);
+                self.apply_link_factor();
+                let end = t + d;
+                if end < duration {
+                    let idx = self.fault_actions.len();
+                    self.fault_actions
+                        .push(FaultAction::LinkRestore { factor });
+                    heap.push(Event {
+                        time: end,
+                        seq: *seq,
+                        unit: usize::MAX,
+                        kind: EventKind::Fault(idx),
+                    });
+                    *seq += 1;
+                }
+            }
+            FaultKind::Straggler { unit, factor, duration: d } => {
+                if self.sim.units.is_empty() {
+                    return;
+                }
+                let u = unit % self.sim.units.len();
+                self.sim.units[u].set_slowdown(factor.max(1.0));
+                let end = t + d;
+                if end < duration {
+                    let idx = self.fault_actions.len();
+                    self.fault_actions.push(FaultAction::StragglerEnd {
+                        uid: self.unit_uid[u],
+                    });
+                    heap.push(Event {
+                        time: end,
+                        seq: *seq,
+                        unit: usize::MAX,
+                        kind: EventKind::Fault(idx),
+                    });
+                    *seq += 1;
+                }
+            }
+            FaultKind::CopyFailure { copies } => {
+                self.copy_fail_budget += copies;
+            }
+        }
+    }
+
+    /// A unit's GPUs die. Salvage what the host tier preserved, open the
+    /// availability windows, and either fire an emergency replan over
+    /// the surviving pool (`fault_recovery`) or tear the unit out and
+    /// let its LLMs go dark.
+    fn fail_unit(
+        &mut self,
+        t: f64,
+        duration: f64,
+        victim: usize,
+        repair_after: Option<f64>,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let gpus = self.placement.units[victim].mesh_gpus;
+        let members: Vec<usize> = self.placement.units[victim]
+            .members
+            .iter()
+            .map(|(gi, _)| *gi)
+            .collect();
+        // Pricing inputs must predate the crash (the planner prices the
+        // victim's LLMs by the work they were carrying).
+        let live = self.live_state();
+        self.completed.extend(self.sim.harvest_records());
+        let unit = &mut self.sim.units[victim];
+        unit.advance_time(t);
+        let mut salv = unit.crash();
+        // Salvage travels with global llm ids from here on.
+        for r in salv.survivors.iter_mut() {
+            r.req.llm = members[r.req.llm];
+        }
+        for r in salv.lost.iter_mut() {
+            r.llm = members[r.llm];
+        }
+        self.dead_gpus += gpus;
+        self.fstats.unit_failures += 1;
+        self.fail_log.push(FailureEpisode {
+            fail: t,
+            restored: None,
+            llms: members.clone(),
+        });
+        for &gi in &members {
+            if self.llm_down_at[gi].is_none() {
+                self.llm_down_at[gi] = Some(t);
+            }
+        }
+        if let Some(after) = repair_after {
+            let end = t + after;
+            if end < duration {
+                let idx = self.fault_actions.len();
+                self.fault_actions.push(FaultAction::Repair { gpus });
+                heap.push(Event {
+                    time: end,
+                    seq: *seq,
+                    unit: usize::MAX,
+                    kind: EventKind::Fault(idx),
+                });
+                *seq += 1;
+            }
+        }
+        let avail =
+            self.cluster.total_gpus().saturating_sub(self.dead_gpus);
+        if self.controller.config().fault_recovery && avail > 0 {
+            let t0 = std::time::Instant::now();
+            let searched = muxserve_placement_capped(
+                &self.specs,
+                &self.workloads,
+                &self.cluster,
+                &self.est,
+                avail,
+            );
+            let decision_ms = t0.elapsed().as_secs_f64() * 1e3;
+            if let Some(placement) = searched {
+                let mut dead = vec![false; self.placement.units.len()];
+                dead[victim] = true;
+                let plan = plan_migration_dead(
+                    &self.placement,
+                    &placement,
+                    &self.specs,
+                    &live,
+                    &self.cost,
+                    &self.degraded_replan_config(),
+                    &dead,
+                );
+                self.fstats.tokens_recomputed += salv.tokens_lost;
+                let rates: Vec<f64> =
+                    self.workloads.iter().map(|w| w.rate).collect();
+                self.controller.note_replanned(t, rates.clone());
+                let (cost, window_s) = self.migrate_staged_with(
+                    t,
+                    duration,
+                    placement,
+                    plan,
+                    Some((victim, salv)),
+                    heap,
+                    seq,
+                );
+                self.replans.push(ReplanOutcome {
+                    time: t,
+                    migrated: true,
+                    drift: 0.0,
+                    rates,
+                    units: self.sim.units.len(),
+                    warm: false,
+                    decision_ms,
+                    cost,
+                    window_s,
+                });
+                return;
+            }
+        }
+        // No reaction (or no feasible emergency placement): tear the
+        // victim out; its LLMs go dark until a later replan.
+        self.teardown_unit(victim, salv);
+    }
+
+    /// A repair returned GPUs to the pool: re-run the capped search
+    /// over the restored pool and migrate when the shape improves
+    /// (bringing any dark LLM back into service).
+    fn replan_after_repair(
+        &mut self,
+        t: f64,
+        duration: f64,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let avail =
+            self.cluster.total_gpus().saturating_sub(self.dead_gpus);
+        if avail == 0 {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        let searched = muxserve_placement_capped(
+            &self.specs,
+            &self.workloads,
+            &self.cluster,
+            &self.est,
+            avail,
+        );
+        let decision_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let Some(placement) = searched else {
+            return;
+        };
+        if placement_signature(&placement) == self.signature {
+            return;
+        }
+        let plan = plan_migration(
+            &self.placement,
+            &placement,
+            &self.specs,
+            &self.live_state(),
+            &self.cost,
+            &self.degraded_replan_config(),
+        );
+        if plan.is_empty() && !self.revives_dark_llm(&placement) {
+            return;
+        }
+        let rates: Vec<f64> =
+            self.workloads.iter().map(|w| w.rate).collect();
+        self.controller.note_replanned(t, rates.clone());
+        let (cost, window_s) = self
+            .migrate_staged_with(t, duration, placement, plan, None, heap, seq);
+        self.replans.push(ReplanOutcome {
+            time: t,
+            migrated: true,
+            drift: 0.0,
+            rates,
+            units: self.sim.units.len(),
+            warm: false,
+            decision_ms,
+            cost,
+            window_s,
+        });
+    }
+
+    /// Does `new` serve an LLM the current placement leaves dark? An
+    /// empty migration plan must still be executed in that case — the
+    /// dark LLM has no state to move, but it needs its fresh unit.
+    fn revives_dark_llm(&self, new: &Placement) -> bool {
+        let mut placed = vec![false; self.specs.len()];
+        for u in &self.placement.units {
+            for (gi, _) in &u.members {
+                placed[*gi] = true;
+            }
+        }
+        new.units
+            .iter()
+            .flat_map(|u| u.members.iter())
+            .any(|(gi, _)| !placed[*gi])
+    }
+
+    /// Tear the crashed unit out with no re-placement: bank its
+    /// counters, count the whole salvage as permanently lost, and
+    /// rebuild the simulation from the surviving units (transplanted
+    /// verbatim — the victim's LLMs simply stop resolving).
+    fn teardown_unit(&mut self, victim: usize, salv: CrashSalvage) {
+        for r in salv.survivors {
+            self.lost[r.req.llm] += 1;
+            self.fstats.lost_requests += 1;
+        }
+        for r in salv.lost {
+            self.lost[r.llm] += 1;
+            self.fstats.lost_requests += 1;
+        }
+        let old_sim = std::mem::replace(&mut self.sim, Simulation::empty());
+        let old_uids = std::mem::take(&mut self.unit_uid);
+        let mut old_units: Vec<Option<UnitSim>> =
+            old_sim.into_units().into_iter().map(Some).collect();
+        {
+            let u = old_units[victim]
+                .as_mut()
+                .expect("crashed unit must still be present");
+            let members = &self.placement.units[victim].members;
+            self.dropped += u.dropped();
+            for (local, v) in u.dropped_by_llm().iter().enumerate() {
+                self.dropped_llm_banked[members[local].0] += v;
+            }
+            for (local, v) in u.shed_by_llm().iter().enumerate() {
+                self.shed_llm_banked[members[local].0] += v;
+            }
+            self.cache_banked.merge(&u.cache_stats());
+            for (s, v) in self.shed_banked.iter_mut().zip(u.shed_by_tier())
+            {
+                *s += v;
+            }
+        }
+        let mut eff_units = Vec::new();
+        let mut reuse: Vec<Option<UnitSim>> = Vec::new();
+        let mut new_uids = Vec::new();
+        for (i, u) in old_units.into_iter().enumerate() {
+            if i == victim {
+                continue;
+            }
+            eff_units.push(self.placement.units[i].clone());
+            reuse.push(u);
+            new_uids.push(old_uids[i]);
+        }
+        let eff = Placement {
+            units: eff_units,
+            est_total: self.placement.est_total,
+        };
+        self.sim = Simulation::from_placement_reusing(
+            &eff,
+            &self.specs,
+            &self.workloads,
+            self.cfg,
+            &self.cost,
+            reuse,
+        );
+        self.unit_uid = new_uids;
+        self.uid_index = self
+            .unit_uid
+            .iter()
+            .enumerate()
+            .map(|(u, id)| (*id, u))
+            .collect();
+        self.signature = placement_signature(&eff);
+        self.placement = eff;
+        self.apply_link_factor();
     }
 
     /// Arm the paper's periodic quota adaptation for every (non-empty)
@@ -636,10 +1363,23 @@ impl DynamicSimulation {
         // itself — the operative fact — and stays correct for custom
         // policies that mark `slo_driven` alongside a dirty flag;
         // `slo_driven` is the diagnostic label, not the switch.
-        let use_warm = self.controller.config().warm_start
+        // While GPUs are dead, the search must be capped to the
+        // surviving pool (and the warm path, which re-places over full-
+        // cluster mesh groups, is unsafe) — force the capped cold
+        // search until repair.
+        let use_warm = self.dead_gpus == 0
+            && self.controller.config().warm_start
             && decision.dirty.iter().any(|&d| d);
         let t0 = std::time::Instant::now();
-        let searched = if use_warm {
+        let searched = if self.dead_gpus > 0 {
+            muxserve_placement_capped(
+                &self.specs,
+                &new_workloads,
+                &self.cluster,
+                &self.est,
+                self.cluster.total_gpus().saturating_sub(self.dead_gpus),
+            )
+        } else if use_warm {
             muxserve_placement_warm(
                 &self.specs,
                 &new_workloads,
@@ -670,16 +1410,22 @@ impl DynamicSimulation {
             // Diff before committing: the canonical per-unit matching
             // also catches no-op shuffles (same units, different order)
             // that a naive comparison would migrate for — an empty plan
-            // means nothing moves, so nothing may be charged.
+            // means nothing moves, so nothing may be charged. Copy
+            // pricing sees the degraded link, if any.
             plan = plan_migration(
                 &self.placement,
                 &placement,
                 &self.specs,
                 &self.live_state(),
                 &self.cost,
-                self.controller.config(),
+                &self.degraded_replan_config(),
             );
-            migrated = !plan.is_empty();
+            // An empty plan is still a migration when the new placement
+            // revives a dark LLM (nothing to move, but it needs its
+            // fresh unit built) — the periodic-replan recovery path for
+            // runs without `fault_recovery`.
+            migrated =
+                !plan.is_empty() || self.revives_dark_llm(&placement);
         }
         let (cost, window_s) = if !migrated {
             // The optimizer kept the shape: the current placement is
@@ -737,6 +1483,21 @@ impl DynamicSimulation {
         {
             *s += v;
         }
+        let n_llms = self.specs.len();
+        for (s, v) in self
+            .shed_llm_banked
+            .iter_mut()
+            .zip(self.sim.shed_by_llm(n_llms))
+        {
+            *s += v;
+        }
+        for (s, v) in self
+            .dropped_llm_banked
+            .iter_mut()
+            .zip(self.sim.dropped_by_llm(n_llms))
+        {
+            *s += v;
+        }
         let pending = self.sim.drain_all_requests();
         let downtime = self.controller.config().migration_downtime;
         // Measured cost (downtime × preempted work) — what hysteresis
@@ -753,6 +1514,7 @@ impl DynamicSimulation {
         self.signature = placement_signature(&placement);
         self.placement = placement;
         self.assign_fresh_uids();
+        self.apply_link_factor();
         self.migrations += 1;
         let resume = t + downtime;
         self.migration_until = resume;
@@ -773,7 +1535,7 @@ impl DynamicSimulation {
                 blocks: 0,
             })
             .collect();
-        self.push_delivery(resume, false, payload, heap, seq);
+        self.push_delivery(resume, false, false, payload, heap, seq);
         self.schedule_adapt_ticks(resume, duration, heap, seq);
         (cost, downtime)
     }
@@ -790,17 +1552,73 @@ impl DynamicSimulation {
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) -> (f64, f64) {
+        self.migrate_staged_with(
+            t, duration, placement, plan, None, heap, seq,
+        )
+    }
+
+    /// Staged migration with an optional crashed source unit whose
+    /// salvage (host-tier survivors + device-resident losses, already
+    /// remapped to global llm ids) replaces the usual live drain for
+    /// that unit's move ops.
+    #[allow(clippy::too_many_arguments)]
+    fn migrate_staged_with(
+        &mut self,
+        t: f64,
+        duration: f64,
+        placement: Placement,
+        plan: MigrationPlan,
+        crashed: Option<(usize, CrashSalvage)>,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) -> (f64, f64) {
         self.completed.extend(self.sim.harvest_records());
         let old_sim = std::mem::replace(&mut self.sim, Simulation::empty());
         let old_uids = std::mem::take(&mut self.unit_uid);
         let mut old_units: Vec<Option<UnitSim>> =
             old_sim.into_units().into_iter().map(Some).collect();
+        let crash_unit = crashed.as_ref().map(|(u, _)| *u);
+        let mut surv_by_llm: HashMap<usize, Vec<ResumedRequest>> =
+            HashMap::new();
+        let mut lost_by_llm: HashMap<usize, Vec<Request>> = HashMap::new();
+        if let Some((_, salv)) = crashed {
+            for r in salv.survivors {
+                surv_by_llm.entry(r.req.llm).or_default().push(r);
+            }
+            for r in salv.lost {
+                lost_by_llm.entry(r.llm).or_default().push(r);
+            }
+        }
 
         // Drain every moved LLM out of its (torn-down) old unit with KV
         // state intact; the payload travels with global ids.
-        let mut payloads: Vec<(f64, bool, Vec<ResumedRequest>)> =
+        let mut payloads: Vec<(f64, bool, bool, Vec<ResumedRequest>)> =
             Vec::new();
         for op in &plan.ops {
+            if Some(op.from_unit) == crash_unit {
+                // The source died: host-tier survivors ride a KV-style
+                // delivery (their blocks live off-device and survived),
+                // everything device-resident recomputes from scratch.
+                // Both deliveries are pushed even when empty — the held
+                // flush depends on a Resume event per moved LLM.
+                let survivors =
+                    surv_by_llm.remove(&op.llm).unwrap_or_default();
+                let rc: Vec<ResumedRequest> = lost_by_llm
+                    .remove(&op.llm)
+                    .unwrap_or_default()
+                    .into_iter()
+                    .map(|req| ResumedRequest {
+                        req,
+                        generated: 0,
+                        first_token: 0.0,
+                        blocks: 0,
+                    })
+                    .collect();
+                self.llm_resume_at[op.llm] = t + op.resume;
+                payloads.push((t + op.resume, true, true, survivors));
+                payloads.push((t + op.resume, false, true, rc));
+                continue;
+            }
             let unit = old_units[op.from_unit]
                 .as_mut()
                 .expect("torn-down unit must still be present");
@@ -817,8 +1635,21 @@ impl DynamicSimulation {
             payloads.push((
                 t + op.resume,
                 op.method == MoveMethod::KvCopy,
+                false,
                 drained,
             ));
+        }
+        // Salvage of LLMs the emergency placement could not re-place
+        // (no move op) has nowhere to go: those requests are lost to
+        // the failure. Counter updates are order-independent, so the
+        // map's iteration order does not threaten determinism.
+        for (llm, rs) in surv_by_llm.drain() {
+            self.lost[llm] += rs.len() as u64;
+            self.fstats.lost_requests += rs.len();
+        }
+        for (llm, rs) in lost_by_llm.drain() {
+            self.lost[llm] += rs.len() as u64;
+            self.fstats.lost_requests += rs.len();
         }
         // Torn-down units leave the simulation: bank their counters.
         // Any member the plan could NOT move (an LLM absent from the
@@ -836,8 +1667,18 @@ impl DynamicSimulation {
                 continue; // transplanted units keep their own counters
             }
             if let Some(u) = u {
-                self.dropped += u.drain_requests().len();
+                let members = &self.placement.units[i].members;
+                for r in u.drain_requests() {
+                    self.dropped += 1;
+                    self.dropped_llm_banked[members[r.llm].0] += 1;
+                }
                 self.dropped += u.dropped();
+                for (local, v) in u.dropped_by_llm().iter().enumerate() {
+                    self.dropped_llm_banked[members[local].0] += v;
+                }
+                for (local, v) in u.shed_by_llm().iter().enumerate() {
+                    self.shed_llm_banked[members[local].0] += v;
+                }
                 self.cache_banked.merge(&u.cache_stats());
                 for (s, v) in
                     self.shed_banked.iter_mut().zip(u.shed_by_tier())
@@ -888,6 +1729,7 @@ impl DynamicSimulation {
             .collect();
         self.signature = placement_signature(&eff);
         self.placement = eff;
+        self.apply_link_factor();
         self.migrations += 1;
         self.migration_until = t + plan.total_window();
         self.downtime_s += plan.downtime_seconds();
@@ -896,8 +1738,8 @@ impl DynamicSimulation {
         // Priced, per moved LLM — the honest feedback the hysteresis
         // bars learn from under staged execution.
         self.controller.note_migration_costs(&plan.per_llm_cost());
-        for (time, kv, payload) in payloads {
-            self.push_delivery(time, kv, payload, heap, seq);
+        for (time, kv, recovered, payload) in payloads {
+            self.push_delivery(time, kv, recovered, payload, heap, seq);
         }
         // Only rebuilt units need a new adapt chain.
         self.schedule_adapt_ticks_for(
@@ -907,6 +1749,10 @@ impl DynamicSimulation {
             heap,
             seq,
         );
+        // A zero-op plan pushes no Resume events, so close any
+        // availability window it just resolved (a revived dark LLM is
+        // mapped and serving immediately).
+        self.note_llm_service(t);
         (cost, plan.total_window())
     }
 
@@ -929,8 +1775,11 @@ mod tests {
     use super::*;
     use crate::config::llama_spec;
     use crate::coordinator::replan::PolicyKind;
+    use crate::memory::EvictionKind;
+    use crate::simulator::faults::{FaultEvent, FaultsAxis};
+    use crate::simulator::unit::BLOCK_TOKENS;
     use crate::workload::{
-        merge_streams, poisson_requests, Scenario, ScenarioShape,
+        merge_streams, poisson_requests, Scenario, ScenarioShape, SloClass,
     };
     use crate::util::Rng;
 
@@ -1281,5 +2130,211 @@ mod tests {
             done as f64 >= arrived as f64 / 3.0,
             "staged migration must not lose work: {done} of {arrived}"
         );
+    }
+
+    #[test]
+    fn fault_runs_are_bit_identical_across_same_seed_runs() {
+        // The chaos engine rides the deterministic event heap: two runs
+        // of the same seeded schedule must agree bit-for-bit on every
+        // determinism-relevant output (decision_ms is wall clock and is
+        // deliberately absent from FaultStats).
+        let (specs, workloads, cluster, requests) = stationary_setup();
+        let plan = FaultsAxis::SingleUnit.plan(7, 60.0).unwrap();
+        let run = || {
+            let rcfg = ReplanConfig {
+                migration_mode: MigrationMode::Staged,
+                fault_recovery: true,
+                ..Default::default()
+            };
+            let cfg = EngineConfig {
+                validate: true,
+                ..EngineConfig::muxserve()
+            };
+            let dy = DynamicSimulation::new(
+                &specs, &workloads, &cluster, cfg, rcfg, true,
+            )
+            .unwrap();
+            dy.with_faults(&plan).run(&requests, 60.0)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.eval, b.eval);
+        assert_eq!(a.fault, b.fault);
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.lost, b.lost);
+        assert_eq!(a.in_flight, b.in_flight);
+        assert_eq!(a.shed_llm, b.shed_llm);
+        assert_eq!(a.dropped_llm, b.dropped_llm);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.fault.unit_failures, 1, "{:?}", a.fault);
+        assert!(a.fault.injected >= 1);
+    }
+
+    /// Hand-built stream for the recovery A/B: LLM 0 stays sparse all
+    /// run; LLM 1 gets sparse traffic, a mid-run burst of long decodes
+    /// sized to overflow the (deliberately tiny) KV pool into the host
+    /// tier, and sparse post-fault traffic whose fate — lost vs served
+    /// — is the contrast under test.
+    fn chaos_stream() -> Vec<Request> {
+        let mut reqs: Vec<Request> = Vec::new();
+        let mut id = 0u64;
+        let mut push =
+            |reqs: &mut Vec<Request>, llm, arrival, prompt, output| {
+                reqs.push(Request {
+                    id,
+                    llm,
+                    arrival,
+                    prompt_len: prompt,
+                    output_len: output,
+                    prefix_group: 0,
+                    prefix_len: 0,
+                    tier: SloClass::Standard,
+                });
+                id += 1;
+            };
+        for i in 0..58 {
+            push(&mut reqs, 0, 0.5 + i as f64, 64, 16);
+        }
+        for i in 0..15 {
+            push(&mut reqs, 1, 0.5 + i as f64, 64, 16);
+        }
+        for i in 0..8 {
+            push(&mut reqs, 1, 16.0 + i as f64, 256, 384);
+        }
+        for i in 0..26 {
+            push(&mut reqs, 1, 30.5 + i as f64, 64, 16);
+        }
+        reqs.sort_by(|a, b| {
+            a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id))
+        });
+        reqs
+    }
+
+    #[test]
+    fn recovery_on_beats_no_reaction_on_single_unit_failure() {
+        let specs =
+            vec![llama_spec("fta", 6.7), llama_spec("ftb", 6.7)];
+        let workloads = vec![
+            WorkloadSpec::sharegpt(1.0),
+            WorkloadSpec::sharegpt(1.0),
+        ];
+        let cluster = ClusterSpec::new(2, 1); // 1-GPU meshes only
+        let requests = chaos_stream();
+        // Size the device pool to ~2.2 burst contexts so the burst
+        // overflows into the host tier (probed at full capacity, then
+        // scaled down).
+        let probe = DynamicSimulation::new(
+            &specs,
+            &workloads,
+            &cluster,
+            EngineConfig::muxserve(),
+            ReplanConfig::default(),
+            false,
+        )
+        .unwrap();
+        assert_eq!(probe.n_units(), 2, "expected one 1-GPU unit per LLM");
+        let full =
+            probe.sim.units[probe.sim.llm_map[1].0].total_blocks();
+        let ctx_blocks = specs[1].blocks_for_tokens(640, BLOCK_TOKENS);
+        let frac = (2.2 * ctx_blocks as f64) / full as f64;
+        assert!(frac < 1.0, "pool probe: {full} vs ctx {ctx_blocks}");
+
+        let build = |recover: bool| {
+            let rcfg = ReplanConfig {
+                migration_mode: MigrationMode::Staged,
+                check_period: 1000.0, // no periodic replans interfere
+                fault_recovery: recover,
+                ..Default::default()
+            };
+            let cfg = EngineConfig {
+                eviction: EvictionKind::Lru,
+                host_tier_blocks: 1 << 20,
+                kv_capacity_frac: frac,
+                validate: true,
+                ..EngineConfig::muxserve()
+            };
+            let dy = DynamicSimulation::new(
+                &specs, &workloads, &cluster, cfg, rcfg, false,
+            )
+            .unwrap();
+            assert_eq!(dy.n_units(), 2);
+            // Kill the unit serving LLM 1 (same in both arms: identical
+            // construction), mid-burst, with no repair ever.
+            let victim = dy.sim.llm_map[1].0;
+            let plan = FaultPlan::new(vec![FaultEvent {
+                time: 26.0,
+                kind: FaultKind::UnitFailure {
+                    unit: victim,
+                    repair_after: None,
+                },
+            }]);
+            dy.with_faults(&plan).run(&requests, 60.0)
+        };
+        let on = build(true);
+        let off = build(false);
+
+        // Fault-cell SLO metric: meets-SLO completions over ARRIVED
+        // requests — a completions-only ratio would reward losing them.
+        let scale = ReplanConfig::default().slo_scale;
+        let meets = |r: &DynamicReport| {
+            r.eval.records.iter().filter(|x| x.meets_slo(scale)).count()
+        };
+        let arrived = requests.len() as f64;
+        let (slo_on, slo_off) =
+            (meets(&on) as f64 / arrived, meets(&off) as f64 / arrived);
+        assert!(
+            slo_on > slo_off,
+            "recovery must strictly beat no-reaction: {slo_on} vs \
+             {slo_off} (on {:?}, off {:?})",
+            on.fault,
+            off.fault
+        );
+        // Host-tier contexts survive the crash and resume at the
+        // emergency placement without re-prefill.
+        assert!(
+            on.fault.kv_recovered > 0,
+            "host-tier survivors must resume: {:?}",
+            on.fault
+        );
+        assert!(on.fault.recovered_requests > 0);
+        assert!(on.fault.tokens_recomputed > 0, "{:?}", on.fault);
+        // Without a reaction the dead unit's work and every later
+        // arrival for its LLM is permanently lost.
+        assert!(off.fault.lost_requests > 0, "{:?}", off.fault);
+        assert!(on.fault.lost_requests < off.fault.lost_requests);
+        // MTTR: the emergency replan restores service quickly; the
+        // unrepaired no-reaction arm stays down to the horizon.
+        let (m_on, m_off) = (
+            on.fault.mttr_s.expect("episode recorded"),
+            off.fault.mttr_s.expect("episode recorded"),
+        );
+        assert!(m_on < m_off, "MTTR {m_on} vs {m_off}");
+        assert!(
+            on.fault.availability[1] > off.fault.availability[1],
+            "{:?} vs {:?}",
+            on.fault.availability,
+            off.fault.availability
+        );
+        assert!(off.fault.availability[1] < 0.7);
+        // Per-LLM conservation holds in both arms: nothing vanishes
+        // without being counted somewhere.
+        for r in [&on, &off] {
+            for llm in 0..specs.len() {
+                let completed = r
+                    .eval
+                    .records
+                    .iter()
+                    .filter(|x| x.llm == llm)
+                    .count() as u64;
+                let accounted = completed
+                    + r.shed_llm[llm]
+                    + r.dropped_llm[llm]
+                    + r.lost[llm]
+                    + r.in_flight[llm];
+                assert_eq!(
+                    accounted, r.admitted[llm],
+                    "conservation broke for llm {llm}"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,534 @@
+//! Deterministic fault injection: seeded chaos schedules for the
+//! dynamic simulator.
+//!
+//! # Fault model
+//!
+//! A [`FaultPlan`] is a time-ordered list of [`FaultEvent`]s injected
+//! into [`DynamicSimulation::run`] as `EventKind::Fault` events — they
+//! ride the same event heap as arrivals and replans, so a fault run is
+//! bit-identical across same-seed executions (no wall clock anywhere).
+//! Four fault kinds:
+//!
+//! * **Unit failure** ([`FaultKind::UnitFailure`]): a serving unit's
+//!   GPUs die, optionally coming back after `repair_after` seconds.
+//!   Everything device-resident is destroyed — waiting queues, active
+//!   decode state, in-flight jobs, KV blocks, the prefix index.
+//!   Contexts parked in the **host-DRAM tier survive**: their KV lives
+//!   off-device, so they re-enter service at a surviving unit through
+//!   the same swap-in path a pressure eviction uses, without
+//!   re-prefill (counted as `kv_recovered`). A parked context whose
+//!   prefix blocks were device-resident loses that shared KV and
+//!   restarts from scratch instead. Device-resident victims restart
+//!   fresh via the recompute path; their generated tokens are counted
+//!   as `tokens_recomputed` when recovery re-routes them, or as lost
+//!   when nothing does.
+//! * **Link degradation** ([`FaultKind::LinkDegrade`]): the cluster
+//!   interconnect runs at `factor` × nominal bandwidth for `duration`
+//!   seconds. Host-tier swaps and KV-copy migration pricing both slow
+//!   down; overlapping windows multiply.
+//! * **Straggler** ([`FaultKind::Straggler`]): one unit's SMs run
+//!   `factor` × slower for `duration` seconds (every launched job's
+//!   duration is scaled). The slowdown is a property of the unit
+//!   engine: it survives a transplant across a staged replan but dies
+//!   with the unit if a migration rebuilds it.
+//! * **Copy failure** ([`FaultKind::CopyFailure`]): the next `copies`
+//!   staged KV-copy deliveries fail in flight. Each failed copy
+//!   retries with capped exponential backoff (base 0.25 s, doubling,
+//!   capped at 2 s, at most 3 attempts) before falling back to the
+//!   recompute path — the request restarts fresh instead of resuming
+//!   mid-decode.
+//!
+//! # Recovery semantics
+//!
+//! With `ReplanConfig::fault_recovery` **on**, a unit failure triggers
+//! an *emergency replan* over the surviving GPU set: the placement
+//! search is capped at the live GPU count, the migration planner
+//! prices the dead unit's LLMs as forced recompute (a dead source has
+//! no KV to copy), and victims re-enter via staged resume windows.
+//! A repair triggers a second emergency replan over the restored set.
+//! With it **off** (the default), the coordinator does not react: the
+//! dead unit's LLMs go dark until a periodic replan happens to
+//! re-place them (or forever, if adaptation is off) and every request
+//! destroyed with the unit is counted lost. Degraded capacity is spent
+//! by SLO tier wherever `EngineConfig::shed` is on — the shed
+//! machinery needs no fault-specific changes.
+//!
+//! Fault targets are resolved against the *live* unit set at fire
+//! time (`unit % live_units`), so a plan written for one placement
+//! stays meaningful after replans shrink or reshuffle it.
+
+// The v4 trace parser consumes hostile input (user-supplied files):
+// every failure must surface as a typed error, never a panic.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::util::Rng;
+use crate::workload::{request_rows, requests_from_trace, Request};
+
+/// One kind of injected failure. See the module docs for semantics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Kill serving unit `unit % live_units`; its GPUs rejoin the pool
+    /// `repair_after` seconds later (never, when `None`).
+    UnitFailure { unit: usize, repair_after: Option<f64> },
+    /// Interconnect bandwidth drops to `factor` × nominal for
+    /// `duration` seconds (`0 < factor <= 1`).
+    LinkDegrade { factor: f64, duration: f64 },
+    /// Unit `unit % live_units` computes `factor` × slower for
+    /// `duration` seconds (`factor >= 1`).
+    Straggler { unit: usize, factor: f64, duration: f64 },
+    /// The next `copies` staged KV-copy deliveries fail mid-flight.
+    CopyFailure { copies: u32 },
+}
+
+impl FaultKind {
+    /// Stable name used by the v4 trace format.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::UnitFailure { .. } => "unit-failure",
+            FaultKind::LinkDegrade { .. } => "link-degrade",
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::CopyFailure { .. } => "copy-failure",
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Injection time, seconds from experiment start.
+    pub time: f64,
+    pub kind: FaultKind,
+}
+
+/// A whole chaos schedule, time-ordered.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build a plan, sorting events by (time, insertion order).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by(|a, b| a.time.total_cmp(&b.time));
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// The `--faults` CLI axis: named seeded chaos schedules.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultsAxis {
+    /// No faults — the healthy-cluster control.
+    #[default]
+    None,
+    /// One unit dies at ~25% of the run and repairs at ~75%.
+    SingleUnit,
+    /// Two staggered unit failures with repairs, plus failed KV
+    /// copies during the churn.
+    Rolling,
+    /// Two link-bandwidth collapse windows plus flaky KV copies.
+    FlakyLink,
+    /// One unit runs ~3x slower through the middle of the run.
+    Straggler,
+}
+
+impl FaultsAxis {
+    pub fn parse(s: &str) -> Option<FaultsAxis> {
+        match s {
+            "none" => Some(FaultsAxis::None),
+            "single-unit" | "singleunit" => Some(FaultsAxis::SingleUnit),
+            "rolling" => Some(FaultsAxis::Rolling),
+            "flaky-link" | "flakylink" => Some(FaultsAxis::FlakyLink),
+            "straggler" => Some(FaultsAxis::Straggler),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultsAxis::None => "none",
+            FaultsAxis::SingleUnit => "single-unit",
+            FaultsAxis::Rolling => "rolling",
+            FaultsAxis::FlakyLink => "flaky-link",
+            FaultsAxis::Straggler => "straggler",
+        }
+    }
+
+    /// Every axis value, `none` first.
+    pub fn all() -> [FaultsAxis; 5] {
+        [
+            FaultsAxis::None,
+            FaultsAxis::SingleUnit,
+            FaultsAxis::Rolling,
+            FaultsAxis::FlakyLink,
+            FaultsAxis::Straggler,
+        ]
+    }
+
+    /// Materialize the schedule for a `duration`-second run.
+    /// Deterministic in `seed` (small timing jitter keeps schedules
+    /// from beating against periodic replan ticks); `None` for the
+    /// healthy control.
+    pub fn plan(&self, seed: u64, duration: f64) -> Option<FaultPlan> {
+        let mut rng = Rng::new(seed ^ 0xFA_17_5C_4E_D0_1E);
+        // Jitter a nominal fraction-of-run time by ±10%.
+        let mut at = |frac: f64| frac * duration * (0.9 + 0.2 * rng.f64());
+        let events = match self {
+            FaultsAxis::None => return None,
+            FaultsAxis::SingleUnit => vec![FaultEvent {
+                time: at(0.25),
+                kind: FaultKind::UnitFailure {
+                    unit: 0,
+                    repair_after: Some(0.5 * duration),
+                },
+            }],
+            FaultsAxis::Rolling => vec![
+                FaultEvent {
+                    time: at(0.20),
+                    kind: FaultKind::UnitFailure {
+                        unit: 0,
+                        repair_after: Some(0.25 * duration),
+                    },
+                },
+                FaultEvent {
+                    time: at(0.21),
+                    kind: FaultKind::CopyFailure { copies: 2 },
+                },
+                FaultEvent {
+                    time: at(0.50),
+                    kind: FaultKind::UnitFailure {
+                        unit: 1,
+                        repair_after: Some(0.25 * duration),
+                    },
+                },
+            ],
+            FaultsAxis::FlakyLink => vec![
+                FaultEvent {
+                    time: at(0.30),
+                    kind: FaultKind::LinkDegrade {
+                        factor: 0.1,
+                        duration: 0.2 * duration,
+                    },
+                },
+                FaultEvent {
+                    time: at(0.31),
+                    kind: FaultKind::CopyFailure { copies: 3 },
+                },
+                FaultEvent {
+                    time: at(0.60),
+                    kind: FaultKind::LinkDegrade {
+                        factor: 0.25,
+                        duration: 0.15 * duration,
+                    },
+                },
+            ],
+            FaultsAxis::Straggler => vec![FaultEvent {
+                time: at(0.30),
+                kind: FaultKind::Straggler {
+                    unit: 1,
+                    factor: 3.0,
+                    duration: 0.4 * duration,
+                },
+            }],
+        };
+        Some(FaultPlan::new(events))
+    }
+}
+
+/// What the chaos engine measured over one run. Attached to
+/// `DynamicReport` (all zeros / empty on fault-free runs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Fault events that actually fired (inside the run horizon).
+    pub injected: usize,
+    pub unit_failures: usize,
+    pub repairs: usize,
+    /// Requests destroyed with no recovery path (never re-served).
+    pub lost_requests: usize,
+    /// Victim requests re-routed back into service after a failure.
+    pub recovered_requests: usize,
+    /// Host-tier-parked contexts that resumed at a surviving unit
+    /// without re-prefill.
+    pub kv_recovered: usize,
+    /// Generated tokens destroyed on-device whose requests were
+    /// re-routed through the recompute path.
+    pub tokens_recomputed: u64,
+    /// KV-copy deliveries that failed and were retried (backoff).
+    pub copy_retries: usize,
+    /// KV-copy deliveries that exhausted retries and fell back to
+    /// recompute.
+    pub copy_fallbacks: usize,
+    /// Mean time-to-repair over unit failures; an unrepaired failure
+    /// counts as (run end − failure time). `None` without failures.
+    pub mttr_s: Option<f64>,
+    /// Per-LLM fraction of the run the LLM was mapped to a live unit.
+    pub availability: Vec<f64>,
+    /// Seconds from the first fault until the windowed SLO attainment
+    /// first climbed back above `ReplanConfig::slo_floor` (`None` if
+    /// it never did, or no fault fired).
+    pub slo_reattain_s: Option<f64>,
+}
+
+// ---------------------------------------------------------------------------
+// Trace format v4: request rows + fault rows
+// ---------------------------------------------------------------------------
+//
+// A v4 trace is a v3 trace plus `F,<time>,<kind>,<args...>` rows, so a
+// replayed trace reproduces the failure sequence bit-identically. The
+// request parser skips F rows, so v4 files degrade gracefully for
+// readers that only want the workload; v1-v3 files parse here with an
+// empty plan.
+
+/// Serialize a request stream plus its chaos schedule. With an empty
+/// plan this emits a plain v3 trace (byte-identical to
+/// [`crate::workload::requests_to_trace`]).
+pub fn trace_with_faults(requests: &[Request], plan: &FaultPlan) -> String {
+    if plan.is_empty() {
+        return crate::workload::requests_to_trace(requests);
+    }
+    let mut out = String::from("# muxserve-trace v4\n");
+    out.push_str(
+        "# id,llm,arrival_s,prompt_len,output_len,prefix_group,prefix_len,\
+         tier\n",
+    );
+    out.push_str("# F,time_s,kind,args...\n");
+    for ev in &plan.events {
+        match ev.kind {
+            FaultKind::UnitFailure { unit, repair_after } => {
+                let repair = match repair_after {
+                    Some(r) => format!("{r:.17e}"),
+                    None => "-".to_string(),
+                };
+                out.push_str(&format!(
+                    "F,{:.17e},unit-failure,{unit},{repair}\n",
+                    ev.time
+                ));
+            }
+            FaultKind::LinkDegrade { factor, duration } => {
+                out.push_str(&format!(
+                    "F,{:.17e},link-degrade,{factor:.17e},{duration:.17e}\n",
+                    ev.time
+                ));
+            }
+            FaultKind::Straggler { unit, factor, duration } => {
+                out.push_str(&format!(
+                    "F,{:.17e},straggler,{unit},{factor:.17e},\
+                     {duration:.17e}\n",
+                    ev.time
+                ));
+            }
+            FaultKind::CopyFailure { copies } => {
+                out.push_str(&format!(
+                    "F,{:.17e},copy-failure,{copies}\n",
+                    ev.time
+                ));
+            }
+        }
+    }
+    out.push_str(&request_rows(requests));
+    out
+}
+
+/// Parse a trace with its chaos schedule (v4; v1-v3 parse with an
+/// empty plan).
+pub fn trace_with_faults_from_str(
+    text: &str,
+) -> Result<(Vec<Request>, FaultPlan), String> {
+    let requests = requests_from_trace(text)?;
+    let mut events = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if !line.starts_with("F,") {
+            continue;
+        }
+        let bad = |what: &str| {
+            format!("trace line {}: bad fault {what}: {line}", lineno + 1)
+        };
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() < 4 {
+            return Err(bad("row"));
+        }
+        let time: f64 = fields[1].parse().map_err(|_| bad("time"))?;
+        let kind = match fields[2] {
+            "unit-failure" => {
+                if fields.len() != 5 {
+                    return Err(bad("unit-failure arity"));
+                }
+                let unit = fields[3].parse().map_err(|_| bad("unit"))?;
+                let repair_after = if fields[4] == "-" {
+                    None
+                } else {
+                    Some(fields[4].parse().map_err(|_| bad("repair"))?)
+                };
+                FaultKind::UnitFailure { unit, repair_after }
+            }
+            "link-degrade" => {
+                if fields.len() != 5 {
+                    return Err(bad("link-degrade arity"));
+                }
+                FaultKind::LinkDegrade {
+                    factor: fields[3].parse().map_err(|_| bad("factor"))?,
+                    duration: fields[4]
+                        .parse()
+                        .map_err(|_| bad("duration"))?,
+                }
+            }
+            "straggler" => {
+                if fields.len() != 6 {
+                    return Err(bad("straggler arity"));
+                }
+                FaultKind::Straggler {
+                    unit: fields[3].parse().map_err(|_| bad("unit"))?,
+                    factor: fields[4].parse().map_err(|_| bad("factor"))?,
+                    duration: fields[5]
+                        .parse()
+                        .map_err(|_| bad("duration"))?,
+                }
+            }
+            _ => {
+                if fields.len() != 4 || fields[2] != "copy-failure" {
+                    return Err(bad("kind"));
+                }
+                FaultKind::CopyFailure {
+                    copies: fields[3].parse().map_err(|_| bad("copies"))?,
+                }
+            }
+        };
+        events.push(FaultEvent { time, kind });
+    }
+    Ok((requests, FaultPlan::new(events)))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::workload::{Scenario, ScenarioShape};
+
+    #[test]
+    fn axis_parse_round_trips() {
+        for a in FaultsAxis::all() {
+            assert_eq!(FaultsAxis::parse(a.name()), Some(a));
+        }
+        assert_eq!(FaultsAxis::parse("nope"), None);
+    }
+
+    #[test]
+    fn plans_are_deterministic_sorted_and_in_horizon() {
+        for axis in FaultsAxis::all() {
+            let a = axis.plan(7, 100.0);
+            let b = axis.plan(7, 100.0);
+            assert_eq!(a, b, "{axis:?} must be deterministic");
+            if axis == FaultsAxis::None {
+                assert!(a.is_none());
+                continue;
+            }
+            let plan = a.expect("non-none axis yields a plan");
+            assert!(!plan.is_empty());
+            assert!(plan
+                .events
+                .windows(2)
+                .all(|w| w[0].time <= w[1].time));
+            assert!(plan
+                .events
+                .iter()
+                .all(|e| e.time > 0.0 && e.time < 100.0));
+            // A different seed moves the schedule.
+            assert_ne!(axis.plan(8, 100.0), Some(plan));
+        }
+    }
+
+    #[test]
+    fn v4_trace_round_trips_every_fault_kind() {
+        let data = Scenario {
+            duration: 30.0,
+            ..Scenario::new(ScenarioShape::Stationary)
+        }
+        .build();
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                time: 5.25,
+                kind: FaultKind::UnitFailure {
+                    unit: 2,
+                    repair_after: Some(7.5),
+                },
+            },
+            FaultEvent {
+                time: 6.0,
+                kind: FaultKind::UnitFailure {
+                    unit: 0,
+                    repair_after: None,
+                },
+            },
+            FaultEvent {
+                time: 8.125,
+                kind: FaultKind::LinkDegrade {
+                    factor: 0.1,
+                    duration: 4.0,
+                },
+            },
+            FaultEvent {
+                time: 9.5,
+                kind: FaultKind::Straggler {
+                    unit: 1,
+                    factor: 3.0,
+                    duration: 6.0,
+                },
+            },
+            FaultEvent {
+                time: 10.0,
+                kind: FaultKind::CopyFailure { copies: 2 },
+            },
+        ]);
+        let text = trace_with_faults(&data.requests, &plan);
+        assert!(text.starts_with("# muxserve-trace v4\n"), "{text}");
+        let (reqs, back) = trace_with_faults_from_str(&text).unwrap();
+        assert_eq!(reqs, data.requests, "requests must round-trip");
+        assert_eq!(back, plan, "fault plan must round-trip");
+        // The plain request parser skips fault rows.
+        let only_reqs = requests_from_trace(&text).unwrap();
+        assert_eq!(only_reqs, data.requests);
+    }
+
+    #[test]
+    fn empty_plan_emits_plain_v3() {
+        let data = Scenario {
+            duration: 10.0,
+            ..Scenario::new(ScenarioShape::Stationary)
+        }
+        .build();
+        let text = trace_with_faults(&data.requests, &FaultPlan::default());
+        assert_eq!(
+            text,
+            crate::workload::requests_to_trace(&data.requests)
+        );
+        let (reqs, plan) = trace_with_faults_from_str(&text).unwrap();
+        assert_eq!(reqs, data.requests);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn old_formats_parse_with_empty_plans_and_bad_rows_error() {
+        let v1 = "# muxserve-trace v1\n7,2,1.5e0,100,20\n";
+        let (reqs, plan) = trace_with_faults_from_str(v1).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert!(plan.is_empty());
+        for bad in [
+            "F,1.0,unit-failure,0",          // missing repair column
+            "F,1.0,unit-failure,x,-",        // bad unit
+            "F,1.0,link-degrade,0.5",        // missing duration
+            "F,1.0,straggler,0,2.0",         // missing duration
+            "F,1.0,copy-failure,x",          // bad count
+            "F,1.0,meteor-strike,1",         // unknown kind
+            "F,oops,copy-failure,1",         // bad time
+        ] {
+            assert!(
+                trace_with_faults_from_str(bad).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+}

@@ -9,11 +9,17 @@
 //! to the algorithms, not simulator details.
 
 pub mod dynamic;
+pub mod faults;
 pub mod unit;
 
 pub use dynamic::{DynamicReport, DynamicSimulation, ReplanOutcome};
+pub use faults::{
+    trace_with_faults, trace_with_faults_from_str, FaultEvent, FaultKind,
+    FaultPlan, FaultStats, FaultsAxis,
+};
 pub use unit::{
-    CacheStats, Job, JobPhase, ResumedRequest, UnitModelCfg, UnitSim,
+    CacheStats, CrashSalvage, Job, JobPhase, ResumedRequest, UnitModelCfg,
+    UnitSim,
 };
 
 use std::cmp::Ordering;
@@ -37,6 +43,9 @@ pub(crate) enum EventKind {
     /// End of one staged-migration move window: deliver the payload with
     /// this index ([`dynamic::DynamicSimulation`] only).
     Resume(usize),
+    /// Injected fault with this index into the dynamic engine's fault
+    /// action table ([`dynamic::DynamicSimulation`] only).
+    Fault(usize),
 }
 
 #[derive(Clone, Debug)]
@@ -226,7 +235,9 @@ impl Simulation {
                 EventKind::JobDone(id) => unit.on_job_done(ev.time, id),
                 EventKind::Adapt => unit.on_adapt(),
                 // Static run: never scheduled.
-                EventKind::Replan | EventKind::Resume(_) => {}
+                EventKind::Replan
+                | EventKind::Resume(_)
+                | EventKind::Fault(_) => {}
             }
             for (t_done, job_id) in unit.drain_started() {
                 heap.push(Event {
@@ -268,6 +279,30 @@ impl Simulation {
             let s = u.shed_by_tier();
             for (o, v) in out.iter_mut().zip(s) {
                 *o += v;
+            }
+        }
+        out
+    }
+
+    /// Cluster-wide shed counts by *global* LLM index, summed across
+    /// units (the per-LLM half of the fault accounting ledger).
+    pub fn shed_by_llm(&self, n_llms: usize) -> Vec<u64> {
+        let mut out = vec![0u64; n_llms];
+        for (u, unit) in self.units.iter().enumerate() {
+            for (local, count) in unit.shed_by_llm().iter().enumerate() {
+                out[self.rev_map[u][local]] += count;
+            }
+        }
+        out
+    }
+
+    /// Starvation-dropped counts by *global* LLM index, summed across
+    /// units.
+    pub fn dropped_by_llm(&self, n_llms: usize) -> Vec<u64> {
+        let mut out = vec![0u64; n_llms];
+        for (u, unit) in self.units.iter().enumerate() {
+            for (local, count) in unit.dropped_by_llm().iter().enumerate() {
+                out[self.rev_map[u][local]] += count;
             }
         }
         out

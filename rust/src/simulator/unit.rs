@@ -284,8 +284,13 @@ pub struct UnitSim {
     /// ∫ SM-fraction-in-use dt — GPU utilization (Figure 1's y-axis).
     sm_integral: f64,
     dropped: usize,
+    /// Starvation drops by LOCAL llm — fault accounting needs per-LLM
+    /// attribution, not just the unit total.
+    dropped_llm: Vec<u64>,
     /// Requests shed by admission control, indexed by `SloClass::code()`.
     shed: [u64; 3],
+    /// Sheds by LOCAL llm (same events as `shed`, other axis).
+    shed_llm: Vec<u64>,
     /// Per-LLM resident shared prefixes, keyed by `Request::prefix_group`.
     prefix_index: Vec<BTreeMap<u64, PrefixEntry>>,
     /// Victim-choice policy; `None` disables cache management entirely
@@ -304,6 +309,29 @@ pub struct UnitSim {
     /// are built from `EngineConfig`, which does not carry replan
     /// settings, so swaps always price at the default link).
     link_bandwidth: f64,
+    /// Straggler multiplier on every job duration (1.0 = healthy; a
+    /// fault-injected slow unit runs all kernels `slowdown`× longer).
+    slowdown: f64,
+    /// Fault-injected multiplier on the device↔host link bandwidth
+    /// (1.0 = healthy; a degraded link makes swaps proportionally
+    /// slower).
+    link_factor: f64,
+}
+
+/// What survives a unit crash: host-parked contexts keep their KV
+/// (host DRAM outlives the device) and resume elsewhere without
+/// re-prefill; everything device-resident is lost and recomputes from
+/// scratch.
+#[derive(Debug, Default)]
+pub struct CrashSalvage {
+    /// Host-tier contexts with intact private KV (LOCAL llm ids).
+    pub survivors: Vec<ResumedRequest>,
+    /// Requests whose KV died with the device (LOCAL llm ids), sorted
+    /// by (arrival, id).
+    pub lost: Vec<Request>,
+    /// Context tokens (prompt + generated) wiped from device KV —
+    /// the re-prefill bill if every victim were readmitted.
+    pub tokens_lost: u64,
 }
 
 impl UnitSim {
@@ -361,7 +389,9 @@ impl UnitSim {
             usage_integral: vec![0.0; n],
             sm_integral: 0.0,
             dropped: 0,
+            dropped_llm: vec![0; n],
             shed: [0; 3],
+            shed_llm: vec![0; n],
             prefix_index: vec![BTreeMap::new(); n],
             eviction: build_policy(cfg.eviction),
             host: HostTier::new(cfg.host_tier_blocks),
@@ -369,6 +399,8 @@ impl UnitSim {
             cache: CacheStats::default(),
             pending_link_s: 0.0,
             link_bandwidth: ReplanConfig::default().link_bandwidth,
+            slowdown: 1.0,
+            link_factor: 1.0,
             models,
         }
     }
@@ -551,6 +583,89 @@ impl UnitSim {
         true
     }
 
+    /// Kill this unit's device: everything device-resident (active KV,
+    /// shared prefixes, waiting queues' positions) is lost, but the
+    /// host-DRAM tier is NOT on the dying device, so parked contexts
+    /// with self-contained KV survive and can resume elsewhere without
+    /// re-prefill. A parked context that references a device-resident
+    /// shared prefix lost that prefix with the device — it cannot
+    /// resume and is lost too. The unit is left empty and consistent
+    /// (it is discarded right after); all quota, host, and prefix
+    /// holdings are provably released.
+    pub fn crash(&mut self) -> CrashSalvage {
+        let mut s = CrashSalvage::default();
+        // Bill the device KV that dies: decoded contexts' full context
+        // (their prompt + generated tokens must re-prefill on revival).
+        for list in &self.active {
+            for a in list {
+                if a.generated > 0 {
+                    s.tokens_lost += a.ctx() as u64;
+                }
+            }
+        }
+        // Host tier outlives the device: triage parked contexts before
+        // the drain below would requeue them as plain recomputes.
+        while let Some(c) = self.swapped.pop_front() {
+            self.host.release(c.r.blocks);
+            if c.shared_blocks == 0 && c.r.generated > 0 && c.r.blocks > 0
+            {
+                s.survivors.push(c.r);
+            } else {
+                // Its KV is unusable (prefix died with the device, or
+                // it never decoded) — recompute from scratch.
+                if c.r.generated > 0 {
+                    s.tokens_lost +=
+                        (c.r.req.prompt_len + c.r.generated) as u64;
+                }
+                s.lost.push(c.r.req);
+            }
+        }
+        // Everything device-resident: drain_requests releases quota,
+        // prefix charges, and in-flight jobs (swapped is empty now).
+        s.lost.extend(self.drain_requests());
+        s.lost.sort_by(|a, b| {
+            a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id))
+        });
+        debug_assert_eq!(self.quota.total_used(), 0);
+        debug_assert_eq!(self.host.used(), 0);
+        s
+    }
+
+    /// Land a crash survivor in this unit's host tier: its KV rode the
+    /// recovery copy and waits for device headroom, resuming through
+    /// the ordinary swap-in path with NO re-prefill. The copy itself is
+    /// priced by the migration plan's op window, so no link debt is
+    /// charged here. Gives the payload back (caller falls back to
+    /// [`Self::admit_resumed`]) when the host tier is off, full, or the
+    /// payload carries no usable KV.
+    pub(crate) fn park_resumed(
+        &mut self,
+        r: ResumedRequest,
+    ) -> Result<(), ResumedRequest> {
+        if r.generated == 0
+            || r.blocks == 0
+            || self.host.charge(r.blocks).is_err()
+        {
+            return Err(r);
+        }
+        self.swapped.push_back(SwappedCtx { r, shared_blocks: 0 });
+        Ok(())
+    }
+
+    /// Kick the scheduler without new work — fault recovery parks
+    /// payloads with no accompanying arrival, and the swap-in path only
+    /// runs from a scheduling pass.
+    pub(crate) fn poke(&mut self, t: f64) {
+        self.try_schedule(t);
+    }
+
+    /// (device blocks, host blocks) still charged — must be (0, 0)
+    /// after a crash or full drain; the stranded-block audit reads it.
+    #[doc(hidden)]
+    pub fn residual_blocks(&self) -> (usize, usize) {
+        (self.quota.total_used(), self.host.used())
+    }
+
     /// Unfinished requests of one LLM (waiting + active) — the migration
     /// planner's `pending` input.
     pub fn llm_pending(&self, llm: usize) -> usize {
@@ -578,6 +693,29 @@ impl UnitSim {
 
     pub fn shed_total(&self) -> u64 {
         self.shed.iter().sum()
+    }
+
+    /// Sheds by LOCAL llm index (same events as [`Self::shed_by_tier`],
+    /// attributed to models instead of tiers).
+    pub fn shed_by_llm(&self) -> &[u64] {
+        &self.shed_llm
+    }
+
+    /// Starvation drops by LOCAL llm index.
+    pub fn dropped_by_llm(&self) -> &[u64] {
+        &self.dropped_llm
+    }
+
+    /// Fault injection: stretch every subsequent job by `factor`
+    /// (straggler SMs). 1.0 restores healthy speed bit-exactly.
+    pub fn set_slowdown(&mut self, factor: f64) {
+        self.slowdown = factor.max(1e-9);
+    }
+
+    /// Fault injection: scale the device↔host link bandwidth by
+    /// `factor` (degraded interconnect). 1.0 restores the healthy link.
+    pub fn set_link_factor(&mut self, factor: f64) {
+        self.link_factor = factor.max(1e-9);
     }
 
     /// Waiting + admitted requests per tier, indexed by
@@ -785,6 +923,7 @@ impl UnitSim {
                 }
                 _ => {
                     self.shed[req.tier.code() as usize] += 1;
+                    self.shed_llm[req.llm] += 1;
                     return false;
                 }
             }
@@ -841,6 +980,7 @@ impl UnitSim {
         if let Some((_, _, llm, pos)) = wait {
             self.waiting[llm].remove(pos);
             self.shed[tier.code() as usize] += 1;
+            self.shed_llm[llm] += 1;
             return true;
         }
         let mut adm: Option<(f64, u64)> = None;
@@ -872,6 +1012,7 @@ impl UnitSim {
             self.deref_prefix(llm, a.req.prefix_group);
         }
         self.shed[tier.code() as usize] += 1;
+        self.shed_llm[llm] += 1;
         true
     }
 
@@ -1082,7 +1223,7 @@ impl UnitSim {
     fn swap_seconds(&self, llm: usize, blocks: usize) -> f64 {
         let head_dim = self.models[llm].spec.head_dim;
         blocks as f64 * block_bytes(BLOCK_TOKENS, head_dim)
-            / self.link_bandwidth.max(1.0)
+            / (self.link_bandwidth * self.link_factor).max(1.0)
     }
 
     /// Free device blocks under pressure: first drop a dead prefix entry
@@ -1776,6 +1917,7 @@ impl UnitSim {
                             if need > limit {
                                 self.waiting[i].pop_front();
                                 self.dropped += 1;
+                                self.dropped_llm[i] += 1;
                                 dropped_any = true;
                                 break;
                             }
@@ -1818,7 +1960,10 @@ impl UnitSim {
         // delay this job: the PCIe copy and the kernel share the unit.
         let link = std::mem::take(&mut self.pending_link_s);
         self.cache.swap_link_s += link;
-        let dur = dur + link;
+        // Straggler slowdown stretches the kernel, not the link copy.
+        // Healthy units multiply by exactly 1.0 — bit-identical to the
+        // pre-fault engine.
+        let dur = dur * self.slowdown + link;
         let id = self.next_job_id;
         self.next_job_id += 1;
         self.inflight.insert(id, job);
@@ -2417,4 +2562,85 @@ mod tests {
         assert_eq!(job.phase, JobPhase::Prefill);
     }
 
+    #[test]
+    fn crash_salvages_host_tier_and_strands_no_blocks() {
+        let mut unit = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 1.0)],
+            1,
+            EngineConfig {
+                host_tier_blocks: 1000,
+                ..EngineConfig::muxserve()
+            },
+            CostModel::a100(),
+        );
+        // A device-resident context mid-decode: prefill, then one step.
+        unit.on_arrival(0.0, req(0, 2, 0.0, 64, 16));
+        let (t1, id1) = unit.drain_started()[0];
+        unit.advance_time(t1);
+        unit.on_job_done(t1, id1);
+        // A recovery payload parked in the host tier AFTER the last
+        // scheduling pass, so swap-in cannot beat the crash to it.
+        let host_used_before = unit.host_blocks_used();
+        assert!(unit
+            .park_resumed(ResumedRequest {
+                req: req(0, 1, 0.0, 64, 32),
+                generated: 5,
+                first_token: 0.5,
+                blocks: 6,
+            })
+            .is_ok());
+        assert_eq!(unit.host_blocks_used(), host_used_before + 6);
+        // No-KV payloads are handed back (caller readmits them whole).
+        assert!(unit
+            .park_resumed(ResumedRequest {
+                req: req(0, 9, 0.0, 64, 32),
+                generated: 0,
+                first_token: 0.0,
+                blocks: 0,
+            })
+            .is_err());
+
+        let salv = unit.crash();
+        // Host tier survived; device KV did not.
+        assert_eq!(salv.survivors.len(), 1);
+        assert_eq!(salv.survivors[0].req.id, 1);
+        assert_eq!(salv.survivors[0].generated, 5);
+        assert_eq!(salv.lost.len(), 1);
+        assert_eq!(salv.lost[0].id, 2);
+        assert!(
+            salv.tokens_lost >= 65,
+            "the decoded context's KV must be billed: {}",
+            salv.tokens_lost
+        );
+        // Nothing stranded: quota and host fully released, unit idle.
+        assert_eq!(unit.residual_blocks(), (0, 0));
+        assert!(!unit.has_work());
+        assert!(unit.index_inconsistency().is_none());
+    }
+
+    #[test]
+    fn straggler_slowdown_stretches_jobs_and_restores_exactly() {
+        let run = |factor: Option<f64>| {
+            let mut unit = UnitSim::new(
+                vec![cfg_model(6.7, 1.0, 1.0)],
+                1,
+                EngineConfig::muxserve(),
+                CostModel::a100(),
+            );
+            if let Some(f) = factor {
+                unit.set_slowdown(f);
+            }
+            unit.on_arrival(0.0, req(0, 1, 0.0, 64, 4));
+            unit.drain_started()[0].0
+        };
+        let healthy = run(None);
+        let explicit_one = run(Some(1.0));
+        let slow = run(Some(3.0));
+        assert_eq!(
+            healthy.to_bits(),
+            explicit_one.to_bits(),
+            "slowdown 1.0 must be bit-identical to the pre-fault engine"
+        );
+        assert!(slow > healthy * 2.5, "3x straggler: {slow} vs {healthy}");
+    }
 }

@@ -18,6 +18,7 @@ pub use trace::{
     chatlmsys_like_trace, daily_rate_curve, read_trace_file,
     requests_from_trace, requests_to_trace, write_trace_file, TraceSpec,
 };
+pub(crate) use trace::request_rows;
 
 use crate::config::WorkloadSpec;
 use crate::util::Rng;

@@ -8,6 +8,10 @@
 //! top-20 % ≈ 50 %), diurnal modulation per LLM with randomized phase, and
 //! Poisson arrivals within each time bucket (non-homogeneous thinning).
 
+// The trace parser consumes hostile input (user-supplied files): every
+// failure must surface as a typed error, never a panic.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use super::{merge_streams, sample_lengths, Request, SloClass};
 use crate::config::WorkloadSpec;
 use crate::util::Rng;
@@ -111,7 +115,10 @@ pub fn chatlmsys_like_trace(spec: &TraceSpec) -> (Vec<WorkloadSpec>, Vec<Request
 // arrivals; `tier` is the numeric `SloClass` code (0 interactive,
 // 1 standard, 2 batch). v2 files (7 fields, no tier column) and v1
 // files (5 fields, no prefix columns either) still parse: missing
-// fields default to 0 / standard.
+// fields default to 0 / standard. v4 files additionally carry
+// `F,...` fault rows (see `crate::simulator::faults`); the request
+// parser here skips them, so every reader of request streams accepts
+// every format version.
 
 /// Serialize a request stream to the portable trace format.
 pub fn requests_to_trace(requests: &[Request]) -> String {
@@ -120,6 +127,14 @@ pub fn requests_to_trace(requests: &[Request]) -> String {
         "# id,llm,arrival_s,prompt_len,output_len,prefix_group,prefix_len,\
          tier\n",
     );
+    out.push_str(&request_rows(requests));
+    out
+}
+
+/// The request rows alone (no header) — shared by the v3 writer above
+/// and the v4 fault-trace writer in `crate::simulator::faults`.
+pub(crate) fn request_rows(requests: &[Request]) -> String {
+    let mut out = String::new();
     for r in requests {
         out.push_str(&format!(
             "{},{},{:.17e},{},{},{},{},{}\n",
@@ -137,13 +152,15 @@ pub fn requests_to_trace(requests: &[Request]) -> String {
 }
 
 /// Parse a trace produced by [`requests_to_trace`] (v3, or v2/v1
-/// without the tier / prefix columns). Returns requests in file order
-/// (generators emit arrival-sorted streams).
+/// without the tier / prefix columns; v4 fault rows are skipped).
+/// Returns requests in file order (generators emit arrival-sorted
+/// streams).
 pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        if line.is_empty() || line.starts_with('#') || line.starts_with("F,")
+        {
             continue;
         }
         let fields: Vec<&str> = line.split(',').collect();
@@ -203,6 +220,7 @@ pub fn read_trace_file(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::workload::cumulative_rate_distribution;

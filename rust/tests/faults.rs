@@ -1,0 +1,170 @@
+//! Chaos-schedule integration pins.
+//!
+//! 1. The per-LLM accounting identity `completed + shed + dropped +
+//!    lost + in_flight == admitted` must close under EVERY fault axis,
+//!    with and without failure-aware recovery — no request may vanish
+//!    (or be double-counted) because a unit died under it.
+//! 2. Fault runs must be deterministic: the same (scenario, axis, seed)
+//!    triple produces an identical report on every axis.
+//! 3. A v4 trace (requests + fault rows) must replay end-to-end through
+//!    the dynamic engine with its recorded chaos schedule.
+//!
+//! Every run has `EngineConfig::validate` on, so the engine re-derives
+//! its per-unit block/index invariants at each adapt tick and fault
+//! event — a stranded KV block or dangling request index after a unit
+//! death panics the test instead of silently leaking.
+
+use muxserve::bench::drift::{
+    run_scenario_faults, run_trace_faults, scenario_cluster,
+};
+use muxserve::coordinator::{EngineConfig, MigrationMode, ReplanConfig};
+use muxserve::memory::EvictionKind;
+use muxserve::simulator::{
+    trace_with_faults, trace_with_faults_from_str, DynamicReport,
+    FaultsAxis,
+};
+use muxserve::workload::{Scenario, ScenarioShape};
+
+/// One fault run on the flash-crowd scenario: KV cache layer + host
+/// tier on (so unit death exercises the host-survivor path too) and
+/// invariant validation at every fault event.
+fn run_axis(
+    axis: FaultsAxis,
+    recover: bool,
+) -> (DynamicReport, usize, usize) {
+    let scenario = Scenario {
+        duration: 60.0,
+        ..Scenario::new(ScenarioShape::FlashCrowd)
+    };
+    let data = scenario.build();
+    let engine = EngineConfig {
+        eviction: EvictionKind::Lru,
+        host_tier_blocks: 1 << 20,
+        validate: true,
+        ..EngineConfig::muxserve()
+    };
+    let rcfg = ReplanConfig {
+        migration_mode: MigrationMode::Staged,
+        fault_recovery: recover,
+        ..Default::default()
+    };
+    let report = run_scenario_faults(
+        &scenario,
+        &data,
+        &scenario_cluster(),
+        engine,
+        Some(rcfg),
+        axis,
+    )
+    .expect("placement exists for the flash-crowd scenario");
+    (report, data.requests.len(), scenario.n_llms)
+}
+
+/// Assert the per-LLM conservation identity on one report.
+fn assert_accounting(report: &DynamicReport, arrived: usize, n: usize) {
+    let mut completed = vec![0u64; n];
+    for r in &report.eval.records {
+        completed[r.llm] += 1;
+    }
+    assert_eq!(report.admitted.len(), n);
+    for g in 0..n {
+        let lhs = completed[g]
+            + report.shed_llm[g]
+            + report.dropped_llm[g]
+            + report.lost[g]
+            + report.in_flight[g];
+        assert_eq!(
+            lhs, report.admitted[g],
+            "LLM {g}: completed {} + shed {} + dropped {} + lost {} + \
+             in_flight {} != admitted {}",
+            completed[g],
+            report.shed_llm[g],
+            report.dropped_llm[g],
+            report.lost[g],
+            report.in_flight[g],
+            report.admitted[g]
+        );
+    }
+    // Every arrival in the stream lands before the horizon, so the
+    // engine must have admitted (and then accounted for) all of them.
+    let admitted: u64 = report.admitted.iter().sum();
+    assert_eq!(admitted as usize, arrived, "arrivals lost before entry");
+}
+
+#[test]
+fn accounting_identity_holds_across_every_fault_axis() {
+    for axis in FaultsAxis::all() {
+        for recover in [false, true] {
+            let (report, arrived, n) = run_axis(axis, recover);
+            assert_accounting(&report, arrived, n);
+            if axis != FaultsAxis::None {
+                assert!(
+                    report.fault.injected > 0,
+                    "axis {} scheduled nothing inside the horizon",
+                    axis.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_runs_are_deterministic_on_every_axis() {
+    for axis in FaultsAxis::all() {
+        let (a, arrived_a, _) = run_axis(axis, true);
+        let (b, arrived_b, _) = run_axis(axis, true);
+        assert_eq!(arrived_a, arrived_b);
+        assert_eq!(
+            a.eval.records, b.eval.records,
+            "axis {}: completion records diverged across same-seed runs",
+            axis.name()
+        );
+        assert_eq!(a.fault, b.fault, "axis {}", axis.name());
+        assert_eq!(a.admitted, b.admitted, "axis {}", axis.name());
+        assert_eq!(a.lost, b.lost, "axis {}", axis.name());
+        assert_eq!(a.in_flight, b.in_flight, "axis {}", axis.name());
+        assert_eq!(a.migrations, b.migrations, "axis {}", axis.name());
+    }
+}
+
+#[test]
+fn v4_trace_replays_with_its_recorded_fault_schedule() {
+    // Export requests + chaos schedule, parse both back, and drive the
+    // engine with the recorded schedule — the CLI's
+    // `--export-trace`/`--replay-trace` path for fault runs.
+    let scenario = Scenario {
+        duration: 60.0,
+        ..Scenario::new(ScenarioShape::Stationary)
+    };
+    let data = scenario.build();
+    let plan = FaultsAxis::SingleUnit
+        .plan(scenario.seed, scenario.duration)
+        .expect("single-unit axis yields a plan");
+    let text = trace_with_faults(&data.requests, &plan);
+    let (requests, parsed) =
+        trace_with_faults_from_str(&text).expect("v4 trace parses");
+    assert_eq!(requests, data.requests, "request round trip");
+    assert_eq!(parsed, plan, "fault-schedule round trip");
+    let engine =
+        EngineConfig { validate: true, ..EngineConfig::muxserve() };
+    let rcfg =
+        ReplanConfig { fault_recovery: true, ..Default::default() };
+    let report = run_trace_faults(
+        &requests,
+        scenario.duration,
+        &scenario_cluster(),
+        engine,
+        Some(rcfg),
+        &parsed,
+    )
+    .expect("placement for replayed trace");
+    assert!(
+        report.fault.unit_failures >= 1,
+        "the recorded failure must fire on replay: {:?}",
+        report.fault
+    );
+    assert!(
+        !report.eval.records.is_empty(),
+        "replay must complete work despite the failure"
+    );
+}
