@@ -25,6 +25,15 @@
 //! cells (positive everywhere ⇒ failure-aware recovery pays for
 //! itself) that gates the `fault_recovery` default.
 //!
+//! Two opt-in sections extend the grid: `disagg` runs the long-context
+//! length shapes twice — mixed placement vs prefill/decode
+//! disaggregation + chunked prefill — on identical streams, reporting
+//! p99 TTFT beside SLO and the `disagg_slo_delta_min` /
+//! `disagg_ttft_delta_max` verdict pair that gates the `disagg`
+//! default flip; `sweep_forecast` grids ForecastPolicy's gain ×
+//! horizon knobs over the forecastable shapes so the two parameters
+//! get harness columns instead of folklore defaults.
+//!
 //! [`ReplanOutcome::decision_ms`]: crate::simulator::ReplanOutcome
 
 use std::collections::BTreeMap;
@@ -77,6 +86,19 @@ pub struct AbConfig {
     /// [`FaultsAxis::None`] entries are skipped (nothing to inject).
     /// Empty (the default) skips the section entirely.
     pub faults: Vec<FaultsAxis>,
+    /// Opt-in disaggregation section: run every length shape twice —
+    /// mixed placement (the default engine) vs phase-role placement +
+    /// chunked prefill — on identical streams. Off by default: the
+    /// section costs two full runs per shape.
+    pub disagg: bool,
+    /// Length shapes for the disagg section (ignored unless `disagg`).
+    pub length_shapes: Vec<ScenarioShape>,
+    /// Chunk size (prompt tokens) for the disagg `on` arm's chunked
+    /// prefill; 0 would disable chunking there.
+    pub chunk_prefill_tokens: usize,
+    /// Opt-in forecast sweep: grid ForecastPolicy's gain × horizon
+    /// knobs over the forecastable shapes (flash-crowd, drift).
+    pub sweep_forecast: bool,
 }
 
 impl AbConfig {
@@ -96,6 +118,10 @@ impl AbConfig {
             eviction: EvictionKind::None,
             host_tier_blocks: 0,
             faults: Vec::new(),
+            disagg: false,
+            length_shapes: ScenarioShape::length().to_vec(),
+            chunk_prefill_tokens: 256,
+            sweep_forecast: false,
         }
     }
 
@@ -212,6 +238,48 @@ pub struct AbFaultCell {
     pub availability_min: Option<f64>,
 }
 
+/// One run in the disaggregation section: a long-context length shape
+/// served either by the default mixed placement (`mode == "off"`) or
+/// by phase-role (prefill/decode) placement with chunked prefill
+/// (`mode == "on"`), on the identical request stream. TTFT is the
+/// headline metric — disaggregation exists to stop long prompts from
+/// head-of-line-blocking time-to-first-token.
+#[derive(Clone, Debug)]
+pub struct AbDisaggCell {
+    pub shape: &'static str,
+    /// "off" | "on".
+    pub mode: &'static str,
+    pub arrived: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    /// SLO attainment at the configured scale (rounded 1e-4).
+    pub slo: f64,
+    /// Tier-weighted goodput at the configured scale (rounded 1e-4).
+    pub goodput: f64,
+    /// p99 time-to-first-token, seconds (rounded 1e-3); `None` when
+    /// the run completed nothing.
+    pub p99_ttft: Option<f64>,
+    /// p99 end-to-end latency, seconds (rounded 1e-3).
+    pub p99_latency: Option<f64>,
+    /// Prefill→decode handoffs that resumed from copied KV (0 in the
+    /// off arm; 0 in an on arm whose disagg search fell back to mixed).
+    pub kv_resumed: usize,
+}
+
+/// One run in the forecast sweep: ForecastPolicy at a (gain, horizon)
+/// grid point on one forecastable shape.
+#[derive(Clone, Debug)]
+pub struct AbForecastCell {
+    pub shape: &'static str,
+    pub gain: f64,
+    pub horizon: f64,
+    pub slo: f64,
+    pub goodput: f64,
+    pub p99_latency: Option<f64>,
+    pub replans: usize,
+    pub migrations: usize,
+}
+
 /// Everything one `ab` invocation measured.
 #[derive(Clone, Debug)]
 pub struct AbReport {
@@ -246,6 +314,18 @@ pub struct AbReport {
     /// strictly beats ignoring the fault on every chaos cell — the
     /// `fault_recovery` default-flip gate.
     pub recovery_slo_delta_min: Option<f64>,
+    /// The disaggregation section (empty unless `--disagg on` ran).
+    pub disagg_cells: Vec<AbDisaggCell>,
+    /// Minimum on−off SLO delta over matched length shapes: disagg
+    /// must not buy its TTFT win with attainment (gate half 1).
+    pub disagg_slo_delta_min: Option<f64>,
+    /// Worst (maximum) on−off p99-TTFT delta over the same pairs:
+    /// negative everywhere means disaggregation strictly cuts tail
+    /// TTFT on every length shape (gate half 2). Together these gate
+    /// the `disagg` default flip.
+    pub disagg_ttft_delta_max: Option<f64>,
+    /// The forecast sweep (empty unless `--sweep-forecast` ran).
+    pub forecast_cells: Vec<AbForecastCell>,
 }
 
 fn round(x: f64, unit: f64) -> f64 {
@@ -501,6 +581,84 @@ impl AbReport {
                          ignore/recover pair ran)"
                     );
                 }
+            }
+        }
+        if !self.disagg_cells.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n### disaggregation: mixed vs prefill/decode split + \
+                 chunked prefill (identical streams)"
+            );
+            let _ = writeln!(
+                out,
+                "| scenario | disagg | slo | goodput | p99-ttft(s) | \
+                 p99(s) | kv-res | done/arrived |"
+            );
+            let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
+            for c in &self.disagg_cells {
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {:.4} | {:.4} | {} | {} | {} | {}/{} |",
+                    c.shape,
+                    c.mode,
+                    c.slo,
+                    c.goodput,
+                    fmt_opt(c.p99_ttft, 3),
+                    fmt_opt(c.p99_latency, 3),
+                    c.kv_resumed,
+                    c.completed,
+                    c.arrived,
+                );
+            }
+            match (self.disagg_ttft_delta_max, self.disagg_slo_delta_min)
+            {
+                (Some(dt), Some(slo)) => {
+                    let _ = writeln!(
+                        out,
+                        "\ndisagg-vs-mixed: max p99-ttft delta {dt:.4} \
+                         s, min slo delta {slo:.4} => {}",
+                        if dt < 0.0 && slo >= -WARM_PARITY_EPS {
+                            "DISAGG WINS — disagg is safe to default on \
+                             for long-context mixes"
+                        } else {
+                            "NO WIN — keep the mixed default"
+                        }
+                    );
+                }
+                _ => {
+                    let _ = writeln!(
+                        out,
+                        "\ndisagg-vs-mixed: not measured (no off/on \
+                         pair ran)"
+                    );
+                }
+            }
+        }
+        if !self.forecast_cells.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n### forecast sweep: ForecastPolicy gain × horizon"
+            );
+            let _ = writeln!(
+                out,
+                "| scenario | gain | horizon | slo | goodput | p99(s) | \
+                 replans | migr |"
+            );
+            let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
+            for c in &self.forecast_cells {
+                let _ = writeln!(
+                    out,
+                    "| {} | {:.2} | {:.2} | {:.4} | {:.4} | {} | {} | \
+                     {} |",
+                    c.shape,
+                    c.gain,
+                    c.horizon,
+                    c.slo,
+                    c.goodput,
+                    fmt_opt(c.p99_latency, 3),
+                    c.replans,
+                    c.migrations,
+                );
             }
         }
         out
@@ -778,6 +936,104 @@ impl AbReport {
                 None => Json::Null,
             },
         );
+        let disagg_cells: Vec<Json> = self
+            .disagg_cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "shape".to_string(),
+                    Json::Str(c.shape.to_string()),
+                );
+                m.insert(
+                    "disagg".to_string(),
+                    Json::Str(c.mode.to_string()),
+                );
+                m.insert(
+                    "arrived".to_string(),
+                    Json::Num(c.arrived as f64),
+                );
+                m.insert(
+                    "completed".to_string(),
+                    Json::Num(c.completed as f64),
+                );
+                m.insert(
+                    "dropped".to_string(),
+                    Json::Num(c.dropped as f64),
+                );
+                m.insert("slo".to_string(), Json::Num(c.slo));
+                m.insert("goodput".to_string(), Json::Num(c.goodput));
+                m.insert(
+                    "p99_ttft_s".to_string(),
+                    match c.p99_ttft {
+                        Some(p) => Json::Num(p),
+                        None => Json::Null,
+                    },
+                );
+                m.insert(
+                    "p99_latency_s".to_string(),
+                    match c.p99_latency {
+                        Some(p) => Json::Num(p),
+                        None => Json::Null,
+                    },
+                );
+                m.insert(
+                    "kv_resumed".to_string(),
+                    Json::Num(c.kv_resumed as f64),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("disagg_cells".to_string(), Json::Arr(disagg_cells));
+        root.insert(
+            "disagg_slo_delta_min".to_string(),
+            match self.disagg_slo_delta_min {
+                Some(d) => Json::Num(d),
+                None => Json::Null,
+            },
+        );
+        root.insert(
+            "disagg_ttft_delta_max".to_string(),
+            match self.disagg_ttft_delta_max {
+                Some(d) => Json::Num(d),
+                None => Json::Null,
+            },
+        );
+        let forecast_cells: Vec<Json> = self
+            .forecast_cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "shape".to_string(),
+                    Json::Str(c.shape.to_string()),
+                );
+                m.insert("gain".to_string(), Json::Num(c.gain));
+                m.insert("horizon".to_string(), Json::Num(c.horizon));
+                m.insert("slo".to_string(), Json::Num(c.slo));
+                m.insert("goodput".to_string(), Json::Num(c.goodput));
+                m.insert(
+                    "p99_latency_s".to_string(),
+                    match c.p99_latency {
+                        Some(p) => Json::Num(p),
+                        None => Json::Null,
+                    },
+                );
+                m.insert(
+                    "replans".to_string(),
+                    Json::Num(c.replans as f64),
+                );
+                m.insert(
+                    "migrations".to_string(),
+                    Json::Num(c.migrations as f64),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert(
+            "forecast_cells".to_string(),
+            Json::Arr(forecast_cells),
+        );
         Json::Obj(root)
     }
 }
@@ -875,6 +1131,31 @@ fn recovery_slo_delta_min(cells: &[AbFaultCell]) -> Option<f64> {
         }
     }
     min
+}
+
+/// Disagg on−off deltas over matched length shapes: (min SLO delta,
+/// max p99-TTFT delta). Pairs where either side completed nothing are
+/// skipped, as in [`warm_delta_min`]; pairs where either side measured
+/// no TTFT contribute to the SLO delta only.
+fn disagg_deltas(cells: &[AbDisaggCell]) -> (Option<f64>, Option<f64>) {
+    let mut slo_min: Option<f64> = None;
+    let mut ttft_max: Option<f64> = None;
+    for on in cells.iter().filter(|c| c.mode == "on" && c.completed > 0)
+    {
+        let off = cells.iter().find(|c| {
+            c.mode == "off" && c.completed > 0 && c.shape == on.shape
+        });
+        if let Some(off) = off {
+            let slo = on.slo - off.slo;
+            slo_min = Some(slo_min.map_or(slo, |m: f64| m.min(slo)));
+            if let (Some(a), Some(b)) = (on.p99_ttft, off.p99_ttft) {
+                let dt = a - b;
+                ttft_max =
+                    Some(ttft_max.map_or(dt, |m: f64| m.max(dt)));
+            }
+        }
+    }
+    (slo_min, ttft_max)
 }
 
 /// Run the whole grid. Scenarios that admit no initial placement are
@@ -1093,10 +1374,120 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
             }
         }
     }
+    // The disaggregation section: each length shape runs the identical
+    // stream twice — the default mixed engine vs phase-role placement
+    // + chunked prefill. The on arm's replan check period sits past the
+    // horizon, so the tiered placement is computed once at t=0 and the
+    // delta is attributable to disaggregation alone.
+    let mut disagg_cells = Vec::new();
+    if cfg.disagg {
+        for &shape in &cfg.length_shapes {
+            let scenario = Scenario {
+                duration: cfg.duration,
+                seed: cfg.seed,
+                ..Scenario::new(shape)
+            };
+            let data = scenario.build();
+            let arrived = data.requests.len();
+            for (mode, on) in [("off", false), ("on", true)] {
+                let eng = EngineConfig {
+                    chunk_prefill_tokens: if on {
+                        cfg.chunk_prefill_tokens
+                    } else {
+                        0
+                    },
+                    ..engine
+                };
+                let rcfg = on.then(|| ReplanConfig {
+                    check_period: cfg.duration + 1.0,
+                    disagg: true,
+                    ..Default::default()
+                });
+                let Some(report) = run_scenario_cfg(
+                    &scenario,
+                    &data,
+                    &cluster,
+                    eng,
+                    rcfg,
+                ) else {
+                    continue;
+                };
+                let eval = &report.eval;
+                disagg_cells.push(AbDisaggCell {
+                    shape: shape.name(),
+                    mode,
+                    arrived,
+                    completed: eval.records.len(),
+                    dropped: report.dropped,
+                    slo: round(eval.slo_attainment(cfg.slo_scale), 1e-4),
+                    goodput: round(eval.goodput(cfg.slo_scale), 1e-4),
+                    p99_ttft: eval
+                        .ttft_summary()
+                        .try_p99()
+                        .map(|p| round(p, 1e-3)),
+                    p99_latency: eval
+                        .latency_summary()
+                        .try_p99()
+                        .map(|p| round(p, 1e-3)),
+                    kv_resumed: report.kv_resumed,
+                });
+            }
+        }
+    }
+    // The forecast sweep: ForecastPolicy alone, its two knobs gridded
+    // over the forecastable shapes (the ones with a trend to chase).
+    let mut forecast_cells = Vec::new();
+    if cfg.sweep_forecast {
+        for shape in [ScenarioShape::FlashCrowd, ScenarioShape::Drift] {
+            let scenario = Scenario {
+                duration: cfg.duration,
+                seed: cfg.seed,
+                ..Scenario::new(shape)
+            };
+            let data = scenario.build();
+            for gain in [0.25, 0.5, 1.0] {
+                for horizon in [1.0, 2.0, 4.0] {
+                    let rcfg = ReplanConfig {
+                        policy: PolicyKind::Forecast,
+                        forecast_gain: gain,
+                        forecast_horizon: horizon,
+                        ..Default::default()
+                    };
+                    let Some(report) = run_scenario_cfg(
+                        &scenario,
+                        &data,
+                        &cluster,
+                        engine,
+                        Some(rcfg),
+                    ) else {
+                        continue;
+                    };
+                    let eval = &report.eval;
+                    forecast_cells.push(AbForecastCell {
+                        shape: shape.name(),
+                        gain,
+                        horizon,
+                        slo: round(
+                            eval.slo_attainment(cfg.slo_scale),
+                            1e-4,
+                        ),
+                        goodput: round(eval.goodput(cfg.slo_scale), 1e-4),
+                        p99_latency: eval
+                            .latency_summary()
+                            .try_p99()
+                            .map(|p| round(p, 1e-3)),
+                        replans: report.replans.len(),
+                        migrations: report.migrations,
+                    });
+                }
+            }
+        }
+    }
     let warm_delta = warm_delta_min(&cells);
     let (staged_dt, staged_slo) = staged_deltas(&cells);
     let shed_delta = shed_goodput_delta_min(&tier_cells);
     let recovery_delta = recovery_slo_delta_min(&fault_cells);
+    let (disagg_slo, disagg_ttft) = disagg_deltas(&disagg_cells);
     AbReport {
         duration: cfg.duration,
         seed: cfg.seed,
@@ -1110,6 +1501,10 @@ pub fn run_ab(cfg: &AbConfig) -> AbReport {
         shed_goodput_delta_min: shed_delta,
         fault_cells,
         recovery_slo_delta_min: recovery_delta,
+        disagg_cells,
+        disagg_slo_delta_min: disagg_slo,
+        disagg_ttft_delta_max: disagg_ttft,
+        forecast_cells,
     }
 }
 
@@ -1273,6 +1668,10 @@ mod tests {
             shed_goodput_delta_min: None,
             fault_cells: vec![],
             recovery_slo_delta_min: None,
+            disagg_cells: vec![],
+            disagg_slo_delta_min: None,
+            disagg_ttft_delta_max: None,
+            forecast_cells: vec![],
         };
         let md = report.to_markdown(false);
         assert!(!md.contains("NaN"), "markdown leaked a NaN:\n{md}");
@@ -1316,6 +1715,90 @@ mod tests {
             vec![dead, mk("drift", "single-unit", "recover", 0.7)];
         let d = recovery_slo_delta_min(&cells).expect("pair");
         assert!((d - 0.7).abs() < 1e-12, "d={d}");
+    }
+
+    #[test]
+    fn disagg_deltas_match_hand_computation() {
+        let mk = |shape, mode, slo, ttft: Option<f64>| AbDisaggCell {
+            shape,
+            mode,
+            arrived: 100,
+            completed: 90,
+            dropped: 0,
+            slo,
+            goodput: 1.0,
+            p99_ttft: ttft,
+            p99_latency: Some(2.0),
+            kv_resumed: if mode == "on" { 5 } else { 0 },
+        };
+        let cells = vec![
+            mk("bimodal-long", "off", 0.80, Some(3.0)),
+            mk("bimodal-long", "on", 0.82, Some(1.0)),
+            mk("length-drift", "off", 0.70, Some(4.0)),
+            mk("length-drift", "on", 0.69, Some(2.5)),
+        ];
+        let (slo, ttft) = disagg_deltas(&cells);
+        // min(0.02, -0.01) = -0.01; max(1.0-3.0, 2.5-4.0) = -1.5.
+        assert!((slo.unwrap() - (-0.01)).abs() < 1e-12, "slo={slo:?}");
+        assert!((ttft.unwrap() - (-1.5)).abs() < 1e-12, "ttft={ttft:?}");
+        // Unpaired on-cells contribute nothing.
+        let (s2, t2) = disagg_deltas(&cells[1..2]);
+        assert!(s2.is_none() && t2.is_none());
+        // An empty cell never pairs (vacuous attainment).
+        let mut dead = mk("bimodal-long", "off", 0.0, None);
+        dead.completed = 0;
+        let (s3, t3) = disagg_deltas(&[
+            dead,
+            mk("bimodal-long", "on", 0.9, Some(1.0)),
+        ]);
+        assert!(s3.is_none() && t3.is_none());
+        // A pair without TTFT on one side still scores SLO.
+        let (s4, t4) = disagg_deltas(&[
+            mk("bimodal-long", "off", 0.8, None),
+            mk("bimodal-long", "on", 0.9, Some(1.0)),
+        ]);
+        assert!((s4.unwrap() - 0.1).abs() < 1e-12);
+        assert!(t4.is_none());
+    }
+
+    #[test]
+    fn disagg_section_is_deterministic_and_opt_in() {
+        // Off by default: no disagg cells, verdicts unmeasured.
+        let base = AbConfig {
+            duration: 30.0,
+            shapes: vec![],
+            overload_shapes: vec![],
+            policies: vec![],
+            ..AbConfig::smoke()
+        };
+        let plain = run_ab(&base);
+        assert!(plain.disagg_cells.is_empty());
+        assert!(plain.disagg_slo_delta_min.is_none());
+        assert!(plain.forecast_cells.is_empty());
+
+        // Opted in: both arms run per length shape, byte-identically
+        // across invocations, and the verdict pair is measured.
+        let cfg = AbConfig {
+            disagg: true,
+            length_shapes: vec![ScenarioShape::BimodalLong],
+            ..base
+        };
+        let a = run_ab(&cfg);
+        let b = run_ab(&cfg);
+        assert_eq!(
+            a.to_json(false).to_string(),
+            b.to_json(false).to_string()
+        );
+        assert_eq!(a.to_markdown(false), b.to_markdown(false));
+        assert_eq!(a.disagg_cells.len(), 2, "{:?}", a.disagg_cells);
+        assert_eq!(a.disagg_cells[0].mode, "off");
+        assert_eq!(a.disagg_cells[1].mode, "on");
+        // The off arm never touches the handoff machinery.
+        assert_eq!(a.disagg_cells[0].kv_resumed, 0);
+        assert!(a.disagg_slo_delta_min.is_some());
+        assert!(a.disagg_ttft_delta_max.is_some());
+        let md = a.to_markdown(false);
+        assert!(md.contains("disagg-vs-mixed"), "{md}");
     }
 
     #[test]

@@ -443,6 +443,7 @@ pub fn fig9_scenario(
         units: vec![PlacementUnit {
             mesh_gpus,
             members: cands.into_iter().enumerate().collect(),
+            role: Default::default(),
         }],
     };
     let cost = CostModel::a100();
@@ -569,6 +570,7 @@ pub fn fig10(alphas: &[f64], duration: f64) -> Vec<Fig10Point> {
                         })
                     })
                     .collect(),
+                role: Default::default(),
             }],
         };
         let tight = |mut c: EngineConfig| {
@@ -694,6 +696,7 @@ pub fn fig12(duration: f64) -> Vec<Fig12Row> {
                         })
                     })
                     .collect(),
+                role: Default::default(),
             }],
         };
         let requests = {

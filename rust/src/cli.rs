@@ -123,6 +123,16 @@ struct SimArgs {
     faults: Option<FaultsAxis>,
     /// Emergency replan on unit failure (`--fault-recovery`).
     fault_recovery: Option<bool>,
+    /// Prefill/decode disaggregation: role-tiered placement with priced
+    /// KV handoff (`--disagg`, default off — mixed units replay the
+    /// pre-disagg engine bit-identically).
+    disagg: Option<bool>,
+    /// Chunked prefill budget in tokens (`--chunk-prefill`, 0 = off =
+    /// monolithic prefill, bit-identical to the pre-chunking engine).
+    chunk_prefill: Option<usize>,
+    /// Forecast gain x horizon sweep section in `ab`
+    /// (`--sweep-forecast`).
+    sweep_forecast: bool,
 }
 
 impl SimArgs {
@@ -202,6 +212,9 @@ impl SimArgs {
             shed: flag_switch(args, "--shed")?,
             faults,
             fault_recovery: flag_switch(args, "--fault-recovery")?,
+            disagg: flag_switch(args, "--disagg")?,
+            chunk_prefill: flag_opt(args, "--chunk-prefill")?,
+            sweep_forecast: args.iter().any(|a| a == "--sweep-forecast"),
         })
     }
 }
@@ -371,7 +384,11 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
 /// parity verdict. `--smoke` shortens the runs for CI; `--policy P`
 /// restricts the grid to one policy; `--faults F` adds the chaos
 /// section (ignore vs failure-aware recovery under seeded fault
-/// schedules); `--out FILE` writes the AB_N.json record
+/// schedules); `--disagg on` adds the disagg section (mixed units vs
+/// prefill/decode role tiers on the long-prompt scenarios, with the
+/// `disagg_slo_delta_min` verdict that gates the default flip);
+/// `--sweep-forecast` adds the forecast gain x horizon grid;
+/// `--out FILE` writes the AB_N.json record
 /// (decision-latency fields are host-dependent, everything else is
 /// deterministic in the config); `--strip-timing` drops those
 /// host-dependent fields so two same-config runs emit byte-identical
@@ -403,6 +420,15 @@ fn ab_cmd(args: &[String]) -> Result<()> {
     if let Some(f) = sim.faults {
         cfg.faults = vec![f];
     }
+    if let Some(d) = sim.disagg {
+        cfg.disagg = d;
+    }
+    if let Some(c) = sim.chunk_prefill {
+        cfg.chunk_prefill_tokens = c;
+    }
+    if sim.sweep_forecast {
+        cfg.sweep_forecast = true;
+    }
     let shapes: Vec<&str> =
         cfg.shapes.iter().map(|s| s.name()).collect();
     let policies: Vec<&str> =
@@ -432,6 +458,22 @@ fn ab_cmd(args: &[String]) -> Result<()> {
             "ab: chaos section — ignore vs failure-aware recovery \
              under [{}]",
             faults.join(", ")
+        );
+    }
+    if cfg.disagg {
+        let lengths: Vec<&str> =
+            cfg.length_shapes.iter().map(|s| s.name()).collect();
+        println!(
+            "ab: disagg section — mixed units vs prefill/decode role \
+             tiers (chunked prefill {} tokens) on [{}]",
+            cfg.chunk_prefill_tokens,
+            lengths.join(", ")
+        );
+    }
+    if cfg.sweep_forecast {
+        println!(
+            "ab: forecast sweep — gain x horizon grid on flash-crowd \
+             + drift"
         );
     }
     let timing = !args.iter().any(|a| a == "--strip-timing");
@@ -511,7 +553,9 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
     use crate::simulator::{
         trace_with_faults, trace_with_faults_from_str,
     };
-    use crate::workload::{Scenario, ScenarioShape, SloClass};
+    use crate::workload::{
+        trace_with_dynamics, Scenario, ScenarioShape, SloClass,
+    };
 
     let sim = SimArgs::parse(args)?;
     let shape_name = flag_str(args, "--shape", "flash-crowd");
@@ -519,7 +563,8 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         anyhow::anyhow!(
             "unknown shape `{shape_name}` (expected stationary | diurnal \
              | bursty | flash-crowd | drift | overcommit | \
-             flash-overload | tiered-diurnal)"
+             flash-overload | tiered-diurnal | bimodal-long | \
+             length-drift)"
         )
     })?;
     let replan_arg = flag_str(args, "--replan", "on");
@@ -558,18 +603,35 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         host_tier_blocks: sim.host_tier_blocks.unwrap_or(0),
         tier_aware: sim.tier_aware.unwrap_or(false),
         shed: sim.shed.unwrap_or(false),
+        chunk_prefill_tokens: sim.chunk_prefill.unwrap_or(0),
         ..EngineConfig::muxserve()
     };
     let cluster = scenario_cluster();
+    // Disagg defaults off: mixed units stay the baseline until the `ab`
+    // disagg_slo_delta_min verdict gates the flip (see ROADMAP).
+    let disagg = sim.disagg.unwrap_or(false);
+    anyhow::ensure!(
+        !disagg || adaptive,
+        "--disagg on needs --replan on (role-tiered placement is \
+         installed by the replan controller)"
+    );
     let replan = adaptive.then(|| ReplanConfig {
         warm_start: sim.warm,
         policy,
         migration_mode,
         objective: sim.objective.unwrap_or(Objective::Throughput),
         fault_recovery: sim.fault_recovery.unwrap_or(false),
+        disagg,
         ..Default::default()
     });
     let fault_axis = sim.faults.unwrap_or(FaultsAxis::None);
+    if disagg {
+        println!(
+            "disagg: prefill/decode role tiers ON (chunked prefill {} \
+             tokens, 0 = monolithic)",
+            engine.chunk_prefill_tokens
+        );
+    }
 
     let (report, arrived) = if let Some(path) = flag_path(args, "--replay-trace")? {
         // Replay path: a frozen trace supplies the stream (and, for v4
@@ -652,9 +714,15 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         }
         // Optionally freeze the workload (plus its chaos schedule —
         // with no faults this writes a plain v3 trace) for later
-        // --replay-trace runs.
+        // --replay-trace runs. Length-dynamics shapes with no faults
+        // export v5 (requests bake their concrete lengths, so replay
+        // needs no re-sampling; the L row is provenance metadata).
         if let Some(path) = flag_path(args, "--export-trace")? {
-            let text = trace_with_faults(&data.requests, &fault_plan);
+            let text = if fault_plan.events.is_empty() {
+                trace_with_dynamics(&data.requests, scenario.length_dynamics)
+            } else {
+                trace_with_faults(&data.requests, &fault_plan)
+            };
             std::fs::write(path, text)
                 .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
             println!("trace written to {path}");
@@ -893,13 +961,15 @@ fn print_help() {
          on|off] [--shed on|off]\n  \
          \x20        [--faults none|single-unit|rolling|flaky-link|\
          straggler]\n  \
-         \x20        [--fault-recovery on|off]\n  \
+         \x20        [--fault-recovery on|off] [--disagg on|off] \
+         [--chunk-prefill N]\n  \
          \x20                            dynamic workload (stationary | \
          diurnal | bursty |\n  \
          \x20                            flash-crowd | drift | overcommit \
          |\n  \
-         \x20                            flash-overload | tiered-diurnal) \
-         with online\n  \
+         \x20                            flash-overload | tiered-diurnal \
+         | bimodal-long |\n  \
+         \x20                            length-drift) with online\n  \
          \x20                            re-placement;\n  \
          \x20                            --policy picks the replan \
          trigger (threshold |\n  \
@@ -946,6 +1016,18 @@ fn print_help() {
          emergency replan\n  \
          \x20                            over the survivors when a unit \
          dies,\n  \
+         \x20                            --disagg on splits units into \
+         prefill/decode\n  \
+         \x20                            role tiers with priced KV \
+         handoff (needs\n  \
+         \x20                            --replan on; off = mixed units, \
+         the default\n  \
+         \x20                            until the ab verdict gates the \
+         flip),\n  \
+         \x20                            --chunk-prefill N caps each \
+         prefill step at N\n  \
+         \x20                            tokens so decode steps \
+         interleave (0 = off),\n  \
          \x20                            --export-trace FILE freezes the \
          stream (v4 when\n  \
          \x20                            faults are on),\n  \
@@ -956,7 +1038,8 @@ fn print_help() {
          [--duration S]\n  \
          \x20   [--seed N] [--eviction E] [--host-tier-blocks N] \
          [--faults F]\n  \
-         \x20   [--strip-timing]\n  \
+         \x20   [--disagg on|off] [--chunk-prefill N] [--sweep-forecast] \
+         [--strip-timing]\n  \
          \x20                            adaptation-policy A/B harness: \
          every replan\n  \
          \x20                            policy x scenario x warm x \
@@ -967,7 +1050,13 @@ fn print_help() {
          tiered-overload goodput,\n  \
          \x20                            and (with --faults) \
          recovery-vs-ignore chaos\n  \
-         \x20                            verdicts\n  \
+         \x20                            verdicts; --disagg on adds \
+         mixed-vs-role-tiers\n  \
+         \x20                            on the long-prompt scenarios \
+         (p99-TTFT + SLO\n  \
+         \x20                            deltas), --sweep-forecast adds \
+         the forecast\n  \
+         \x20                            gain x horizon grid\n  \
          bench-cache [--smoke] [--eviction E] [--host-tier-blocks N] \
          [--out FILE]\n  \
          \x20           [--shared-prefix F] [--duration S] [--seed N]\n  \

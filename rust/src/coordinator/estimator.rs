@@ -49,6 +49,52 @@ impl Objective {
     }
 }
 
+/// Phase specialization of a placement unit (prefill/decode
+/// disaggregation). `Mixed` is today's behavior and the default: the
+/// unit runs both phases of every request it hosts. A `PrefillHeavy`
+/// unit produces each request's first token and hands the KV cache off
+/// to a paired `DecodeHeavy` unit, which never runs a prefill of its
+/// own — its KV arrives via copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PhaseRole {
+    #[default]
+    Mixed,
+    PrefillHeavy,
+    DecodeHeavy,
+}
+
+impl PhaseRole {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mixed" => Some(PhaseRole::Mixed),
+            "prefill" => Some(PhaseRole::PrefillHeavy),
+            "decode" => Some(PhaseRole::DecodeHeavy),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PhaseRole::Mixed => "mixed",
+            PhaseRole::PrefillHeavy => "prefill",
+            PhaseRole::DecodeHeavy => "decode",
+        }
+    }
+
+    pub fn all() -> [PhaseRole; 3] {
+        [PhaseRole::Mixed, PhaseRole::PrefillHeavy, PhaseRole::DecodeHeavy]
+    }
+
+    /// Stable discriminant for signature/cache keys.
+    pub fn code(&self) -> u8 {
+        match self {
+            PhaseRole::Mixed => 0,
+            PhaseRole::PrefillHeavy => 1,
+            PhaseRole::DecodeHeavy => 2,
+        }
+    }
+}
+
 /// One LLM colocated in a unit, with its resource configuration.
 #[derive(Clone, Debug)]
 pub struct UnitMember {
@@ -285,6 +331,94 @@ impl Estimator {
         UnitEstimate { tpt, batch: batches, total }
     }
 
+    /// Role-aware unit pricing for phase-specialized units.
+    ///
+    /// - [`PhaseRole::Mixed`] is exactly [`Self::unit_estimate`] — the
+    ///   Eq. 3 fixpoint, bit-identical to the non-disaggregated path.
+    /// - [`PhaseRole::PrefillHeavy`] prices *prefill throughput*: the
+    ///   unit only produces each request's first token, so every
+    ///   member's decode tail shrinks to one step and its KV residency
+    ///   to the prompt (the KV leaves with the handoff).
+    /// - [`PhaseRole::DecodeHeavy`] prices *KV-residency capacity*: no
+    ///   prefill compute at all (KV arrives via copy), members decouple
+    ///   — decode phases overlap — and the binding resource is the KV
+    ///   pool, via [`Self::kv_batch_caps`] over the full context.
+    pub fn unit_estimate_role(
+        &self,
+        members: &[UnitMember],
+        mesh_gpus: usize,
+        role: PhaseRole,
+    ) -> UnitEstimate {
+        match role {
+            PhaseRole::Mixed => self.unit_estimate(members, mesh_gpus),
+            PhaseRole::PrefillHeavy => {
+                let ms: Vec<UnitMember> = members
+                    .iter()
+                    .map(|m| {
+                        let mut m = m.clone();
+                        m.workload.mean_output_len = 1.0;
+                        m
+                    })
+                    .collect();
+                self.unit_estimate(&ms, mesh_gpus)
+            }
+            PhaseRole::DecodeHeavy => {
+                let n = members.len();
+                if n == 0 {
+                    return UnitEstimate {
+                        tpt: vec![],
+                        batch: vec![],
+                        total: 0.0,
+                    };
+                }
+                let caps = self.kv_batch_caps(members, mesh_gpus);
+                let mut batch = Vec::with_capacity(n);
+                let mut tpt = Vec::with_capacity(n);
+                for (m, mem) in members.iter().enumerate() {
+                    let avg_ctx = mem.workload.mean_prompt_len
+                        + mem.workload.mean_output_len / 2.0;
+                    let tpt_at = |b: f64| {
+                        let t_d = self.cost.decode_latency(
+                            &mem.spec,
+                            b,
+                            avg_ctx,
+                            mem.decode_sm,
+                            mem.tp,
+                        );
+                        let cycle = t_d * mem.workload.mean_output_len;
+                        if cycle <= 0.0 {
+                            0.0
+                        } else {
+                            (b / cycle).min(mem.workload.rate)
+                        }
+                    };
+                    let (mut lo, mut hi) = (1.0_f64, caps[m]);
+                    let best = if tpt_at(hi) < mem.workload.rate - 1e-9 {
+                        hi
+                    } else {
+                        for _ in 0..24 {
+                            let mid = 0.5 * (lo + hi);
+                            if tpt_at(mid) >= mem.workload.rate - 1e-9 {
+                                hi = mid;
+                            } else {
+                                lo = mid;
+                            }
+                        }
+                        hi
+                    };
+                    batch.push(best);
+                    tpt.push(tpt_at(best));
+                }
+                let total = members
+                    .iter()
+                    .zip(&tpt)
+                    .map(|(mem, t)| self.member_score(mem, *t))
+                    .sum();
+                UnitEstimate { tpt, batch, total }
+            }
+        }
+    }
+
     /// Alg. 2's `estimate_throughput(m, num_sm, p)`: single-LLM unit on a
     /// `tp`-GPU mesh with `sm` fraction. Returns (throughput, batch).
     pub fn single_llm(
@@ -453,5 +587,64 @@ mod tests {
             assert_eq!(Objective::parse(o.name()), Some(o));
         }
         assert_eq!(Objective::parse("latency"), None);
+    }
+
+    #[test]
+    fn phase_role_parse_round_trips_and_codes_are_distinct() {
+        let mut codes = std::collections::HashSet::new();
+        for r in PhaseRole::all() {
+            assert_eq!(PhaseRole::parse(r.name()), Some(r));
+            assert!(codes.insert(r.code()));
+        }
+        assert_eq!(PhaseRole::parse("both"), None);
+        assert_eq!(PhaseRole::default(), PhaseRole::Mixed);
+    }
+
+    #[test]
+    fn mixed_role_estimate_is_bit_identical_to_plain_estimate() {
+        let est = Estimator::new(CostModel::a100());
+        let ms = [member(6.7, 2.0, 0.6, 1), member(13.0, 0.8, 0.6, 1)];
+        let plain = est.unit_estimate(&ms, 1);
+        let role = est.unit_estimate_role(&ms, 1, PhaseRole::Mixed);
+        assert_eq!(plain.total.to_bits(), role.total.to_bits());
+        for (a, b) in plain.batch.iter().zip(&role.batch) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn prefill_role_outprices_mixed_on_saturated_prefill() {
+        // A saturated member: producing only first tokens (no decode
+        // tail) must price at least as many completed prefills per
+        // second as the full-lifetime mixed estimate.
+        let est = Estimator::new(CostModel::a100());
+        let ms = [member(6.7, 1000.0, 1.0, 1)];
+        let mixed = est.unit_estimate_role(&ms, 1, PhaseRole::Mixed);
+        let pre = est.unit_estimate_role(&ms, 1, PhaseRole::PrefillHeavy);
+        assert!(
+            pre.total > mixed.total,
+            "prefill {} <= mixed {}",
+            pre.total,
+            mixed.total
+        );
+    }
+
+    #[test]
+    fn decode_role_pays_no_prefill_and_is_kv_capped() {
+        let est = Estimator::new(CostModel::a100());
+        let ms = [member(6.7, 1000.0, 1.0, 1)];
+        let mixed = est.unit_estimate_role(&ms, 1, PhaseRole::Mixed);
+        let dec = est.unit_estimate_role(&ms, 1, PhaseRole::DecodeHeavy);
+        // No prefill serialization in the cycle: strictly more decode
+        // throughput than the mixed unit at the same saturation…
+        assert!(
+            dec.total > mixed.total,
+            "decode {} <= mixed {}",
+            dec.total,
+            mixed.total
+        );
+        // …and the batch is pinned to the KV residency cap.
+        let caps = est.kv_batch_caps(&ms, 1);
+        assert!((dec.batch[0] - caps[0]).abs() < 1e-6);
     }
 }

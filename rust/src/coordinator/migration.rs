@@ -33,6 +33,8 @@
 //! old `downtime × pending` cluster-wide guess — is what feeds the
 //! hysteresis trigger bar, per moved LLM.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::HashMap;
 
 use crate::config::ModelSpec;
@@ -188,14 +190,17 @@ impl MigrationPlan {
     }
 }
 
-/// Canonical unit identity: mesh size plus the sorted
+/// Canonical unit identity: mesh size, phase-role code, plus the sorted
 /// (llm, sm-rounded-to-5%) member set — see [`unit_key`].
-pub type UnitKey = (usize, Vec<(usize, u32)>);
+pub type UnitKey = (usize, u8, Vec<(usize, u32)>);
 
-/// Canonical identity of a unit for diffing: mesh size plus the sorted
-/// (llm, sm-rounded-to-5%) member set — the same banding the placement
-/// signature uses, so "kept" here agrees with "same shape" there,
-/// independent of unit order and member order.
+/// Canonical identity of a unit for diffing: mesh size, phase-role
+/// code, plus the sorted (llm, sm-rounded-to-5%) member set — the same
+/// banding the placement signature uses, so "kept" here agrees with
+/// "same shape" there, independent of unit order and member order. The
+/// role joins the key so a unit changing phase role (mixed ⇄
+/// prefill/decode-specialized) registers as a shape change in both the
+/// migration diff and the replan signature simultaneously.
 pub fn unit_key(u: &PlacementUnit) -> UnitKey {
     let mut ms: Vec<(usize, u32)> = u
         .members
@@ -203,7 +208,7 @@ pub fn unit_key(u: &PlacementUnit) -> UnitKey {
         .map(|(i, c)| (*i, (c.sm * 20.0).round() as u32))
         .collect();
     ms.sort_unstable();
-    (u.mesh_gpus, ms)
+    (u.mesh_gpus, u.role.code(), ms)
 }
 
 /// Diff `old` → `new` into a priced, serialized [`MigrationPlan`].
@@ -345,10 +350,11 @@ pub fn plan_migration_dead(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::config::{llama_spec, ClusterSpec, WorkloadSpec};
-    use crate::coordinator::estimator::Estimator;
+    use crate::coordinator::estimator::{Estimator, PhaseRole};
     use crate::coordinator::muxserve_placement;
 
     fn setup(
@@ -529,6 +535,28 @@ mod tests {
         let base =
             plan_migration(&p, &p, &specs, &live, &cost, &cfg);
         assert!(base.is_empty());
+    }
+
+    #[test]
+    fn a_phase_role_change_alone_is_a_shape_change() {
+        let (specs, wl, est, cost) = setup(&[4.0, 2.0, 1.0, 0.5]);
+        let cluster = ClusterSpec::new(1, 4);
+        let p = muxserve_placement(&specs, &wl, &cluster, &est).unwrap();
+        // Same meshes, same members, same SM bands — only unit 0's role
+        // flips. The key must differ, so the diff tears the unit down.
+        let mut flipped = p.clone();
+        flipped.units[0].role = PhaseRole::PrefillHeavy;
+        assert_ne!(unit_key(&p.units[0]), unit_key(&flipped.units[0]));
+        let plan = plan_migration(
+            &p,
+            &flipped,
+            &specs,
+            &flat_live(specs.len(), 100, 5),
+            &cost,
+            &ReplanConfig::default(),
+        );
+        assert_eq!(plan.ops.len(), p.units[0].members.len());
+        assert!(plan.kept.iter().all(|&(i, _)| i != 0));
     }
 
     #[test]

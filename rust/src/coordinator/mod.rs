@@ -11,7 +11,7 @@ pub mod placement;
 pub mod replan;
 pub mod scheduler;
 
-pub use estimator::{Estimator, Objective, UnitMember};
+pub use estimator::{Estimator, Objective, PhaseRole, UnitMember};
 pub use migration::{
     plan_migration, plan_migration_dead, LiveLlm, MigrationMode,
     MigrationPlan, MoveMethod, MoveOp,
@@ -19,9 +19,9 @@ pub use migration::{
 pub use placement::{
     enumerate_mesh_groups, enumerate_partitions, memory_greedy_placement,
     muxserve_placement, muxserve_placement_cached,
-    muxserve_placement_capped, muxserve_placement_warm,
-    parallel_candidates, spatial_placement, Placement, PlacementCache,
-    PlacementUnit, ParallelCandidate,
+    muxserve_placement_capped, muxserve_placement_disagg,
+    muxserve_placement_warm, parallel_candidates, spatial_placement,
+    Placement, PlacementCache, PlacementUnit, ParallelCandidate,
 };
 pub use replan::{
     ForecastPolicy, HysteresisPolicy, PolicyKind, ReplanConfig,

@@ -21,18 +21,38 @@
 //! prefer a different shape; (2) kept units retain the parallel
 //! candidates chosen at their original planning time, so their recorded
 //! `batch`/`tpt`/`meets_rate` metadata reflects the rates they were
-//! planned for. Warm-start falls back to the full search when the local
-//! move cannot be trusted: when a dirty LLM has no feasible candidate on
-//! the dirty pool, when the chosen candidate of a dirty LLM cannot meet
-//! its new rate even with every SM (`meets_rate == false` — only a
-//! cluster-wide rebalance can help), or when the warm `est_total`
-//! regresses below simply keeping the stale placement.
+//! planned for. When the local move cannot be trusted — a dirty LLM has
+//! no feasible candidate on the dirty pool, the chosen candidate of a
+//! dirty LLM cannot meet its new rate even with every SM
+//! (`meets_rate == false`), or the warm `est_total` regresses below
+//! simply keeping the stale placement — the warm path first *widens*
+//! the dirty pool once (absorbing the cheapest kept units until the
+//! pool has doubled; see [`widen_dirty_pool`]) and retries the local
+//! search, and only then falls back to the cold cluster-wide search.
+
+//!
+//! ## Phase-role placement (prefill/decode disaggregation)
+//!
+//! Every unit carries a [`PhaseRole`]. The default, `Mixed`, is today's
+//! behavior — the role is pure annotation and the search is unchanged.
+//! [`muxserve_placement_disagg`] opens the disaggregated search space:
+//! it splits the cluster GPU budget between a prefill tier and a decode
+//! tier (every LLM must be placed in *both*), prices each tier with the
+//! role-aware estimator ([`Estimator::unit_estimate_role`]: prefill
+//! throughput vs KV-residency capacity), and scores a split by the
+//! per-LLM *pipeline* throughput — `min(prefill_tpt, decode_tpt)`,
+//! since a request must clear both stages. Prefill units are listed
+//! before decode units, so the router's last-writer-wins `llm_map`
+//! resolves an LLM's home to its decode unit and the prefill tier is
+//! addressed by the dynamic engine's explicit prefill route.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
-use crate::coordinator::estimator::{Estimator, UnitMember};
+use crate::coordinator::estimator::{Estimator, PhaseRole, UnitMember};
 
 /// Memo of `unit_estimate` totals across mesh groups (ROADMAP "Scale"):
 /// Alg. 1 re-evaluates the same (member set, SM config, mesh size) unit
@@ -42,8 +62,9 @@ use crate::coordinator::estimator::{Estimator, UnitMember};
 /// returns a bit-identical total. Valid for ONE (specs, workloads,
 /// estimator) triple — create a fresh cache per optimizer invocation
 /// (the `muxserve_placement` wrapper does).
-/// Memo key: (mesh_gpus, sorted (llm, sm-bits)) — exact, not banded.
-type UnitCacheKey = (usize, Vec<(usize, u64)>);
+/// Memo key: (mesh_gpus, phase-role code, sorted (llm, sm-bits)) —
+/// exact, not banded.
+type UnitCacheKey = (usize, u8, Vec<(usize, u64)>);
 
 #[derive(Debug, Default)]
 pub struct PlacementCache {
@@ -80,12 +101,13 @@ fn cached_unit_total(
     specs: &[ModelSpec],
     workloads: &[WorkloadSpec],
     mesh_gpus: usize,
+    role: PhaseRole,
     members: &[(usize, ParallelCandidate)],
 ) -> f64 {
     let mut key: Vec<(usize, u64)> =
         members.iter().map(|(i, c)| (*i, c.sm.to_bits())).collect();
     key.sort_unstable();
-    match cache.map.entry((mesh_gpus, key)) {
+    match cache.map.entry((mesh_gpus, role.code(), key)) {
         Entry::Occupied(e) => {
             cache.hits += 1;
             *e.get()
@@ -102,7 +124,7 @@ fn cached_unit_total(
                     tp: mesh_gpus,
                 })
                 .collect();
-            let t = est.unit_estimate(&ms, mesh_gpus).total;
+            let t = est.unit_estimate_role(&ms, mesh_gpus, role).total;
             e.insert(t);
             t
         }
@@ -127,6 +149,9 @@ pub struct PlacementUnit {
     pub mesh_gpus: usize,
     /// (model index, chosen candidate) for each colocated LLM.
     pub members: Vec<(usize, ParallelCandidate)>,
+    /// Phase specialization ([`PhaseRole::Mixed`] — today's behavior —
+    /// unless the disaggregated search built this unit).
+    pub role: PhaseRole,
 }
 
 /// A full cluster placement.
@@ -282,7 +307,9 @@ fn demand_ordered(
                 workloads[i].mean_total_len(),
             )
     };
-    indices.sort_by(|a, b| comp(*b).partial_cmp(&comp(*a)).unwrap());
+    // `total_cmp` — a NaN computation requirement (cost-model pathology)
+    // must order deterministically, not panic the optimizer.
+    indices.sort_by(|a, b| comp(*b).total_cmp(&comp(*a)));
     indices
 }
 
@@ -326,7 +353,14 @@ pub fn muxserve_placement_cached(
             continue;
         }
         if let Some(p) = greedy_place_on_group(
-            &group, &order, specs, workloads, &cands, est, cache,
+            &group,
+            &order,
+            specs,
+            workloads,
+            &cands,
+            est,
+            cache,
+            PhaseRole::Mixed,
         ) {
             if best.as_ref().map_or(true, |b| p.est_total > b.est_total) {
                 best = Some(p);
@@ -368,11 +402,131 @@ pub fn muxserve_placement_capped(
             continue;
         }
         if let Some(p) = greedy_place_on_group(
-            &group, &order, specs, workloads, &cands, est, &mut cache,
+            &group,
+            &order,
+            specs,
+            workloads,
+            &cands,
+            est,
+            &mut cache,
+            PhaseRole::Mixed,
         ) {
             if best.as_ref().map_or(true, |b| p.est_total > b.est_total) {
                 best = Some(p);
             }
+        }
+    }
+    best
+}
+
+/// One tier of the disaggregated search: Alg. 1 restricted to `gpu_cap`
+/// GPUs, every unit annotated with `role` and priced by the role-aware
+/// estimator. Returns `None` when the tier cannot hold every LLM.
+fn placement_role_capped(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+    gpu_cap: usize,
+    role: PhaseRole,
+    cache: &mut PlacementCache,
+) -> Option<Placement> {
+    if gpu_cap == 0 {
+        return None;
+    }
+    let cands = parallel_candidates(specs, workloads, cluster, est);
+    let order = demand_ordered((0..specs.len()).collect(), specs, workloads);
+    let max_min_tp = specs
+        .iter()
+        .map(|s| s.min_tp(cluster.gpu.mem_bytes, 0.3))
+        .max()
+        .unwrap_or(1);
+    let total = gpu_cap.min(cluster.total_gpus());
+    let mut best: Option<Placement> = None;
+    for group in enumerate_partitions(total, &cluster.mesh_sizes()) {
+        if *group.iter().max().unwrap_or(&0) < max_min_tp {
+            continue;
+        }
+        if let Some(p) = greedy_place_on_group(
+            &group, &order, specs, workloads, &cands, est, cache, role,
+        ) {
+            if best.as_ref().map_or(true, |b| p.est_total > b.est_total) {
+                best = Some(p);
+            }
+        }
+    }
+    best
+}
+
+/// Per-LLM throughput of a placement under its units' own roles.
+fn per_llm_role_tpt(
+    p: &Placement,
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    est: &Estimator,
+) -> Vec<f64> {
+    let mut tpt = vec![0.0; specs.len()];
+    for (u, unit) in p.units.iter().enumerate() {
+        let ms = p.unit_members(u, specs, workloads);
+        let e = est.unit_estimate_role(&ms, unit.mesh_gpus, unit.role);
+        for ((gi, _), t) in unit.members.iter().zip(&e.tpt) {
+            tpt[*gi] = *t;
+        }
+    }
+    tpt
+}
+
+/// Disaggregated placement: split the cluster between a prefill tier
+/// and a decode tier (every LLM placed in both), searching every GPU
+/// split. A split is scored by per-LLM *pipeline* throughput —
+/// `Σ_m min(prefill_tpt_m, decode_tpt_m)`, since each request must
+/// clear both stages. Prefill units come first in the unit list (see
+/// the module docs for why the order matters to the router). Returns
+/// `None` when no split can hold every LLM twice — the caller falls
+/// back to the mixed placement.
+pub fn muxserve_placement_disagg(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+) -> Option<Placement> {
+    let total = cluster.total_gpus();
+    if total < 2 || specs.is_empty() {
+        return None;
+    }
+    let mut cache = PlacementCache::default();
+    let mut best: Option<Placement> = None;
+    for k in 1..total {
+        let Some(pre) = placement_role_capped(
+            specs,
+            workloads,
+            cluster,
+            est,
+            k,
+            PhaseRole::PrefillHeavy,
+            &mut cache,
+        ) else {
+            continue;
+        };
+        let Some(dec) = placement_role_capped(
+            specs,
+            workloads,
+            cluster,
+            est,
+            total - k,
+            PhaseRole::DecodeHeavy,
+            &mut cache,
+        ) else {
+            continue;
+        };
+        let pre_tpt = per_llm_role_tpt(&pre, specs, workloads, est);
+        let dec_tpt = per_llm_role_tpt(&dec, specs, workloads, est);
+        let score: f64 =
+            pre_tpt.iter().zip(&dec_tpt).map(|(a, b)| a.min(*b)).sum();
+        if best.as_ref().map_or(true, |b| score > b.est_total) {
+            let mut units = pre.units;
+            units.extend(dec.units);
+            best = Some(Placement { units, est_total: score });
         }
     }
     best
@@ -404,35 +558,111 @@ pub fn muxserve_placement_warm(
     let unit_scores: Vec<f64> = (0..prev.units.len())
         .map(|u| {
             let ms = prev.unit_members(u, specs, workloads);
-            est.unit_estimate(&ms, prev.units[u].mesh_gpus).total
+            est.unit_estimate_role(
+                &ms,
+                prev.units[u].mesh_gpus,
+                prev.units[u].role,
+            )
+            .total
         })
         .collect();
     let stale_total: f64 = unit_scores.iter().sum();
 
-    // Split units into kept (no member crossed a threshold) and dirty.
+    // Dirty mask per *unit*: any member crossed a replan threshold.
+    let dirty_units: Vec<bool> = prev
+        .units
+        .iter()
+        .map(|u| u.members.iter().any(|(i, _)| dirty[*i]))
+        .collect();
+    if !dirty_units.iter().any(|d| *d) {
+        // Nothing crossed a threshold: the stale placement, rescored, IS
+        // the warm answer (same signature ⇒ the caller skips migration).
+        return Some(Placement {
+            units: prev.units.clone(),
+            est_total: stale_total,
+        });
+    }
+
+    let mut cache = PlacementCache::default();
+    // Pass 1: the minimal pool (only units containing a dirty LLM).
+    if let Some(p) = warm_attempt(
+        specs,
+        workloads,
+        cluster,
+        est,
+        prev,
+        &unit_scores,
+        &dirty_units,
+        dirty,
+        &mut cache,
+    ) {
+        return Some(p);
+    }
+    // Pass 2, widen once: absorb the cheapest kept units until the pool
+    // has roughly doubled. A local spike often just needs a neighbour's
+    // GPUs — far cheaper than the cluster-wide search, and the cold
+    // fallback still backstops it.
+    let widened = widen_dirty_pool(prev, &unit_scores, &dirty_units);
+    if widened != dirty_units {
+        if let Some(p) = warm_attempt(
+            specs,
+            workloads,
+            cluster,
+            est,
+            prev,
+            &unit_scores,
+            &widened,
+            dirty,
+            &mut cache,
+        ) {
+            return Some(p);
+        }
+    }
+    // Cold fallback — and if even that comes up empty (it searches the
+    // same space from scratch), the stale placement still serves.
+    muxserve_placement(specs, workloads, cluster, est).or(Some(Placement {
+        units: prev.units.clone(),
+        est_total: stale_total,
+    }))
+}
+
+/// One warm-start pass over a given dirty-unit pool: re-place the
+/// pool's LLMs over the pool's own GPUs, keep every other unit
+/// verbatim. Returns `None` when the local move cannot be trusted
+/// (module-doc contract): no feasible local re-placement at all, a
+/// dirty LLM whose chosen candidate cannot meet its new rate even
+/// saturated (only GPUs from outside the pool can help), or a warm
+/// total that regresses below the do-nothing baseline.
+#[allow(clippy::too_many_arguments)]
+fn warm_attempt(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+    prev: &Placement,
+    unit_scores: &[f64],
+    dirty_units: &[bool],
+    dirty: &[bool],
+    cache: &mut PlacementCache,
+) -> Option<Placement> {
     let mut kept: Vec<PlacementUnit> = Vec::new();
     let mut kept_total = 0.0;
-    let mut dirty_llms: Vec<usize> = Vec::new();
+    let mut pool_llms: Vec<usize> = Vec::new();
     let mut pool = 0usize;
     for (u, unit) in prev.units.iter().enumerate() {
-        if unit.members.iter().any(|(i, _)| dirty[*i]) {
-            dirty_llms.extend(unit.members.iter().map(|(i, _)| *i));
+        if dirty_units[u] {
+            pool_llms.extend(unit.members.iter().map(|(i, _)| *i));
             pool += unit.mesh_gpus;
         } else {
             kept_total += unit_scores[u];
             kept.push(unit.clone());
         }
     }
-    if dirty_llms.is_empty() {
-        // Nothing crossed a threshold: the stale placement, rescored, IS
-        // the warm answer (same signature ⇒ the caller skips migration).
-        return Some(Placement { units: prev.units.clone(), est_total: stale_total });
-    }
-
     // Candidates only for the LLMs being re-placed (the kept ones reuse
     // their recorded configuration).
-    let mut cands: Vec<Vec<ParallelCandidate>> = vec![Vec::new(); specs.len()];
-    for &mi in &dirty_llms {
+    let mut cands: Vec<Vec<ParallelCandidate>> =
+        vec![Vec::new(); specs.len()];
+    for &mi in &pool_llms {
         cands[mi] = parallel_candidates(
             std::slice::from_ref(&specs[mi]),
             std::slice::from_ref(&workloads[mi]),
@@ -442,62 +672,85 @@ pub fn muxserve_placement_warm(
         .pop()
         .unwrap_or_default();
     }
-    let order = demand_ordered(dirty_llms.clone(), specs, workloads);
-    let max_min_tp = dirty_llms
+    let order = demand_ordered(pool_llms.clone(), specs, workloads);
+    let max_min_tp = pool_llms
         .iter()
         .map(|&i| specs[i].min_tp(cluster.gpu.mem_bytes, 0.3))
         .max()
         .unwrap_or(1);
 
-    // Re-partition only the dirty units' GPU pool.
-    let mut cache = PlacementCache::default();
-    let mut best_dirty: Option<Placement> = None;
+    // Re-partition only the pool's GPUs.
+    let mut best_local: Option<Placement> = None;
     for group in enumerate_partitions(pool, &cluster.mesh_sizes()) {
         if *group.iter().max().unwrap_or(&0) < max_min_tp {
             continue;
         }
         if let Some(p) = greedy_place_on_group(
-            &group, &order, specs, workloads, &cands, est, &mut cache,
+            &group,
+            &order,
+            specs,
+            workloads,
+            &cands,
+            est,
+            cache,
+            PhaseRole::Mixed,
         ) {
-            if best_dirty
+            if best_local
                 .as_ref()
                 .map_or(true, |b| p.est_total > b.est_total)
             {
-                best_dirty = Some(p);
+                best_local = Some(p);
             }
         }
     }
-    let Some(dirty_p) = best_dirty else {
-        // No feasible local re-placement at all: cold search — and if
-        // even that comes up empty, the stale placement still serves.
-        return muxserve_placement(specs, workloads, cluster, est).or(Some(
-            Placement { units: prev.units.clone(), est_total: stale_total },
-        ));
-    };
-
-    // Fallback triggers (module-doc contract): a dirty LLM that cannot
-    // meet its new rate even saturated needs GPUs from outside its pool,
-    // and a warm total below the do-nothing baseline means the local move
-    // hurt — both demand the cluster-wide search.
-    let needs_global = dirty_p.units.iter().any(|unit| {
+    let local = best_local?;
+    let needs_global = local.units.iter().any(|unit| {
         unit.members.iter().any(|(i, c)| dirty[*i] && !c.meets_rate)
     });
-    let warm_total = kept_total + dirty_p.est_total;
+    let stale_total: f64 = unit_scores.iter().sum();
+    let warm_total = kept_total + local.est_total;
     // Relative epsilon: re-deriving an identical configuration can move
     // the float sum in the last bits, which must not trigger a cold run.
     if needs_global || warm_total < stale_total * (1.0 - 1e-9) {
-        let stale = Placement {
-            units: prev.units.clone(),
-            est_total: stale_total,
-        };
-        // The cold search can itself come up empty (it searches the same
-        // space from scratch); keeping the stale placement still serves.
-        return muxserve_placement(specs, workloads, cluster, est)
-            .or(Some(stale));
+        return None;
     }
     let mut units = kept;
-    units.extend(dirty_p.units);
+    units.extend(local.units);
     Some(Placement { units, est_total: warm_total })
+}
+
+/// The widened pool for the warm path's second pass: absorb kept units
+/// — cheapest estimator score first, unit index as the deterministic
+/// tie-break — until the dirty pool's GPU count has at least doubled or
+/// no kept unit remains. Exposed at crate level for the pinning test.
+pub(crate) fn widen_dirty_pool(
+    prev: &Placement,
+    unit_scores: &[f64],
+    dirty_units: &[bool],
+) -> Vec<bool> {
+    let mut mask = dirty_units.to_vec();
+    let pool: usize = prev
+        .units
+        .iter()
+        .zip(dirty_units)
+        .filter(|(_, d)| **d)
+        .map(|(u, _)| u.mesh_gpus)
+        .sum();
+    let target = pool * 2;
+    let mut kept_order: Vec<usize> =
+        (0..prev.units.len()).filter(|&u| !dirty_units[u]).collect();
+    kept_order.sort_by(|&a, &b| {
+        unit_scores[a].total_cmp(&unit_scores[b]).then(a.cmp(&b))
+    });
+    let mut cur = pool;
+    for u in kept_order {
+        if cur >= target {
+            break;
+        }
+        mask[u] = true;
+        cur += prev.units[u].mesh_gpus;
+    }
+    mask
 }
 
 /// Inner loop of Alg. 1: place LLMs (already demand-ordered) greedily on a
@@ -514,10 +767,11 @@ fn greedy_place_on_group(
     cands: &[Vec<ParallelCandidate>],
     est: &Estimator,
     cache: &mut PlacementCache,
+    role: PhaseRole,
 ) -> Option<Placement> {
     let mut units: Vec<PlacementUnit> = group
         .iter()
-        .map(|g| PlacementUnit { mesh_gpus: *g, members: vec![] })
+        .map(|g| PlacementUnit { mesh_gpus: *g, members: vec![], role })
         .collect();
     let mut unit_f: Vec<f64> = vec![0.0; units.len()];
 
@@ -544,6 +798,7 @@ fn greedy_place_on_group(
                 specs,
                 workloads,
                 unit.mesh_gpus,
+                role,
                 &trial,
             );
             let delta = total - unit_f[u];
@@ -561,6 +816,7 @@ fn greedy_place_on_group(
             specs,
             workloads,
             units[u].mesh_gpus,
+            role,
             &units[u].members,
         );
     }
@@ -578,12 +834,14 @@ pub fn memory_greedy_placement(
 ) -> Option<Placement> {
     let cands = parallel_candidates(specs, workloads, cluster, est);
     let mut order: Vec<usize> = (0..specs.len()).collect();
-    order.sort_by(|a, b| {
-        workloads[*b].rate.partial_cmp(&workloads[*a].rate).unwrap()
-    });
+    order.sort_by(|a, b| workloads[*b].rate.total_cmp(&workloads[*a].rate));
     let mut units: Vec<PlacementUnit> = group
         .iter()
-        .map(|g| PlacementUnit { mesh_gpus: *g, members: vec![] })
+        .map(|g| PlacementUnit {
+            mesh_gpus: *g,
+            members: vec![],
+            role: PhaseRole::Mixed,
+        })
         .collect();
     let usable =
         cluster.gpu.mem_bytes * (1.0 - crate::costmodel::ACTIVATION_RESERVE);
@@ -666,10 +924,17 @@ pub fn spatial_placement(
             }
         }
         match best {
-            Some((i, _, cost)) => {
-                mesh[i] = *sizes.iter().find(|s| **s > mesh[i]).unwrap();
-                spare -= cost;
-            }
+            // `find` cannot miss here (the candidate search above only
+            // nominates LLMs with a larger size available), but a
+            // break is the safe degradation if it ever did.
+            Some((i, _, cost)) => match sizes.iter().find(|s| **s > mesh[i])
+            {
+                Some(&next) => {
+                    mesh[i] = next;
+                    spare -= cost;
+                }
+                None => break,
+            },
             None => break,
         }
     }
@@ -699,12 +964,14 @@ pub fn spatial_placement(
                 i,
                 ParallelCandidate { sm: 1.0, ..cand },
             )],
+            role: PhaseRole::Mixed,
         });
     }
     Some(Placement { units, est_total: total })
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::config::llama_spec;
@@ -940,6 +1207,144 @@ mod tests {
         assert!(parts.contains(&vec![4, 2]));
         assert!(parts.contains(&vec![1; 6]));
         assert!(enumerate_partitions(0, &sizes).len() <= 1);
+    }
+
+    #[test]
+    fn disagg_places_every_llm_in_both_tiers() {
+        let (specs, wl, est) =
+            setup(&[6.7, 6.7, 13.0, 30.0], &[8.0, 2.0, 1.0, 0.2]);
+        let c = ClusterSpec::new(1, 8);
+        let p = muxserve_placement_disagg(&specs, &wl, &c, &est).unwrap();
+        assert!(p.est_total > 0.0);
+        assert!(p.total_gpus() <= 8);
+        // No Mixed units, and every LLM appears exactly once per tier.
+        let mut pre = vec![0usize; specs.len()];
+        let mut dec = vec![0usize; specs.len()];
+        for u in &p.units {
+            for (gi, _) in &u.members {
+                match u.role {
+                    PhaseRole::PrefillHeavy => pre[*gi] += 1,
+                    PhaseRole::DecodeHeavy => dec[*gi] += 1,
+                    PhaseRole::Mixed => panic!("mixed unit in disagg"),
+                }
+            }
+        }
+        assert!(pre.iter().all(|&n| n == 1), "prefill tier: {pre:?}");
+        assert!(dec.iter().all(|&n| n == 1), "decode tier: {dec:?}");
+        // Prefill units strictly precede decode units, so the router's
+        // last-writer-wins llm_map lands on the decode tier.
+        let first_dec = p
+            .units
+            .iter()
+            .position(|u| u.role == PhaseRole::DecodeHeavy)
+            .unwrap();
+        assert!(p.units[..first_dec]
+            .iter()
+            .all(|u| u.role == PhaseRole::PrefillHeavy));
+        assert!(p.units[first_dec..]
+            .iter()
+            .all(|u| u.role == PhaseRole::DecodeHeavy));
+    }
+
+    #[test]
+    fn disagg_needs_at_least_two_gpus() {
+        let (specs, wl, est) = setup(&[6.7], &[0.5]);
+        let c = ClusterSpec::new(1, 1);
+        assert!(muxserve_placement_disagg(&specs, &wl, &c, &est).is_none());
+    }
+
+    #[test]
+    fn widen_dirty_pool_absorbs_cheapest_kept_units_until_doubled() {
+        let (specs, wl, est) = setup(&[6.7; 4], &[1.0; 4]);
+        let c = ClusterSpec::new(1, 8);
+        let cands = parallel_candidates(&specs, &wl, &c, &est);
+        let unit = |i: usize| PlacementUnit {
+            mesh_gpus: 1,
+            members: vec![(i, cands[i][0])],
+            role: PhaseRole::Mixed,
+        };
+        let prev = Placement {
+            units: (0..4).map(unit).collect(),
+            est_total: 0.0,
+        };
+        // Pool = unit 0 (1 GPU); target 2 GPUs: absorb exactly the
+        // cheapest kept unit (unit 1, score 1.0).
+        let scores = [5.0, 1.0, 3.0, 2.0];
+        let mask =
+            widen_dirty_pool(&prev, &scores, &[true, false, false, false]);
+        assert_eq!(mask, vec![true, true, false, false]);
+        // Two dirty units: target 4 GPUs, absorb both kept units,
+        // cheapest (unit 3) first — order doesn't show in the mask, but
+        // the doubling bound does.
+        let mask =
+            widen_dirty_pool(&prev, &scores, &[true, true, false, false]);
+        assert_eq!(mask, vec![true, true, true, true]);
+        // Already-global pool: nothing to absorb, mask unchanged.
+        let all = [true, true, true, true];
+        assert_eq!(widen_dirty_pool(&prev, &scores, &all), all.to_vec());
+    }
+
+    #[test]
+    fn warm_start_widens_the_pool_before_going_cold() {
+        // Hand-built previous placement: each LLM alone on a 1-GPU
+        // unit. LLM 0 then spikes past what one GPU can serve but
+        // within what two can — the minimal pool must fail, the widened
+        // pool (one absorbed neighbour) must succeed, and the cold
+        // search (which would spend the whole 4-GPU cluster) must not
+        // run.
+        let (specs, mut wl, est) = setup(&[6.7, 6.7], &[0.5, 0.5]);
+        let c = ClusterSpec::new(1, 4);
+        let sat = |tp: usize| {
+            est.single_llm(&specs[0], &WorkloadSpec::sharegpt(1e9), 1.0, tp)
+                .0
+        };
+        let (sat1, sat2) = (sat(1), sat(2));
+        assert!(
+            sat2 > sat1 * 1.3,
+            "test construction needs tp=2 headroom: {sat1} vs {sat2}"
+        );
+        let spike = sat1 * 1.15;
+        let cands = parallel_candidates(&specs, &wl, &c, &est);
+        let tp1 = |i: usize| {
+            *cands[i].iter().find(|cd| cd.tp == 1).unwrap()
+        };
+        let prev = Placement {
+            units: (0..2)
+                .map(|i| PlacementUnit {
+                    mesh_gpus: 1,
+                    members: vec![(i, tp1(i))],
+                    role: PhaseRole::Mixed,
+                })
+                .collect(),
+            est_total: 0.0,
+        };
+        wl[0].rate = spike;
+        let warm = muxserve_placement_warm(
+            &specs,
+            &wl,
+            &c,
+            &est,
+            &prev,
+            &[true, false],
+        )
+        .unwrap();
+        // Widened local search: still only the previous 2 GPUs (a cold
+        // run would have spent all 4), and the spiked LLM now sits on a
+        // 2-GPU mesh with a rate-meeting candidate.
+        assert_eq!(warm.total_gpus(), 2, "went cold: {warm:?}");
+        assert_eq!(warm.n_placed(), 2);
+        let (mesh, cand) = warm
+            .units
+            .iter()
+            .find_map(|u| {
+                u.members
+                    .iter()
+                    .find(|(i, _)| *i == 0)
+                    .map(|(_, cd)| (u.mesh_gpus, *cd))
+            })
+            .unwrap();
+        assert_eq!(mesh, 2, "spiked LLM not moved to the wider mesh");
+        assert!(cand.meets_rate);
     }
 
     #[test]

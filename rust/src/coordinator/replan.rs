@@ -165,6 +165,30 @@ pub struct ReplanConfig {
     /// `recovery_slo_delta_min > 0` on every fault cell (the same
     /// mechanized-gate pattern as warm-start / staged — see ROADMAP).
     pub fault_recovery: bool,
+    /// Prefill/decode disaggregation: place each LLM twice — once in a
+    /// prefill-role tier, once in a decode-role tier
+    /// ([`crate::coordinator::muxserve_placement_disagg`]) — route
+    /// admissions to the prefill unit, and hand finished prefills to the
+    /// decode unit over a priced KV copy. Off by default: the colocated
+    /// mixed placement is the paper's system and the pre-disagg engine
+    /// must replay bit-identically; the default flips only when a
+    /// committed `AB_N.json` shows `disagg_slo_delta_min > 0` on the
+    /// long-prompt cells (the same mechanized-gate pattern as warm-start
+    /// / staged / recovery — see ROADMAP). When the disagg split is
+    /// infeasible (a single GPU, or either tier cannot place every LLM)
+    /// the engine silently falls back to the mixed placement.
+    pub disagg: bool,
+    /// Level-smoothing gain of the [`ForecastPolicy`] built for
+    /// `PolicyKind::Forecast` (its trend gain tracks at 0.8× this, so
+    /// one knob moves both smoothers coherently). The default reproduces
+    /// `ForecastPolicy::default()` bit-for-bit. Swept by the `ab`
+    /// harness's `--sweep-forecast` grid.
+    pub forecast_gain: f64,
+    /// Forecast horizon in check ticks for `PolicyKind::Forecast`
+    /// (`ForecastPolicy::horizon_ticks`). The default reproduces
+    /// `ForecastPolicy::default()` bit-for-bit. Swept by
+    /// `--sweep-forecast`.
+    pub forecast_horizon: f64,
 }
 
 impl Default for ReplanConfig {
@@ -190,6 +214,32 @@ impl Default for ReplanConfig {
             op_overhead: 0.25,
             objective: Objective::Throughput,
             fault_recovery: false,
+            disagg: false,
+            forecast_gain: 0.5,
+            forecast_horizon: 2.0,
+        }
+    }
+}
+
+impl ReplanConfig {
+    /// Construct the policy implementation this config selects, with the
+    /// config's knobs applied. `PolicyKind::build` constructs every kind
+    /// at its hard-coded defaults; this is the config-aware entry point
+    /// the controller uses, so the forecast gain/horizon knobs actually
+    /// reach the Holt smoother. At the default knob values the built
+    /// policy is bit-identical to `self.policy.build()`.
+    pub fn build_policy(&self) -> Box<dyn ReplanPolicy> {
+        match self.policy {
+            PolicyKind::Forecast => Box::new(ForecastPolicy {
+                alpha: self.forecast_gain,
+                // Keep the default 0.4/0.5 trend-to-level ratio: one knob
+                // moves both smoothers coherently (0.8 × 0.5 == 0.4
+                // exactly — halving is a power-of-two scale).
+                beta: 0.8 * self.forecast_gain,
+                horizon_ticks: self.forecast_horizon,
+                ..Default::default()
+            }),
+            _ => self.policy.build(),
         }
     }
 }
@@ -667,9 +717,10 @@ pub struct ReplanController {
 }
 
 impl ReplanController {
-    /// Build a controller running the policy selected by `cfg.policy`.
+    /// Build a controller running the policy selected by `cfg.policy`,
+    /// with the config's policy knobs (forecast gain/horizon) applied.
     pub fn new(cfg: ReplanConfig, planned_rates: Vec<f64>) -> Self {
-        let policy = cfg.policy.build();
+        let policy = cfg.build_policy();
         Self::with_policy(cfg, planned_rates, policy)
     }
 
@@ -1002,6 +1053,44 @@ mod tests {
         let f = fc_at.expect("forecast must fire on the ramp");
         let t = th_at.expect("threshold must fire on the ramp");
         assert!(f < t, "forecast fired at tick {f}, threshold at {t}");
+    }
+
+    #[test]
+    fn forecast_knobs_default_bit_identically_and_wire_through_config() {
+        // Default knobs rebuild ForecastPolicy::default() exactly.
+        let d = ForecastPolicy::default();
+        let cfg = ReplanConfig {
+            policy: PolicyKind::Forecast,
+            ..Default::default()
+        };
+        assert_eq!(cfg.forecast_gain.to_bits(), d.alpha.to_bits());
+        assert_eq!((0.8 * cfg.forecast_gain).to_bits(), d.beta.to_bits());
+        assert_eq!(cfg.forecast_horizon.to_bits(), d.horizon_ticks.to_bits());
+        // A longer horizon built through the config fires strictly
+        // earlier on the same ramp — proof the knob reaches the smoother.
+        let eager = ReplanConfig { forecast_horizon: 6.0, ..cfg };
+        let mut pb = cfg.build_policy();
+        let mut pe = eager.build_policy();
+        let (mut b_at, mut e_at) = (None, None);
+        for k in 0..13 {
+            let obs = ReplanObservation {
+                t: 5.0 * (k + 1) as f64,
+                observed: vec![2.0 + 0.25 * k as f64],
+                planned: vec![2.0],
+                window_slo: Some(0.95),
+            };
+            pb.observe(&cfg, &obs);
+            pe.observe(&eager, &obs);
+            if b_at.is_none() && pb.decide(&cfg, &obs).is_some() {
+                b_at = Some(k);
+            }
+            if e_at.is_none() && pe.decide(&eager, &obs).is_some() {
+                e_at = Some(k);
+            }
+        }
+        let b = b_at.expect("default horizon fires on the ramp");
+        let e = e_at.expect("long horizon fires on the ramp");
+        assert!(e < b, "horizon 6 fired at tick {e}, default at {b}");
     }
 
     #[test]

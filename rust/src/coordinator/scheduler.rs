@@ -63,6 +63,13 @@ pub struct EngineConfig {
     /// tick and fault event, panicking on the first divergence. Costs
     /// a full index walk per check; off in production presets.
     pub validate: bool,
+    /// Chunked prefill: split prompts longer than this many tokens into
+    /// fixed-size chunks, one prefill job per chunk, so a long prompt
+    /// interleaves with other LLMs' prefills and with decode batches
+    /// instead of head-of-line-blocking the unit. 0 (the default)
+    /// disables chunking and reproduces the monolithic-prefill engine
+    /// bit-for-bit.
+    pub chunk_prefill_tokens: usize,
 }
 
 impl EngineConfig {
@@ -81,6 +88,7 @@ impl EngineConfig {
             tier_aware: false,
             shed: false,
             validate: false,
+            chunk_prefill_tokens: 0,
         }
     }
 

@@ -34,6 +34,23 @@
 //!   whole. The policy is fed the plan's *priced* cost, per moved LLM —
 //!   not the blackout's `downtime × preempted` cluster-wide guess.
 //!
+//! ## Prefill/decode disaggregation (optional)
+//!
+//! With [`ReplanConfig::disagg`] the placement search splits the
+//! cluster into a prefill tier and a decode tier (every LLM placed in
+//! both; mixed fallback when no split fits — see
+//! [`muxserve_placement_disagg`]). Arrivals route to the LLM's
+//! prefill-tier unit; a finished prefill's KV is copied to the decode
+//! tier over the interconnect (the staged-migration per-block pricing,
+//! honoring any live link degradation) and resumes mid-decode through
+//! the ordinary `Resume` machinery. Handoff deliveries are steady-state
+//! traffic, not migration work: they never gate replans. Replans under
+//! disagg execute as blackout — staged transplanting assumes a unit
+//! keeps its routing role, which a tier re-split does not honor. Off
+//! (the default) leaves the routing table empty and no handoff flag
+//! ever raised, keeping the engine bit-identical to the
+//! pre-disaggregation build.
+//!
 //! Units are addressed by stable **uids**: completion/adapt events carry
 //! the uid of the unit that issued them, so events of a torn-down unit
 //! simply stop resolving while a transplanted unit's events keep landing
@@ -51,7 +68,9 @@
 use std::collections::{BinaryHeap, HashMap};
 
 use super::faults::{FaultKind, FaultPlan, FaultStats};
-use super::unit::{CacheStats, CrashSalvage, ResumedRequest};
+use super::unit::{
+    CacheStats, CrashSalvage, ResumedRequest, BLOCK_TOKENS,
+};
 use super::{Event, EventKind, Simulation, UnitSim};
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
 use crate::coordinator::migration::{
@@ -62,11 +81,13 @@ use crate::coordinator::replan::{
     ReplanConfig, ReplanController, ReplanDecision, SloWindow,
 };
 use crate::coordinator::{
-    muxserve_placement, muxserve_placement_capped, muxserve_placement_warm,
-    EngineConfig, Placement,
+    muxserve_placement, muxserve_placement_capped,
+    muxserve_placement_disagg, muxserve_placement_warm, EngineConfig,
+    Placement,
 };
-use crate::coordinator::estimator::Estimator;
+use crate::coordinator::estimator::{Estimator, PhaseRole};
 use crate::costmodel::CostModel;
+use crate::memory::block_bytes;
 use crate::metrics::{Evaluation, RequestRecord};
 use crate::workload::Request;
 
@@ -185,6 +206,12 @@ struct StagedDelivery {
     /// destination's host tier (their KV is self-contained — they
     /// resume through the ordinary swap-in path with no re-prefill).
     recovered: bool,
+    /// A prefill→decode handoff (disaggregated serving), not migration
+    /// work: it shares the Resume machinery and the KV-copy fault
+    /// budget, but does NOT count into `outstanding` — handoffs are
+    /// steady-state traffic, and gating replans on them would freeze
+    /// the adaptation loop.
+    handoff: bool,
 }
 
 /// Scheduled consequence of an injected fault, indexed by
@@ -237,6 +264,12 @@ pub struct DynamicSimulation {
     /// Per global LLM: no request admitted before this time (its
     /// migration window); arrivals inside the window buffer in `held`.
     llm_resume_at: Vec<f64>,
+    /// Disaggregated routing table, per global LLM: its prefill-tier
+    /// `(unit, local llm)`, or `(usize::MAX, 0)` when no prefill tier
+    /// is active for it — then arrivals route through `llm_map` as
+    /// always. Only ever populated while a disaggregated placement is
+    /// applied (see [`Self::configure_disagg_units`]).
+    prefill_route: Vec<(usize, usize)>,
     /// Arrivals that landed inside their LLM's migration window, in
     /// arrival order, awaiting the window-closing `Resume` event.
     held: Vec<Request>,
@@ -309,8 +342,22 @@ impl DynamicSimulation {
         let est =
             Estimator::with_kv_frac(cost.clone(), cfg.kv_capacity_frac)
                 .with_objective(rcfg.objective);
-        let placement =
-            muxserve_placement(specs, planning_workloads, cluster, &est)?;
+        // Disaggregated runs try the tiered search first and fall back
+        // to the mixed placement when no split can hold every LLM in
+        // both tiers.
+        let placement = if rcfg.disagg {
+            muxserve_placement_disagg(
+                specs,
+                planning_workloads,
+                cluster,
+                &est,
+            )
+            .or_else(|| {
+                muxserve_placement(specs, planning_workloads, cluster, &est)
+            })?
+        } else {
+            muxserve_placement(specs, planning_workloads, cluster, &est)?
+        };
         let sim = Simulation::from_placement(
             &placement,
             specs,
@@ -324,7 +371,7 @@ impl DynamicSimulation {
         let unit_uid: Vec<u64> = (0..n_units as u64).collect();
         let uid_index: HashMap<u64, usize> =
             unit_uid.iter().enumerate().map(|(u, id)| (*id, u)).collect();
-        Some(DynamicSimulation {
+        let mut dy = DynamicSimulation {
             specs: specs.to_vec(),
             cluster: cluster.clone(),
             cfg,
@@ -340,6 +387,7 @@ impl DynamicSimulation {
             uid_index,
             next_uid: n_units as u64,
             llm_resume_at: vec![0.0; specs.len()],
+            prefill_route: vec![(usize::MAX, 0); specs.len()],
             held: Vec::new(),
             deliveries: Vec::new(),
             outstanding: 0,
@@ -369,7 +417,36 @@ impl DynamicSimulation {
             first_fault_at: None,
             admitted: vec![0; specs.len()],
             lost: vec![0; specs.len()],
-        })
+        };
+        dy.configure_disagg_units();
+        Some(dy)
+    }
+
+    /// Sync the engine with the active placement's phase roles: rebuild
+    /// the per-LLM prefill route and raise the handoff flag on every
+    /// prefill-tier unit (finished prefills divert into its handoff
+    /// buffer instead of decoding in place). Must run after every
+    /// simulation rebuild — fresh units start with the flag down, and
+    /// unit indices shift. Does nothing unless the run was configured
+    /// with [`ReplanConfig::disagg`]: the routing table stays all-MAX
+    /// and no flag is ever raised, keeping the non-disaggregated engine
+    /// bit-identical.
+    fn configure_disagg_units(&mut self) {
+        if !self.controller.config().disagg {
+            return;
+        }
+        for r in self.prefill_route.iter_mut() {
+            *r = (usize::MAX, 0);
+        }
+        for (u, pu) in self.placement.units.iter().enumerate() {
+            let prefill = pu.role == PhaseRole::PrefillHeavy;
+            self.sim.units[u].set_handoff(prefill);
+            if prefill {
+                for (local, (gi, _)) in pu.members.iter().enumerate() {
+                    self.prefill_route[*gi] = (u, local);
+                }
+            }
+        }
     }
 
     /// Arm a deterministic fault schedule for the coming [`Self::run`].
@@ -472,6 +549,7 @@ impl DynamicSimulation {
                     unit.advance_time(ev.time);
                     unit.on_job_done(ev.time, id);
                     self.push_started(u, &mut heap, &mut seq);
+                    self.collect_handoffs(ev.time, u, &mut heap, &mut seq);
                 }
                 EventKind::Adapt => {
                     let Some(&u) = self.uid_index.get(&(ev.unit as u64))
@@ -681,6 +759,7 @@ impl DynamicSimulation {
             payload,
             attempts: 0,
             recovered,
+            handoff: false,
         }));
         self.outstanding += 1;
         heap.push(Event {
@@ -690,6 +769,65 @@ impl DynamicSimulation {
             kind: EventKind::Resume(idx),
         });
         *seq += 1;
+    }
+
+    /// Register a prefill→decode handoff payload and its arrival-time
+    /// Resume event. Shares the delivery store (and the KV-copy fault
+    /// budget) with migration payloads but does not bump `outstanding`
+    /// — see [`StagedDelivery::handoff`].
+    fn push_handoff_delivery(
+        &mut self,
+        time: f64,
+        payload: Vec<ResumedRequest>,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let idx = self.deliveries.len();
+        self.deliveries.push(Some(StagedDelivery {
+            kv_copy: true,
+            payload,
+            attempts: 0,
+            recovered: false,
+            handoff: true,
+        }));
+        heap.push(Event {
+            time,
+            seq: *seq,
+            unit: usize::MAX,
+            kind: EventKind::Resume(idx),
+        });
+        *seq += 1;
+    }
+
+    /// Ship finished prefills off a prefill-role unit: price each
+    /// request's KV copy over the interconnect (the staged-migration
+    /// per-block pricing, scaled by any live link degradation) and push
+    /// one handoff delivery per request, landing on the LLM's
+    /// decode-tier unit through the ordinary Resume machinery. A no-op
+    /// on every non-handoff unit — the buffer stays empty.
+    fn collect_handoffs(
+        &mut self,
+        t: f64,
+        u: usize,
+        heap: &mut BinaryHeap<Event>,
+        seq: &mut u64,
+    ) {
+        let ready = self.sim.units[u].drain_handoffs();
+        if ready.is_empty() {
+            return;
+        }
+        let bw = (self.controller.config().link_bandwidth
+            * self.link_product())
+        .max(1.0);
+        for mut r in ready {
+            // Payloads travel with global llm ids (the drain_llm
+            // convention); `deliver` re-localizes at the destination.
+            let gi = self.placement.units[u].members[r.req.llm].0;
+            r.req.llm = gi;
+            let bytes = r.blocks as f64
+                * block_bytes(BLOCK_TOKENS, self.specs[gi].head_dim);
+            self.push_handoff_delivery(t + bytes / bw, vec![r], heap, seq);
+        }
     }
 
     /// A move window closed: deliver its payload (preempted requests
@@ -735,7 +873,9 @@ impl DynamicSimulation {
         else {
             return;
         };
-        self.outstanding -= 1;
+        if !d.handoff {
+            self.outstanding -= 1;
+        }
         for mut r in d.payload {
             if !d.kv_copy {
                 // Recompute path: plain re-admission.
@@ -803,7 +943,17 @@ impl DynamicSimulation {
         heap: &mut BinaryHeap<Event>,
         seq: &mut u64,
     ) -> bool {
-        let (u, local) = self.sim.llm_map[r.llm];
+        // Disaggregated routing: admissions land on the LLM's
+        // prefill-tier unit when one is active. `llm_map` (last writer
+        // wins — decode units come last in a disagg placement) keeps
+        // addressing the decode tier, which is where KV-resume
+        // deliveries belong.
+        let (pu, plocal) = self.prefill_route[r.llm];
+        let (u, local) = if pu != usize::MAX {
+            (pu, plocal)
+        } else {
+            self.sim.llm_map[r.llm]
+        };
         if u == usize::MAX {
             // Degraded mode: the LLM has no serving unit (its unit died
             // and either nobody reacted or the capped re-placement had
@@ -1238,6 +1388,7 @@ impl DynamicSimulation {
         self.signature = placement_signature(&eff);
         self.placement = eff;
         self.apply_link_factor();
+        self.configure_disagg_units();
     }
 
     /// Arm the paper's periodic quota adaptation for every (non-empty)
@@ -1367,7 +1518,12 @@ impl DynamicSimulation {
         // surviving pool (and the warm path, which re-places over full-
         // cluster mesh groups, is unsafe) — force the capped cold
         // search until repair.
-        let use_warm = self.dead_gpus == 0
+        // Disaggregated runs re-run the tiered search wholesale: the
+        // warm path patches mixed units in place and knows nothing of
+        // tier splits.
+        let disagg = self.controller.config().disagg;
+        let use_warm = !disagg
+            && self.dead_gpus == 0
             && self.controller.config().warm_start
             && decision.dirty.iter().any(|&d| d);
         let t0 = std::time::Instant::now();
@@ -1379,6 +1535,23 @@ impl DynamicSimulation {
                 &self.est,
                 self.cluster.total_gpus().saturating_sub(self.dead_gpus),
             )
+        } else if disagg {
+            // Same mixed fallback the constructor takes when no split
+            // can hold every LLM in both tiers at the fresh rates.
+            muxserve_placement_disagg(
+                &self.specs,
+                &new_workloads,
+                &self.cluster,
+                &self.est,
+            )
+            .or_else(|| {
+                muxserve_placement(
+                    &self.specs,
+                    &new_workloads,
+                    &self.cluster,
+                    &self.est,
+                )
+            })
         } else if use_warm {
             muxserve_placement_warm(
                 &self.specs,
@@ -1440,7 +1613,15 @@ impl DynamicSimulation {
             // migration rate-limit window.
             self.controller.note_replanned(t, decision.rates.clone());
             self.workloads = new_workloads;
-            let mode = self.controller.config().migration_mode;
+            // A tier re-split changes every unit's routing role
+            // wholesale; the transplant-based staged executor assumes
+            // kept units keep serving the same way, so disagg replans
+            // execute as blackout.
+            let mode = if disagg {
+                MigrationMode::Blackout
+            } else {
+                self.controller.config().migration_mode
+            };
             match mode {
                 MigrationMode::Blackout => self
                     .migrate_blackout(t, duration, placement, heap, seq),
@@ -1515,6 +1696,7 @@ impl DynamicSimulation {
         self.placement = placement;
         self.assign_fresh_uids();
         self.apply_link_factor();
+        self.configure_disagg_units();
         self.migrations += 1;
         let resume = t + downtime;
         self.migration_until = resume;
@@ -1730,6 +1912,7 @@ impl DynamicSimulation {
         self.signature = placement_signature(&eff);
         self.placement = eff;
         self.apply_link_factor();
+        self.configure_disagg_units();
         self.migrations += 1;
         self.migration_until = t + plan.total_window();
         self.downtime_s += plan.downtime_seconds();
@@ -2336,5 +2519,225 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The per-LLM accounting identity — every admitted request must be
+    /// completed, shed, dropped, lost, or still in flight.
+    fn assert_conservation(r: &DynamicReport, n_llms: usize) {
+        for llm in 0..n_llms {
+            let completed = r
+                .eval
+                .records
+                .iter()
+                .filter(|x| x.llm == llm)
+                .count() as u64;
+            let accounted = completed
+                + r.shed_llm[llm]
+                + r.dropped_llm[llm]
+                + r.lost[llm]
+                + r.in_flight[llm];
+            assert_eq!(
+                accounted, r.admitted[llm],
+                "conservation broke for llm {llm}"
+            );
+        }
+    }
+
+    /// Bimodal long-prompt stream: steady short interactive requests on
+    /// every LLM plus periodic paired bursts of very long prompts — the
+    /// head-of-line-blocking shape disaggregation + chunked prefill is
+    /// built for.
+    fn bimodal_stream(n_llms: usize, duration: f64) -> Vec<Request> {
+        let mut reqs: Vec<Request> = Vec::new();
+        let mut id = 0u64;
+        let mut push = |reqs: &mut Vec<Request>,
+                        llm: usize,
+                        arrival: f64,
+                        prompt: usize,
+                        output: usize| {
+            reqs.push(Request {
+                id,
+                llm,
+                arrival,
+                prompt_len: prompt,
+                output_len: output,
+                prefix_group: 0,
+                prefix_len: 0,
+                tier: SloClass::Standard,
+            });
+            id += 1;
+        };
+        for llm in 0..n_llms {
+            let mut t = 0.1 + 0.05 * llm as f64;
+            while t < duration {
+                push(&mut reqs, llm, t, 64, 16);
+                t += 0.2;
+            }
+            // Long-prompt pairs, staggered across LLMs so the bursts
+            // collide with the other LLMs' steady short traffic.
+            let mut tl = 5.0 + 1.7 * llm as f64;
+            while tl < duration {
+                push(&mut reqs, llm, tl, 2048, 64);
+                push(&mut reqs, llm, tl + 0.01, 2048, 64);
+                tl += 10.0;
+            }
+        }
+        reqs.sort_by(|a, b| {
+            a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id))
+        });
+        reqs
+    }
+
+    #[test]
+    fn disagg_beats_mixed_on_bimodal_long_prompts() {
+        // Three LLMs on two GPUs: the mixed placement must colocate, so
+        // a monolithic 2048-token prefill head-of-line-blocks its
+        // unit-mates' interactive prefills (one prefill lane per unit)
+        // while competing with their decodes for SMs. The disaggregated
+        // arm runs chunked prefills on a dedicated prefill tier — other
+        // LLMs' short prefills slip in between chunks, and decode
+        // happens on the other GPU — so the TTFT tail collapses.
+        let specs = vec![
+            llama_spec("dg-a", 6.7),
+            llama_spec("dg-b", 6.7),
+            llama_spec("dg-c", 6.7),
+        ];
+        let workloads = vec![
+            WorkloadSpec::sharegpt(2.0),
+            WorkloadSpec::sharegpt(2.0),
+            WorkloadSpec::sharegpt(2.0),
+        ];
+        let cluster = ClusterSpec::new(2, 1);
+        let duration = 60.0;
+        let requests = bimodal_stream(3, duration);
+        let run = |disagg: bool| {
+            let cfg = EngineConfig {
+                chunk_prefill_tokens: if disagg { 256 } else { 0 },
+                ..EngineConfig::muxserve()
+            };
+            let rcfg = ReplanConfig { disagg, ..Default::default() };
+            let dy = DynamicSimulation::new(
+                &specs, &workloads, &cluster, cfg, rcfg, false,
+            )
+            .unwrap();
+            dy.run(&requests, duration)
+        };
+        let off = run(false);
+        let on = run(true);
+        // The disaggregated arm actually disaggregated: prefills hand
+        // off and resume from copied KV on the decode tier; the mixed
+        // arm must never touch that path.
+        assert!(on.kv_resumed > 0, "no handoffs resumed");
+        assert_eq!(off.kv_resumed, 0, "mixed arm must never hand off");
+        let (p_on, p_off) = (
+            on.eval.ttft_summary().p99(),
+            off.eval.ttft_summary().p99(),
+        );
+        assert!(
+            p_on < p_off,
+            "disagg p99 TTFT {p_on} must beat mixed {p_off}"
+        );
+        assert_conservation(&on, specs.len());
+        assert_conservation(&off, specs.len());
+    }
+
+    #[test]
+    fn disagg_conservation_holds_through_copy_failures() {
+        // Fault-injected KV-copy failures hit the prefill→decode
+        // handoffs: each victim retries with backoff and falls back to
+        // recompute (back through the prefill tier) after the attempt
+        // cap. Blocks freed at the prefill unit must be charged exactly
+        // once wherever the request finally decodes, nothing may
+        // vanish, and the whole dance must be bit-deterministic.
+        let specs =
+            vec![llama_spec("cf-a", 6.7), llama_spec("cf-b", 6.7)];
+        let workloads = vec![
+            WorkloadSpec::sharegpt(1.5),
+            WorkloadSpec::sharegpt(1.5),
+        ];
+        let cluster = ClusterSpec::new(2, 1);
+        let duration = 40.0;
+        let requests = bimodal_stream(2, duration);
+        let plan = FaultPlan::new(vec![FaultEvent {
+            time: 2.0,
+            kind: FaultKind::CopyFailure { copies: 40 },
+        }]);
+        let run = || {
+            let cfg = EngineConfig {
+                chunk_prefill_tokens: 256,
+                validate: true,
+                ..EngineConfig::muxserve()
+            };
+            let rcfg =
+                ReplanConfig { disagg: true, ..Default::default() };
+            let dy = DynamicSimulation::new(
+                &specs, &workloads, &cluster, cfg, rcfg, false,
+            )
+            .unwrap();
+            dy.with_faults(&plan).run(&requests, duration)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.eval, b.eval, "copy-failure runs must be identical");
+        assert_eq!(a.kv_resumed, b.kv_resumed);
+        assert_eq!(a.in_flight, b.in_flight);
+        assert!(a.kv_resumed > 0, "handoffs must still resume");
+        assert!(a.fault.copy_retries > 0, "{:?}", a.fault);
+        assert!(a.fault.copy_fallbacks > 0, "{:?}", a.fault);
+        assert!(!a.eval.records.is_empty());
+        assert_conservation(&a, specs.len());
+    }
+
+    #[test]
+    fn adaptive_disagg_replans_deterministically_as_blackout() {
+        // Planning rates far below the replayed stream, so the drift
+        // monitor fires and the replan path re-runs the tiered search;
+        // any executed migration must be a blackout even though the
+        // config asks for staged execution (a tier re-split invalidates
+        // the transplant assumption).
+        let specs =
+            vec![llama_spec("ad-a", 6.7), llama_spec("ad-b", 6.7)];
+        let workloads = vec![
+            WorkloadSpec::sharegpt(0.5),
+            WorkloadSpec::sharegpt(0.5),
+        ];
+        let cluster = ClusterSpec::new(2, 1);
+        let duration = 40.0;
+        let requests = bimodal_stream(2, duration);
+        let run = || {
+            let cfg = EngineConfig {
+                chunk_prefill_tokens: 256,
+                ..EngineConfig::muxserve()
+            };
+            let rcfg = ReplanConfig {
+                disagg: true,
+                migration_mode: MigrationMode::Staged,
+                ..Default::default()
+            };
+            let dy = DynamicSimulation::new(
+                &specs, &workloads, &cluster, cfg, rcfg, true,
+            )
+            .unwrap();
+            dy.run(&requests, duration)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.eval, b.eval);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.kv_resumed, b.kv_resumed);
+        assert!(
+            !a.replans.is_empty(),
+            "drift this large must at least record a decision"
+        );
+        if a.migrations > 0 {
+            let dt = ReplanConfig::default().migration_downtime;
+            assert!(
+                (a.downtime_s
+                    - dt * specs.len() as f64 * a.migrations as f64)
+                    .abs()
+                    < 1e-9,
+                "disagg migrations must execute as blackout: {}",
+                a.downtime_s
+            );
+        }
+        assert_conservation(&a, specs.len());
     }
 }

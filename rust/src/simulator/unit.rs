@@ -45,6 +45,29 @@
 //!   `EngineConfig::host_tier_blocks` blocks, priced over the same
 //!   device↔host link model staged migration uses, and swap back in
 //!   through the resume path when the pool has headroom again.
+//!
+//! ## Chunked prefill and phase-role handoff (optional)
+//!
+//! Two knobs serve the prefill/decode disaggregation work, both inert
+//! by default:
+//!
+//! * **Chunked prefill** — with `EngineConfig::chunk_prefill_tokens`
+//!   nonzero, a prompt whose prefill charge exceeds the chunk size is
+//!   admitted alone (its blocks charged in full, once) and prefilled in
+//!   fixed-token chunks, one solo job per chunk, with the scheduler free
+//!   to interleave other LLMs' prefills and decode batches between
+//!   chunks — a long prompt no longer head-of-line-blocks the unit. The
+//!   first token is emitted (and TTFT stamped) when the LAST chunk
+//!   completes. `0` (the default) reproduces the monolithic engine
+//!   bit-for-bit.
+//! * **Handoff** — a unit placed in the prefill role
+//!   ([`crate::coordinator::PhaseRole::PrefillHeavy`]) has
+//!   [`UnitSim::set_handoff`] on: a finished prefill does not stay to
+//!   decode but is diverted into a [`ResumedRequest`] payload (blocks
+//!   freed here, re-charged at the decode-role unit through the same
+//!   `admit_resumed` path staged migration uses). The cluster simulator
+//!   drains [`UnitSim::drain_handoffs`] after every job completion and
+//!   prices the KV copy to the paired decode unit.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
@@ -125,6 +148,10 @@ struct Active {
     state: ReqState,
     generated: usize,
     first_token: f64,
+    /// Prompt tokens still to prefill in later chunks (0 for monolithic
+    /// prefills and once the last chunk is in flight). Decremented at
+    /// chunk-job launch, so it always means "work not yet scheduled".
+    prefill_left: usize,
     /// PRIVATE device blocks charged to this request. Blocks of a shared
     /// prompt prefix are charged once to their [`PrefixEntry`] instead.
     blocks: usize,
@@ -316,6 +343,16 @@ pub struct UnitSim {
     /// (1.0 = healthy; a degraded link makes swaps proportionally
     /// slower).
     link_factor: f64,
+    /// Per-LLM ids of admitted requests whose prefill has chunks left to
+    /// schedule (FIFO; always empty when chunking is off).
+    chunk_queue: Vec<VecDeque<u64>>,
+    /// Prefill-role mode: finished prefills divert to `handoffs` instead
+    /// of staying to decode (see module docs). Off for mixed/decode
+    /// units — bit-identical to the pre-disagg engine.
+    handoff: bool,
+    /// Finished prefills awaiting pickup by the cluster simulator
+    /// (drained after every job completion when `handoff` is on).
+    handoffs: Vec<ResumedRequest>,
 }
 
 /// What survives a unit crash: host-parked contexts keep their KV
@@ -401,6 +438,9 @@ impl UnitSim {
             link_bandwidth: ReplanConfig::default().link_bandwidth,
             slowdown: 1.0,
             link_factor: 1.0,
+            chunk_queue: vec![VecDeque::new(); n],
+            handoff: false,
+            handoffs: Vec::new(),
             models,
         }
     }
@@ -413,6 +453,20 @@ impl UnitSim {
 
     pub fn drain_started(&mut self) -> Vec<(f64, u64)> {
         std::mem::take(&mut self.started)
+    }
+
+    /// Put this unit in prefill-role mode: finished prefills divert to
+    /// the handoff buffer instead of staying to decode (see module
+    /// docs). `false` (the default) is the pre-disagg engine.
+    pub fn set_handoff(&mut self, on: bool) {
+        self.handoff = on;
+    }
+
+    /// Finished prefills awaiting transfer to a decode-role unit. Each
+    /// payload's blocks are already freed here and carry the count for
+    /// the destination to re-charge — the drain_llm convention.
+    pub fn drain_handoffs(&mut self) -> Vec<ResumedRequest> {
+        std::mem::take(&mut self.handoffs)
     }
 
     pub fn take_records(&mut self) -> Vec<RequestRecord> {
@@ -431,6 +485,15 @@ impl UnitSim {
         let mut out = Vec::new();
         for q in self.waiting.iter_mut() {
             out.extend(q.drain(..));
+        }
+        // Handoff payloads not yet picked up requeue whole (their blocks
+        // were freed at diversion time); chunk queues dissolve with the
+        // active lists below.
+        for h in std::mem::take(&mut self.handoffs) {
+            out.push(h.req);
+        }
+        for q in self.chunk_queue.iter_mut() {
+            q.clear();
         }
         for llm in 0..self.active.len() {
             let drained: Vec<Active> = self.active[llm].drain(..).collect();
@@ -521,6 +584,18 @@ impl UnitSim {
             }
         }
         self.swapped = rest;
+        // Undelivered handoff payloads of this LLM ride along as-is:
+        // their blocks are already freed here and the payload carries
+        // the count to re-charge — exactly this function's convention.
+        let mut keep = Vec::new();
+        for h in std::mem::take(&mut self.handoffs) {
+            if h.req.llm == llm {
+                out.push(h);
+            } else {
+                keep.push(h);
+            }
+        }
+        self.handoffs = keep;
         // Dissolve the LLM's prefix cache: each entry's blocks were
         // charged to the quota exactly once, at creation.
         let entries = std::mem::take(&mut self.prefix_index[llm]);
@@ -575,6 +650,7 @@ impl UnitSim {
             state: ReqState::Ready,
             generated: r.generated,
             first_token: r.first_token,
+            prefill_left: 0,
             blocks: r.blocks,
             shared_blocks,
             last_use: t,
@@ -817,6 +893,17 @@ impl UnitSim {
         if a.state == ReqState::Ready {
             self.ready_ids[llm].remove(&a.req.id);
         }
+        // A mid-chunk prefill may sit in the chunk queue (shed / drain
+        // victims): purge it so the queue never holds a dangling id. The
+        // queue is empty whenever chunking is off.
+        if a.state == ReqState::Prefilling && !self.chunk_queue[llm].is_empty()
+        {
+            if let Some(pos) =
+                self.chunk_queue[llm].iter().position(|&x| x == a.req.id)
+            {
+                self.chunk_queue[llm].remove(pos);
+            }
+        }
         if let Some(moved) = self.active[llm].get(idx) {
             self.slot_index.insert(moved.req.id, (llm, idx));
         }
@@ -880,6 +967,21 @@ impl UnitSim {
                      requests are Ready",
                     self.ready_ids[llm].len()
                 ));
+            }
+            for &id in &self.chunk_queue[llm] {
+                match self.slot_index.get(&id) {
+                    Some(&(l, s))
+                        if l == llm
+                            && self.active[l][s].state
+                                == ReqState::Prefilling
+                            && self.active[l][s].prefill_left > 0 => {}
+                    other => {
+                        return Some(format!(
+                            "chunk-queued request {id} of llm {llm} does \
+                             not resolve to a mid-chunk prefill: {other:?}"
+                        ))
+                    }
+                }
             }
         }
         None
@@ -1052,6 +1154,17 @@ impl UnitSim {
     }
 
     fn finish_prefill_at(&mut self, t: f64, llm: usize, idx: usize) {
+        if self.active[llm][idx].prefill_left > 0 {
+            // Mid-chunk: no first token yet. The request stays
+            // Prefilling and queues for its next chunk job; other LLMs'
+            // prefills and decode batches may run in between.
+            let a = &mut self.active[llm][idx];
+            debug_assert_eq!(a.state, ReqState::Prefilling);
+            a.last_use = t;
+            let id = a.req.id;
+            self.chunk_queue[llm].push_back(id);
+            return;
+        }
         {
             let a = &mut self.active[llm][idx];
             debug_assert_eq!(a.state, ReqState::Prefilling);
@@ -1063,6 +1176,25 @@ impl UnitSim {
             >= self.active[llm][idx].req.output_len
         {
             self.finish_request(t, llm, idx);
+            return;
+        }
+        if self.handoff {
+            // Prefill-role unit: the context decodes elsewhere. Free
+            // the blocks here; the payload carries the private count
+            // for the decode unit to re-charge (drain_llm convention —
+            // a shared-prefix gap re-allocates on the first decode
+            // step via `ensure_blocks`).
+            let a = self.remove_active(llm, idx);
+            self.quota.free(llm, a.blocks);
+            if a.shared_blocks > 0 {
+                self.deref_prefix(llm, a.req.prefix_group);
+            }
+            self.handoffs.push(ResumedRequest {
+                req: a.req,
+                generated: a.generated,
+                first_token: a.first_token,
+                blocks: a.blocks,
+            });
         }
     }
 
@@ -1451,7 +1583,7 @@ impl UnitSim {
         let mut any_denied = false;
         for off in 0..n {
             let i = (self.rr_prefill + off) % n;
-            if self.waiting[i].is_empty() {
+            if self.waiting[i].is_empty() && self.chunk_queue[i].is_empty() {
                 continue;
             }
             match self.admit_and_start_prefill(t, i) {
@@ -1472,10 +1604,82 @@ impl UnitSim {
         false
     }
 
+    /// Per-job prefill-token budget with chunking applied (`usize::MAX`
+    /// when chunking is off, so the comparison below never fires).
+    fn chunk_budget(&self) -> usize {
+        if self.cfg.chunk_prefill_tokens == 0 {
+            usize::MAX
+        } else {
+            self.cfg
+                .chunk_prefill_tokens
+                .min(self.cfg.max_prefill_tokens)
+                .max(1)
+        }
+    }
+
+    /// Launch the next chunk of the queue-front mid-chunk prefill as a
+    /// solo job. The blocks were charged in full at admission, so this
+    /// is pure compute scheduling; `prefill_left` is decremented at
+    /// launch so it always means "work not yet scheduled".
+    fn start_chunk_job(&mut self, t: f64, llm: usize, id: u64) -> StartOutcome {
+        let idx = self.slot_index[&id].1;
+        let left = self.active[llm][idx].prefill_left;
+        let c = left.min(self.chunk_budget());
+        let m = &self.models[llm];
+        let grant = if self.cfg.sm_partition {
+            let decode_pending = (0..self.models.len()).any(|i| {
+                !self.decode_inflight[i] && !self.ready_ids[i].is_empty()
+            });
+            let want = if decode_pending {
+                (1.0 - DECODE_SM_TARGET).max(m.prefill_sm)
+            } else {
+                1.0
+            };
+            self.sm
+                .reserve_up_to(want, m.prefill_sm.min(want).min(0.25))
+        } else {
+            self.sm.try_reserve(1.0)
+        };
+        let Some(grant) = grant else {
+            // Stays queued; prefill waits for decode jobs to drain SMs.
+            return StartOutcome::DeniedSm;
+        };
+        let interference = self.cost.interference(self.sm.active_jobs());
+        let dur = self.cost.prefill_latency(
+            &m.spec,
+            c as f64,
+            c as f64,
+            grant,
+            m.tp,
+        ) * interference;
+        self.cache.prefill_s += dur;
+        {
+            let a = &mut self.active[llm][idx];
+            a.prefill_left = left - c;
+            a.last_use = t;
+            a.touches += 1;
+        }
+        self.chunk_queue[llm].pop_front();
+        self.launch(t, dur, Job {
+            llm,
+            phase: JobPhase::Prefill,
+            req_ids: vec![id],
+            sm_grant: grant,
+        });
+        self.prefill_inflight = true;
+        StartOutcome::Started
+    }
+
     fn admit_and_start_prefill(&mut self, t: f64, llm: usize) -> StartOutcome {
         // Serialized engines (temporal baseline) need the GPUs idle.
         if !self.cfg.sm_partition && self.sm.active_jobs() > 0 {
             return StartOutcome::DeniedSm;
+        }
+        // Continuation chunks outrank fresh admissions: the mid-chunk
+        // prompt already holds its blocks, and finishing it is the
+        // fastest way to free the unit's prefill lane.
+        if let Some(&id) = self.chunk_queue[llm].front() {
+            return self.start_chunk_job(t, llm, id);
         }
         // Tier-aware admission: most urgent-and-valuable prompts first.
         if self.cfg.tier_aware {
@@ -1490,6 +1694,7 @@ impl UnitSim {
         let mut denied = false;
         let headroom =
             (self.quota.total_blocks() as f64 * ADMIT_WATERMARK) as usize;
+        let chunk = self.chunk_budget();
         loop {
             let Some(front) = self.waiting[llm].front() else {
                 break;
@@ -1503,6 +1708,13 @@ impl UnitSim {
                 }
                 _ => prompt_len,
             };
+            // A prompt longer than the chunk budget prefills in solo
+            // chunk jobs — never batched with other admissions (and
+            // never true when chunking is off).
+            let chunked = charged_tokens > chunk;
+            if chunked && !admitted.is_empty() {
+                break;
+            }
             if !admitted.is_empty()
                 && tokens + charged_tokens > self.cfg.max_prefill_tokens
             {
@@ -1572,18 +1784,30 @@ impl UnitSim {
                 }
                 PrefixUse::Unique => {}
             }
-            tokens += charged_tokens;
-            tokens_full += prompt_len;
+            // A chunked admission charges ALL its blocks now but its
+            // first job covers only one chunk; the remainder queues at
+            // job completion (`finish_prefill_at`).
+            let (job_tokens, left) = if chunked {
+                (chunk, charged_tokens - chunk)
+            } else {
+                (charged_tokens, 0)
+            };
+            tokens += job_tokens;
+            tokens_full += if chunked { job_tokens } else { prompt_len };
             admitted.push(Active {
                 req,
                 state: ReqState::Prefilling,
                 generated: 0,
                 first_token: 0.0,
+                prefill_left: left,
                 blocks: total.saturating_sub(shared),
                 shared_blocks: shared,
                 last_use: t,
                 touches: 1,
             });
+            if chunked {
+                break; // the long prompt runs its chunks solo
+            }
         }
         if admitted.is_empty() {
             return if denied {
@@ -1821,8 +2045,19 @@ impl UnitSim {
             if self.cfg.tier_aware {
                 self.sort_waiting_by_slack(i, t);
             }
-            if let Some(w) = self.waiting[i].front() {
-                if !self.prefill_inflight {
+            if !self.prefill_inflight {
+                // A mid-chunk prefill outranks fresh admissions of its
+                // LLM (admit_and_start_prefill serves the chunk queue
+                // first), so its key represents the prefill lane.
+                if let Some(&cid) = self.chunk_queue[i].front() {
+                    let r = &self.active[i][self.slot_index[&cid].1].req;
+                    let key = if self.cfg.tier_aware {
+                        self.slack_key(r, t)
+                    } else {
+                        r.arrival
+                    };
+                    cands.push((key, i, true));
+                } else if let Some(w) = self.waiting[i].front() {
                     let key = if self.cfg.tier_aware {
                         self.slack_key(w, t)
                     } else {
@@ -2616,6 +2851,157 @@ mod tests {
         assert_eq!(unit.residual_blocks(), (0, 0));
         assert!(!unit.has_work());
         assert!(unit.index_inconsistency().is_none());
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_and_stamps_ttft_on_last_chunk() {
+        let cfg = EngineConfig {
+            chunk_prefill_tokens: 256,
+            ..EngineConfig::muxserve()
+        };
+        let mut unit = UnitSim::new(
+            vec![cfg_model(6.7, 1.0, 0.5), cfg_model(6.7, 1.0, 0.5)],
+            1,
+            cfg,
+            CostModel::a100(),
+        );
+        // A 1000-token prompt: ceil(1000 / 256) = 4 solo chunk jobs.
+        unit.on_arrival(0.0, req(0, 1, 0.0, 1000, 2));
+        unit.on_arrival(1e-3, req(1, 2, 1e-3, 64, 2));
+        let mut pending: Vec<(f64, u64)> = unit.drain_started();
+        let mut chunk_jobs = 0usize;
+        let mut short_prefill_done: Option<f64> = None;
+        let mut long_prefill_done: Option<f64> = None;
+        let mut guard = 0;
+        while !pending.is_empty() && guard < 10_000 {
+            guard += 1;
+            pending.sort_by(|a, b| b.0.total_cmp(&a.0));
+            let (t, id) = pending.pop().unwrap();
+            let (jllm, jphase) = {
+                let j = &unit.inflight[&id];
+                (j.llm, j.phase)
+            };
+            if jphase == JobPhase::Prefill {
+                if jllm == 0 {
+                    chunk_jobs += 1;
+                    long_prefill_done = Some(t);
+                } else if short_prefill_done.is_none() {
+                    short_prefill_done = Some(t);
+                }
+            }
+            unit.advance_time(t);
+            unit.on_job_done(t, id);
+            pending.extend(unit.drain_started());
+        }
+        assert_eq!(chunk_jobs, 4, "1000 tokens / chunk 256 = 4 jobs");
+        // The short prompt's prefill ran BETWEEN the long prompt's
+        // chunks — no head-of-line blocking.
+        let short = short_prefill_done.expect("llm1 must prefill");
+        let long = long_prefill_done.expect("llm0 must finish prefilling");
+        assert!(short < long, "short prefill {short} must beat {long}");
+        let mut recs = unit.take_records();
+        recs.sort_by_key(|r| r.id);
+        assert_eq!(recs.len(), 2);
+        // TTFT of the long prompt is stamped at its LAST chunk.
+        assert!((recs[0].first_token - long).abs() < 1e-12);
+        assert_eq!(
+            unit.quota_used(0) + unit.quota_used(1),
+            0,
+            "blocks leaked"
+        );
+        assert!(
+            unit.index_inconsistency().is_none(),
+            "{:?}",
+            unit.index_inconsistency()
+        );
+    }
+
+    #[test]
+    fn chunking_only_engages_past_the_chunk_size() {
+        let run = |chunk: usize| {
+            let mut unit = UnitSim::new(
+                vec![cfg_model(6.7, 1.0, 1.0)],
+                1,
+                EngineConfig {
+                    chunk_prefill_tokens: chunk,
+                    ..EngineConfig::muxserve()
+                },
+                CostModel::a100(),
+            );
+            let mut pending: Vec<(f64, u64)> = Vec::new();
+            for i in 0..4usize {
+                let t = i as f64 * 0.01;
+                unit.advance_time(t);
+                unit.on_arrival(t, req(0, i as u64, t, 200 + 17 * i, 4));
+                pending.extend(unit.drain_started());
+            }
+            let mut guard = 0;
+            while !pending.is_empty() && guard < 10_000 {
+                guard += 1;
+                pending.sort_by(|a, b| b.0.total_cmp(&a.0));
+                let (t, id) = pending.pop().unwrap();
+                unit.advance_time(t);
+                unit.on_job_done(t, id);
+                pending.extend(unit.drain_started());
+            }
+            let mut recs = unit.take_records();
+            recs.sort_by_key(|r| r.id);
+            assert_eq!(recs.len(), 4);
+            recs.iter()
+                .map(|r| (r.id, r.first_token.to_bits(), r.finish.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        // Prompts max out at 251 tokens: a 1024-token chunk never
+        // engages and must replay the monolithic engine bit-for-bit.
+        assert_eq!(run(0), run(1024));
+        // A 64-token chunk engages and changes the schedule.
+        assert_ne!(run(0), run(64));
+    }
+
+    #[test]
+    fn handoff_unit_diverts_finished_prefills_and_frees_blocks() {
+        let mk = || {
+            UnitSim::new(
+                vec![cfg_model(6.7, 1.0, 1.0)],
+                1,
+                EngineConfig::muxserve(),
+                CostModel::a100(),
+            )
+        };
+        let mut unit = mk();
+        unit.set_handoff(true);
+        unit.on_arrival(0.0, req(0, 1, 0.0, 64, 8));
+        let (t1, id1) = unit.drain_started()[0];
+        unit.advance_time(t1);
+        unit.on_job_done(t1, id1);
+        // No decode follows; the payload sits in the handoff buffer.
+        assert!(
+            unit.drain_started().is_empty(),
+            "a prefill-role unit must not start decoding"
+        );
+        let h = unit.drain_handoffs();
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0].generated, 1, "prefill emitted the first token");
+        assert!((h[0].first_token - t1).abs() < 1e-12);
+        assert!(h[0].blocks > 0, "payload must carry the KV block count");
+        assert_eq!(unit.quota_used(0), 0, "source must free the blocks");
+        assert!(unit.take_records().is_empty(), "no completion here");
+        // A single-token request finishes AT prefill: recorded locally,
+        // no handoff.
+        unit.on_arrival(1.0, req(0, 2, 1.0, 64, 1));
+        let (t2, id2) = unit.drain_started()[0];
+        unit.advance_time(t2);
+        unit.on_job_done(t2, id2);
+        assert!(unit.drain_handoffs().is_empty());
+        assert_eq!(unit.take_records().len(), 1);
+        // The payload resumes mid-decode at a decode-role unit — the
+        // very first job there is a decode, no re-prefill.
+        let mut dec = mk();
+        dec.advance_time(t1);
+        assert!(dec.admit_resumed(t1, h[0].clone()), "resume must fit");
+        assert_eq!(dec.drain_started().len(), 1);
+        let job = dec.inflight.values().next().unwrap();
+        assert_eq!(job.phase, JobPhase::Decode);
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //! All processes are deterministic given their construction parameters
 //! (the MMPP pre-samples its state path from an explicit seed), so every
 //! experiment remains exactly reproducible.
+//!
+//! Orthogonally to *when* requests arrive, [`LengthDynamics`] shapes
+//! *how long* they are: a stream can carry a bimodal prompt-length mix
+//! (a long-context subpopulation beside the ShareGPT marginals) or
+//! drift its long fraction over the run — the request-length analogue
+//! of [`RateDrift`]. `LengthDynamics::None` draws zero extra RNG, so
+//! every pre-existing stream replays bit-identically.
 
 use super::{sample_lengths, Request};
 use crate::config::WorkloadSpec;
@@ -220,6 +227,105 @@ impl ArrivalProcess for RateDrift {
     }
 }
 
+/// Time-varying request-*length* dynamics, layered on top of an arrival
+/// process's stream. The base lengths always come from the workload's
+/// ShareGPT-like marginals; dynamics decide whether a given request is
+/// redrawn as a *long-context* prompt (retrieval contexts, long
+/// documents) whose mean dwarfs the chat-like base population.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum LengthDynamics {
+    /// Stationary ShareGPT marginals only — consumes no extra RNG, so
+    /// streams are bit-identical to the pre-length-axis generator.
+    #[default]
+    None,
+    /// Bimodal prompts: each request is long with probability
+    /// `long_frac`, redrawing its prompt from a log-normal with mean
+    /// `long_prompt_mean` (clamped to `[256, LONG_PROMPT_CAP]`).
+    Bimodal { long_frac: f64, long_prompt_mean: f64 },
+    /// The long fraction drifts linearly from `from_frac` at t=0 to
+    /// `to_frac` at the end of the run — a service whose long-context
+    /// feature is ramping up (or being deprecated) mid-experiment.
+    LengthDrift { from_frac: f64, to_frac: f64, long_prompt_mean: f64 },
+}
+
+impl LengthDynamics {
+    /// Hard cap on redrawn long prompts, tokens (base marginals clamp
+    /// at 1024, so any prompt above that is a long-mode draw).
+    pub const LONG_PROMPT_CAP: f64 = 3072.0;
+
+    /// Probability that a request arriving at `t` is long.
+    pub fn long_frac_at(&self, t: f64, duration: f64) -> f64 {
+        match *self {
+            LengthDynamics::None => 0.0,
+            LengthDynamics::Bimodal { long_frac, .. } => long_frac,
+            LengthDynamics::LengthDrift { from_frac, to_frac, .. } => {
+                let f = (t / duration.max(1e-9)).clamp(0.0, 1.0);
+                from_frac + f * (to_frac - from_frac)
+            }
+        }
+    }
+
+    /// Redraw the prompt length of a request arriving at `t`, or `None`
+    /// to keep the base draw. The `None` variant returns without
+    /// touching `rng`; both others consume exactly one uniform per
+    /// request plus the redraw itself, keeping streams deterministic.
+    pub fn sample_long_prompt(
+        &self,
+        t: f64,
+        duration: f64,
+        lengths: &WorkloadSpec,
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        let mean = match *self {
+            LengthDynamics::None => return None,
+            LengthDynamics::Bimodal { long_prompt_mean, .. }
+            | LengthDynamics::LengthDrift {
+                long_prompt_mean, ..
+            } => long_prompt_mean,
+        };
+        let frac = self.long_frac_at(t, duration);
+        if rng.f64() >= frac {
+            return None;
+        }
+        let p = rng
+            .log_normal_mean(mean.max(256.0), lengths.len_sigma)
+            .round()
+            .clamp(256.0, Self::LONG_PROMPT_CAP);
+        Some(p as usize)
+    }
+
+    /// Expected prompt-length mean over the window `[t0, t1]`, given the
+    /// base marginals' mean — what a history-based planner would have
+    /// measured. Exact for `None` (returns `base` untouched); for the
+    /// others it uses the window-mean long fraction and ignores the
+    /// redraw clamp (a planning estimate, not a distributional claim).
+    pub fn expected_prompt_mean(
+        &self,
+        base: f64,
+        t0: f64,
+        t1: f64,
+        duration: f64,
+    ) -> f64 {
+        let mean = match *self {
+            LengthDynamics::None => return base,
+            LengthDynamics::Bimodal { long_prompt_mean, .. }
+            | LengthDynamics::LengthDrift {
+                long_prompt_mean, ..
+            } => long_prompt_mean,
+        };
+        let mid_frac = self.long_frac_at(0.5 * (t0 + t1), duration);
+        (1.0 - mid_frac) * base + mid_frac * mean
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LengthDynamics::None => "none",
+            LengthDynamics::Bimodal { .. } => "bimodal",
+            LengthDynamics::LengthDrift { .. } => "length-drift",
+        }
+    }
+}
+
 /// Draw one LLM's request stream from an arrival process over
 /// `[0, duration)` by thinning against the peak rate, with ShareGPT-like
 /// lengths from `lengths`. Deterministic in `rng`.
@@ -227,6 +333,27 @@ pub fn generate_requests(
     llm: usize,
     process: &dyn ArrivalProcess,
     lengths: &WorkloadSpec,
+    duration: f64,
+    rng: &mut Rng,
+) -> Vec<Request> {
+    generate_requests_dyn(
+        llm,
+        process,
+        lengths,
+        LengthDynamics::None,
+        duration,
+        rng,
+    )
+}
+
+/// [`generate_requests`] with request-length dynamics layered on the
+/// stream. `LengthDynamics::None` draws zero extra RNG, making this a
+/// strict superset of the plain generator (bit-identical streams).
+pub fn generate_requests_dyn(
+    llm: usize,
+    process: &dyn ArrivalProcess,
+    lengths: &WorkloadSpec,
+    dynamics: LengthDynamics,
     duration: f64,
     rng: &mut Rng,
 ) -> Vec<Request> {
@@ -244,7 +371,12 @@ pub fn generate_requests(
         }
         let accept = process.rate(t) / peak;
         if rng.f64() < accept {
-            let (prompt_len, output_len) = sample_lengths(lengths, rng);
+            let (mut prompt_len, output_len) = sample_lengths(lengths, rng);
+            if let Some(p) =
+                dynamics.sample_long_prompt(t, duration, lengths, rng)
+            {
+                prompt_len = p;
+            }
             out.push(Request {
                 id,
                 llm,
@@ -394,6 +526,122 @@ mod tests {
         };
         assert_eq!(stream(&p, 100.0, 42), stream(&p, 100.0, 42));
         assert_ne!(stream(&p, 100.0, 42), stream(&p, 100.0, 43));
+    }
+
+    #[test]
+    fn length_dynamics_none_is_bit_identical() {
+        // The plain generator and the dyn generator with `None` must
+        // produce the same stream from the same RNG state: the inert
+        // default draws zero extra randomness.
+        let p = Diurnal { base: 5.0, depth: 0.6, period: 40.0, phase: 0.2 };
+        let spec = WorkloadSpec::sharegpt(5.0);
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        let plain = generate_requests(0, &p, &spec, 200.0, &mut a);
+        let dynd = generate_requests_dyn(
+            0,
+            &p,
+            &spec,
+            LengthDynamics::None,
+            200.0,
+            &mut b,
+        );
+        assert_eq!(plain, dynd);
+        assert!(!plain.is_empty());
+        // Base marginals never exceed their 1024-token clamp, so any
+        // longer prompt is unambiguously a long-mode redraw.
+        assert!(plain.iter().all(|r| r.prompt_len <= 1024));
+    }
+
+    #[test]
+    fn bimodal_longs_show_up_at_roughly_the_requested_fraction() {
+        let p = ConstantRate { rate: 8.0 };
+        let spec = WorkloadSpec::sharegpt(8.0);
+        let dynamics = LengthDynamics::Bimodal {
+            long_frac: 0.25,
+            long_prompt_mean: 1536.0,
+        };
+        let mut rng = Rng::new(33);
+        let reqs =
+            generate_requests_dyn(0, &p, &spec, dynamics, 500.0, &mut rng);
+        assert!(reqs.len() > 1000);
+        let cap = LengthDynamics::LONG_PROMPT_CAP as usize;
+        assert!(reqs.iter().all(|r| r.prompt_len <= cap));
+        // Long-mode draws are clamped to >= 256; the base population
+        // clamps at 1024. Counting > 1024 undercounts longs (some land
+        // in [256, 1024]) so only bound it loosely from both sides.
+        let longs =
+            reqs.iter().filter(|r| r.prompt_len > 1024).count() as f64;
+        let frac = longs / reqs.len() as f64;
+        assert!(
+            frac > 0.08 && frac < 0.30,
+            "long-prompt fraction {frac} vs requested 0.25"
+        );
+        // Determinism: same seed, same stream.
+        let mut rng2 = Rng::new(33);
+        let again =
+            generate_requests_dyn(0, &p, &spec, dynamics, 500.0, &mut rng2);
+        assert_eq!(reqs, again);
+    }
+
+    #[test]
+    fn length_drift_shifts_the_long_fraction_over_time() {
+        let p = ConstantRate { rate: 8.0 };
+        let spec = WorkloadSpec::sharegpt(8.0);
+        let dynamics = LengthDynamics::LengthDrift {
+            from_frac: 0.0,
+            to_frac: 0.5,
+            long_prompt_mean: 1536.0,
+        };
+        assert_eq!(dynamics.long_frac_at(0.0, 400.0), 0.0);
+        assert!((dynamics.long_frac_at(200.0, 400.0) - 0.25).abs() < 1e-12);
+        assert!((dynamics.long_frac_at(400.0, 400.0) - 0.5).abs() < 1e-12);
+        let mut rng = Rng::new(55);
+        let reqs =
+            generate_requests_dyn(0, &p, &spec, dynamics, 400.0, &mut rng);
+        let longs_in = |lo: f64, hi: f64| {
+            reqs.iter()
+                .filter(|r| {
+                    r.arrival >= lo && r.arrival < hi && r.prompt_len > 1024
+                })
+                .count()
+        };
+        let early = longs_in(0.0, 100.0);
+        let late = longs_in(300.0, 400.0);
+        assert!(
+            late > 3 * early.max(1),
+            "late window must be long-heavy: early={early} late={late}"
+        );
+    }
+
+    #[test]
+    fn expected_prompt_mean_interpolates_between_populations() {
+        let base = 161.0;
+        assert_eq!(
+            LengthDynamics::None.expected_prompt_mean(base, 0.0, 36.0, 120.0),
+            base
+        );
+        let bi = LengthDynamics::Bimodal {
+            long_frac: 0.2,
+            long_prompt_mean: 1536.0,
+        };
+        let want = 0.8 * base + 0.2 * 1536.0;
+        assert!(
+            (bi.expected_prompt_mean(base, 0.0, 36.0, 120.0) - want).abs()
+                < 1e-9
+        );
+        // Drift: the window mean uses the midpoint fraction.
+        let dr = LengthDynamics::LengthDrift {
+            from_frac: 0.0,
+            to_frac: 0.4,
+            long_prompt_mean: 1000.0,
+        };
+        let mid_frac = 0.4 * (18.0 / 120.0);
+        let want = (1.0 - mid_frac) * base + mid_frac * 1000.0;
+        assert!(
+            (dr.expected_prompt_mean(base, 0.0, 36.0, 120.0) - want).abs()
+                < 1e-9
+        );
     }
 
     #[test]

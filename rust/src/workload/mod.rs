@@ -9,14 +9,15 @@ pub mod scenario;
 mod trace;
 
 pub use arrivals::{
-    generate_requests, ArrivalProcess, ConstantRate, Diurnal, FlashCrowd,
-    MarkovModulated, RateDrift,
+    generate_requests, generate_requests_dyn, ArrivalProcess, ConstantRate,
+    Diurnal, FlashCrowd, LengthDynamics, MarkovModulated, RateDrift,
 };
 pub use powerlaw::{cumulative_rate_distribution, power_law_rates};
 pub use scenario::{Scenario, ScenarioData, ScenarioShape, TierMix};
 pub use trace::{
-    chatlmsys_like_trace, daily_rate_curve, read_trace_file,
-    requests_from_trace, requests_to_trace, write_trace_file, TraceSpec,
+    chatlmsys_like_trace, daily_rate_curve, length_dynamics_from_trace,
+    read_trace_file, requests_from_trace, requests_to_trace,
+    trace_with_dynamics, write_trace_file, TraceSpec,
 };
 pub(crate) use trace::request_rows;
 

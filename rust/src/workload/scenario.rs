@@ -19,12 +19,10 @@
 //! so static-vs-adaptive comparisons share one workload.
 
 use super::arrivals::{
-    ArrivalProcess, ConstantRate, Diurnal, FlashCrowd, MarkovModulated,
-    RateDrift,
+    generate_requests_dyn, ArrivalProcess, ConstantRate, Diurnal,
+    FlashCrowd, LengthDynamics, MarkovModulated, RateDrift,
 };
-use super::{
-    generate_requests, merge_streams, power_law_rates, Request, SloClass,
-};
+use super::{merge_streams, power_law_rates, Request, SloClass};
 use crate::config::{llama_spec, ModelSpec, WorkloadSpec};
 use crate::util::Rng;
 
@@ -46,6 +44,16 @@ pub enum ScenarioShape {
     /// Mixed interactive+batch diurnal: amplified day-scale waves whose
     /// peaks overload the cluster; defaults to a mixed tier population.
     TieredDiurnal,
+    /// Stationary rates with bimodal prompt lengths: a long-context
+    /// subpopulation (retrieval contexts, documents) rides beside the
+    /// chat-like base marginals — the regime where a monolithic prefill
+    /// head-of-line-blocks colocated LLMs and prefill/decode
+    /// disaggregation pays.
+    BimodalLong,
+    /// Stationary rates whose long-prompt fraction drifts up over the
+    /// run (a long-context feature ramping to general availability):
+    /// a placement priced on the early length mix ages out.
+    LengthDrift,
 }
 
 impl ScenarioShape {
@@ -63,6 +71,8 @@ impl ScenarioShape {
             "tiered-diurnal" | "tiereddiurnal" => {
                 Some(ScenarioShape::TieredDiurnal)
             }
+            "bimodal-long" | "bimodallong" => Some(ScenarioShape::BimodalLong),
+            "length-drift" | "lengthdrift" => Some(ScenarioShape::LengthDrift),
             _ => None,
         }
     }
@@ -77,10 +87,12 @@ impl ScenarioShape {
             ScenarioShape::Overcommit => "overcommit",
             ScenarioShape::FlashOverload => "flash-overload",
             ScenarioShape::TieredDiurnal => "tiered-diurnal",
+            ScenarioShape::BimodalLong => "bimodal-long",
+            ScenarioShape::LengthDrift => "length-drift",
         }
     }
 
-    pub fn all() -> [ScenarioShape; 8] {
+    pub fn all() -> [ScenarioShape; 10] {
         [
             ScenarioShape::Stationary,
             ScenarioShape::Diurnal,
@@ -90,6 +102,8 @@ impl ScenarioShape {
             ScenarioShape::Overcommit,
             ScenarioShape::FlashOverload,
             ScenarioShape::TieredDiurnal,
+            ScenarioShape::BimodalLong,
+            ScenarioShape::LengthDrift,
         ]
     }
 
@@ -113,6 +127,13 @@ impl ScenarioShape {
             ScenarioShape::FlashOverload,
             ScenarioShape::TieredDiurnal,
         ]
+    }
+
+    /// The two request-length shapes — the prefill/decode
+    /// disaggregation A/B suite (rates are stationary; prompt-length
+    /// mix is the thing that moves).
+    pub fn length() -> [ScenarioShape; 2] {
+        [ScenarioShape::BimodalLong, ScenarioShape::LengthDrift]
     }
 }
 
@@ -197,6 +218,10 @@ pub struct Scenario {
     pub shared_prefix: f64,
     /// How SLO tiers are distributed over the stream (see [`TierMix`]).
     pub tier_mix: TierMix,
+    /// Request-length dynamics layered on every LLM's stream (see
+    /// [`LengthDynamics`]). `None` consumes no RNG — pre-length-axis
+    /// scenarios replay bit-identically.
+    pub length_dynamics: LengthDynamics,
 }
 
 impl Scenario {
@@ -210,6 +235,20 @@ impl Scenario {
         } else {
             TierMix::AllStandard
         };
+        // The two length shapes carry their defining dynamics; all
+        // other shapes stay on the inert (zero-RNG) default.
+        let length_dynamics = match shape {
+            ScenarioShape::BimodalLong => LengthDynamics::Bimodal {
+                long_frac: 0.12,
+                long_prompt_mean: 1536.0,
+            },
+            ScenarioShape::LengthDrift => LengthDynamics::LengthDrift {
+                from_frac: 0.02,
+                to_frac: 0.35,
+                long_prompt_mean: 1536.0,
+            },
+            _ => LengthDynamics::None,
+        };
         Scenario {
             shape,
             n_llms: 6,
@@ -219,6 +258,7 @@ impl Scenario {
             seed: 2024,
             shared_prefix: 0.0,
             tier_mix,
+            length_dynamics,
         }
     }
 
@@ -237,7 +277,11 @@ impl Scenario {
         let n = self.n_llms;
         let d = self.duration;
         match self.shape {
-            ScenarioShape::Stationary => base
+            // The length shapes keep stationary rates: the axis under
+            // test is the prompt-length mix, not arrival intensity.
+            ScenarioShape::Stationary
+            | ScenarioShape::BimodalLong
+            | ScenarioShape::LengthDrift => base
                 .iter()
                 .map(|r| {
                     Box::new(ConstantRate { rate: *r })
@@ -366,13 +410,27 @@ impl Scenario {
         let planning = self.planning_rates();
         // The blend's mean tier weight rides on every planning workload,
         // so a goodput-objective replan values each LLM's throughput at
-        // what its requests are actually worth.
+        // what its requests are actually worth. Likewise the length
+        // dynamics' expected prompt mean over the planning window: a
+        // history-based planner would have measured the long-context
+        // subpopulation, so the estimator (and disagg role pricing)
+        // gets to see it. `None` dynamics leave the mean untouched.
         let tier_weight = self.tier_mix.expected_weight();
+        let window = 0.30 * self.duration;
         let workloads: Vec<WorkloadSpec> = planning
             .iter()
-            .map(|r| WorkloadSpec {
-                tier_weight,
-                ..WorkloadSpec::sharegpt(*r)
+            .map(|r| {
+                let base = WorkloadSpec::sharegpt(*r);
+                WorkloadSpec {
+                    tier_weight,
+                    mean_prompt_len: self.length_dynamics.expected_prompt_mean(
+                        base.mean_prompt_len,
+                        0.0,
+                        window,
+                        self.duration,
+                    ),
+                    ..base
+                }
             })
             .collect();
         let procs = self.processes();
@@ -382,10 +440,15 @@ impl Scenario {
             .enumerate()
             .map(|(i, p)| {
                 let mut sub = rng.fork(i as u64);
-                generate_requests(
+                // Streams sample from the *base* marginals — long
+                // prompts come from the dynamics' redraw, not from an
+                // inflated base mean (the planning view above is the
+                // only consumer of the blended mean).
+                generate_requests_dyn(
                     i,
                     p.as_ref(),
-                    &workloads[i],
+                    &WorkloadSpec::sharegpt(planning[i]),
+                    self.length_dynamics,
                     self.duration,
                     &mut sub,
                 )
@@ -468,14 +531,22 @@ mod tests {
             assert_eq!(ScenarioShape::parse(s.name()), Some(s));
         }
         assert_eq!(ScenarioShape::parse("nope"), None);
-        // `all` = dynamic suite + overload suite + stationary control.
+        // `all` = dynamic suite + overload suite + length suite +
+        // stationary control.
         assert_eq!(
-            ScenarioShape::dynamic().len() + ScenarioShape::overload().len() + 1,
+            ScenarioShape::dynamic().len()
+                + ScenarioShape::overload().len()
+                + ScenarioShape::length().len()
+                + 1,
             ScenarioShape::all().len()
         );
         assert!(!ScenarioShape::dynamic().contains(&ScenarioShape::Stationary));
         for s in ScenarioShape::overload() {
             assert!(!ScenarioShape::dynamic().contains(&s));
+        }
+        for s in ScenarioShape::length() {
+            assert!(!ScenarioShape::dynamic().contains(&s));
+            assert!(!ScenarioShape::overload().contains(&s));
         }
         for m in TierMix::all() {
             assert_eq!(TierMix::parse(m.name()), Some(m));
@@ -645,6 +716,72 @@ mod tests {
             })
             .fold(0.0, f64::max);
         assert!(peak > 1.5 * base, "diurnal peak {peak} vs base {base}");
+    }
+
+    #[test]
+    fn length_shapes_carry_long_prompts_and_default_shapes_do_not() {
+        // Every pre-length shape keeps the inert dynamics and a stream
+        // whose prompts respect the base 1024-token clamp.
+        for shape in ScenarioShape::all() {
+            let s = Scenario::new(shape);
+            if ScenarioShape::length().contains(&shape) {
+                continue;
+            }
+            assert_eq!(s.length_dynamics, LengthDynamics::None, "{shape:?}");
+        }
+        let plain = Scenario::new(ScenarioShape::Stationary).build();
+        assert!(plain.requests.iter().all(|r| r.prompt_len <= 1024));
+
+        // Bimodal: a real long tail, capped, deterministic.
+        let s = Scenario::new(ScenarioShape::BimodalLong);
+        let a = s.build();
+        assert_eq!(a.requests, s.build().requests);
+        let cap = LengthDynamics::LONG_PROMPT_CAP as usize;
+        assert!(a.requests.iter().all(|r| r.prompt_len <= cap));
+        let longs =
+            a.requests.iter().filter(|r| r.prompt_len > 1024).count();
+        assert!(longs > 10, "bimodal stream must carry longs: {longs}");
+        // Rates stay stationary: arrival volume tracks the control
+        // stream (the length redraws perturb the shared RNG, so the
+        // streams differ request-by-request but not in intensity).
+        let ratio = a.requests.len() as f64 / plain.requests.len() as f64;
+        assert!((ratio - 1.0).abs() < 0.15, "volume ratio {ratio}");
+
+        // Drift: the long fraction ramps up over the run.
+        let d = Scenario::new(ScenarioShape::LengthDrift).build();
+        let longs_in = |lo: f64, hi: f64| {
+            d.requests
+                .iter()
+                .filter(|r| {
+                    r.arrival >= lo * 120.0
+                        && r.arrival < hi * 120.0
+                        && r.prompt_len > 1024
+                })
+                .count()
+        };
+        let early = longs_in(0.0, 0.25);
+        let late = longs_in(0.75, 1.0);
+        assert!(late > early, "drift must ramp: early={early} late={late}");
+    }
+
+    #[test]
+    fn length_dynamics_inflate_the_planning_prompt_mean() {
+        let s = Scenario::new(ScenarioShape::BimodalLong);
+        let data = s.build();
+        let base = WorkloadSpec::sharegpt(1.0).mean_prompt_len;
+        let want = 0.88 * base + 0.12 * 1536.0;
+        for w in &data.planning_workloads {
+            assert!(
+                (w.mean_prompt_len - want).abs() < 1e-9,
+                "planner must see the blended mean: {} vs {want}",
+                w.mean_prompt_len
+            );
+        }
+        // And the control scenario's planning view is untouched.
+        let plain = Scenario::new(ScenarioShape::Stationary).build();
+        for w in &plain.planning_workloads {
+            assert_eq!(w.mean_prompt_len, base);
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 // failure must surface as a typed error, never a panic.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
+use super::arrivals::LengthDynamics;
 use super::{merge_streams, sample_lengths, Request, SloClass};
 use crate::config::WorkloadSpec;
 use crate::util::Rng;
@@ -118,7 +119,12 @@ pub fn chatlmsys_like_trace(spec: &TraceSpec) -> (Vec<WorkloadSpec>, Vec<Request
 // fields default to 0 / standard. v4 files additionally carry
 // `F,...` fault rows (see `crate::simulator::faults`); the request
 // parser here skips them, so every reader of request streams accepts
-// every format version.
+// every format version. v5 files carry one `L,<kind>,<args>` metadata
+// row describing the request-length dynamics the stream was drawn
+// with (`L,bimodal,<long_frac>,<long_mean>` or
+// `L,length-drift,<from_frac>,<to_frac>,<long_mean>`) — the request
+// rows already bake in the concrete lengths, so replay needs no L row;
+// it exists so a frozen workload self-describes its length regime.
 
 /// Serialize a request stream to the portable trace format.
 pub fn requests_to_trace(requests: &[Request]) -> String {
@@ -129,6 +135,77 @@ pub fn requests_to_trace(requests: &[Request]) -> String {
     );
     out.push_str(&request_rows(requests));
     out
+}
+
+/// Serialize a request stream together with its length-dynamics
+/// metadata. With the inert `LengthDynamics::None` this emits a plain
+/// v3 trace, byte-identical to [`requests_to_trace`].
+pub fn trace_with_dynamics(
+    requests: &[Request],
+    dynamics: LengthDynamics,
+) -> String {
+    let row = match dynamics {
+        LengthDynamics::None => return requests_to_trace(requests),
+        LengthDynamics::Bimodal { long_frac, long_prompt_mean } => {
+            format!("L,bimodal,{long_frac:.17e},{long_prompt_mean:.17e}\n")
+        }
+        LengthDynamics::LengthDrift {
+            from_frac,
+            to_frac,
+            long_prompt_mean,
+        } => format!(
+            "L,length-drift,{from_frac:.17e},{to_frac:.17e},\
+             {long_prompt_mean:.17e}\n"
+        ),
+    };
+    let mut out = String::from("# muxserve-trace v5\n");
+    out.push_str(
+        "# id,llm,arrival_s,prompt_len,output_len,prefix_group,prefix_len,\
+         tier\n",
+    );
+    out.push_str("# L,<kind>,<args> = request-length dynamics metadata\n");
+    out.push_str(&row);
+    out.push_str(&request_rows(requests));
+    out
+}
+
+/// Parse the length-dynamics metadata of a trace (v5; v1–v4 files
+/// carry none and yield the inert `LengthDynamics::None`).
+pub fn length_dynamics_from_trace(
+    text: &str,
+) -> Result<LengthDynamics, String> {
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if !line.starts_with("L,") {
+            continue;
+        }
+        let bad = |what: &str| {
+            format!("trace line {}: bad dynamics {what}: {line}", lineno + 1)
+        };
+        let fields: Vec<&str> = line.split(',').collect();
+        let num = |i: usize, what: &str| -> Result<f64, String> {
+            fields
+                .get(i)
+                .ok_or_else(|| bad(what))?
+                .parse()
+                .map_err(|_| bad(what))
+        };
+        return match fields[1] {
+            "bimodal" if fields.len() == 4 => Ok(LengthDynamics::Bimodal {
+                long_frac: num(2, "long_frac")?,
+                long_prompt_mean: num(3, "long_prompt_mean")?,
+            }),
+            "length-drift" if fields.len() == 5 => {
+                Ok(LengthDynamics::LengthDrift {
+                    from_frac: num(2, "from_frac")?,
+                    to_frac: num(3, "to_frac")?,
+                    long_prompt_mean: num(4, "long_prompt_mean")?,
+                })
+            }
+            _ => Err(bad("kind")),
+        };
+    }
+    Ok(LengthDynamics::None)
 }
 
 /// The request rows alone (no header) — shared by the v3 writer above
@@ -152,14 +229,17 @@ pub(crate) fn request_rows(requests: &[Request]) -> String {
 }
 
 /// Parse a trace produced by [`requests_to_trace`] (v3, or v2/v1
-/// without the tier / prefix columns; v4 fault rows are skipped).
-/// Returns requests in file order (generators emit arrival-sorted
-/// streams).
+/// without the tier / prefix columns; v4 fault rows and v5 length-
+/// dynamics rows are skipped). Returns requests in file order
+/// (generators emit arrival-sorted streams).
 pub fn requests_from_trace(text: &str) -> Result<Vec<Request>, String> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
-        if line.is_empty() || line.starts_with('#') || line.starts_with("F,")
+        if line.is_empty()
+            || line.starts_with('#')
+            || line.starts_with("F,")
+            || line.starts_with("L,")
         {
             continue;
         }
@@ -311,6 +391,47 @@ mod tests {
         assert_eq!(reqs[0].prefix_group, 0);
         assert_eq!(reqs[0].prefix_len, 0);
         assert_eq!(reqs[0].prompt_len, 100);
+    }
+
+    #[test]
+    fn v5_dynamics_round_trip_and_none_stays_v3() {
+        let (_, reqs) = chatlmsys_like_trace(&TraceSpec {
+            duration: 30.0,
+            ..Default::default()
+        });
+        // Inert dynamics: byte-identical to the v3 writer.
+        assert_eq!(
+            trace_with_dynamics(&reqs, LengthDynamics::None),
+            requests_to_trace(&reqs)
+        );
+        for dynamics in [
+            LengthDynamics::Bimodal {
+                long_frac: 0.12,
+                long_prompt_mean: 1536.0,
+            },
+            LengthDynamics::LengthDrift {
+                from_frac: 0.02,
+                to_frac: 0.35,
+                long_prompt_mean: 1536.0,
+            },
+        ] {
+            let text = trace_with_dynamics(&reqs, dynamics);
+            assert!(text.starts_with("# muxserve-trace v5\n"), "{text}");
+            // The request parser skips the L row; requests round-trip.
+            let back = requests_from_trace(&text).unwrap();
+            assert_eq!(back, reqs);
+            // And the metadata parser recovers the exact dynamics.
+            assert_eq!(length_dynamics_from_trace(&text).unwrap(), dynamics);
+        }
+        // v1–v4 files carry no L row: inert dynamics.
+        assert_eq!(
+            length_dynamics_from_trace(&requests_to_trace(&reqs)).unwrap(),
+            LengthDynamics::None
+        );
+        // Malformed L rows are typed errors, not panics.
+        assert!(length_dynamics_from_trace("L,bimodal,0.1").is_err());
+        assert!(length_dynamics_from_trace("L,bimodal,x,1536").is_err());
+        assert!(length_dynamics_from_trace("L,unknown,1,2").is_err());
     }
 
     #[test]

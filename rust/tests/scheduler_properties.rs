@@ -68,6 +68,7 @@ fn random_run(rng: &mut Rng) -> Result<(), String> {
                     })
                 })
                 .collect(),
+            role: Default::default(),
         }],
     };
     let cost = CostModel::a100();
@@ -164,6 +165,7 @@ fn light_load_completes_everything_under_all_policies() {
                     (1, ParallelCandidate { tp: 2, sm: 0.5, batch: 1.0,
                                             tpt: 0.0, meets_rate: true }),
                 ],
+                role: Default::default(),
             }],
         };
         let mut sim = Simulation::from_placement(
