@@ -19,4 +19,6 @@ pub use drift::{
     ScenarioResult,
 };
 pub use experiments::*;
-pub use perf::{run_bench_perf, PerfConfig, PerfReport};
+pub use perf::{
+    dynamic_fingerprint, run_bench_perf, PerfConfig, PerfReport, ShardPerf,
+};

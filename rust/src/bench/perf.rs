@@ -26,10 +26,11 @@ use crate::coordinator::estimator::Estimator;
 use crate::coordinator::migration::MigrationMode;
 use crate::coordinator::{
     muxserve_placement, muxserve_placement_cached, muxserve_placement_warm,
-    EngineConfig, PlacementCache, ReplanConfig,
+    muxserve_placement_warm_cached, EngineConfig, PlacementCache,
+    ReplanConfig,
 };
 use crate::costmodel::CostModel;
-use crate::simulator::{DynamicSimulation, Simulation};
+use crate::simulator::{DynamicReport, DynamicSimulation, Simulation};
 use crate::util::json::Json;
 use crate::workload::{synthetic_workload, Scenario, ScenarioShape};
 
@@ -42,17 +43,22 @@ pub struct PerfConfig {
     pub reps: u32,
     /// Smoke mode: 6 LLMs / 4 GPUs instead of 19 / 32.
     pub smoke: bool,
+    /// Worker shards for the dynamic runs (1 = the serial loop). Only
+    /// wall-clock numbers may move with this knob — every simulated
+    /// quantity is shard-count-invariant (the determinism contract CI
+    /// checks by diffing `--strip-timing` output across shard counts).
+    pub shards: usize,
 }
 
 impl PerfConfig {
     /// The paper-scale baseline configuration.
     pub fn full() -> Self {
-        PerfConfig { duration: 120.0, reps: 3, smoke: false }
+        PerfConfig { duration: 120.0, reps: 3, smoke: false, shards: 1 }
     }
 
     /// The CI tripwire configuration.
     pub fn smoke() -> Self {
-        PerfConfig { duration: 20.0, reps: 1, smoke: true }
+        PerfConfig { duration: 20.0, reps: 1, smoke: true, shards: 1 }
     }
 }
 
@@ -65,6 +71,25 @@ pub struct SimPerf {
     pub events: u64,
     pub wall_s: f64,
     pub events_per_s: f64,
+}
+
+/// One point of the shard-scaling sweep: the stationary replay driven
+/// through the *dynamic* engine (adapt ticks + replan barriers armed)
+/// at a given worker-shard count.
+#[derive(Clone, Debug)]
+pub struct ShardPerf {
+    pub shards: usize,
+    pub events: u64,
+    pub wall_s: f64,
+    pub events_per_s: f64,
+    /// `events_per_s` relative to the serial (`shards == 1`) row.
+    pub speedup: f64,
+    /// FNV-1a digest of the report's deterministic surface (records,
+    /// counters, replan outcomes minus wall clocks) — see
+    /// [`dynamic_fingerprint`].
+    pub fingerprint: u64,
+    /// Fingerprint matches the serial row byte-for-byte.
+    pub identical: bool,
 }
 
 /// Replan decision latencies (milliseconds, min over reps).
@@ -113,9 +138,20 @@ pub struct PerfReport {
     pub placement_cache_hits: u64,
     pub placement_cache_misses: u64,
     pub placement_cache_hit_rate: f64,
+    /// Merged memo counters from one warm-start invocation whose local
+    /// passes failed and fell back to the cold search — warm passes and
+    /// fallback share a single [`PlacementCache`], so fallback hits
+    /// here measure the cross-phase reuse.
+    pub warm_cache_hits: u64,
+    pub warm_cache_misses: u64,
+    pub warm_cache_hit_rate: f64,
     pub sims: Vec<SimPerf>,
+    /// Shard-scaling sweep (1/2/4 shards over one dynamic replay).
+    pub shard_scaling: Vec<ShardPerf>,
     pub replan: ReplanPerf,
     pub migration: MigrationPerf,
+    /// Worker shards the dynamic `sims` rows ran with (`--shards`).
+    pub shards: usize,
     /// Whole-benchmark wall clock, seconds (the `--max-wall` subject).
     pub wall_total_s: f64,
 }
@@ -125,13 +161,20 @@ fn round3(x: f64) -> f64 {
 }
 
 impl PerfReport {
-    /// Serialize in the BENCH_N.json schema.
-    pub fn to_json(&self) -> Json {
+    /// Serialize in the BENCH_N.json schema. `timing == false` strips
+    /// every host-dependent field (wall clocks, events/sec, replan
+    /// latencies, the shard knob) so two runs of the same config — at
+    /// *any* shard counts — emit byte-identical output; the CI
+    /// determinism tripwire diffs exactly that.
+    pub fn to_json(&self, timing: bool) -> Json {
         let mut cfg = BTreeMap::new();
         cfg.insert("n_llms".to_string(), Json::Num(self.n_llms as f64));
         cfg.insert("gpus".to_string(), Json::Num(self.gpus as f64));
         cfg.insert("duration_s".to_string(), Json::Num(self.duration));
         cfg.insert("smoke".to_string(), Json::Bool(self.smoke));
+        if timing {
+            cfg.insert("shards".to_string(), Json::Num(self.shards as f64));
+        }
 
         let sims: Vec<Json> = self
             .sims
@@ -148,11 +191,46 @@ impl PerfReport {
                     Json::Num(s.completed as f64),
                 );
                 m.insert("events".to_string(), Json::Num(s.events as f64));
-                m.insert("wall_s".to_string(), Json::Num(round3(s.wall_s)));
+                if timing {
+                    m.insert(
+                        "wall_s".to_string(),
+                        Json::Num(round3(s.wall_s)),
+                    );
+                    m.insert(
+                        "events_per_s".to_string(),
+                        Json::Num(s.events_per_s.round()),
+                    );
+                }
+                Json::Obj(m)
+            })
+            .collect();
+
+        let shard_scaling: Vec<Json> = self
+            .shard_scaling
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("shards".to_string(), Json::Num(s.shards as f64));
+                m.insert("events".to_string(), Json::Num(s.events as f64));
                 m.insert(
-                    "events_per_s".to_string(),
-                    Json::Num(s.events_per_s.round()),
+                    "fingerprint".to_string(),
+                    Json::Str(format!("{:016x}", s.fingerprint)),
                 );
+                m.insert("identical".to_string(), Json::Bool(s.identical));
+                if timing {
+                    m.insert(
+                        "wall_s".to_string(),
+                        Json::Num(round3(s.wall_s)),
+                    );
+                    m.insert(
+                        "events_per_s".to_string(),
+                        Json::Num(s.events_per_s.round()),
+                    );
+                    m.insert(
+                        "speedup".to_string(),
+                        Json::Num(round3(s.speedup)),
+                    );
+                }
                 Json::Obj(m)
             })
             .collect();
@@ -205,6 +283,20 @@ impl PerfReport {
             Json::Num(round3(self.placement_cache_hit_rate)),
         );
 
+        let mut wc = BTreeMap::new();
+        wc.insert(
+            "hits".to_string(),
+            Json::Num(self.warm_cache_hits as f64),
+        );
+        wc.insert(
+            "misses".to_string(),
+            Json::Num(self.warm_cache_misses as f64),
+        );
+        wc.insert(
+            "hit_rate".to_string(),
+            Json::Num(round3(self.warm_cache_hit_rate)),
+        );
+
         let mut root = BTreeMap::new();
         root.insert("bench".to_string(), Json::Str("bench-perf".to_string()));
         root.insert(
@@ -216,20 +308,125 @@ impl PerfReport {
             ),
         );
         root.insert("config".to_string(), Json::Obj(cfg));
-        root.insert(
-            "placement_cold_ms".to_string(),
-            Json::Num(round3(self.placement_cold_ms)),
-        );
+        if timing {
+            root.insert(
+                "placement_cold_ms".to_string(),
+                Json::Num(round3(self.placement_cold_ms)),
+            );
+        }
         root.insert("placement_cache".to_string(), Json::Obj(pc));
+        root.insert("warm_fallback_cache".to_string(), Json::Obj(wc));
         root.insert("sims".to_string(), Json::Arr(sims));
-        root.insert("replan".to_string(), Json::Obj(rp));
+        root.insert("shard_scaling".to_string(), Json::Arr(shard_scaling));
+        if timing {
+            root.insert("replan".to_string(), Json::Obj(rp));
+        }
         root.insert("migration".to_string(), Json::Obj(mg));
-        root.insert(
-            "wall_total_s".to_string(),
-            Json::Num(round3(self.wall_total_s)),
-        );
+        if timing {
+            root.insert(
+                "wall_total_s".to_string(),
+                Json::Num(round3(self.wall_total_s)),
+            );
+        }
         Json::Obj(root)
     }
+}
+
+/// FNV-1a accumulator for the report digest.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn u(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn f(&mut self, x: f64) {
+        self.u(x.to_bits());
+    }
+}
+
+/// Digest of a [`DynamicReport`]'s deterministic surface: every request
+/// record, per-LLM counter, replan outcome (minus `decision_ms` — the
+/// one host-dependent field), cache and fault counters. Bit-exact: two
+/// runs agree on this digest iff they agree on every hashed field down
+/// to float bit patterns, which is the sharded engine's byte-identity
+/// contract (`--shards N` must reproduce serial exactly).
+pub fn dynamic_fingerprint(r: &DynamicReport) -> u64 {
+    let mut h = Fnv::new();
+    for rec in &r.eval.records {
+        h.u(rec.id);
+        h.u(rec.llm as u64);
+        h.f(rec.arrival);
+        h.f(rec.first_token);
+        h.f(rec.finish);
+        h.u(rec.prompt_len as u64);
+        h.u(rec.output_len as u64);
+        h.f(rec.ideal_latency);
+        h.u(u64::from(rec.tier.code()));
+    }
+    for o in &r.replans {
+        h.f(o.time);
+        h.u(u64::from(o.migrated));
+        h.f(o.drift);
+        for rate in &o.rates {
+            h.f(*rate);
+        }
+        h.u(o.units as u64);
+        h.u(u64::from(o.warm));
+        h.f(o.cost);
+        h.f(o.window_s);
+    }
+    h.u(r.migrations as u64);
+    h.u(r.dropped as u64);
+    h.u(r.events);
+    h.f(r.downtime_s);
+    h.f(r.migration_cost);
+    h.u(r.kv_resumed as u64);
+    h.u(r.cache.prefix_hits);
+    h.u(r.cache.prefix_misses);
+    h.f(r.cache.prefill_s);
+    h.f(r.cache.prefill_skip_s);
+    h.u(r.cache.swaps_out);
+    h.u(r.cache.swaps_in);
+    h.u(r.cache.recompute_preempts);
+    h.u(r.cache.host_peak_blocks as u64);
+    h.f(r.cache.swap_link_s);
+    for s in r.shed {
+        h.u(s);
+    }
+    h.u(r.fault.injected as u64);
+    h.u(r.fault.unit_failures as u64);
+    h.u(r.fault.repairs as u64);
+    h.u(r.fault.lost_requests as u64);
+    h.u(r.fault.recovered_requests as u64);
+    h.u(r.fault.kv_recovered as u64);
+    h.u(r.fault.tokens_recomputed);
+    h.u(r.fault.copy_retries as u64);
+    h.u(r.fault.copy_fallbacks as u64);
+    h.f(r.fault.mttr_s.unwrap_or(-1.0));
+    for a in &r.fault.availability {
+        h.f(*a);
+    }
+    h.f(r.fault.slo_reattain_s.unwrap_or(-1.0));
+    for v in [
+        &r.admitted,
+        &r.lost,
+        &r.in_flight,
+        &r.shed_llm,
+        &r.dropped_llm,
+    ] {
+        for x in v {
+            h.u(*x);
+        }
+    }
+    h.0
 }
 
 /// Minimum wall time of `reps` calls, in milliseconds.
@@ -313,6 +510,7 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
             let rcfg = ReplanConfig {
                 warm_start: true,
                 migration_mode: mode,
+                shards: cfg.shards,
                 ..Default::default()
             };
             let dyn_sim = DynamicSimulation::new(
@@ -349,7 +547,50 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
         }
     };
 
-    // 3. Replan decision latency on one drifted rate vector: a sag on the
+    // 3. Shard scaling: one stationary replay through the *dynamic*
+    // engine (adapt ticks and replan barriers armed) at 1/2/4 worker
+    // shards. Every simulated quantity must agree bit-for-bit with the
+    // serial row — `identical` is the in-report determinism verdict —
+    // while events/sec is the speedup headline.
+    let shard_scaling: Vec<ShardPerf> = {
+        let mut rows: Vec<ShardPerf> = Vec::new();
+        for k in [1usize, 2, 4] {
+            let rcfg = ReplanConfig {
+                warm_start: true,
+                shards: k,
+                ..Default::default()
+            };
+            let dyn_sim = DynamicSimulation::new(
+                &specs, &workloads, &cluster, engine, rcfg, true,
+            )
+            .expect("bench-perf shard-scaling placement must exist");
+            let t0 = Instant::now();
+            let report = dyn_sim.run(&requests, cfg.duration);
+            let wall = t0.elapsed().as_secs_f64();
+            let events_per_s = report.events as f64 / wall.max(1e-9);
+            let fingerprint = dynamic_fingerprint(&report);
+            let (speedup, identical) = match rows.first() {
+                None => (1.0, true),
+                Some(serial) => (
+                    events_per_s / serial.events_per_s.max(1e-9),
+                    fingerprint == serial.fingerprint
+                        && report.events == serial.events,
+                ),
+            };
+            rows.push(ShardPerf {
+                shards: k,
+                events: report.events,
+                wall_s: wall,
+                events_per_s,
+                speedup,
+                fingerprint,
+                identical,
+            });
+        }
+        rows
+    };
+
+    // 4. Replan decision latency on one drifted rate vector: a sag on the
     // hottest LLM is always locally absorbable, so it exercises the warm
     // fast path; the ×50 spike forces the documented fallback.
     let mut drifted = workloads.clone();
@@ -371,6 +612,16 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
         )
     });
 
+    // The spike forces the warm passes through to the cold fallback;
+    // one instrumented (untimed) invocation reports the merged memo
+    // counters — fallback hits measure how much of the warm passes'
+    // pricing the re-search reused.
+    let mut warm_cache = PlacementCache::default();
+    let _ = muxserve_placement_warm_cached(
+        &specs, &spiked, &cluster, &est, &placement, &dirty,
+        &mut warm_cache,
+    );
+
     PerfReport {
         n_llms: n,
         gpus: cluster.total_gpus(),
@@ -380,7 +631,11 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
         placement_cache_hits: cache.hits,
         placement_cache_misses: cache.misses,
         placement_cache_hit_rate: cache.hit_rate(),
+        warm_cache_hits: warm_cache.hits,
+        warm_cache_misses: warm_cache.misses,
+        warm_cache_hit_rate: warm_cache.hit_rate(),
         sims,
+        shard_scaling,
         replan: ReplanPerf {
             full_ms,
             warm_ms,
@@ -388,6 +643,7 @@ pub fn run_bench_perf(cfg: &PerfConfig) -> PerfReport {
             warm_fallback_ms,
         },
         migration,
+        shards: cfg.shards,
         wall_total_s: t_all.elapsed().as_secs_f64(),
     }
 }

@@ -133,6 +133,9 @@ struct SimArgs {
     /// Forecast gain x horizon sweep section in `ab`
     /// (`--sweep-forecast`).
     sweep_forecast: bool,
+    /// Worker shards for the dynamic event loop (`--shards N`, default
+    /// 1 = serial; any N is byte-identical to serial by contract).
+    shards: Option<usize>,
 }
 
 impl SimArgs {
@@ -215,6 +218,7 @@ impl SimArgs {
             disagg: flag_switch(args, "--disagg")?,
             chunk_prefill: flag_opt(args, "--chunk-prefill")?,
             sweep_forecast: args.iter().any(|a| a == "--sweep-forecast"),
+            shards: flag_opt(args, "--shards")?,
         })
     }
 }
@@ -306,9 +310,15 @@ pub fn main() -> Result<()> {
 
 /// Event-core performance baseline: paper-scale (19 LLMs / 32 GPUs)
 /// simulation throughput + replan decision latency (cold vs warm-started
-/// placement). `--smoke` shrinks to the CI tripwire config; `--out FILE`
-/// writes the BENCH_N.json record; `--max-wall S` fails the run when the
-/// total wall clock exceeds the ceiling (gross-regression guard).
+/// placement) + the shard-scaling sweep (1/2/4 worker shards, with the
+/// in-report byte-identity verdict). `--smoke` shrinks to the CI
+/// tripwire config; `--shards N` runs the dynamic rows sharded (results
+/// are byte-identical to serial by contract — only wall clocks move);
+/// `--out FILE` writes the BENCH_N.json record; `--strip-timing` drops
+/// every host-dependent field from it, so two runs at any shard counts
+/// emit byte-identical JSON (the CI determinism check `cmp`s exactly
+/// that); `--max-wall S` fails the run when the total wall clock
+/// exceeds the ceiling (gross-regression guard).
 fn bench_perf_cmd(args: &[String]) -> Result<()> {
     use crate::bench::perf::{run_bench_perf, PerfConfig};
 
@@ -318,12 +328,17 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
     if let Some(d) = sim.duration {
         cfg.duration = d;
     }
+    if let Some(s) = sim.shards {
+        cfg.shards = s.max(1);
+    }
     let max_wall = flag_val(args, "--max-wall", f64::INFINITY)?;
 
     println!(
-        "bench-perf: {} config, duration {:.0}s (running...)",
+        "bench-perf: {} config, duration {:.0}s, {} shard(s) \
+         (running...)",
         if sim.smoke { "smoke" } else { "paper-scale" },
-        cfg.duration
+        cfg.duration,
+        cfg.shards
     );
     let report = run_bench_perf(&cfg);
     println!(
@@ -344,6 +359,25 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
             s.events_per_s
         );
     }
+    for s in &report.shard_scaling {
+        println!(
+            "shard-scaling x{:<2}   {:>9} events  {:>8.3}s wall  \
+             {:>10.0} events/s  {:>5.2}x  {}",
+            s.shards,
+            s.events,
+            s.wall_s,
+            s.events_per_s,
+            s.speedup,
+            if s.identical { "identical" } else { "DIVERGED" }
+        );
+    }
+    println!(
+        "warm-fallback cache: {:.1}% hit ({} hits / {} misses, warm \
+         passes + cold fallback merged)",
+        report.warm_cache_hit_rate * 100.0,
+        report.warm_cache_hits,
+        report.warm_cache_misses
+    );
     println!(
         "replan decision:    full {:.2} ms  warm {:.2} ms  ({:.1}x)  \
          warm-with-fallback {:.2} ms",
@@ -364,7 +398,8 @@ fn bench_perf_cmd(args: &[String]) -> Result<()> {
     println!("total wall: {:.2}s", report.wall_total_s);
 
     if let Some(path) = flag_path(args, "--out")? {
-        let mut text = report.to_json().to_string();
+        let timing = !args.iter().any(|a| a == "--strip-timing");
+        let mut text = report.to_json(timing).to_string();
         text.push('\n');
         std::fs::write(path, text)
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
@@ -622,6 +657,7 @@ fn scenario_cmd(args: &[String]) -> Result<()> {
         objective: sim.objective.unwrap_or(Objective::Throughput),
         fault_recovery: sim.fault_recovery.unwrap_or(false),
         disagg,
+        shards: sim.shards.unwrap_or(1).max(1),
         ..Default::default()
     });
     let fault_axis = sim.faults.unwrap_or(FaultsAxis::None);
@@ -943,11 +979,20 @@ fn print_help() {
          COMMANDS:\n  \
          bench-fig1 .. bench-fig12   regenerate one paper figure\n  \
          bench-drift                 static vs online re-placement figure\n  \
-         bench-perf [--smoke] [--out FILE] [--max-wall S]\n  \
+         bench-perf [--smoke] [--shards N] [--out FILE] [--strip-timing] \
+         [--max-wall S]\n  \
          \x20                            event-core perf baseline: 19 LLMs \
          / 32 GPUs\n  \
          \x20                            events/sec + replan latency \
          (cold vs warm)\n  \
+         \x20                            + shard scaling (1/2/4 worker \
+         shards,\n  \
+         \x20                            byte-identical results by \
+         contract);\n  \
+         \x20                            --strip-timing drops \
+         host-dependent fields\n  \
+         \x20                            from --out for determinism \
+         diffs\n  \
          bench-all                   full evaluation suite\n  \
          scenario [--shape S] [--replan on|off] [--warm on|off] \
          [--policy P]\n  \
@@ -963,6 +1008,7 @@ fn print_help() {
          straggler]\n  \
          \x20        [--fault-recovery on|off] [--disagg on|off] \
          [--chunk-prefill N]\n  \
+         \x20        [--shards N]\n  \
          \x20                            dynamic workload (stationary | \
          diurnal | bursty |\n  \
          \x20                            flash-crowd | drift | overcommit \
@@ -1028,6 +1074,12 @@ fn print_help() {
          prefill step at N\n  \
          \x20                            tokens so decode steps \
          interleave (0 = off),\n  \
+         \x20                            --shards N partitions units \
+         across N worker\n  \
+         \x20                            shards between coordinator \
+         barriers\n  \
+         \x20                            (byte-identical to serial; \
+         default 1),\n  \
          \x20                            --export-trace FILE freezes the \
          stream (v4 when\n  \
          \x20                            faults are on),\n  \

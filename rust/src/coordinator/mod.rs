@@ -20,7 +20,8 @@ pub use placement::{
     enumerate_mesh_groups, enumerate_partitions, memory_greedy_placement,
     muxserve_placement, muxserve_placement_cached,
     muxserve_placement_capped, muxserve_placement_disagg,
-    muxserve_placement_warm, parallel_candidates, spatial_placement,
+    muxserve_placement_warm, muxserve_placement_warm_cached,
+    parallel_candidates, spatial_placement,
     Placement, PlacementCache, PlacementUnit, ParallelCandidate,
 };
 pub use replan::{

@@ -548,10 +548,33 @@ pub fn muxserve_placement_warm(
     prev: &Placement,
     dirty: &[bool],
 ) -> Option<Placement> {
+    let mut cache = PlacementCache::default();
+    muxserve_placement_warm_cached(
+        specs, workloads, cluster, est, prev, dirty, &mut cache,
+    )
+}
+
+/// [`muxserve_placement_warm`] with a caller-owned [`PlacementCache`].
+/// One cache serves the warm passes *and* the cold fallback: when a
+/// local re-place fails and the search restarts from scratch, every
+/// unit estimate the warm passes already priced is a hit instead of a
+/// recompute, and the caller reads merged hit/miss counters afterwards
+/// (`bench-perf` reports the combined rate).
+pub fn muxserve_placement_warm_cached(
+    specs: &[ModelSpec],
+    workloads: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    est: &Estimator,
+    prev: &Placement,
+    dirty: &[bool],
+    cache: &mut PlacementCache,
+) -> Option<Placement> {
     // The warm path only makes sense when `prev` covers exactly this LLM
     // set; anything else is a cold-start problem.
     if dirty.len() != specs.len() || prev.n_placed() != specs.len() {
-        return muxserve_placement(specs, workloads, cluster, est);
+        return muxserve_placement_cached(
+            specs, workloads, cluster, est, cache,
+        );
     }
     // Re-score every previous unit against the fresh workloads (member
     // sets and SM configs unchanged — only the estimator value moves).
@@ -583,7 +606,6 @@ pub fn muxserve_placement_warm(
         });
     }
 
-    let mut cache = PlacementCache::default();
     // Pass 1: the minimal pool (only units containing a dirty LLM).
     if let Some(p) = warm_attempt(
         specs,
@@ -594,7 +616,7 @@ pub fn muxserve_placement_warm(
         &unit_scores,
         &dirty_units,
         dirty,
-        &mut cache,
+        cache,
     ) {
         return Some(p);
     }
@@ -613,17 +635,20 @@ pub fn muxserve_placement_warm(
             &unit_scores,
             &widened,
             dirty,
-            &mut cache,
+            cache,
         ) {
             return Some(p);
         }
     }
-    // Cold fallback — and if even that comes up empty (it searches the
-    // same space from scratch), the stale placement still serves.
-    muxserve_placement(specs, workloads, cluster, est).or(Some(Placement {
-        units: prev.units.clone(),
-        est_total: stale_total,
-    }))
+    // Cold fallback — sharing the warm passes' cache, so the re-search
+    // skips every unit estimate already priced above. If even that
+    // comes up empty, the stale placement still serves.
+    muxserve_placement_cached(specs, workloads, cluster, est, cache).or(
+        Some(Placement {
+            units: prev.units.clone(),
+            est_total: stale_total,
+        }),
+    )
 }
 
 /// One warm-start pass over a given dirty-unit pool: re-place the

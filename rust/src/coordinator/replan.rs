@@ -189,6 +189,35 @@ pub struct ReplanConfig {
     /// `ForecastPolicy::default()` bit-for-bit. Swept by
     /// `--sweep-forecast`.
     pub forecast_horizon: f64,
+    /// Worker shards the dynamic simulator partitions its units across
+    /// (`--shards N`). 1 (the default) is the serial engine; N > 1
+    /// runs unit-local events on worker threads between coordinator
+    /// barriers and is **byte-identical** to serial by construction.
+    ///
+    /// ## The barrier contract
+    ///
+    /// Between barriers, every event the engine processes is local to
+    /// one unit, so units partition cleanly across shards:
+    ///
+    /// * **Barrier events** — `Replan` (drift checks and migrations),
+    ///   `Resume` (migration-window deliveries, held-arrival flushes,
+    ///   KV-copy retries and their fault budget), and `Fault`
+    ///   (injection and follow-ups) — mutate cross-unit state: the
+    ///   placement, the uid table, routing maps, `llm_resume_at`, the
+    ///   delivery store. The coordinator processes them serially, in
+    ///   event order, with every unit back in place.
+    /// * **Shard-local events** — `Arrival`, `JobDone`, and `Adapt` —
+    ///   touch exactly one unit. `Adapt` is deliberately *not* a
+    ///   barrier even though it is a coordinator-seeded tick: the
+    ///   paper's quota adaptation reads and writes only its own
+    ///   unit's state, and serializing the highest-frequency event
+    ///   class would forfeit the parallel speedup. (Its validation
+    ///   sweep accordingly checks only the shard's own units.)
+    ///
+    /// Disaggregated runs (`disagg`) force the serial path regardless
+    /// of this setting: prefill→decode handoffs emit `Resume` events
+    /// at sub-barrier times, coupling units between barriers.
+    pub shards: usize,
 }
 
 impl Default for ReplanConfig {
@@ -217,6 +246,7 @@ impl Default for ReplanConfig {
             disagg: false,
             forecast_gain: 0.5,
             forecast_horizon: 2.0,
+            shards: 1,
         }
     }
 }

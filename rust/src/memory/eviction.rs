@@ -88,7 +88,11 @@ pub struct EvictCandidate {
 /// Victim choice under memory pressure. `pick` is handed a non-empty
 /// candidate slice and returns the index of the context to evict.
 /// Implementations must be deterministic (tie-break on `id`).
-pub trait EvictionPolicy {
+///
+/// `Send` because the policy travels inside its `UnitSim` when the
+/// sharded simulator moves units onto worker threads between
+/// coordinator barriers.
+pub trait EvictionPolicy: Send {
     fn kind(&self) -> EvictionKind;
     fn pick(&mut self, candidates: &[EvictCandidate]) -> usize;
 }

@@ -65,13 +65,15 @@
 //!
 //! [`ReplanPolicy`]: crate::coordinator::replan::ReplanPolicy
 
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::HashMap;
 
+use super::events::{EventKey, EventQueue};
 use super::faults::{FaultKind, FaultPlan, FaultStats};
+use super::shard::{assign_units, run_phase, PhaseTask, Shard};
 use super::unit::{
     CacheStats, CrashSalvage, ResumedRequest, BLOCK_TOKENS,
 };
-use super::{Event, EventKind, Simulation, UnitSim};
+use super::{EventKind, Simulation, UnitSim};
 use crate::config::{ClusterSpec, ModelSpec, WorkloadSpec};
 use crate::coordinator::migration::{
     plan_migration, plan_migration_dead, unit_key, LiveLlm, MigrationMode,
@@ -99,6 +101,81 @@ const MAX_COPY_ATTEMPTS: u32 = 3;
 const COPY_RETRY_BASE_S: f64 = 0.25;
 /// Backoff ceiling for failed KV copies, seconds.
 const COPY_RETRY_CAP_S: f64 = 2.0;
+
+/// Event sink the coordinator's handlers schedule through.
+///
+/// * **Serial mode**: every event lands on the single global queue
+///   under a seed-style key carrying one monotonic counter — exactly
+///   the old heap's `(time, seq)` order, bit for bit.
+/// * **Sharded mode**: barrier events (`Replan`, `Resume`, `Fault`)
+///   go to the coordinator's global queue; unit-local events
+///   (`JobDone`, `Adapt`) created during barrier processing are
+///   *staged* and distributed to their owner shard at the next
+///   re-partition — they cannot be routed immediately because a
+///   migration inside the same barrier may mint new unit uids.
+///   Runtime keys are stamped with the coordinator's current `epoch`
+///   (see [`super::events`]), which the run loop advances around each
+///   barrier.
+struct Router {
+    global: EventQueue<(usize, EventKind)>,
+    staged: Vec<(EventKey, (usize, EventKind))>,
+    seq: u64,
+    tier: u8,
+    epoch: u32,
+    sharded: bool,
+}
+
+impl Router {
+    fn serial() -> Router {
+        Router {
+            global: EventQueue::new(),
+            staged: Vec::new(),
+            seq: 0,
+            tier: 0,
+            epoch: 0,
+            sharded: false,
+        }
+    }
+
+    fn sharded() -> Router {
+        Router { sharded: true, ..Router::serial() }
+    }
+
+    /// Seeding is over: runtime events switch to tier-1 keys. A no-op
+    /// in serial mode, where the global counter alone reproduces the
+    /// historical order.
+    fn finish_seeding(&mut self) {
+        if self.sharded {
+            self.tier = 1;
+        }
+    }
+
+    fn next_key(&mut self, time: f64) -> EventKey {
+        let key = if self.tier == 0 {
+            EventKey::seed(time, self.seq)
+        } else {
+            EventKey::runtime(time, self.epoch, self.seq)
+        };
+        self.seq += 1;
+        key
+    }
+
+    /// Schedule `kind` at `time`, addressed to `unit` (a stable uid
+    /// for completions/adapt ticks, `usize::MAX` for coordinator
+    /// events — the old heap's convention).
+    fn push(&mut self, time: f64, unit: usize, kind: EventKind) {
+        let key = self.next_key(time);
+        let local = matches!(
+            kind,
+            EventKind::JobDone(_) | EventKind::Adapt
+        );
+        if self.sharded && local {
+            self.staged.push((key, (unit, kind)));
+        } else {
+            self.global.push(key, (unit, kind));
+        }
+    }
+}
 
 /// One re-placement decision, for reporting and assertions.
 #[derive(Clone, Debug)]
@@ -467,32 +544,36 @@ impl DynamicSimulation {
     /// Consumes the simulation: the accumulators (records, replans,
     /// uids) are single-run state, so a second run on the same object
     /// would double-count — build a fresh one instead.
+    ///
+    /// With [`ReplanConfig::shards`] > 1 the run executes sharded (see
+    /// [`Self::run_sharded`]) and is byte-identical to the serial
+    /// replay. Disaggregated runs always execute serially: handoff
+    /// `Resume` events couple prefill and decode units *between*
+    /// coordinator barriers, which breaks the shard independence the
+    /// parallel engine is built on.
     pub fn run(
-        mut self,
+        self,
         requests: &[Request],
         duration: f64,
     ) -> DynamicReport {
-        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
-        let mut seq = 0u64;
-        for r in requests {
-            heap.push(Event {
-                time: r.arrival,
-                seq,
-                unit: usize::MAX,
-                kind: EventKind::Arrival(r.clone()),
-            });
-            seq += 1;
+        let nshards = self.controller.config().shards.max(1);
+        if nshards > 1 && !self.controller.config().disagg {
+            self.run_sharded(requests, duration, nshards)
+        } else {
+            self.run_serial(requests, duration)
         }
+    }
+
+    /// Seed the non-arrival events shared by both run modes, in the
+    /// historical order: the first replan tick, then every in-horizon
+    /// fault. (Arrivals come first in the serial seeding; the sharded
+    /// engine keeps them as a sorted array and pre-charges the seed
+    /// counter instead.)
+    fn seed_control_events(&mut self, duration: f64, router: &mut Router) {
         if self.adaptive {
             let tick = self.controller.config().check_period;
             if tick < duration {
-                heap.push(Event {
-                    time: tick,
-                    seq,
-                    unit: usize::MAX,
-                    kind: EventKind::Replan,
-                });
-                seq += 1;
+                router.push(tick, usize::MAX, EventKind::Replan);
             }
         }
         let fault_plan = std::mem::take(&mut self.fault_plan);
@@ -502,104 +583,294 @@ impl DynamicSimulation {
             }
             let idx = self.fault_actions.len();
             self.fault_actions.push(FaultAction::Inject(fe.kind));
-            heap.push(Event {
-                time: fe.time,
-                seq,
-                unit: usize::MAX,
-                kind: EventKind::Fault(idx),
-            });
-            seq += 1;
+            router.push(fe.time, usize::MAX, EventKind::Fault(idx));
         }
-        self.schedule_adapt_ticks(0.0, duration, &mut heap, &mut seq);
+        self.schedule_adapt_ticks(0.0, duration, router);
+    }
 
-        while let Some(ev) = heap.pop() {
+    fn run_serial(
+        mut self,
+        requests: &[Request],
+        duration: f64,
+    ) -> DynamicReport {
+        let mut router = Router::serial();
+        for r in requests {
+            router.push(
+                r.arrival,
+                usize::MAX,
+                EventKind::Arrival(r.clone()),
+            );
+        }
+        self.seed_control_events(duration, &mut router);
+        router.finish_seeding();
+
+        while let Some((key, (evunit, kind))) = router.global.pop() {
             // Negated form so a NaN time (which sorts last) also stops
             // the run instead of being processed and poisoning `now`.
-            if !(ev.time <= duration) {
+            if !(key.time <= duration) {
                 break;
             }
             self.events += 1;
-            match ev.kind {
+            match kind {
                 EventKind::Arrival(r) => {
-                    // Heap arrivals are always first deliveries (held
+                    // Queued arrivals are always first deliveries (held
                     // requests re-enter through Resume events, not the
-                    // heap), and they feed the drift monitor; a disarmed
+                    // queue), and they feed the drift monitor; a disarmed
                     // run records nothing (the window is only ever
                     // evicted from should_replan, so observing without
                     // Replan ticks would accumulate unboundedly).
-                    debug_assert!(ev.time == r.arrival);
+                    debug_assert!(key.time == r.arrival);
                     self.admitted[r.llm] += 1;
                     if self.adaptive {
-                        self.controller.observe_arrival(r.llm, ev.time);
+                        self.controller.observe_arrival(r.llm, key.time);
                     }
-                    if ev.time < self.llm_resume_at[r.llm] {
+                    if key.time < self.llm_resume_at[r.llm] {
                         // Inside the LLM's migration window: hold for
                         // bulk delivery at the window-closing Resume.
                         self.held.push(r);
                         continue;
                     }
-                    self.route_arrival(ev.time, r, &mut heap, &mut seq);
+                    self.route_arrival(key.time, r, &mut router);
                 }
                 EventKind::JobDone(id) => {
-                    let Some(&u) = self.uid_index.get(&(ev.unit as u64))
+                    let Some(&u) = self.uid_index.get(&(evunit as u64))
                     else {
                         continue; // completion from a torn-down unit
                     };
                     let unit = &mut self.sim.units[u];
-                    unit.advance_time(ev.time);
-                    unit.on_job_done(ev.time, id);
-                    self.push_started(u, &mut heap, &mut seq);
-                    self.collect_handoffs(ev.time, u, &mut heap, &mut seq);
+                    unit.advance_time(key.time);
+                    unit.on_job_done(key.time, id);
+                    self.push_started(u, &mut router);
+                    self.collect_handoffs(key.time, u, &mut router);
                 }
                 EventKind::Adapt => {
-                    let Some(&u) = self.uid_index.get(&(ev.unit as u64))
+                    let Some(&u) = self.uid_index.get(&(evunit as u64))
                     else {
                         continue;
                     };
                     let unit = &mut self.sim.units[u];
-                    unit.advance_time(ev.time);
+                    unit.advance_time(key.time);
                     unit.on_adapt();
                     if self.cfg.validate {
-                        self.validate_units(ev.time, "adapt");
+                        self.validate_units(key.time, "adapt");
                     }
                     let unit = &mut self.sim.units[u];
-                    let next = ev.time + unit.cfg.adapt_period;
+                    let next = key.time + unit.cfg.adapt_period;
                     if next < duration {
-                        heap.push(Event {
-                            time: next,
-                            seq,
-                            unit: ev.unit,
-                            kind: EventKind::Adapt,
-                        });
-                        seq += 1;
+                        router.push(next, evunit, EventKind::Adapt);
                     }
                 }
                 EventKind::Replan => {
-                    self.on_replan(ev.time, duration, &mut heap, &mut seq);
+                    self.on_replan(key.time, duration, &mut router);
                     let next =
-                        ev.time + self.controller.config().check_period;
+                        key.time + self.controller.config().check_period;
                     if next < duration {
-                        heap.push(Event {
-                            time: next,
-                            seq,
-                            unit: usize::MAX,
-                            kind: EventKind::Replan,
-                        });
-                        seq += 1;
+                        router.push(next, usize::MAX, EventKind::Replan);
                     }
                 }
                 EventKind::Resume(idx) => {
-                    self.deliver(ev.time, idx, &mut heap, &mut seq);
+                    self.deliver(key.time, idx, &mut router);
                 }
                 EventKind::Fault(idx) => {
-                    self.on_fault(ev.time, duration, idx, &mut heap, &mut seq);
+                    self.on_fault(key.time, duration, idx, &mut router);
                     if self.cfg.validate {
-                        self.validate_units(ev.time, "fault");
+                        self.validate_units(key.time, "fault");
                     }
                 }
             }
         }
+        self.finish_report(duration)
+    }
 
+    /// The sharded run loop: the coordinator routes arrivals and
+    /// processes barrier events serially; between barriers, each
+    /// shard replays its own units' events on a worker thread (see
+    /// [`super::shard`] and the barrier contract in
+    /// [`crate::coordinator::replan`]). Byte-identical to
+    /// [`Self::run_serial`] by construction of the [`EventKey`] order.
+    fn run_sharded(
+        mut self,
+        requests: &[Request],
+        duration: f64,
+        nshards: usize,
+    ) -> DynamicReport {
+        let mut router = Router::sharded();
+        // Arrivals stay a sorted array + cursor; their seed keys use
+        // the array index, so charge the seed counter as if they had
+        // been queued — the control seeds keep their serial keys.
+        router.seq = requests.len() as u64;
+        self.seed_control_events(duration, &mut router);
+        router.finish_seeding();
+
+        let mut shards: Vec<Shard> =
+            (0..nshards).map(|_| Shard::default()).collect();
+        let mut cursor = 0usize;
+        // Forces a full re-partition on the first cycle.
+        let mut owned_uids: Vec<u64> = Vec::new();
+
+        loop {
+            let assign = assign_units(self.sim.units.len(), nshards);
+            // Distribute barrier-staged events — and, when the unit
+            // set changed, every pending shard event — to the owner
+            // shard of the addressed uid. Stale uids (torn-down
+            // units) go to shard 0, whose replay skips them with the
+            // same counted no-op as the serial loop. Keys are
+            // preserved: re-partitioning never reorders anything.
+            let mut moved = std::mem::take(&mut router.staged);
+            if owned_uids != self.unit_uid {
+                for s in shards.iter_mut() {
+                    moved.extend(s.queue.drain_sorted());
+                }
+                owned_uids.clone_from(&self.unit_uid);
+            }
+            for (key, (addr, kind)) in moved {
+                let dest = match self.uid_index.get(&(addr as u64)) {
+                    Some(&u) => assign[u],
+                    None => 0,
+                };
+                shards[dest].queue.push(key, (addr, kind));
+            }
+
+            // The next barrier bounds this phase; none ⇒ final phase,
+            // run every shard to the horizon.
+            let cut = router
+                .global
+                .peek_key()
+                .filter(|k| k.time <= duration);
+
+            // Route arrivals due this phase. The coordinator performs
+            // the serial Arrival arm's global bookkeeping here —
+            // admission counters, the drift monitor, the held-window
+            // check — against tables that are only ever mutated at
+            // barriers, so evaluating them at routing time is exact.
+            // Held and unroutable arrivals never reach a shard queue
+            // and are counted here; routed arrivals are counted by
+            // their shard's pop, like every other queued event.
+            while cursor < requests.len() {
+                let r = &requests[cursor];
+                if !(r.arrival <= duration) {
+                    cursor = requests.len();
+                    break;
+                }
+                let akey = EventKey::seed(r.arrival, cursor as u64);
+                if let Some(cut) = cut {
+                    if akey >= cut {
+                        break;
+                    }
+                }
+                cursor += 1;
+                self.admitted[r.llm] += 1;
+                if self.adaptive {
+                    self.controller.observe_arrival(r.llm, r.arrival);
+                }
+                if r.arrival < self.llm_resume_at[r.llm] {
+                    self.events += 1;
+                    self.held.push(r.clone());
+                    continue;
+                }
+                // Sharded runs are never disaggregated, so the
+                // prefill route is empty and `llm_map` is the whole
+                // routing story.
+                let (u, local) = self.sim.llm_map[r.llm];
+                if u == usize::MAX {
+                    self.events += 1;
+                    self.lost[r.llm] += 1;
+                    self.fstats.lost_requests += 1;
+                    continue;
+                }
+                let mut lr = r.clone();
+                lr.llm = local;
+                shards[assign[u]]
+                    .queue
+                    .push(akey, (u, EventKind::Arrival(lr)));
+            }
+
+            // Run the phase: move every unit out to its shard, replay
+            // up to the cut on worker threads, move everything back.
+            let units = std::mem::take(&mut self.sim.units);
+            let mut tasks: Vec<PhaseTask> = shards
+                .iter_mut()
+                .map(|s| PhaseTask {
+                    units: Vec::new(),
+                    queue: std::mem::take(&mut s.queue),
+                    seq: s.seq,
+                    events: s.events,
+                    cut,
+                    duration,
+                    epoch: router.epoch,
+                    validate: self.cfg.validate,
+                })
+                .collect();
+            for (idx, unit) in units.into_iter().enumerate() {
+                tasks[assign[idx]].units.push((
+                    idx,
+                    self.unit_uid[idx],
+                    unit,
+                ));
+            }
+            run_phase(&mut tasks);
+            let n = self.unit_uid.len();
+            let mut slots: Vec<Option<UnitSim>> =
+                std::iter::repeat_with(|| None).take(n).collect();
+            for (s, task) in shards.iter_mut().zip(tasks) {
+                for (g, _, unit) in task.units {
+                    slots[g] = Some(unit);
+                }
+                s.queue = task.queue;
+                s.seq = task.seq;
+                s.events = task.events;
+            }
+            self.sim.units = slots
+                .into_iter()
+                .map(|o| o.expect("every unit returns from its shard"))
+                .collect();
+
+            if cut.is_none() {
+                break;
+            }
+            // Process the barrier with the ordinary serial handlers.
+            // Nothing can have undercut the peeked key meanwhile:
+            // shards only push to their own queues, and barrier
+            // handlers only schedule at or after the barrier time.
+            let Some((key, (_, kind))) = router.global.pop() else {
+                break;
+            };
+            router.epoch += 1;
+            self.events += 1;
+            match kind {
+                EventKind::Replan => {
+                    self.on_replan(key.time, duration, &mut router);
+                    let next =
+                        key.time + self.controller.config().check_period;
+                    if next < duration {
+                        router.push(next, usize::MAX, EventKind::Replan);
+                    }
+                }
+                EventKind::Resume(idx) => {
+                    self.deliver(key.time, idx, &mut router);
+                }
+                EventKind::Fault(idx) => {
+                    self.on_fault(key.time, duration, idx, &mut router);
+                    if self.cfg.validate {
+                        self.validate_units(key.time, "fault");
+                    }
+                }
+                EventKind::Arrival(_)
+                | EventKind::JobDone(_)
+                | EventKind::Adapt => {
+                    unreachable!("unit-local event in the global queue")
+                }
+            }
+            router.epoch += 1;
+        }
+        for s in &shards {
+            self.events += s.events;
+        }
+        self.finish_report(duration)
+    }
+
+    /// Shared report assembly for both run modes.
+    fn finish_report(mut self, duration: f64) -> DynamicReport {
         self.completed.extend(self.sim.harvest_records());
         let n_llms = self.specs.len();
         let dropped = self.dropped + self.sim.dropped();
@@ -725,21 +996,10 @@ impl DynamicSimulation {
         }
     }
 
-    fn push_started(
-        &mut self,
-        unit: usize,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
-    ) {
+    fn push_started(&mut self, unit: usize, router: &mut Router) {
         let uid = self.unit_uid[unit] as usize;
         for (t_done, id) in self.sim.units[unit].drain_started() {
-            heap.push(Event {
-                time: t_done,
-                seq: *seq,
-                unit: uid,
-                kind: EventKind::JobDone(id),
-            });
-            *seq += 1;
+            router.push(t_done, uid, EventKind::JobDone(id));
         }
     }
 
@@ -750,8 +1010,7 @@ impl DynamicSimulation {
         kv_copy: bool,
         recovered: bool,
         payload: Vec<ResumedRequest>,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         let idx = self.deliveries.len();
         self.deliveries.push(Some(StagedDelivery {
@@ -762,13 +1021,7 @@ impl DynamicSimulation {
             handoff: false,
         }));
         self.outstanding += 1;
-        heap.push(Event {
-            time,
-            seq: *seq,
-            unit: usize::MAX,
-            kind: EventKind::Resume(idx),
-        });
-        *seq += 1;
+        router.push(time, usize::MAX, EventKind::Resume(idx));
     }
 
     /// Register a prefill→decode handoff payload and its arrival-time
@@ -779,8 +1032,7 @@ impl DynamicSimulation {
         &mut self,
         time: f64,
         payload: Vec<ResumedRequest>,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         let idx = self.deliveries.len();
         self.deliveries.push(Some(StagedDelivery {
@@ -790,13 +1042,7 @@ impl DynamicSimulation {
             recovered: false,
             handoff: true,
         }));
-        heap.push(Event {
-            time,
-            seq: *seq,
-            unit: usize::MAX,
-            kind: EventKind::Resume(idx),
-        });
-        *seq += 1;
+        router.push(time, usize::MAX, EventKind::Resume(idx));
     }
 
     /// Ship finished prefills off a prefill-role unit: price each
@@ -805,13 +1051,7 @@ impl DynamicSimulation {
     /// one handoff delivery per request, landing on the LLM's
     /// decode-tier unit through the ordinary Resume machinery. A no-op
     /// on every non-handoff unit — the buffer stays empty.
-    fn collect_handoffs(
-        &mut self,
-        t: f64,
-        u: usize,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
-    ) {
+    fn collect_handoffs(&mut self, t: f64, u: usize, router: &mut Router) {
         let ready = self.sim.units[u].drain_handoffs();
         if ready.is_empty() {
             return;
@@ -826,20 +1066,14 @@ impl DynamicSimulation {
             r.req.llm = gi;
             let bytes = r.blocks as f64
                 * block_bytes(BLOCK_TOKENS, self.specs[gi].head_dim);
-            self.push_handoff_delivery(t + bytes / bw, vec![r], heap, seq);
+            self.push_handoff_delivery(t + bytes / bw, vec![r], router);
         }
     }
 
     /// A move window closed: deliver its payload (preempted requests
     /// first, preserving KV where the plan copied it), then flush every
     /// held arrival whose LLM is serving again.
-    fn deliver(
-        &mut self,
-        t: f64,
-        idx: usize,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
-    ) {
+    fn deliver(&mut self, t: f64, idx: usize, router: &mut Router) {
         // A fault-injected copy failure hits the next KV-copy window:
         // retry with capped exponential backoff while the budget and
         // attempt cap allow, then fall back to recompute delivery.
@@ -855,13 +1089,11 @@ impl DynamicSimulation {
                         let delay = (COPY_RETRY_BASE_S
                             * 2f64.powi(d.attempts as i32 - 1))
                         .min(COPY_RETRY_CAP_S);
-                        heap.push(Event {
-                            time: t + delay,
-                            seq: *seq,
-                            unit: usize::MAX,
-                            kind: EventKind::Resume(idx),
-                        });
-                        *seq += 1;
+                        router.push(
+                            t + delay,
+                            usize::MAX,
+                            EventKind::Resume(idx),
+                        );
                         return;
                     }
                     d.kv_copy = false;
@@ -879,7 +1111,7 @@ impl DynamicSimulation {
         for mut r in d.payload {
             if !d.kv_copy {
                 // Recompute path: plain re-admission.
-                let routed = self.route_arrival(t, r.req, heap, seq);
+                let routed = self.route_arrival(t, r.req, router);
                 if d.recovered && routed {
                     self.fstats.recovered_requests += 1;
                 }
@@ -916,17 +1148,17 @@ impl DynamicSimulation {
             } else {
                 self.kv_resumed += unit.admit_resumed(t, r) as usize;
             }
-            self.push_started(u, heap, seq);
+            self.push_started(u, router);
         }
         // Held arrivals whose window has closed re-enter in arrival
-        // order (`held` is heap-pop ordered).
+        // order (`held` is pop-ordered).
         let mut still_held = Vec::new();
         for r in std::mem::take(&mut self.held) {
             if self.llm_resume_at[r.llm] > t {
                 still_held.push(r);
                 continue;
             }
-            self.route_arrival(t, r, heap, seq);
+            self.route_arrival(t, r, router);
         }
         self.held = still_held;
         self.note_llm_service(t);
@@ -940,8 +1172,7 @@ impl DynamicSimulation {
         &mut self,
         t: f64,
         r: Request,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) -> bool {
         // Disaggregated routing: admissions land on the LLM's
         // prefill-tier unit when one is active. `llm_map` (last writer
@@ -967,7 +1198,7 @@ impl DynamicSimulation {
         let unit = &mut self.sim.units[u];
         unit.advance_time(t);
         unit.on_arrival(t, lr);
-        self.push_started(u, heap, seq);
+        self.push_started(u, router);
         true
     }
 
@@ -1022,8 +1253,7 @@ impl DynamicSimulation {
         t: f64,
         duration: f64,
         idx: usize,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         match self.fault_actions[idx] {
             FaultAction::Inject(kind) => {
@@ -1031,13 +1261,13 @@ impl DynamicSimulation {
                 if self.first_fault_at.is_none() {
                     self.first_fault_at = Some(t);
                 }
-                self.inject(t, duration, kind, heap, seq);
+                self.inject(t, duration, kind, router);
             }
             FaultAction::Repair { gpus } => {
                 self.dead_gpus = self.dead_gpus.saturating_sub(gpus);
                 self.fstats.repairs += 1;
                 if self.controller.config().fault_recovery {
-                    self.replan_after_repair(t, duration, heap, seq);
+                    self.replan_after_repair(t, duration, router);
                 }
             }
             FaultAction::LinkRestore { factor } => {
@@ -1067,8 +1297,7 @@ impl DynamicSimulation {
         t: f64,
         duration: f64,
         kind: FaultKind,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         match kind {
             FaultKind::UnitFailure { unit, repair_after } => {
@@ -1076,14 +1305,7 @@ impl DynamicSimulation {
                     return; // never kill the last serving unit
                 }
                 let victim = unit % self.sim.units.len();
-                self.fail_unit(
-                    t,
-                    duration,
-                    victim,
-                    repair_after,
-                    heap,
-                    seq,
-                );
+                self.fail_unit(t, duration, victim, repair_after, router);
             }
             FaultKind::LinkDegrade { factor, duration: d } => {
                 let factor = factor.clamp(1e-3, 1.0);
@@ -1094,13 +1316,7 @@ impl DynamicSimulation {
                     let idx = self.fault_actions.len();
                     self.fault_actions
                         .push(FaultAction::LinkRestore { factor });
-                    heap.push(Event {
-                        time: end,
-                        seq: *seq,
-                        unit: usize::MAX,
-                        kind: EventKind::Fault(idx),
-                    });
-                    *seq += 1;
+                    router.push(end, usize::MAX, EventKind::Fault(idx));
                 }
             }
             FaultKind::Straggler { unit, factor, duration: d } => {
@@ -1115,13 +1331,7 @@ impl DynamicSimulation {
                     self.fault_actions.push(FaultAction::StragglerEnd {
                         uid: self.unit_uid[u],
                     });
-                    heap.push(Event {
-                        time: end,
-                        seq: *seq,
-                        unit: usize::MAX,
-                        kind: EventKind::Fault(idx),
-                    });
-                    *seq += 1;
+                    router.push(end, usize::MAX, EventKind::Fault(idx));
                 }
             }
             FaultKind::CopyFailure { copies } => {
@@ -1140,8 +1350,7 @@ impl DynamicSimulation {
         duration: f64,
         victim: usize,
         repair_after: Option<f64>,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         let gpus = self.placement.units[victim].mesh_gpus;
         let members: Vec<usize> = self.placement.units[victim]
@@ -1180,13 +1389,7 @@ impl DynamicSimulation {
             if end < duration {
                 let idx = self.fault_actions.len();
                 self.fault_actions.push(FaultAction::Repair { gpus });
-                heap.push(Event {
-                    time: end,
-                    seq: *seq,
-                    unit: usize::MAX,
-                    kind: EventKind::Fault(idx),
-                });
-                *seq += 1;
+                router.push(end, usize::MAX, EventKind::Fault(idx));
             }
         }
         let avail =
@@ -1223,8 +1426,7 @@ impl DynamicSimulation {
                     placement,
                     plan,
                     Some((victim, salv)),
-                    heap,
-                    seq,
+                    router,
                 );
                 self.replans.push(ReplanOutcome {
                     time: t,
@@ -1252,8 +1454,7 @@ impl DynamicSimulation {
         &mut self,
         t: f64,
         duration: f64,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         let avail =
             self.cluster.total_gpus().saturating_sub(self.dead_gpus);
@@ -1290,7 +1491,7 @@ impl DynamicSimulation {
             self.workloads.iter().map(|w| w.rate).collect();
         self.controller.note_replanned(t, rates.clone());
         let (cost, window_s) = self
-            .migrate_staged_with(t, duration, placement, plan, None, heap, seq);
+            .migrate_staged_with(t, duration, placement, plan, None, router);
         self.replans.push(ReplanOutcome {
             time: t,
             migrated: true,
@@ -1397,11 +1598,10 @@ impl DynamicSimulation {
         &self,
         now: f64,
         duration: f64,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         let mask = vec![true; self.sim.units.len()];
-        self.schedule_adapt_ticks_for(&mask, now, duration, heap, seq);
+        self.schedule_adapt_ticks_for(&mask, now, duration, router);
     }
 
     /// Adapt ticks for the units selected by `mask` (a staged migration
@@ -1412,20 +1612,17 @@ impl DynamicSimulation {
         mask: &[bool],
         now: f64,
         duration: f64,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         for (u, unit) in self.sim.units.iter().enumerate() {
             if mask[u] && unit.adaptive() && unit.n_llms() > 0 {
                 let t = now + unit.cfg.adapt_period;
                 if t < duration {
-                    heap.push(Event {
-                        time: t,
-                        seq: *seq,
-                        unit: self.unit_uid[u] as usize,
-                        kind: EventKind::Adapt,
-                    });
-                    *seq += 1;
+                    router.push(
+                        t,
+                        self.unit_uid[u] as usize,
+                        EventKind::Adapt,
+                    );
                 }
             }
         }
@@ -1465,13 +1662,7 @@ impl DynamicSimulation {
 
     /// The `Replan` tick: refresh the drift monitor, and when the policy
     /// fires, re-optimize and (if the shape changed) migrate.
-    fn on_replan(
-        &mut self,
-        t: f64,
-        duration: f64,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
-    ) {
+    fn on_replan(&mut self, t: f64, duration: f64, router: &mut Router) {
         if t < self.migration_until || self.outstanding > 0 {
             return; // a migration is still executing: check next tick
         }
@@ -1480,7 +1671,7 @@ impl DynamicSimulation {
         else {
             return;
         };
-        self.apply_decision(t, duration, decision, heap, seq);
+        self.apply_decision(t, duration, decision, router);
     }
 
     /// Act on a fired decision: run the placement search (warm or cold),
@@ -1491,8 +1682,7 @@ impl DynamicSimulation {
         t: f64,
         duration: f64,
         decision: ReplanDecision,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) {
         let new_workloads: Vec<WorkloadSpec> = self
             .workloads
@@ -1624,9 +1814,9 @@ impl DynamicSimulation {
             };
             match mode {
                 MigrationMode::Blackout => self
-                    .migrate_blackout(t, duration, placement, heap, seq),
+                    .migrate_blackout(t, duration, placement, router),
                 MigrationMode::Staged => self.migrate_staged(
-                    t, duration, placement, plan, heap, seq,
+                    t, duration, placement, plan, router,
                 ),
             }
         };
@@ -1650,8 +1840,7 @@ impl DynamicSimulation {
         t: f64,
         duration: f64,
         placement: Placement,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) -> (f64, f64) {
         // Preempt-and-recompute: collect unfinished work, tear down,
         // rebuild, and hold every LLM for the downtime.
@@ -1717,8 +1906,8 @@ impl DynamicSimulation {
                 blocks: 0,
             })
             .collect();
-        self.push_delivery(resume, false, false, payload, heap, seq);
-        self.schedule_adapt_ticks(resume, duration, heap, seq);
+        self.push_delivery(resume, false, false, payload, router);
+        self.schedule_adapt_ticks(resume, duration, router);
         (cost, downtime)
     }
 
@@ -1731,19 +1920,15 @@ impl DynamicSimulation {
         duration: f64,
         placement: Placement,
         plan: MigrationPlan,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) -> (f64, f64) {
-        self.migrate_staged_with(
-            t, duration, placement, plan, None, heap, seq,
-        )
+        self.migrate_staged_with(t, duration, placement, plan, None, router)
     }
 
     /// Staged migration with an optional crashed source unit whose
     /// salvage (host-tier survivors + device-resident losses, already
     /// remapped to global llm ids) replaces the usual live drain for
     /// that unit's move ops.
-    #[allow(clippy::too_many_arguments)]
     fn migrate_staged_with(
         &mut self,
         t: f64,
@@ -1751,8 +1936,7 @@ impl DynamicSimulation {
         placement: Placement,
         plan: MigrationPlan,
         crashed: Option<(usize, CrashSalvage)>,
-        heap: &mut BinaryHeap<Event>,
-        seq: &mut u64,
+        router: &mut Router,
     ) -> (f64, f64) {
         self.completed.extend(self.sim.harvest_records());
         let old_sim = std::mem::replace(&mut self.sim, Simulation::empty());
@@ -1922,15 +2106,14 @@ impl DynamicSimulation {
         // bars learn from under staged execution.
         self.controller.note_migration_costs(&plan.per_llm_cost());
         for (time, kv, recovered, payload) in payloads {
-            self.push_delivery(time, kv, recovered, payload, heap, seq);
+            self.push_delivery(time, kv, recovered, payload, router);
         }
         // Only rebuilt units need a new adapt chain.
         self.schedule_adapt_ticks_for(
             &fresh_mask,
             self.migration_until,
             duration,
-            heap,
-            seq,
+            router,
         );
         // A zero-op plan pushes no Resume events, so close any
         // availability window it just resolved (a revived dark LLM is
@@ -2171,9 +2354,8 @@ mod tests {
         );
 
         // The fixed engine records a cold search for this decision.
-        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
-        let mut seq = 0u64;
-        dy.apply_decision(20.0, 60.0, decision, &mut heap, &mut seq);
+        let mut router = Router::serial();
+        dy.apply_decision(20.0, 60.0, decision, &mut router);
         let out = dy.replans.last().expect("decision must be recorded");
         assert!(
             !out.warm,
@@ -2204,9 +2386,8 @@ mod tests {
             dirty: vec![false, true],
             slo_driven: false,
         };
-        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
-        let mut seq = 0u64;
-        dy.apply_decision(20.0, 60.0, decision, &mut heap, &mut seq);
+        let mut router = Router::serial();
+        dy.apply_decision(20.0, 60.0, decision, &mut router);
         let out = dy.replans.last().expect("decision must be recorded");
         assert!(out.warm, "dirty decisions take the warm path");
     }

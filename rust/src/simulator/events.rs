@@ -1,0 +1,284 @@
+//! Event scheduling for the simulator cores: a total event order
+//! ([`EventKey`]) and a calendar queue ([`EventQueue`]) that replaces
+//! the single global `BinaryHeap` the event loops grew up with.
+//!
+//! ## Ordering contract
+//!
+//! The serial engines order events by `(time, seq)` — time ascending
+//! under `f64::total_cmp` (a NaN time sorts after every finite time and
+//! stops the run instead of poisoning it), with a global creation
+//! counter breaking ties deterministically. [`EventKey`] embeds that
+//! order and extends it for the sharded engine, where no global
+//! creation counter exists:
+//!
+//! * `tier` — 0 for events seeded before the run loop starts (arrivals,
+//!   the first replan tick, faults, initial adapt ticks), 1 for events
+//!   created while the loop runs. Seed events carry the global seeding
+//!   counter, so tier-0 keys reproduce the serial order exactly.
+//! * `epoch` — which coordinator phase created the event. Phases
+//!   alternate shard execution (even-indexed creations) and barrier
+//!   processing (odd), so a same-time event created in an earlier
+//!   phase sorts first — exactly where its serial creation index would
+//!   have put it.
+//! * `seq` — per-creator monotonic counter. Within one creator (one
+//!   shard, or the coordinator) it reproduces creation order; across
+//!   shards, equal `(time, tier, epoch)` events address disjoint units
+//!   and commute, so the residual tie-break only needs to be
+//!   deterministic, not serial-faithful.
+//!
+//! ## Calendar queue
+//!
+//! Simulation times are dense and near-monotonic (thousands of events
+//! per simulated second, horizon a few minutes), the textbook calendar
+//! queue workload: events hash into fixed-width time buckets held in a
+//! `BTreeMap`, each bucket a small binary heap. Pops always come from
+//! the first non-empty bucket, whose heap resolves the full key order;
+//! bucket indices are monotone in time, so the pop sequence equals the
+//! global key order a single heap would produce — with per-operation
+//! cost bounded by the handful of events sharing a ~16 ms window
+//! instead of the whole future.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Buckets per simulated second. Power of two so the `time → bucket`
+/// multiply is exact for the dyadic times that dominate tick chains.
+const BUCKETS_PER_SECOND: f64 = 64.0;
+
+/// Total order over simulator events. See the module docs for the
+/// role of each field; for serial engines `tier`/`epoch` stay 0 and
+/// the order degenerates to the classic `(time, seq)`.
+#[derive(Clone, Copy, Debug)]
+pub struct EventKey {
+    pub time: f64,
+    pub tier: u8,
+    pub epoch: u32,
+    pub seq: u64,
+}
+
+impl EventKey {
+    /// Key for an event seeded before the run loop starts (tier 0):
+    /// `seq` is the global seeding counter, reproducing the serial
+    /// creation order exactly.
+    pub fn seed(time: f64, seq: u64) -> EventKey {
+        EventKey { time, tier: 0, epoch: 0, seq }
+    }
+
+    /// Key for an event created while the loop runs (tier 1), by the
+    /// creator identified with `epoch` and its local counter `seq`.
+    pub fn runtime(time: f64, epoch: u32, seq: u64) -> EventKey {
+        EventKey { time, tier: 1, epoch, seq }
+    }
+}
+
+impl PartialEq for EventKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for EventKey {}
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.tier.cmp(&other.tier))
+            .then(self.epoch.cmp(&other.epoch))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// One queue entry. Ordered by *reversed* key so the per-bucket
+/// max-heap pops the smallest key first (same trick the old global
+/// heap played with `Event`).
+struct Slot<T> {
+    key: EventKey,
+    item: T,
+}
+
+impl<T> PartialEq for Slot<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl<T> Eq for Slot<T> {}
+impl<T> PartialOrd for Slot<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Slot<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.key.cmp(&self.key)
+    }
+}
+
+/// Map a time to its calendar bucket. Monotone non-decreasing for
+/// every non-NaN time (the `as` cast saturates at both ends), which is
+/// all correctness needs — colliding buckets are resolved by the
+/// bucket heap. NaN (which `total_cmp` sorts after +inf) pins to the
+/// last bucket so the run-loop's horizon guard sees it last, exactly
+/// as with the old global heap.
+fn bucket_of(time: f64) -> u64 {
+    if time.is_nan() {
+        return u64::MAX;
+    }
+    (time * BUCKETS_PER_SECOND) as u64
+}
+
+/// Calendar queue over [`EventKey`]-ordered items — the event-loop
+/// replacement for `BinaryHeap<Event>`.
+pub struct EventQueue<T> {
+    buckets: BTreeMap<u64, BinaryHeap<Slot<T>>>,
+    len: usize,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue { buckets: BTreeMap::new(), len: 0 }
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Schedule `item` at `key`.
+    pub fn push(&mut self, key: EventKey, item: T) {
+        self.buckets
+            .entry(bucket_of(key.time))
+            .or_default()
+            .push(Slot { key, item });
+        self.len += 1;
+    }
+
+    /// Smallest key in the queue, if any.
+    pub fn peek_key(&self) -> Option<EventKey> {
+        let (_, heap) = self.buckets.first_key_value()?;
+        heap.peek().map(|s| s.key)
+    }
+
+    /// Remove and return the smallest-key entry.
+    pub fn pop(&mut self) -> Option<(EventKey, T)> {
+        let mut entry = self.buckets.first_entry()?;
+        let slot = entry
+            .get_mut()
+            .pop()
+            .expect("calendar queue never keeps an empty bucket");
+        if entry.get().is_empty() {
+            entry.remove();
+        }
+        self.len -= 1;
+        Some((slot.key, slot.item))
+    }
+
+    /// Drain every entry in key order (used when the sharded engine
+    /// re-partitions pending events after a migration).
+    pub fn drain_sorted(&mut self) -> Vec<(EventKey, T)> {
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(e) = self.pop() {
+            out.push(e);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_order_is_time_then_tier_then_epoch_then_seq() {
+        let a = EventKey::seed(1.0, 7);
+        let b = EventKey::seed(2.0, 0);
+        assert!(a < b, "time dominates");
+        let c = EventKey::seed(1.0, 9);
+        assert!(a < c, "seq breaks same-time seed ties");
+        let d = EventKey::runtime(1.0, 0, 0);
+        assert!(a < d, "seeded events sort before runtime events");
+        assert!(c < d);
+        let e = EventKey::runtime(1.0, 3, 0);
+        let f = EventKey::runtime(1.0, 4, 0);
+        assert!(e < f, "earlier creation phase sorts first");
+        let g = EventKey::runtime(1.0, 3, 5);
+        assert!(e < g, "per-creator counter breaks the rest");
+        assert_eq!(a, EventKey::seed(1.0, 7));
+    }
+
+    #[test]
+    fn nan_and_infinite_times_sort_last() {
+        let mut q = EventQueue::new();
+        q.push(EventKey::seed(f64::NAN, 0), "nan");
+        q.push(EventKey::seed(f64::INFINITY, 1), "inf");
+        q.push(EventKey::seed(5.0, 2), "five");
+        q.push(EventKey::seed(0.0, 3), "zero");
+        let order: Vec<&str> =
+            std::iter::from_fn(|| q.pop().map(|(_, s)| s)).collect();
+        assert_eq!(order, ["zero", "five", "inf", "nan"]);
+    }
+
+    #[test]
+    fn negative_times_pop_before_zero() {
+        // Negative times share bucket 0 with [0, width): the bucket
+        // heap must still resolve them first.
+        let mut q = EventQueue::new();
+        q.push(EventKey::seed(0.0, 0), 0);
+        q.push(EventKey::seed(-1.0, 1), -1);
+        assert_eq!(q.pop().map(|(_, v)| v), Some(-1));
+        assert_eq!(q.pop().map(|(_, v)| v), Some(0));
+    }
+
+    #[test]
+    fn pop_order_matches_a_reference_sort() {
+        // Pseudo-random keys (dense times, duplicate times with
+        // distinct seqs) must pop in exactly sorted-key order.
+        let mut q = EventQueue::new();
+        let mut keys = Vec::new();
+        let mut x = 0x243F6A8885A308D3u64; // deterministic LCG-ish walk
+        for seq in 0..2000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let t = (x >> 40) as f64 / 1e4; // [0, ~1677) seconds
+            let key = EventKey::seed(t, seq);
+            keys.push(key);
+            q.push(key, seq);
+        }
+        keys.sort();
+        assert_eq!(q.len(), 2000);
+        for want in keys {
+            let (got, item) = q.pop().expect("queue drained early");
+            assert_eq!(got, want);
+            assert_eq!(item, want.seq);
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.pop().map(|(_, v)| v), None);
+    }
+
+    #[test]
+    fn peek_matches_pop_and_drain_is_sorted() {
+        let mut q = EventQueue::new();
+        for seq in 0..100u64 {
+            let t = ((seq * 37) % 13) as f64 * 0.25;
+            q.push(EventKey::runtime(t, (seq % 3) as u32, seq), seq);
+        }
+        let k = q.peek_key().expect("non-empty");
+        let (p, _) = q.pop().expect("non-empty");
+        assert_eq!(k, p);
+        let drained = q.drain_sorted();
+        assert_eq!(drained.len(), 99);
+        assert!(drained.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(q.is_empty());
+    }
+}

@@ -116,6 +116,17 @@ impl FaultPlan {
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
+
+    /// Whether any scheduled fault arms the KV-copy failure budget.
+    /// Copy failures are consumed by `Resume` deliveries, which the
+    /// sharded engine's barrier contract processes serially on the
+    /// coordinator (see [`crate::coordinator::replan`]) — so even a
+    /// copy-failure-heavy plan stays deterministic under `--shards N`.
+    pub fn has_copy_failure(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::CopyFailure { .. }))
+    }
 }
 
 /// The `--faults` CLI axis: named seeded chaos schedules.
@@ -491,6 +502,31 @@ mod tests {
         // The plain request parser skips fault rows.
         let only_reqs = requests_from_trace(&text).unwrap();
         assert_eq!(only_reqs, data.requests);
+    }
+
+    #[test]
+    fn has_copy_failure_spots_the_budget_kind_only() {
+        assert!(!FaultPlan::default().has_copy_failure());
+        let without = FaultPlan::new(vec![FaultEvent {
+            time: 1.0,
+            kind: FaultKind::LinkDegrade { factor: 0.5, duration: 2.0 },
+        }]);
+        assert!(!without.has_copy_failure());
+        let with = FaultPlan::new(vec![
+            FaultEvent {
+                time: 1.0,
+                kind: FaultKind::Straggler {
+                    unit: 0,
+                    factor: 2.0,
+                    duration: 3.0,
+                },
+            },
+            FaultEvent {
+                time: 2.0,
+                kind: FaultKind::CopyFailure { copies: 1 },
+            },
+        ]);
+        assert!(with.has_copy_failure());
     }
 
     #[test]

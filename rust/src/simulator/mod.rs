@@ -9,10 +9,13 @@
 //! to the algorithms, not simulator details.
 
 pub mod dynamic;
+pub mod events;
 pub mod faults;
+pub(crate) mod shard;
 pub mod unit;
 
 pub use dynamic::{DynamicReport, DynamicSimulation, ReplanOutcome};
+pub use events::{EventKey, EventQueue};
 pub use faults::{
     trace_with_faults, trace_with_faults_from_str, FaultEvent, FaultKind,
     FaultPlan, FaultStats, FaultsAxis,
@@ -22,15 +25,21 @@ pub use unit::{
     UnitSim,
 };
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
 use crate::config::{ModelSpec, WorkloadSpec};
 use crate::coordinator::{EngineConfig, Placement};
 use crate::costmodel::CostModel;
 use crate::metrics::Evaluation;
 use crate::workload::Request;
 
+/// What an event does when popped. Events are scheduled through
+/// [`EventQueue`] under an [`EventKey`] — earlier time first
+/// (`f64::total_cmp`, so a NaN time orders after every finite time
+/// instead of panicking the event loop), creation order breaking ties
+/// deterministically. The queue item carries the addressed unit next
+/// to the kind: the static [`Simulation`] uses the unit's index, the
+/// dynamic engine its stable *uid*
+/// ([`dynamic::DynamicSimulation`]), so events of units torn down by a
+/// migration stop resolving instead of mis-routing.
 #[derive(Clone, Debug)]
 pub(crate) enum EventKind {
     Arrival(Request),
@@ -46,41 +55,6 @@ pub(crate) enum EventKind {
     /// Injected fault with this index into the dynamic engine's fault
     /// action table ([`dynamic::DynamicSimulation`] only).
     Fault(usize),
-}
-
-#[derive(Clone, Debug)]
-pub(crate) struct Event {
-    pub(crate) time: f64,
-    pub(crate) seq: u64,
-    /// Which unit the event addresses. The static [`Simulation`] uses
-    /// the unit's index; the dynamic engine uses its stable *uid*
-    /// ([`dynamic::DynamicSimulation`]), so events of units torn down by
-    /// a migration stop resolving instead of mis-routing.
-    pub(crate) unit: usize,
-    pub(crate) kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap: earlier time first; seq breaks ties deterministically.
-        // `total_cmp` so a NaN time (cost-model pathology) orders after
-        // every finite time instead of panicking the whole event loop.
-        other
-            .time
-            .total_cmp(&self.time)
-            .then(other.seq.cmp(&self.seq))
-    }
 }
 
 /// Cluster-level simulation: a set of units plus the LLM→unit routing map
@@ -186,7 +160,7 @@ impl Simulation {
     /// Replay `requests` (global LLM ids, arrival-sorted) for `duration`
     /// seconds of simulated time.
     pub fn run(&mut self, requests: &[Request], duration: f64) -> Evaluation {
-        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut queue: EventQueue<(usize, EventKind)> = EventQueue::new();
         let mut seq = 0u64;
         for r in requests {
             let (u, local) = self.llm_map[r.llm];
@@ -195,12 +169,10 @@ impl Simulation {
             }
             let mut lr = r.clone();
             lr.llm = local;
-            heap.push(Event {
-                time: r.arrival,
-                seq,
-                unit: u,
-                kind: EventKind::Arrival(lr),
-            });
+            queue.push(
+                EventKey::seed(r.arrival, seq),
+                (u, EventKind::Arrival(lr)),
+            );
             seq += 1;
         }
         // Periodic quota adaptation (§3.3) per unit.
@@ -209,30 +181,28 @@ impl Simulation {
                 let period = unit.cfg.adapt_period;
                 let mut t = period;
                 while t < duration {
-                    heap.push(Event {
-                        time: t,
-                        seq,
-                        unit: u,
-                        kind: EventKind::Adapt,
-                    });
+                    queue.push(EventKey::seed(t, seq), (u, EventKind::Adapt));
                     seq += 1;
                     t += period;
                 }
             }
         }
 
-        while let Some(ev) = heap.pop() {
+        // The single-threaded loop keeps the global creation counter in
+        // every key, so the pop order is exactly the old heap's
+        // `(time, seq)` — bit-identical replay.
+        while let Some((key, (u, kind))) = queue.pop() {
             // Negated form so a NaN time (which sorts last) also stops
             // the run instead of being processed and poisoning `now`.
-            if !(ev.time <= duration) {
+            if !(key.time <= duration) {
                 break;
             }
             self.events += 1;
-            let unit = &mut self.units[ev.unit];
-            unit.advance_time(ev.time);
-            match ev.kind {
-                EventKind::Arrival(r) => unit.on_arrival(ev.time, r),
-                EventKind::JobDone(id) => unit.on_job_done(ev.time, id),
+            let unit = &mut self.units[u];
+            unit.advance_time(key.time);
+            match kind {
+                EventKind::Arrival(r) => unit.on_arrival(key.time, r),
+                EventKind::JobDone(id) => unit.on_job_done(key.time, id),
                 EventKind::Adapt => unit.on_adapt(),
                 // Static run: never scheduled.
                 EventKind::Replan
@@ -240,12 +210,10 @@ impl Simulation {
                 | EventKind::Fault(_) => {}
             }
             for (t_done, job_id) in unit.drain_started() {
-                heap.push(Event {
-                    time: t_done,
-                    seq,
-                    unit: ev.unit,
-                    kind: EventKind::JobDone(job_id),
-                });
+                queue.push(
+                    EventKey::seed(t_done, seq),
+                    (u, EventKind::JobDone(job_id)),
+                );
                 seq += 1;
             }
         }

@@ -1,0 +1,230 @@
+//! Sharded execution for the dynamic engine: unit partitioning and the
+//! inter-barrier worker loop.
+//!
+//! Between coordinator barriers (`Replan`, `Resume`, `Fault` — see the
+//! barrier contract in [`crate::coordinator::replan`]) every event is
+//! unit-local: `Arrival` and `JobDone` touch exactly one unit, and an
+//! `Adapt` tick adjusts one unit's quotas and re-arms itself. Units
+//! are therefore partitioned across shards and each shard replays its
+//! own calendar queue up to the barrier cut with no cross-shard
+//! traffic at all. Determinism is structural — the [`EventKey`] order
+//! (see [`crate::simulator::events`]) reproduces the serial loop's
+//! `(time, seq)` order for every behaviorally relevant comparison, so
+//! the merge at the barrier is byte-identical to the serial replay no
+//! matter how the worker threads interleave in wall-clock time.
+//!
+//! The disaggregated engine never runs sharded: prefill→decode
+//! handoff `Resume` events couple units *between* barriers, so the
+//! dynamic engine serializes those runs (see
+//! [`DynamicSimulation::run`](super::dynamic::DynamicSimulation::run)).
+
+use std::collections::HashMap;
+
+use super::events::{EventKey, EventQueue};
+use super::unit::UnitSim;
+use super::EventKind;
+
+/// Queue item: the addressed unit (index for routed arrivals, stable
+/// uid for completions and adapt ticks — the serial convention) plus
+/// the event kind.
+pub(crate) type ShardItem = (usize, EventKind);
+
+/// Per-shard state that survives across phases: the shard's calendar
+/// queue, its creation counter (the per-creator `seq` of
+/// [`EventKey::runtime`]), and its share of the processed-event count.
+#[derive(Default)]
+pub(crate) struct Shard {
+    pub queue: EventQueue<ShardItem>,
+    pub seq: u64,
+    pub events: u64,
+}
+
+/// Deterministic unit→shard assignment: round-robin on unit index.
+/// Re-derived after every barrier, so rebuilt placements re-balance
+/// automatically; stable uids keep pending events addressable across
+/// the re-partition.
+pub(crate) fn assign_units(n_units: usize, n_shards: usize) -> Vec<usize> {
+    (0..n_units).map(|u| u % n_shards.max(1)).collect()
+}
+
+/// One shard's work for one phase: its units (moved out of the
+/// simulation for exclusive access), its queue, and the barrier cut.
+pub(crate) struct PhaseTask {
+    /// `(global unit index, stable uid, engine)` for every owned unit.
+    pub units: Vec<(usize, u64, UnitSim)>,
+    pub queue: EventQueue<ShardItem>,
+    /// Shard creation counter (continued across phases).
+    pub seq: u64,
+    /// Shard share of the processed-event count.
+    pub events: u64,
+    /// Process events with key strictly below the barrier; `None`
+    /// means run to the horizon (inclusive).
+    pub cut: Option<EventKey>,
+    pub duration: f64,
+    /// Epoch stamped into every event this phase creates.
+    pub epoch: u32,
+    /// Validation mode: cross-check the shard's own units' scheduler
+    /// indices at every adapt tick (the serial loop checks the whole
+    /// cluster; a shard can only see its slice).
+    pub validate: bool,
+}
+
+impl PhaseTask {
+    /// Replay this shard's events up to the cut. Mirrors the serial
+    /// loop's `Arrival`/`JobDone`/`Adapt` arms exactly: same per-unit
+    /// call sequence, same stale-uid skip (counted, like the serial
+    /// pop), same re-arm rule for adapt ticks.
+    pub fn run(&mut self) {
+        let by_gidx: HashMap<usize, usize> = self
+            .units
+            .iter()
+            .enumerate()
+            .map(|(i, (g, _, _))| (*g, i))
+            .collect();
+        let by_uid: HashMap<u64, usize> = self
+            .units
+            .iter()
+            .enumerate()
+            .map(|(i, (_, uid, _))| (*uid, i))
+            .collect();
+        loop {
+            let Some(key) = self.queue.peek_key() else { break };
+            if let Some(cut) = self.cut {
+                if key >= cut {
+                    break;
+                }
+            }
+            // Negated form so a NaN time (which sorts last) also stops
+            // the phase instead of poisoning `now` — and events beyond
+            // the horizon stay unpopped and uncounted, as in the
+            // serial loop.
+            if !(key.time <= self.duration) {
+                break;
+            }
+            let Some((key, (addr, kind))) = self.queue.pop() else {
+                break;
+            };
+            self.events += 1;
+            match kind {
+                EventKind::Arrival(r) => {
+                    // Routed by the coordinator this phase, addressed
+                    // by unit index; the routing tables are frozen
+                    // between barriers, so the target is always live.
+                    let Some(&i) = by_gidx.get(&addr) else {
+                        debug_assert!(false, "arrival routed off-shard");
+                        continue;
+                    };
+                    let unit = &mut self.units[i].2;
+                    unit.advance_time(key.time);
+                    unit.on_arrival(key.time, r);
+                    self.push_started(i);
+                }
+                EventKind::JobDone(id) => {
+                    let Some(&i) = by_uid.get(&(addr as u64)) else {
+                        continue; // completion from a torn-down unit
+                    };
+                    let unit = &mut self.units[i].2;
+                    unit.advance_time(key.time);
+                    unit.on_job_done(key.time, id);
+                    self.push_started(i);
+                }
+                EventKind::Adapt => {
+                    let Some(&i) = by_uid.get(&(addr as u64)) else {
+                        continue;
+                    };
+                    let unit = &mut self.units[i].2;
+                    unit.advance_time(key.time);
+                    unit.on_adapt();
+                    if self.validate {
+                        self.validate_units(key.time);
+                    }
+                    let period = self.units[i].2.cfg.adapt_period;
+                    let next = key.time + period;
+                    if next < self.duration {
+                        let k = EventKey::runtime(next, self.epoch, self.seq);
+                        self.seq += 1;
+                        self.queue.push(k, (addr, EventKind::Adapt));
+                    }
+                }
+                EventKind::Replan
+                | EventKind::Resume(_)
+                | EventKind::Fault(_) => {
+                    unreachable!("barrier event in a shard queue")
+                }
+            }
+        }
+    }
+
+    /// Schedule completion events for jobs the unit just launched —
+    /// the shard-side mirror of the serial loop's `push_started`.
+    fn push_started(&mut self, i: usize) {
+        let (_, uid, unit) = &mut self.units[i];
+        let uid = *uid as usize;
+        for (t_done, id) in unit.drain_started() {
+            let k = EventKey::runtime(t_done, self.epoch, self.seq);
+            self.seq += 1;
+            self.queue.push(k, (uid, EventKind::JobDone(id)));
+        }
+    }
+
+    fn validate_units(&self, t: f64) {
+        for (g, uid, unit) in &self.units {
+            if let Some(msg) = unit.index_inconsistency() {
+                panic!(
+                    "validate[adapt] t={t:.3}: unit {g} (uid {uid}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Run every task with pending work, on worker threads when more than
+/// one shard is busy. Determinism never depends on thread timing —
+/// shards share no mutable state — so the single-busy-shard fast path
+/// and the threaded path produce identical results.
+pub(crate) fn run_phase(tasks: &mut [PhaseTask]) {
+    let mut busy: Vec<&mut PhaseTask> =
+        tasks.iter_mut().filter(|t| !t.queue.is_empty()).collect();
+    match busy.len() {
+        0 => {}
+        1 => busy[0].run(),
+        _ => {
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(busy.len());
+                for t in busy.iter_mut() {
+                    handles.push(s.spawn(|| t.run()));
+                }
+                for h in handles {
+                    if let Err(e) = h.join() {
+                        std::panic::resume_unwind(e);
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_round_robin_and_total() {
+        let a = assign_units(7, 3);
+        assert_eq!(a, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert!(assign_units(2, 5).iter().all(|&s| s < 5));
+        // Degenerate shard counts never divide by zero.
+        assert_eq!(assign_units(3, 0), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn shard_event_counters_merge_commutatively() {
+        // The report's `events` figure is the coordinator count plus
+        // the shard counters; u64 addition commutes, so any shard
+        // visitation order produces the same total.
+        let counts = [17u64, 3, 0, 42, 9];
+        let forward: u64 = counts.iter().sum();
+        let backward: u64 = counts.iter().rev().sum();
+        assert_eq!(forward, backward);
+    }
+}

@@ -12,10 +12,18 @@
 //!
 //! The hot paths are O(1) per request, not O(active list):
 //!
-//! * `slot_index: id → (llm, slot)` locates any admitted request in its
-//!   `active[llm]` list. It is maintained slab-style: removal is
+//! * `arena: Vec<Option<Active>>` owns every admitted request's entry,
+//!   slab-style with a LIFO `free` list — an admission reuses the most
+//!   recently vacated slot instead of growing (or shifting) a per-LLM
+//!   `Vec<Active>`, so entries never move for the lifetime of a
+//!   request and the steady-state loop allocates nothing.
+//! * `active[llm]` is the per-LLM list of arena slot ids, in the same
+//!   order (including `swap_remove` semantics) the former
+//!   `Vec<Active>` lists kept — scheduling order is bit-identical.
+//! * `slot_index: id → (llm, position in active[llm])` locates any
+//!   admitted request. It is maintained slab-style: removal is
 //!   `swap_remove` plus a fix-up of the entry for the request that was
-//!   moved into the vacated slot, so lookups never scan.
+//!   moved into the vacated position, so lookups never scan.
 //! * `ready_ids[llm]` is the set of request ids currently in
 //!   [`ReqState::Ready`], ordered by id (a `BTreeSet`, so decode batch
 //!   assembly walks it oldest-id-first — the same order the previous
@@ -292,8 +300,17 @@ pub struct UnitSim {
     quota: QuotaCache,
     sm: SmPool,
     waiting: Vec<VecDeque<Request>>,
-    active: Vec<Vec<Active>>,
-    /// Request id → (llm, slot in `active[llm]`); see module docs.
+    /// Slab arena owning every admitted request's entry; `active` lists
+    /// and the free list index into it. Entries never move while live.
+    arena: Vec<Option<Active>>,
+    /// LIFO free list of vacated arena slots (most recently freed is
+    /// reused first, keeping the arena hot and compact).
+    free: Vec<u32>,
+    /// Per-LLM lists of arena slot ids, in admission order with
+    /// `swap_remove` on completion — same order semantics as the former
+    /// per-LLM `Vec<Active>` lists.
+    active: Vec<Vec<u32>>,
+    /// Request id → (llm, position in `active[llm]`); see module docs.
     slot_index: HashMap<u64, (usize, usize)>,
     /// Per-LLM ids in `ReqState::Ready`, ascending (= admission id order).
     ready_ids: Vec<BTreeSet<u64>>,
@@ -410,6 +427,8 @@ impl UnitSim {
             quota: QuotaCache::new(total_blocks, &weights),
             sm: SmPool::new(),
             waiting: vec![VecDeque::new(); n],
+            arena: Vec::new(),
+            free: Vec::new(),
             active: vec![Vec::new(); n],
             slot_index: HashMap::new(),
             ready_ids: vec![BTreeSet::new(); n],
@@ -496,8 +515,12 @@ impl UnitSim {
             q.clear();
         }
         for llm in 0..self.active.len() {
-            let drained: Vec<Active> = self.active[llm].drain(..).collect();
-            for a in drained {
+            let drained: Vec<u32> = self.active[llm].drain(..).collect();
+            for slot in drained {
+                let a = self.arena[slot as usize]
+                    .take()
+                    .expect("active list points at a live arena slot");
+                self.free.push(slot);
                 self.quota.free(llm, a.blocks);
                 out.push(a.req);
             }
@@ -673,7 +696,8 @@ impl UnitSim {
         // Bill the device KV that dies: decoded contexts' full context
         // (their prompt + generated tokens must re-prefill on revival).
         for list in &self.active {
-            for a in list {
+            for &slot in list {
+                let a = self.act_slot(slot);
                 if a.generated > 0 {
                     s.tokens_lost += a.ctx() as u64;
                 }
@@ -753,6 +777,7 @@ impl UnitSim {
     pub fn llm_ctx_tokens(&self, llm: usize) -> usize {
         self.active[llm]
             .iter()
+            .map(|&slot| self.act_slot(slot))
             .filter(|a| a.generated > 0)
             .map(|a| a.ctx())
             .sum()
@@ -805,8 +830,8 @@ impl UnitSim {
             }
         }
         for list in &self.active {
-            for a in list {
-                n[a.req.tier.code() as usize] += 1;
+            for &slot in list {
+                n[self.act_slot(slot).req.tier.code() as usize] += 1;
             }
         }
         n
@@ -872,23 +897,62 @@ impl UnitSim {
 
     // -- index maintenance ---------------------------------------------------
 
-    /// Admit `a` into `active[llm]`, registering it in the slot index
-    /// (and the Ready set, should a caller ever admit in Ready state).
+    /// The live entry at `active[llm][idx]`, resolved through the arena.
+    fn act(&self, llm: usize, idx: usize) -> &Active {
+        self.act_slot(self.active[llm][idx])
+    }
+
+    /// Mutable access to the live entry at `active[llm][idx]`.
+    fn act_mut(&mut self, llm: usize, idx: usize) -> &mut Active {
+        let slot = self.active[llm][idx] as usize;
+        self.arena[slot]
+            .as_mut()
+            .expect("active list points at a live arena slot")
+    }
+
+    /// Resolve an arena slot id known to be live (it came off an active
+    /// list).
+    fn act_slot(&self, slot: u32) -> &Active {
+        self.arena[slot as usize]
+            .as_ref()
+            .expect("active list points at a live arena slot")
+    }
+
+    /// Admit `a` into `active[llm]`, placing it in the arena (reusing
+    /// the most recently freed slot) and registering it in the slot
+    /// index (and the Ready set, should a caller ever admit in Ready
+    /// state).
     fn insert_active(&mut self, llm: usize, a: Active) {
         let id = a.req.id;
-        let slot = self.active[llm].len();
+        let pos = self.active[llm].len();
         if a.state == ReqState::Ready {
             self.ready_ids[llm].insert(id);
         }
-        self.active[llm].push(a);
-        self.slot_index.insert(id, (llm, slot));
+        let slot = match self.free.pop() {
+            Some(s) => {
+                debug_assert!(self.arena[s as usize].is_none());
+                self.arena[s as usize] = Some(a);
+                s
+            }
+            None => {
+                self.arena.push(Some(a));
+                (self.arena.len() - 1) as u32
+            }
+        };
+        self.active[llm].push(slot);
+        self.slot_index.insert(id, (llm, pos));
     }
 
     /// Remove the request at `active[llm][idx]` with `swap_remove`,
-    /// unregistering it and re-pointing the index entry of the former
-    /// tail element that now occupies `idx`.
+    /// vacating its arena slot onto the free list, unregistering it and
+    /// re-pointing the index entry of the former tail element that now
+    /// occupies position `idx`.
     fn remove_active(&mut self, llm: usize, idx: usize) -> Active {
-        let a = self.active[llm].swap_remove(idx);
+        let slot = self.active[llm].swap_remove(idx);
+        let a = self.arena[slot as usize]
+            .take()
+            .expect("active list points at a live arena slot");
+        self.free.push(slot);
         self.slot_index.remove(&a.req.id);
         if a.state == ReqState::Ready {
             self.ready_ids[llm].remove(&a.req.id);
@@ -904,8 +968,9 @@ impl UnitSim {
                 self.chunk_queue[llm].remove(pos);
             }
         }
-        if let Some(moved) = self.active[llm].get(idx) {
-            self.slot_index.insert(moved.req.id, (llm, idx));
+        if let Some(&moved) = self.active[llm].get(idx) {
+            let mid = self.act_slot(moved).req.id;
+            self.slot_index.insert(mid, (llm, idx));
         }
         a
     }
@@ -913,7 +978,7 @@ impl UnitSim {
     /// Single point of state transition: keeps `ready_ids` in lock-step
     /// with the `Active::state` fields.
     fn set_state(&mut self, llm: usize, idx: usize, state: ReqState) {
-        let a = &mut self.active[llm][idx];
+        let a = self.act_mut(llm, idx);
         let id = a.req.id;
         let was_ready = a.state == ReqState::Ready;
         a.state = state;
@@ -925,9 +990,18 @@ impl UnitSim {
         }
     }
 
-    /// Test-only audit: the slot index and Ready sets must exactly mirror
-    /// the active lists. Returns a description of the first violation
-    /// found, `None` when consistent.
+    /// Test-only: (arena slots, free slots) — lets tests assert slot
+    /// reuse actually happens (the arena stays near the high-water
+    /// concurrency instead of growing with total admissions).
+    #[doc(hidden)]
+    pub fn arena_stats(&self) -> (usize, usize) {
+        (self.arena.len(), self.free.len())
+    }
+
+    /// Test-only audit: the slot index, Ready sets, and arena must
+    /// exactly mirror the active lists — in particular, a reused arena
+    /// slot must never alias a live request. Returns a description of
+    /// the first violation found, `None` when consistent.
     #[doc(hidden)]
     pub fn index_inconsistency(&self) -> Option<String> {
         let total: usize = self.active.iter().map(|v| v.len()).sum();
@@ -937,14 +1011,65 @@ impl UnitSim {
                 self.slot_index.len()
             ));
         }
+        // Arena accounting: every slot is either live (referenced by
+        // exactly one active-list entry) or on the free list — never
+        // both, never neither.
+        let occupied = self.arena.iter().filter(|s| s.is_some()).count();
+        if occupied != total {
+            return Some(format!(
+                "arena holds {occupied} live entries but active lists \
+                 hold {total}"
+            ));
+        }
+        if self.arena.len() != occupied + self.free.len() {
+            return Some(format!(
+                "arena has {} slots but {occupied} live + {} free",
+                self.arena.len(),
+                self.free.len()
+            ));
+        }
+        let free_set: BTreeSet<u32> = self.free.iter().copied().collect();
+        if free_set.len() != self.free.len() {
+            return Some("free list holds duplicate slots".into());
+        }
+        for &slot in &self.free {
+            if !matches!(self.arena.get(slot as usize), Some(None)) {
+                return Some(format!(
+                    "free slot {slot} is out of bounds or still live"
+                ));
+            }
+        }
+        let mut referenced: BTreeSet<u32> = BTreeSet::new();
         for (llm, list) in self.active.iter().enumerate() {
             let mut ready = 0usize;
-            for (slot, a) in list.iter().enumerate() {
+            for (pos, &slot) in list.iter().enumerate() {
+                if free_set.contains(&slot) {
+                    return Some(format!(
+                        "active list of llm {llm} references freed arena \
+                         slot {slot}"
+                    ));
+                }
+                if !referenced.insert(slot) {
+                    return Some(format!(
+                        "arena slot {slot} referenced by two active-list \
+                         entries (aliased live requests)"
+                    ));
+                }
+                let Some(a) = self
+                    .arena
+                    .get(slot as usize)
+                    .and_then(|s| s.as_ref())
+                else {
+                    return Some(format!(
+                        "active list of llm {llm} references empty arena \
+                         slot {slot}"
+                    ));
+                };
                 match self.slot_index.get(&a.req.id) {
-                    Some(&(l, s)) if l == llm && s == slot => {}
+                    Some(&(l, s)) if l == llm && s == pos => {}
                     other => {
                         return Some(format!(
-                            "request {} sits at ({llm}, {slot}) but is \
+                            "request {} sits at ({llm}, {pos}) but is \
                              indexed as {other:?}",
                             a.req.id
                         ))
@@ -970,11 +1095,17 @@ impl UnitSim {
             }
             for &id in &self.chunk_queue[llm] {
                 match self.slot_index.get(&id) {
-                    Some(&(l, s))
-                        if l == llm
-                            && self.active[l][s].state
-                                == ReqState::Prefilling
-                            && self.active[l][s].prefill_left > 0 => {}
+                    Some(&(l, s)) if l == llm && s < self.active[l].len() => {
+                        let a = self.act(l, s);
+                        if a.state != ReqState::Prefilling
+                            || a.prefill_left == 0
+                        {
+                            return Some(format!(
+                                "chunk-queued request {id} of llm {llm} \
+                                 is not a mid-chunk prefill"
+                            ));
+                        }
+                    }
                     other => {
                         return Some(format!(
                             "chunk-queued request {id} of llm {llm} does \
@@ -1043,7 +1174,8 @@ impl UnitSim {
             }
         }
         for (llm, list) in self.active.iter().enumerate() {
-            for a in list {
+            for &slot in list {
+                let a = self.act_slot(slot);
                 total +=
                     self.blocks_for(llm, a.req.prompt_len + a.req.output_len);
             }
@@ -1087,7 +1219,8 @@ impl UnitSim {
         }
         let mut adm: Option<(f64, u64)> = None;
         for list in &self.active {
-            for a in list {
+            for &slot in list {
+                let a = self.act_slot(slot);
                 if a.req.tier != tier {
                     continue;
                 }
@@ -1154,11 +1287,11 @@ impl UnitSim {
     }
 
     fn finish_prefill_at(&mut self, t: f64, llm: usize, idx: usize) {
-        if self.active[llm][idx].prefill_left > 0 {
+        if self.act(llm, idx).prefill_left > 0 {
             // Mid-chunk: no first token yet. The request stays
             // Prefilling and queues for its next chunk job; other LLMs'
             // prefills and decode batches may run in between.
-            let a = &mut self.active[llm][idx];
+            let a = self.act_mut(llm, idx);
             debug_assert_eq!(a.state, ReqState::Prefilling);
             a.last_use = t;
             let id = a.req.id;
@@ -1166,15 +1299,14 @@ impl UnitSim {
             return;
         }
         {
-            let a = &mut self.active[llm][idx];
+            let a = self.act_mut(llm, idx);
             debug_assert_eq!(a.state, ReqState::Prefilling);
             a.generated = 1; // prefill emits the first token
             a.first_token = t;
         }
         self.set_state(llm, idx, ReqState::Ready);
-        if self.active[llm][idx].generated
-            >= self.active[llm][idx].req.output_len
-        {
+        let a = self.act(llm, idx);
+        if a.generated >= a.req.output_len {
             self.finish_request(t, llm, idx);
             return;
         }
@@ -1200,14 +1332,13 @@ impl UnitSim {
 
     fn finish_decode_at(&mut self, t: f64, llm: usize, idx: usize) {
         {
-            let a = &mut self.active[llm][idx];
+            let a = self.act_mut(llm, idx);
             debug_assert_eq!(a.state, ReqState::Decoding);
             a.generated += 1;
         }
         self.set_state(llm, idx, ReqState::Ready);
-        if self.active[llm][idx].generated
-            >= self.active[llm][idx].req.output_len
-        {
+        let a = self.act(llm, idx);
+        if a.generated >= a.req.output_len {
             self.finish_request(t, llm, idx);
         }
     }
@@ -1268,14 +1399,14 @@ impl UnitSim {
     /// Grow a request's PRIVATE block holding so that, together with its
     /// shared prefix blocks, it covers `tokens` context tokens.
     fn ensure_blocks(&mut self, llm: usize, idx: usize, tokens: usize) -> bool {
-        let shared = self.active[llm][idx].shared_blocks;
+        let shared = self.act(llm, idx).shared_blocks;
         let need = self.blocks_for(llm, tokens).saturating_sub(shared);
-        let have = self.active[llm][idx].blocks;
+        let have = self.act(llm, idx).blocks;
         if need <= have {
             return true;
         }
         if self.try_alloc(llm, need - have) {
-            self.active[llm][idx].blocks = need;
+            self.act_mut(llm, idx).blocks = need;
             true
         } else {
             false
@@ -1406,7 +1537,7 @@ impl UnitSim {
                     continue;
                 }
                 let slot = self.slot_index[&id].1;
-                let a = &self.active[l][slot];
+                let a = self.act(l, slot);
                 if a.blocks == 0 {
                     continue;
                 }
@@ -1504,7 +1635,7 @@ impl UnitSim {
                 continue;
             }
             let slot = self.slot_index[&vid].1;
-            let arr = self.active[llm][slot].req.arrival;
+            let arr = self.act(llm, slot).req.arrival;
             if best.map_or(true, |(ba, _)| arr.total_cmp(&ba).is_ge()) {
                 best = Some((arr, vid));
             }
@@ -1623,7 +1754,7 @@ impl UnitSim {
     /// launch so it always means "work not yet scheduled".
     fn start_chunk_job(&mut self, t: f64, llm: usize, id: u64) -> StartOutcome {
         let idx = self.slot_index[&id].1;
-        let left = self.active[llm][idx].prefill_left;
+        let left = self.act(llm, idx).prefill_left;
         let c = left.min(self.chunk_budget());
         let m = &self.models[llm];
         let grant = if self.cfg.sm_partition {
@@ -1654,7 +1785,7 @@ impl UnitSim {
         ) * interference;
         self.cache.prefill_s += dur;
         {
-            let a = &mut self.active[llm][idx];
+            let a = self.act_mut(llm, idx);
             a.prefill_left = left - c;
             a.last_use = t;
             a.touches += 1;
@@ -1927,7 +2058,7 @@ impl UnitSim {
                 .iter()
                 .map(|&id| {
                     let slot = self.slot_index[&id].1;
-                    let r = &self.active[llm][slot].req;
+                    let r = &self.act(llm, slot).req;
                     (self.slack_key(r, t), r.arrival, id)
                 })
                 .collect();
@@ -1946,7 +2077,7 @@ impl UnitSim {
             let Some(&(_, mut idx)) = self.slot_index.get(&id) else {
                 continue;
             };
-            let next_ctx = self.active[llm][idx].ctx() + 1;
+            let next_ctx = self.act(llm, idx).ctx() + 1;
             let mut ok = self.ensure_blocks(llm, idx, next_ctx);
             while !ok {
                 // Free memory: with the cache layer on, reclaim (dead
@@ -1955,7 +2086,7 @@ impl UnitSim {
                 // preempt. Batched requests are already Decoding and
                 // thus immune either way.
                 let progressed = if self.cache_enabled() {
-                    let a = &self.active[llm][idx];
+                    let a = self.act(llm, idx);
                     let delta = self
                         .blocks_for(llm, next_ctx)
                         .saturating_sub(a.shared_blocks)
@@ -1986,12 +2117,12 @@ impl UnitSim {
             }
             if ok {
                 {
-                    let a = &mut self.active[llm][idx];
+                    let a = self.act_mut(llm, idx);
                     a.last_use = t;
                     a.touches += 1;
                 }
                 self.set_state(llm, idx, ReqState::Decoding);
-                ctx_sum += self.active[llm][idx].ctx();
+                ctx_sum += self.act(llm, idx).ctx();
                 batch.push(id);
             }
         }
@@ -2050,7 +2181,7 @@ impl UnitSim {
                 // LLM (admit_and_start_prefill serves the chunk queue
                 // first), so its key represents the prefill lane.
                 if let Some(&cid) = self.chunk_queue[i].front() {
-                    let r = &self.active[i][self.slot_index[&cid].1].req;
+                    let r = &self.act(i, self.slot_index[&cid].1).req;
                     let key = if self.cfg.tier_aware {
                         self.slack_key(r, t)
                     } else {
@@ -2070,7 +2201,7 @@ impl UnitSim {
                 if let Some(a) = self.ready_ids[i]
                     .iter()
                     .map(|id| {
-                        let r = &self.active[i][self.slot_index[id].1].req;
+                        let r = &self.act(i, self.slot_index[id].1).req;
                         if self.cfg.tier_aware {
                             self.slack_key(r, t)
                         } else {

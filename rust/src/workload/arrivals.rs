@@ -227,6 +227,34 @@ impl ArrivalProcess for RateDrift {
     }
 }
 
+/// Analytic superposition of independent arrival streams sharing one
+/// thinning envelope: a flat `base` load plus any number of component
+/// processes. By the Poisson superposition theorem the merged process
+/// is itself non-homogeneous Poisson with the summed rate function, so
+/// ONE Lewis–Shedler pass over the sum is distributionally exact —
+/// and, unlike drawing the components separately and merging by sort,
+/// it consumes a single RNG stream: superposing N constant components
+/// is *bit-identical* to thinning one [`ConstantRate`] at the total
+/// rate (pinned in this module's tests).
+pub struct Superposed {
+    /// Flat always-on load under the components (0.0 for none).
+    pub base: f64,
+    pub components: Vec<Box<dyn ArrivalProcess>>,
+}
+
+impl ArrivalProcess for Superposed {
+    fn rate(&self, t: f64) -> f64 {
+        self.base + self.components.iter().map(|c| c.rate(t)).sum::<f64>()
+    }
+
+    fn peak_rate(&self) -> f64 {
+        // Sum of per-component peaks: a valid (possibly loose) envelope
+        // even when the components peak at different times.
+        self.base
+            + self.components.iter().map(|c| c.peak_rate()).sum::<f64>()
+    }
+}
+
 /// Time-varying request-*length* dynamics, layered on top of an arrival
 /// process's stream. The base lengths always come from the workload's
 /// ShareGPT-like marginals; dynamics decide whether a given request is
@@ -513,6 +541,65 @@ mod tests {
         assert!((p.rate(60.0) - 3.25).abs() < 1e-9);
         assert_eq!(p.rate(100.0), 0.5);
         assert_eq!(p.peak_rate(), 6.0);
+    }
+
+    #[test]
+    fn superposed_of_constants_is_bit_identical_to_single_stream() {
+        // The superposition of N constant components must thin to the
+        // exact same request stream as one ConstantRate at the total:
+        // rate() and peak_rate() are pointwise equal, so the generator
+        // consumes the RNG identically.
+        for n in 1..=4usize {
+            let per = 1.5;
+            let sup = Superposed {
+                base: 0.5,
+                components: (0..n)
+                    .map(|_| {
+                        Box::new(ConstantRate { rate: per })
+                            as Box<dyn ArrivalProcess>
+                    })
+                    .collect(),
+            };
+            let single = ConstantRate { rate: 0.5 + n as f64 * per };
+            let a = stream(&sup, 300.0, 17);
+            let b = stream(&single, 300.0, 17);
+            assert_eq!(a, b, "superposed({n}) diverged from single stream");
+            assert!(!a.is_empty());
+        }
+    }
+
+    #[test]
+    fn superposed_rates_add_pointwise() {
+        let sup = Superposed {
+            base: 1.0,
+            components: vec![
+                Box::new(Diurnal {
+                    base: 3.0,
+                    depth: 0.5,
+                    period: 100.0,
+                    phase: 0.0,
+                }),
+                Box::new(FlashCrowd {
+                    base: 0.5,
+                    spike: 8.0,
+                    start: 50.0,
+                    ramp: 10.0,
+                    hold: 30.0,
+                }),
+            ],
+        };
+        for k in 0..40 {
+            let t = k as f64 * 5.0;
+            let want = 1.0
+                + sup.components[0].rate(t)
+                + sup.components[1].rate(t);
+            assert!((sup.rate(t) - want).abs() < 1e-12, "t={t}");
+        }
+        assert!((sup.peak_rate() - (1.0 + 3.0 * 1.5 + 8.0)).abs() < 1e-12);
+        // The envelope really bounds the rate everywhere sampled.
+        for k in 0..400 {
+            assert!(sup.rate(k as f64) <= sup.peak_rate() + 1e-12);
+        }
     }
 
     #[test]

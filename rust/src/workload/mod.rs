@@ -11,6 +11,7 @@ mod trace;
 pub use arrivals::{
     generate_requests, generate_requests_dyn, ArrivalProcess, ConstantRate,
     Diurnal, FlashCrowd, LengthDynamics, MarkovModulated, RateDrift,
+    Superposed,
 };
 pub use powerlaw::{cumulative_rate_distribution, power_law_rates};
 pub use scenario::{Scenario, ScenarioData, ScenarioShape, TierMix};

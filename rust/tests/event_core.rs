@@ -147,6 +147,7 @@ fn smoke_bench_clears_events_per_sec_floor() {
         duration: 10.0,
         reps: 1,
         smoke: true,
+        shards: 1,
     });
     let stationary = report
         .sims
@@ -169,6 +170,16 @@ fn smoke_bench_clears_events_per_sec_floor() {
     // The decision-latency section must produce usable numbers too.
     assert!(report.replan.full_ms > 0.0);
     assert!(report.replan.warm_ms > 0.0);
+    // The shard-scaling sweep ran, and every sharded row reproduced the
+    // serial run's deterministic surface bit-for-bit.
+    assert_eq!(report.shard_scaling.len(), 3);
+    for row in &report.shard_scaling {
+        assert!(
+            row.identical,
+            "shards={} diverged from serial (fingerprint {:016x})",
+            row.shards, row.fingerprint
+        );
+    }
 }
 
 /// Warm-started re-placement, wired end to end: the flash crowd must
